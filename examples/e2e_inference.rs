@@ -1,0 +1,75 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run).
+//!
+//! ```bash
+//! cargo run --release --example e2e_inference -- [images] [batch]
+//! ```
+//!
+//! Exercises the full three-layer stack on a real (synthetic) workload:
+//! * loads the **Python-trained** quantized ResNet-11 (`.neuw`, produced by
+//!   the KD → QAT → fuse/quantize pipeline in `python/compile/train.py`),
+//! * loads the **canonical eval split** (`.synd`),
+//! * serves batched requests through the **coordinator** over the NEURAL
+//!   cycle simulator,
+//! * cross-checks every 8th prediction against the **PJRT-executed HLO**
+//!   golden model (JAX + Pallas, lowered by `python/compile/aot.py`),
+//! * reports the paper's headline metrics: accuracy, device latency, FPS,
+//!   energy/inference, GSOPS/W.
+
+use anyhow::{Context, Result};
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine};
+use neural::data::Dataset;
+use neural::model::neuw;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let images: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let model = neuw::load("artifacts/resnet11_c10.neuw")
+        .context("artifacts missing — run `make artifacts` first")?;
+    let ds = Dataset::load("artifacts/dataset_synthcifar10.synd")?;
+    let images = images.min(ds.len());
+    println!(
+        "e2e: {} params, eval split {} images, serving {} in batches of {}",
+        model.num_params(),
+        ds.len(),
+        images,
+        batch
+    );
+
+    let engine = Engine::sim(model, ArchConfig::default());
+    let run_cfg = RunConfig {
+        batch_size: batch,
+        workers: 1,
+        crosscheck_every: 8,
+        hlo_path: Some("artifacts/resnet11_c10.hlo.txt".into()),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(engine, run_cfg);
+
+    let t0 = std::time::Instant::now();
+    let mut metrics = coord.serve_dataset(&ds, images)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== end-to-end results (paper headline metrics) ==");
+    println!("accuracy        : {:.2}%   (paper ResNet-11/CIFAR-10: 91.87%)", metrics.accuracy() * 100.0);
+    println!("device latency  : {:.3} ms (paper: 7.3 ms)", metrics.device_ms.mean());
+    println!("device FPS      : {:.1}    (paper: 136)", metrics.device_fps());
+    println!("energy/image    : {:.3} mJ (paper: 5.56 mJ)", metrics.energy_mj.mean());
+    println!("total spikes/img: {:.0}   (paper: 76K)", metrics.spikes.mean());
+    println!("host throughput : {:.1} img/s (wall {:.2}s)", metrics.completed as f64 / wall, wall);
+    println!("host p99        : {:.2} ms", metrics.host_p99());
+    if coord.crosschecks > 0 {
+        println!(
+            "PJRT cross-check: {}/{} mismatches",
+            coord.crosscheck_mismatches, coord.crosschecks
+        );
+        if coord.crosscheck_mismatches > 0 {
+            anyhow::bail!("simulator and JAX/Pallas golden model disagreed");
+        }
+    } else {
+        println!("PJRT cross-check: skipped (HLO artifact not found)");
+    }
+    Ok(())
+}

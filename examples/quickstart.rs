@@ -1,0 +1,66 @@
+//! Quickstart: simulate one image through the NEURAL accelerator.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the trained ResNet-11 artifact when present (`make artifacts`),
+//! otherwise a random-weight zoo model; encodes one SynthCIFAR image into
+//! a single-timestep spike map; runs the cycle simulator; prints the
+//! report a user of the public API sees.
+
+use anyhow::Result;
+use neural::arch::Accelerator;
+use neural::config::ArchConfig;
+use neural::data::{encode_threshold, SynthCifar};
+use neural::model::{neuw, zoo};
+
+fn main() -> Result<()> {
+    // 1. model: trained artifact if available, zoo fallback otherwise
+    let model = match neuw::load("artifacts/resnet11_c10.neuw") {
+        Ok(m) => {
+            println!("loaded trained artifact: resnet11_c10.neuw");
+            m
+        }
+        Err(_) => {
+            println!("artifacts not built — using random-weight zoo resnet11");
+            zoo::resnet11(10, 7)
+        }
+    };
+    println!(
+        "model {}: {} nodes, {} conv layers, {} int8 params",
+        model.name,
+        model.nodes.len(),
+        model.num_convs(),
+        model.num_params()
+    );
+
+    // 2. one SynthCIFAR image -> single-timestep spike map
+    let dataset = SynthCifar::new(model.num_classes, 1234);
+    let (img, label) = dataset.sample(0);
+    let spikes = encode_threshold(&img, 128);
+    println!(
+        "input: 32x32x3 image, label {label}, spike density {:.1}%",
+        100.0 * spikes.count_nonzero() as f64 / spikes.numel() as f64
+    );
+
+    // 3. simulate on the default NEURAL geometry (16x16 EPA @ 200 MHz)
+    let acc = Accelerator::new(ArchConfig::default());
+    let report = acc.run(&model, &spikes)?;
+
+    println!("\n== simulation report ==");
+    println!("predicted class : {}", report.predicted);
+    println!("latency         : {:.3} ms ({} cycles @ 200 MHz)", report.latency_ms, report.cycles);
+    println!("fps             : {:.1}", acc.fps(&report));
+    println!("total spikes    : {}", report.total_spikes);
+    println!("synaptic ops    : {}", report.activity.sops);
+    println!("energy          : {:.3} mJ", report.energy.total_j() * 1e3);
+    println!("power           : {:.3} W", report.power_w);
+    println!("efficiency      : {:.2} GSOPS/W", report.gsops_w);
+    println!(
+        "module cycles   : SDA {} | EPA {} | WTFC {} | other {}",
+        report.modules.sda, report.modules.epa, report.modules.wtfc, report.modules.other
+    );
+    println!("EPA utilization : {:.1}%", report.epa_utilization * 100.0);
+    Ok(())
+}

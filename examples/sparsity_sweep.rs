@@ -1,0 +1,52 @@
+//! Sparsity sweep: the event-driven claim, measured.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep
+//! ```
+//!
+//! Sweeps the input-encoding threshold (and thus the network's spike
+//! density) and shows how NEURAL's latency/energy scale with activity —
+//! the core benefit of sparsity-aware event-driven execution — next to a
+//! dense (STI-SNN-like) baseline whose cost is activity-independent.
+
+use anyhow::Result;
+use neural::arch::Accelerator;
+use neural::baselines::{Baseline, BaselineKind};
+use neural::config::ArchConfig;
+use neural::data::{encode_threshold, SynthCifar};
+use neural::model::zoo;
+use neural::util::Table;
+
+fn main() -> Result<()> {
+    let model = zoo::resnet11(10, 7);
+    let dataset = SynthCifar::new(10, 99);
+    let (img, _) = dataset.sample(3);
+    let neural_acc = Accelerator::new(ArchConfig::default());
+    let dense = Baseline::new(BaselineKind::StiSnn, ArchConfig::default());
+
+    let mut table = Table::new(
+        "Sparsity sweep — NEURAL (event-driven) vs dense single-timestep",
+        &[
+            "thresh", "in density", "total spikes", "NEURAL ms", "NEURAL mJ", "dense ms", "dense mJ",
+        ],
+    );
+    for thresh in [224, 192, 160, 128, 96, 64] {
+        let spikes = encode_threshold(&img, thresh);
+        let density = spikes.count_nonzero() as f64 / spikes.numel() as f64;
+        let rep = neural_acc.run(&model, &spikes)?;
+        let base = dense.run(&model, &spikes)?;
+        table.row(&[
+            thresh.to_string(),
+            format!("{:.1}%", density * 100.0),
+            rep.total_spikes.to_string(),
+            format!("{:.3}", rep.latency_ms),
+            format!("{:.3}", rep.energy.total_j() * 1e3),
+            format!("{:.3}", base.latency_ms),
+            format!("{:.3}", base.energy.total_j() * 1e3),
+        ]);
+    }
+    table.print();
+    println!("\nNEURAL's columns track activity; the dense design's latency is flat —");
+    println!("that delta is the hybrid data-event execution contribution (paper §IV-A).");
+    Ok(())
+}

@@ -1,0 +1,215 @@
+"""AOT lowering: quantized SNN inference graphs → HLO *text* artifacts.
+
+The Rust runtime (`rust/src/runtime/`) loads these with
+`HloModuleProto::from_text_file` and executes them on the PJRT CPU client.
+HLO text — NOT `lowered.compiler_ir(...).serialize()` — is the interchange
+format: the crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit
+instruction ids, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Inputs: every `artifacts/*.neuw` written by `compile.train` (falls back to
+a synthetic tiny model when none exist, so `make artifacts` works before
+training). Outputs, per model:
+  artifacts/{stem}.hlo.txt          the full integer inference graph
+                                    (batch-1, Pallas kernels inlined)
+  artifacts/model.hlo.txt           alias of the first model (Makefile
+                                    convenience target)
+  artifacts/spiking_matmul.hlo.txt  standalone L1 kernel artifact for the
+                                    runtime smoke test
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import quantize as Q
+from .kernels import spiking_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big weight tensors as `{...}`, which the 0.5.1 text parser
+    silently reads back as zeros — the model would "run" with all-zero
+    weights on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ----------------------------------------------------- NEUW reader (python)
+
+_OPS = {0: "input", 1: "conv", 2: "pool", 3: "or", 4: "qk", 5: "head"}
+
+
+def load_neuw(path: str) -> dict:
+    """Parse a .neuw file back into a qmodel dict (twin of rust reader)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"NEUW", "bad magic"
+    pos = 4
+    (version,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    assert version == 1
+    name_len = buf[pos]
+    pos += 1
+    name = buf[pos : pos + name_len].decode()
+    pos += name_len
+    (classes,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    c, h, w = struct.unpack_from("<BBB", buf, pos)
+    pos += 3
+    (n_nodes,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    nodes = []
+    for _ in range(n_nodes):
+        op, n_in = struct.unpack_from("<BB", buf, pos)
+        pos += 2
+        inputs = list(struct.unpack_from(f"<{n_in}I", buf, pos)) if n_in else []
+        pos += 4 * n_in
+        node = {"op": _OPS[op], "inputs": inputs}
+        if node["op"] == "conv":
+            cin, cout = struct.unpack_from("<II", buf, pos)
+            pos += 8
+            k, stride, pad, frac = struct.unpack_from("<BBBB", buf, pos)
+            pos += 4
+            thr = np.frombuffer(buf, "<i4", cout, pos).copy()
+            pos += 4 * cout
+            tau_half = buf[pos] != 0
+            pos += 1
+            nw = cin * cout * k * k
+            wgt = np.frombuffer(buf, np.int8, nw, pos).copy()
+            pos += nw
+            node.update(
+                cin=cin, cout=cout, k=k, stride=stride, pad=pad, frac=frac,
+                thresholds=thr, tau_half=tau_half, weights=wgt,
+            )
+        elif node["op"] == "pool":
+            node["k"], node["stride"] = buf[pos], buf[pos + 1]
+            pos += 2
+        elif node["op"] == "qk":
+            node["mode"] = buf[pos]
+            pos += 1
+        elif node["op"] == "head":
+            classes2, cin = struct.unpack_from("<II", buf, pos)
+            pos += 8
+            ho, wo, window, frac = struct.unpack_from("<BBBB", buf, pos)
+            pos += 4
+            nw = classes2 * cin * ho * wo
+            wgt = np.frombuffer(buf, np.int8, nw, pos).copy()
+            pos += nw
+            node.update(classes=classes2, cin=cin, ho=ho, wo=wo, window=window, frac=frac, weights=wgt)
+        nodes.append(node)
+    assert pos == len(buf), f"{len(buf) - pos} trailing bytes"
+    return {"name": name, "num_classes": classes, "input_dims": (c, h, w), "nodes": nodes}
+
+
+# ------------------------------------------------------------------- export
+
+
+def export_model(qm: dict, out_path: str, use_pallas: bool = True) -> str:
+    """Lower the batch-1 integer inference graph and write HLO text."""
+    c, h, w = qm["input_dims"]
+
+    def fn(x):
+        # runtime sends (1, C, H, W); graph runs unbatched internally
+        return (Q.int_forward(qm, x[0], use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct((1, c, h, w), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return out_path
+
+
+def export_kernel_demo(out_path: str) -> str:
+    """Standalone spiking_matmul kernel artifact (runtime smoke test)."""
+
+    def fn(x):
+        # (1, 8, 16) patches vs fixed ramp weights (16, 4)
+        wgt = jnp.arange(16 * 4, dtype=jnp.float32).reshape(16, 4) % 7 - 3
+        return (spiking_matmul(x[0], wgt),)
+
+    spec = jax.ShapeDtypeStruct((1, 8, 16), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return out_path
+
+
+def fallback_tiny_qmodel(classes: int = 10, seed: int = 3) -> dict:
+    """Deterministic tiny quantized model for artifact-less `make artifacts`
+    runs (mirrors rust zoo::tiny geometry)."""
+    rng = np.random.default_rng(seed)
+
+    def rw(n):
+        return rng.integers(-6, 9, n).astype(np.int8)
+
+    nodes = [
+        {"op": "input", "inputs": []},
+        {
+            "op": "conv", "inputs": [0], "cin": 3, "cout": 8, "k": 3, "stride": 1,
+            "pad": 1, "frac": 4, "thresholds": np.full(8, 9, np.int32),
+            "tau_half": False, "weights": rw(8 * 3 * 9),
+        },
+        {"op": "pool", "inputs": [1], "k": 2, "stride": 2},
+        {
+            "op": "conv", "inputs": [2], "cin": 8, "cout": 16, "k": 3, "stride": 2,
+            "pad": 1, "frac": 4, "thresholds": np.full(16, 24, np.int32),
+            "tau_half": False, "weights": rw(16 * 8 * 9),
+        },
+        {
+            "op": "head", "inputs": [3], "classes": classes, "cin": 16, "ho": 2,
+            "wo": 2, "window": 4, "frac": 4, "weights": rw(classes * 16 * 4),
+        },
+    ]
+    return {"name": "tiny", "num_classes": classes, "input_dims": (3, 32, 32), "nodes": nodes}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="alias path for the primary model HLO")
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.artifacts, exist_ok=True)
+
+    neuws = sorted(glob.glob(os.path.join(args.artifacts, "*.neuw")))
+    if not neuws:
+        print("no .neuw artifacts yet — exporting fallback tiny model")
+        qm = fallback_tiny_qmodel()
+        Q.save_neuw(qm, os.path.join(args.artifacts, "tiny.neuw"))
+        neuws = [os.path.join(args.artifacts, "tiny.neuw")]
+
+    primary = None
+    for path in neuws:
+        qm = load_neuw(path)
+        stem = os.path.splitext(os.path.basename(path))[0]
+        out = os.path.join(args.artifacts, f"{stem}.hlo.txt")
+        export_model(qm, out)
+        print(f"lowered {stem}: {os.path.getsize(out)} bytes HLO text")
+        if primary is None:
+            primary = out
+    # Makefile alias
+    with open(primary) as src, open(args.out, "w") as dst:
+        dst.write(src.read())
+    demo = export_kernel_demo(os.path.join(args.artifacts, "spiking_matmul.hlo.txt"))
+    print(f"kernel demo: {demo}")
+
+
+if __name__ == "__main__":
+    main()

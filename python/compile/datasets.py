@@ -1,0 +1,105 @@
+"""SynthCIFAR — the procedurally generated CIFAR substitute.
+
+CIFAR-10/100 are not downloadable in this offline environment (DESIGN.md
+documents the substitution). Structure mirrors the Rust generator
+(`rust/src/data/synth.rs`): each class owns a random 8x8x3 template tile
+upsampled x4 to 32x32; each sample applies a cyclic spatial jitter and
+per-pixel uniform noise. The *canonical* eval split is exported by this
+module to ``artifacts/dataset_*.synd`` so Rust-side accuracy numbers are
+computed on byte-identical images.
+
+SYND format (little-endian):
+    magic b"SYND" | version u32=1 | n u32 | classes u32 | c,h,w u8
+    then n records: label u16 | pixels c*h*w u8 (CHW)
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+EDGE = 32
+CHANNELS = 3
+TILE = 8
+
+
+class SynthCifar:
+    """Class-conditional procedural dataset (numpy twin of the Rust one in
+    distribution; sampled with numpy's PCG64 for speed)."""
+
+    def __init__(self, num_classes: int = 10, seed: int = 42, noise: int = 96):
+        self.num_classes = num_classes
+        self.seed = seed
+        self.noise = noise
+        self.templates = np.stack(
+            [
+                np.random.default_rng((seed << 8) ^ (1000 + k))
+                .integers(0, 256, size=(CHANNELS, TILE, TILE), dtype=np.int32)
+                for k in range(num_classes)
+            ]
+        )
+
+    def label(self, idx: int) -> int:
+        return idx % self.num_classes
+
+    def sample(self, idx: int) -> tuple[np.ndarray, int]:
+        """Return (CHW uint8 image, label) for deterministic index ``idx``."""
+        label = self.label(idx)
+        rng = np.random.default_rng((self.seed ^ 0x5D0C0DE) * 1_000_003 + idx)
+        dx, dy = rng.integers(0, 8, size=2)
+        # nearest-neighbour upsample with cyclic jitter
+        hh = (np.arange(EDGE) + dy) % EDGE // (EDGE // TILE)
+        ww = (np.arange(EDGE) + dx) % EDGE // (EDGE // TILE)
+        base = self.templates[label][:, hh[:, None], ww[None, :]]
+        n = rng.integers(0, max(self.noise, 1), size=base.shape) - self.noise // 2
+        img = np.clip(base + n, 0, 255).astype(np.uint8)
+        return img, int(label)
+
+    def batch(self, start: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """(N, C, H, W) uint8 images and (N,) int labels."""
+        imgs, labels = zip(*(self.sample(i) for i in range(start, start + n)))
+        return np.stack(imgs), np.array(labels, dtype=np.int64)
+
+
+def encode_threshold(images: np.ndarray, thresh: int = 128) -> np.ndarray:
+    """Single-timestep direct threshold encoding (twin of
+    ``rust/src/data/encode.rs::encode_threshold``)."""
+    return (images >= thresh).astype(np.float32)
+
+
+def export_synd(path: str, images: np.ndarray, labels: np.ndarray, num_classes: int) -> None:
+    """Write the .synd file Rust consumes."""
+    n, c, h, w = images.shape
+    assert images.dtype == np.uint8
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(b"SYND")
+        f.write(struct.pack("<III", 1, n, num_classes))
+        f.write(struct.pack("<BBB", c, h, w))
+        for i in range(n):
+            f.write(struct.pack("<H", int(labels[i])))
+            f.write(images[i].tobytes())
+
+
+def load_synd(path: str) -> tuple[np.ndarray, np.ndarray, int]:
+    """Read a .synd file back (tests + training reuse)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"SYND", "bad magic"
+    version, n, classes = struct.unpack_from("<III", buf, 4)
+    assert version == 1
+    c, h, w = struct.unpack_from("<BBB", buf, 16)
+    px = c * h * w
+    rec = 2 + px
+    body = buf[19:]
+    assert len(body) == n * rec, "truncated synd"
+    labels = np.empty(n, dtype=np.int64)
+    images = np.empty((n, c, h, w), dtype=np.uint8)
+    for i in range(n):
+        (labels[i],) = struct.unpack_from("<H", body, i * rec)
+        images[i] = np.frombuffer(
+            body, dtype=np.uint8, count=px, offset=i * rec + 2
+        ).reshape(c, h, w)
+    return images, labels, classes

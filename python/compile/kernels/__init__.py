@@ -1,0 +1,9 @@
+"""NEURAL Pallas kernels (L1) and their jnp oracles."""
+
+from . import ref  # noqa: F401
+from .neural_kernels import (  # noqa: F401
+    lif_fire,
+    qk_token_mask,
+    spiking_matmul,
+    w2ttfs_count,
+)

@@ -1,0 +1,120 @@
+"""L1 — Pallas kernels for NEURAL's compute hot-spots.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO ops so the AOT artifacts run on the Rust PJRT CPU client.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+datapath is event-driven; on TPU the same insight becomes structured
+sparsity on the MXU — binary spikes let the "multiply" be a select, and
+the block shapes below are chosen MXU/VMEM-shaped (128-lane tiles):
+
+* ``spiking_matmul`` — the EPA inner product as a tiled patch-matmul
+  (weight-stationary tile in VMEM, the BlockSpec expresses the HBM→VMEM
+  schedule the RTL did with the W-FIFO).
+* ``lif_fire`` — threshold + fire, fused elementwise.
+* ``w2ttfs_count`` — the TTFS filter's window spike-count.
+* ``qk_token_mask`` — atten_reg OR-reduction + token mask on the
+  write-back path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------- lif_fire
+
+
+def _lif_kernel(mp_ref, thr_ref, o_ref):
+    o_ref[...] = (mp_ref[...] >= thr_ref[...]).astype(jnp.float32)
+
+
+def lif_fire(mp, thresholds):
+    """Pallas LIF fire. mp: (C, H, W) f32; thresholds: (C,) f32."""
+    c, h, w = mp.shape
+    thr = jnp.broadcast_to(thresholds[:, None, None], mp.shape)
+    return pl.pallas_call(
+        _lif_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        interpret=True,
+    )(mp, thr)
+
+
+# ---------------------------------------------------------- spiking_matmul
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, K) x (K, bn) tile product; accumulation stays in VMEM
+    # scratch (here: the output ref) — exact for integer-valued f32.
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def spiking_matmul(patches, weights, block_m: int = 128, block_n: int = 128):
+    """Tiled (M, K) @ (K, N) for binary patches against int-valued weights.
+
+    Grid tiles M and N; K rides whole in VMEM (K = cin*k*k <= ~4.6k even
+    for the 512-channel layers => tile VMEM well under 4 MiB).
+    """
+    m, kdim = patches.shape
+    k2, n = weights.shape
+    assert kdim == k2, f"inner dims {kdim} != {k2}"
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (_cdiv(m, bm), _cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(patches, weights)
+
+
+# ----------------------------------------------------------- w2ttfs_count
+
+
+def _w2ttfs_kernel(x_ref, o_ref, *, window: int):
+    c, h, w = x_ref.shape
+    ho, wo = h // window, w // window
+    x = x_ref[...]
+    o_ref[...] = x.reshape(c, ho, window, wo, window).sum(axis=(2, 4))
+
+
+def w2ttfs_count(x, window: int):
+    """TTFS filter: (C, H, W) binary spikes -> (C, H/w, W/w) vld counts."""
+    c, h, w = x.shape
+    assert h % window == 0 and w % window == 0, "window must tile the map"
+    return pl.pallas_call(
+        functools.partial(_w2ttfs_kernel, window=window),
+        out_shape=jax.ShapeDtypeStruct((c, h // window, w // window), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------- qk_token_mask
+
+
+def _qk_kernel(q_ref, k_ref, o_ref):
+    # atten_reg: OR across channels == (sum > 0); rides the write-back.
+    mask = (jnp.sum(q_ref[...], axis=0, keepdims=True) > 0).astype(jnp.float32)
+    o_ref[...] = k_ref[...] * mask
+
+
+def qk_token_mask(q, k):
+    """On-the-fly QK token attention: mask K by Q's channel-OR."""
+    assert q.shape == k.shape
+    return pl.pallas_call(
+        _qk_kernel,
+        out_shape=jax.ShapeDtypeStruct(k.shape, jnp.float32),
+        interpret=True,
+    )(q, k)

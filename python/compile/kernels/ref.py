@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; pytest (with
+hypothesis sweeps over shapes/densities) asserts exact agreement — all
+arithmetic is integer-valued in f32, so comparisons are exact, not
+allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def lif_fire(mp, thresholds):
+    """Single-timestep LIF fire: spike where mp >= threshold.
+
+    mp: (C, H, W) membrane potentials (integer-valued f32).
+    thresholds: (C,) per-channel thresholds (BN fusion folds biases here).
+    """
+    return (mp >= thresholds[:, None, None]).astype(jnp.float32)
+
+
+def spiking_matmul(patches, weights):
+    """The EPA hot-spot in gather form: binary activation patches (M, K)
+    times weight matrix (K, N) -> membrane potentials (M, N)."""
+    return patches @ weights
+
+
+def w2ttfs_count(x, window):
+    """W2TTFS TTFS-filter: count valid spikes per pooling window.
+
+    x: (C, H, W) binary spikes; window divides H and W.
+    Returns (C, H//window, W//window) integer-valued counts (vld_cnt).
+    """
+    c, h, w = x.shape
+    ho, wo = h // window, w // window
+    return x.reshape(c, ho, window, wo, window).sum(axis=(2, 4))
+
+
+def w2ttfs_fc(x, window, fc_weights):
+    """Full W2TTFS head: counts flattened against the classifier.
+
+    The common 1/window**2 scale is dropped (argmax-invariant; hardware
+    realizes it as repeat-adds — see rust/src/arch/wtfc.rs).
+    fc_weights: (classes, C * Ho * Wo).
+    """
+    counts = w2ttfs_count(x, window)
+    return fc_weights @ counts.reshape(-1)
+
+
+def qk_token_mask(q, k):
+    """QKFormer Q-K token attention, on-the-fly form (paper Fig 5):
+    token mask = OR over channels of Q; K is masked per token."""
+    mask = (q.sum(axis=0, keepdims=True) > 0).astype(k.dtype)
+    return k * mask
+
+
+def qk_channel_mask(q, k):
+    """Channel-attention variant: mask = OR over tokens of Q."""
+    mask = (q.sum(axis=(1, 2), keepdims=True) > 0).astype(k.dtype)
+    return k * mask

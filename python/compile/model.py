@@ -1,0 +1,336 @@
+"""L2 — the single-timestep SNN model zoo in JAX.
+
+Mirrors the Rust IR (`rust/src/model/ir.rs`): a topologically ordered node
+graph where every edge carries a binary spike map; the classifier head is
+AP/W2TTFS (mathematically identical in exact arithmetic — Algorithm 1's
+scale `vld_cnt/window²` *is* average pooling; the hardware difference is
+that W2TTFS realizes it spike-based with repeat-adds, see DESIGN.md).
+
+Training path (`forward`): differentiable — sigmoid surrogate gradients
+through the LIF threshold, soft-OR for residual joins, batch-stat
+BatchNorm before each fire. The same function runs hard-threshold eval.
+
+The *integer* inference graph used for AOT export lives in `quantize.py`
+(built from the fused+quantized weights so it is bit-identical to the Rust
+golden executor).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------------ spec
+
+
+@dataclass
+class Node:
+    """One graph node; `op` in {input, conv, pool, or, qk, head}."""
+
+    op: str
+    inputs: list = field(default_factory=list)
+    # conv fields
+    cin: int = 0
+    cout: int = 0
+    k: int = 0
+    stride: int = 1
+    pad: int = 0
+    # pool fields reuse k/stride; head fields:
+    window: int = 0
+
+
+@dataclass
+class NetSpec:
+    """A model topology."""
+
+    name: str
+    nodes: list
+    num_classes: int
+    input_dims: tuple = (3, 32, 32)
+
+    def conv_ids(self):
+        return [i for i, n in enumerate(self.nodes) if n.op == "conv"]
+
+
+class _Builder:
+    def __init__(self):
+        self.nodes = [Node("input")]
+
+    def conv(self, src, cin, cout, k, stride=1, pad=None):
+        pad = k // 2 if pad is None else pad
+        self.nodes.append(Node("conv", [src], cin=cin, cout=cout, k=k, stride=stride, pad=pad))
+        return len(self.nodes) - 1
+
+    def pool(self, src, k=2, stride=2):
+        self.nodes.append(Node("pool", [src], k=k, stride=stride))
+        return len(self.nodes) - 1
+
+    def orj(self, a, b):
+        self.nodes.append(Node("or", [a, b]))
+        return len(self.nodes) - 1
+
+    def qk(self, q, k):
+        self.nodes.append(Node("qk", [q, k]))
+        return len(self.nodes) - 1
+
+    def head(self, src, window):
+        self.nodes.append(Node("head", [src], window=window))
+        return len(self.nodes) - 1
+
+    def res_block(self, src, cin, cout, stride):
+        a = self.conv(src, cin, cout, 3, stride)
+        b = self.conv(a, cout, cout, 3, 1)
+        skip = self.conv(src, cin, cout, 1, stride, 0)
+        return self.orj(b, skip)
+
+    def qkf_block(self, src, c):
+        q = self.conv(src, c, c, 1, 1, 0)
+        k = self.conv(src, c, c, 1, 1, 0)
+        m = self.qk(q, k)
+        return self.orj(m, src)
+
+
+def _ch(base: int, width: float) -> int:
+    return max(8, int(round(base * width)))
+
+
+def vgg11(classes=10, width=1.0) -> NetSpec:
+    """VGG-11: 8 convs, 4 spike max-pools, W2TTFS window 2 head."""
+    b = _Builder()
+    c = lambda n: _ch(n, width)
+    x = b.conv(0, 3, c(64), 3)
+    x = b.pool(x)
+    x = b.conv(x, c(64), c(128), 3)
+    x = b.pool(x)
+    x = b.conv(x, c(128), c(256), 3)
+    x = b.conv(x, c(256), c(256), 3)
+    x = b.pool(x)
+    x = b.conv(x, c(256), c(512), 3)
+    x = b.conv(x, c(512), c(512), 3)
+    x = b.pool(x)
+    x = b.conv(x, c(512), c(512), 3)
+    x = b.conv(x, c(512), c(512), 3)
+    b.head(x, window=2)
+    return NetSpec("vgg11", b.nodes, classes)
+
+
+def resnet11(classes=10, width=1.0) -> NetSpec:
+    """ResNet-11: stem + 3 stride-2 residual blocks, W2TTFS window 4."""
+    b = _Builder()
+    c = lambda n: _ch(n, width)
+    x = b.conv(0, 3, c(64), 3)
+    x = b.res_block(x, c(64), c(128), 2)
+    x = b.res_block(x, c(128), c(256), 2)
+    x = b.res_block(x, c(256), c(512), 2)
+    b.head(x, window=4)
+    return NetSpec("resnet11", b.nodes, classes)
+
+
+def qkfresnet11(classes=10, width=1.0) -> NetSpec:
+    """QKFResNet-11: ResNet-11 + QKFormer blocks (paper Fig 2a)."""
+    b = _Builder()
+    c = lambda n: _ch(n, width)
+    x = b.conv(0, 3, c(64), 3)
+    x = b.res_block(x, c(64), c(128), 2)
+    x = b.res_block(x, c(128), c(256), 2)
+    x = b.qkf_block(x, c(256))
+    x = b.res_block(x, c(256), c(512), 2)
+    x = b.qkf_block(x, c(512))
+    b.head(x, window=4)
+    return NetSpec("qkfresnet11", b.nodes, classes)
+
+
+def resnet19(classes=10, width=1.0) -> NetSpec:
+    """ResNet-19-like: stem + 3 stages x 2 residual blocks (Fig 8(b))."""
+    b = _Builder()
+    c = lambda n: _ch(n, width)
+    x = b.conv(0, 3, c(64), 3)
+    x = b.res_block(x, c(64), c(128), 2)
+    x = b.res_block(x, c(128), c(128), 1)
+    x = b.res_block(x, c(128), c(256), 2)
+    x = b.res_block(x, c(256), c(256), 1)
+    x = b.res_block(x, c(256), c(512), 2)
+    x = b.res_block(x, c(512), c(512), 1)
+    b.head(x, window=4)
+    return NetSpec("resnet19", b.nodes, classes)
+
+
+BUILDERS = {
+    "vgg11": vgg11,
+    "resnet11": resnet11,
+    "qkfresnet11": qkfresnet11,
+    "resnet19": resnet19,
+}
+
+
+# ----------------------------------------------------------------- params
+
+
+def init_params(spec: NetSpec, seed: int = 0):
+    """He-initialised float params + BN running state."""
+    rng = np.random.default_rng(seed)
+    params, state = {}, {}
+    feat_dim = None
+    for i, n in enumerate(spec.nodes):
+        if n.op == "conv":
+            fan_in = n.cin * n.k * n.k
+            w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(n.cout, n.cin, n.k, n.k))
+            params[f"conv{i}"] = {
+                "w": jnp.asarray(w, jnp.float32),
+                "gamma": jnp.ones(n.cout, jnp.float32),
+                "beta": jnp.zeros(n.cout, jnp.float32),
+                "vth": jnp.asarray(1.0, jnp.float32),
+            }
+            state[f"conv{i}"] = {
+                "mean": jnp.zeros(n.cout, jnp.float32),
+                "var": jnp.ones(n.cout, jnp.float32),
+            }
+        elif n.op == "head":
+            pass  # sized below after shape propagation
+    # shape propagation for the head FC
+    dims = shapes(spec)
+    head = spec.nodes[-1]
+    c, h, w = dims[head.inputs[0]]
+    feat_dim = c * (h // head.window) * (w // head.window)
+    params["fc"] = {
+        "w": jnp.asarray(
+            rng.normal(0.0, np.sqrt(1.0 / feat_dim), size=(spec.num_classes, feat_dim)),
+            jnp.float32,
+        )
+    }
+    return params, state
+
+
+def shapes(spec: NetSpec):
+    """Output dims (C, H, W) per node."""
+    out = []
+    for n in spec.nodes:
+        if n.op == "input":
+            out.append(spec.input_dims)
+        elif n.op == "conv":
+            c, h, w = out[n.inputs[0]]
+            out.append(
+                (
+                    n.cout,
+                    (h + 2 * n.pad - n.k) // n.stride + 1,
+                    (w + 2 * n.pad - n.k) // n.stride + 1,
+                )
+            )
+        elif n.op == "pool":
+            c, h, w = out[n.inputs[0]]
+            out.append((c, (h - n.k) // n.stride + 1, (w - n.k) // n.stride + 1))
+        elif n.op in ("or", "qk"):
+            out.append(out[n.inputs[0]])
+        elif n.op == "head":
+            out.append((0, 0, 0))
+    return out
+
+
+# ------------------------------------------------------------- surrogates
+
+_SURR_ALPHA = 4.0
+
+
+@jax.custom_vjp
+def spike_fn(x):
+    """Heaviside with sigmoid surrogate gradient (Wu et al. STBP-style)."""
+    return (x >= 0.0).astype(jnp.float32)
+
+
+def _spike_fwd(x):
+    return spike_fn(x), x
+
+
+def _spike_bwd(x, g):
+    s = jax.nn.sigmoid(_SURR_ALPHA * x)
+    return (g * _SURR_ALPHA * s * (1.0 - s),)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def _conv2d(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _fake_quant(w, bits=8):
+    """Power-of-two-scale fake quantization with straight-through grads."""
+    maxabs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    qmax = 2.0 ** (bits - 1) - 1
+    frac = jnp.clip(jnp.floor(jnp.log2(qmax / maxabs)), 0, 12)
+    scale = 2.0**frac
+    wq = jnp.clip(jnp.round(w * scale), -qmax - 1, qmax) / scale
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def forward(spec: NetSpec, params, state, x, *, train: bool, quant: bool = False, momentum=0.9):
+    """Batched forward. x: (N, C, H, W) binary f32 spikes.
+
+    Returns (logits (N, classes), new_state). `train=True` uses surrogate
+    spikes + batch-stat BN; eval uses hard thresholds + running stats.
+    `quant=True` fake-quantizes conv/fc weights (KD-QAT).
+    """
+    acts = []
+    new_state = dict(state)
+    for i, n in enumerate(spec.nodes):
+        if n.op == "input":
+            acts.append(x)
+        elif n.op == "conv":
+            p = params[f"conv{i}"]
+            w = _fake_quant(p["w"]) if quant else p["w"]
+            mp = _conv2d(acts[n.inputs[0]], w, n.stride, n.pad)
+            if train:
+                mean = mp.mean(axis=(0, 2, 3))
+                var = mp.var(axis=(0, 2, 3))
+                st = state[f"conv{i}"]
+                new_state[f"conv{i}"] = {
+                    "mean": momentum * st["mean"] + (1 - momentum) * mean,
+                    "var": momentum * st["var"] + (1 - momentum) * var,
+                }
+            else:
+                st = state[f"conv{i}"]
+                mean, var = st["mean"], st["var"]
+            mp = (mp - mean[None, :, None, None]) / jnp.sqrt(var[None, :, None, None] + 1e-5)
+            mp = p["gamma"][None, :, None, None] * mp + p["beta"][None, :, None, None]
+            drive = mp - p["vth"]
+            acts.append(spike_fn(drive) if train else (drive >= 0).astype(jnp.float32))
+        elif n.op == "pool":
+            y = jax.lax.reduce_window(
+                acts[n.inputs[0]],
+                -jnp.inf,
+                jax.lax.max,
+                (1, 1, n.k, n.k),
+                (1, 1, n.stride, n.stride),
+                "VALID",
+            )
+            acts.append(y)
+        elif n.op == "or":
+            a, bb = acts[n.inputs[0]], acts[n.inputs[1]]
+            # soft-OR is differentiable and equals OR on {0,1}
+            acts.append(a + bb - a * bb)
+        elif n.op == "qk":
+            q, kk = acts[n.inputs[0]], acts[n.inputs[1]]
+            drive = q.sum(axis=1, keepdims=True) - 0.5
+            mask = spike_fn(drive) if train else (drive >= 0).astype(jnp.float32)
+            acts.append(kk * mask)
+        elif n.op == "head":
+            s = acts[n.inputs[0]]
+            nb, c, h, w = s.shape
+            wd = n.window
+            counts = s.reshape(nb, c, h // wd, wd, w // wd, wd).sum(axis=(3, 5))
+            pooled = counts / (wd * wd)  # == average pooling == W2TTFS scale
+            fw = params["fc"]["w"]
+            if quant:
+                fw = _fake_quant(fw)
+            logits = pooled.reshape(nb, -1) @ fw.T
+            return logits, new_state
+    raise ValueError("spec has no head node")

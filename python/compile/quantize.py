@@ -1,0 +1,229 @@
+"""Operator fusion + fixed-point quantization + NEUW export (L2→L3 bridge).
+
+Pipeline (paper Fig 7): trained float params → BN fusion (fold scale into
+weights, shift into per-channel thresholds) → power-of-two int8
+quantization → `.neuw` artifact the Rust coordinator loads.
+
+The integer inference graph built here (`int_forward`) is the function
+`aot.py` lowers to HLO: all values are integer-valued f32 (exact in f32 —
+accumulations stay far below 2^24), so the Rust golden executor, the
+NEURAL cycle simulator and the PJRT-executed HLO produce *identical*
+logits. That three-way agreement is asserted by `rust/tests/`.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import lif_fire, qk_token_mask, ref, spiking_matmul, w2ttfs_count
+
+QMAX = 127
+EPS = 1e-5
+
+
+def choose_frac(maxabs: float, max_frac: int = 12) -> int:
+    """Largest power-of-two scale that keeps |w|*2^f <= 127."""
+    if maxabs <= 0:
+        return max_frac
+    f = int(np.floor(np.log2(QMAX / maxabs)))
+    return int(np.clip(f, 0, max_frac))
+
+
+def _round_half_even(x):
+    return np.rint(x)  # numpy rint = round-half-even, matches rust util::fixed
+
+
+def fuse_bn(w, gamma, beta, mean, var, vth):
+    """Fold BN into conv weights and per-channel thresholds.
+
+    Returns (w_fused [cout,cin,k,k], thr_float [cout]) such that
+    `conv(x, w_fused) >= thr_float` ⟺ `BN(conv(x, w)) >= vth`.
+    """
+    scale = gamma / np.sqrt(var + EPS)  # per out-channel (sign preserved)
+    w_fused = w * scale[:, None, None, None]
+    bias = beta - mean * scale
+    thr = vth - bias
+    return w_fused, thr
+
+
+def quantize_model(spec: M.NetSpec, params, state) -> dict:
+    """Fuse + quantize a trained model into the integer qmodel dict."""
+    nodes = []
+    for i, n in enumerate(spec.nodes):
+        if n.op == "input":
+            nodes.append({"op": "input", "inputs": []})
+        elif n.op == "conv":
+            p = params[f"conv{i}"]
+            st = state[f"conv{i}"]
+            w_f, thr_f = fuse_bn(
+                np.asarray(p["w"], np.float64),
+                np.asarray(p["gamma"], np.float64),
+                np.asarray(p["beta"], np.float64),
+                np.asarray(st["mean"], np.float64),
+                np.asarray(st["var"], np.float64),
+                float(p["vth"]),
+            )
+            frac = choose_frac(np.abs(w_f).max())
+            q = np.clip(_round_half_even(w_f * 2.0**frac), -128, QMAX).astype(np.int8)
+            thr_raw = _round_half_even(thr_f * 2.0**frac).astype(np.int64)
+            thr_raw = np.clip(thr_raw, -(2**31) + 1, 2**31 - 1).astype(np.int32)
+            nodes.append(
+                {
+                    "op": "conv",
+                    "inputs": list(n.inputs),
+                    "cin": n.cin,
+                    "cout": n.cout,
+                    "k": n.k,
+                    "stride": n.stride,
+                    "pad": n.pad,
+                    "frac": frac,
+                    "thresholds": thr_raw,
+                    "tau_half": False,  # τ=0.5 at T=1 folds into thresholds
+                    "weights": q,
+                }
+            )
+        elif n.op == "pool":
+            nodes.append({"op": "pool", "inputs": list(n.inputs), "k": n.k, "stride": n.stride})
+        elif n.op == "or":
+            nodes.append({"op": "or", "inputs": list(n.inputs)})
+        elif n.op == "qk":
+            nodes.append({"op": "qk", "inputs": list(n.inputs), "mode": 0})
+        elif n.op == "head":
+            dims = M.shapes(spec)
+            c, h, w = dims[n.inputs[0]]
+            wd = n.window
+            fw = np.asarray(params["fc"]["w"], np.float64)
+            frac = choose_frac(np.abs(fw).max())
+            q = np.clip(_round_half_even(fw * 2.0**frac), -128, QMAX).astype(np.int8)
+            nodes.append(
+                {
+                    "op": "head",
+                    "inputs": list(n.inputs),
+                    "classes": spec.num_classes,
+                    "cin": c,
+                    "ho": h // wd,
+                    "wo": w // wd,
+                    "window": wd,
+                    "frac": frac,
+                    "weights": q,
+                }
+            )
+    return {
+        "name": spec.name,
+        "num_classes": spec.num_classes,
+        "input_dims": spec.input_dims,
+        "nodes": nodes,
+    }
+
+
+# --------------------------------------------------------- NEUW writer/reader
+
+_OPC = {"input": 0, "conv": 1, "pool": 2, "or": 3, "qk": 4, "head": 5}
+
+
+def neuw_bytes(qm: dict) -> bytes:
+    """Serialize a qmodel to the NEUW format (twin of rust model/neuw.rs)."""
+    out = bytearray()
+    out += b"NEUW"
+    out += struct.pack("<I", 1)
+    name = qm["name"].encode()
+    out += struct.pack("<B", len(name)) + name
+    out += struct.pack("<I", qm["num_classes"])
+    c, h, w = qm["input_dims"]
+    out += struct.pack("<BBB", c, h, w)
+    out += struct.pack("<I", len(qm["nodes"]))
+    for n in qm["nodes"]:
+        out += struct.pack("<BB", _OPC[n["op"]], len(n["inputs"]))
+        for i in n["inputs"]:
+            out += struct.pack("<I", i)
+        if n["op"] == "conv":
+            out += struct.pack("<II", n["cin"], n["cout"])
+            out += struct.pack("<BBBB", n["k"], n["stride"], n["pad"], n["frac"])
+            out += np.asarray(n["thresholds"], "<i4").tobytes()
+            out += struct.pack("<B", int(n["tau_half"]))
+            out += n["weights"].astype(np.int8).tobytes()
+        elif n["op"] == "pool":
+            out += struct.pack("<BB", n["k"], n["stride"])
+        elif n["op"] == "qk":
+            out += struct.pack("<B", n["mode"])
+        elif n["op"] == "head":
+            out += struct.pack("<II", n["classes"], n["cin"])
+            out += struct.pack("<BBBB", n["ho"], n["wo"], n["window"], n["frac"])
+            out += n["weights"].astype(np.int8).tobytes()
+    return bytes(out)
+
+
+def save_neuw(qm: dict, path: str) -> None:
+    with open(path, "wb") as f:
+        f.write(neuw_bytes(qm))
+
+
+# ------------------------------------------------------------- int forward
+
+
+def int_forward(qm: dict, x, use_pallas: bool = True):
+    """Integer-exact inference over the quantized graph.
+
+    x: (C, H, W) binary f32 spikes. Returns integer-valued f32 logits.
+    With `use_pallas=True` the LIF fire, W2TTFS filter, QK mask and FC
+    matmul run as Pallas kernels (interpret mode) so they lower into the
+    exported HLO.
+    """
+    acts = []
+    for n in qm["nodes"]:
+        if n["op"] == "input":
+            acts.append(x)
+        elif n["op"] == "conv":
+            w = jnp.asarray(n["weights"], jnp.float32).reshape(
+                n["cout"], n["cin"], n["k"], n["k"]
+            )
+            mp = jax.lax.conv_general_dilated(
+                acts[n["inputs"][0]][None],
+                w,
+                window_strides=(n["stride"], n["stride"]),
+                padding=[(n["pad"], n["pad"])] * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )[0]
+            thr = jnp.asarray(n["thresholds"], jnp.float32)
+            acts.append(lif_fire(mp, thr) if use_pallas else ref.lif_fire(mp, thr))
+        elif n["op"] == "pool":
+            y = jax.lax.reduce_window(
+                acts[n["inputs"][0]],
+                -jnp.inf,
+                jax.lax.max,
+                (1, n["k"], n["k"]),
+                (1, n["stride"], n["stride"]),
+                "VALID",
+            )
+            acts.append(y)
+        elif n["op"] == "or":
+            acts.append(jnp.maximum(acts[n["inputs"][0]], acts[n["inputs"][1]]))
+        elif n["op"] == "qk":
+            q, k = acts[n["inputs"][0]], acts[n["inputs"][1]]
+            acts.append(qk_token_mask(q, k) if use_pallas else ref.qk_token_mask(q, k))
+        elif n["op"] == "head":
+            s = acts[n["inputs"][0]]
+            wd = n["window"]
+            counts = (
+                w2ttfs_count(s, wd) if use_pallas else ref.w2ttfs_count(s, wd)
+            )
+            fw = jnp.asarray(n["weights"], jnp.float32).reshape(n["classes"], -1)
+            flat = counts.reshape(1, -1)
+            if use_pallas:
+                logits = spiking_matmul(flat, fw.T)[0]
+            else:
+                logits = (flat @ fw.T)[0]
+            return logits
+    raise ValueError("no head node")
+
+
+def int_accuracy(qm: dict, spikes_batch, labels, use_pallas: bool = False) -> float:
+    """Eval helper over (N, C, H, W) spikes."""
+    f = jax.jit(lambda s: int_forward(qm, s, use_pallas=use_pallas))
+    preds = [int(jnp.argmax(f(s))) for s in spikes_batch]
+    return float(np.mean(np.asarray(preds) == np.asarray(labels)))

@@ -1,0 +1,283 @@
+"""KD training framework (paper §III-B, Fig 2b) — the L2 training driver.
+
+Flow per (model, dataset):
+  1. train an ANN **teacher** (small CNN, float),
+  2. train the single-timestep SNN **student** with logit-based knowledge
+     distillation (KL on softened logits + CE) and surrogate gradients —
+     the **KDT** variant,
+  3. **F&Q**: operator fusion + post-training int8 quantization of KDT,
+  4. **KD-QAT**: fine-tune with fake-quantized weights under the same KD
+     loss, then fuse+quantize — the deployed weights,
+  5. **W2TTFS**: the KD-QAT model evaluated through the *integer* W2TTFS
+     graph (bit-exact with the Rust golden executor / NEURAL simulator).
+
+Artifacts written to --outdir (default ../artifacts):
+  dataset_synthcifar{10,100}.synd    canonical eval splits (Rust loads these)
+  {model}_{c10|c100}.neuw            deployed quantized weights
+  eval/algo_results.json             per-variant accuracies (Fig 8 bench input)
+  eval/loss_curve_{model}_{ds}.json  KD training loss curve (EXPERIMENTS.md)
+
+Scale note (DESIGN.md): the paper trains full-width models for 300 epochs
+on a 2080Ti; this offline CPU reproduction trains width-scaled models on
+SynthCIFAR for a few epochs — enough to preserve the variant *ordering*
+(KDT ≥ KD-QAT > F&Q) that Fig 8 compares.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import model as M
+from . import quantize as Q
+
+# ------------------------------------------------------------------ teacher
+
+
+def teacher_init(num_classes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    dims = [(32, 3, 3, 2), (64, 32, 3, 2), (128, 64, 3, 2)]  # (cout,cin,k,stride)
+    params = {}
+    for i, (co, ci, k, _s) in enumerate(dims):
+        params[f"w{i}"] = jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / (ci * k * k)), (co, ci, k, k)), jnp.float32
+        )
+        params[f"b{i}"] = jnp.zeros(co, jnp.float32)
+    params["fcw"] = jnp.asarray(
+        rng.normal(0, 0.02, (num_classes, 128 * 4 * 4)), jnp.float32
+    )
+    params["fcb"] = jnp.zeros(num_classes, jnp.float32)
+    return params
+
+
+def teacher_forward(params, x):
+    """x: (N,3,32,32) in [0,1]."""
+    h = x
+    for i, s in enumerate([2, 2, 2]):
+        h = jax.lax.conv_general_dilated(
+            h,
+            params[f"w{i}"],
+            (s, s),
+            [(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        h = jax.nn.relu(h + params[f"b{i}"][None, :, None, None])
+    return h.reshape(h.shape[0], -1) @ params["fcw"].T + params["fcb"]
+
+
+# --------------------------------------------------------------------- adam
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------- KD loss
+
+
+def kd_loss(student_logits, teacher_logits, labels, tau=2.0, alpha=0.7):
+    """Logit-based KD [6]: alpha·KL(softened) + (1-alpha)·CE."""
+    ce = -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(student_logits), labels[:, None], 1)
+    )
+    pt = jax.nn.softmax(teacher_logits / tau)
+    ls = jax.nn.log_softmax(student_logits / tau)
+    kl = -jnp.mean(jnp.sum(pt * ls, axis=1)) * tau * tau
+    return alpha * kl + (1 - alpha) * ce
+
+
+# ------------------------------------------------------------------ drivers
+
+
+def train_teacher(xtr, ytr, xev, yev, classes, epochs=6, bs=64, lr=1e-3, seed=0):
+    params = teacher_init(classes, seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        def loss(p):
+            lg = teacher_forward(p, xb)
+            return -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(lg), yb[:, None], 1))
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adam_update(params, g, opt, lr)
+        return params, opt, l
+
+    n = len(xtr)
+    for _ep in range(epochs):
+        perm = np.random.default_rng(_ep).permutation(n)
+        for i in range(0, n - bs + 1, bs):
+            idx = perm[i : i + bs]
+            params, opt, _ = step(params, opt, xtr[idx], ytr[idx])
+    pred = np.argmax(jax.jit(teacher_forward)(params, xev), axis=1)
+    acc = float(np.mean(pred == yev))
+    return params, acc
+
+
+def eval_student(spec, params, state, spikes, labels, bs=64, quant=False):
+    @jax.jit
+    def fwd(xb):
+        lg, _ = M.forward(spec, params, state, xb, train=False, quant=quant)
+        return lg
+
+    preds = []
+    for i in range(0, len(spikes), bs):
+        preds.append(np.argmax(fwd(spikes[i : i + bs]), axis=1))
+    return float(np.mean(np.concatenate(preds) == labels))
+
+
+def train_student(
+    spec, teacher_params, xtr_f, spk_tr, ytr, spk_ev, yev, *, epochs, bs=64, lr=1e-3, quant=False, params=None, state=None, seed=0
+):
+    """KD-train the SNN student; returns (params, state, acc, loss_curve)."""
+    if params is None:
+        params, state = M.init_params(spec, seed)
+    opt = adam_init(params)
+    t_logits = jax.jit(teacher_forward)(teacher_params, xtr_f)
+
+    @jax.jit
+    def step(params, state, opt, sb, tb, yb):
+        def loss(p):
+            lg, new_state = M.forward(spec, p, state, sb, train=True, quant=quant)
+            return kd_loss(lg, tb, yb), new_state
+
+        (l, new_state), g = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt = adam_update(params, g, opt, lr)
+        return params, new_state, opt, l
+
+    n = len(spk_tr)
+    curve = []
+    step_i = 0
+    for ep in range(epochs):
+        perm = np.random.default_rng(1000 + ep).permutation(n)
+        for i in range(0, n - bs + 1, bs):
+            idx = perm[i : i + bs]
+            params, state, opt, l = step(params, state, opt, spk_tr[idx], t_logits[idx], ytr[idx])
+            curve.append(float(l))
+            step_i += 1
+    acc = eval_student(spec, params, state, spk_ev, yev, quant=quant)
+    return params, state, acc, curve
+
+
+def run_pipeline(model_name, classes, data, outdir, *, width, epochs, seed=0):
+    """Full KDT → F&Q → KD-QAT → W2TTFS pipeline for one (model, dataset)."""
+    (xtr_f, spk_tr, ytr, spk_ev, yev, teacher_params, ds_tag) = data
+    spec = M.BUILDERS[model_name](classes, width)
+    t0 = time.time()
+    # KDT (full precision)
+    params, state, acc_kdt, curve = train_student(
+        spec, teacher_params, xtr_f, spk_tr, ytr, spk_ev, yev, epochs=epochs, seed=seed
+    )
+    # F&Q: post-training fuse + quantize of the KDT weights
+    qm_ptq = Q.quantize_model(spec, params, state)
+    acc_fq = Q.int_accuracy(qm_ptq, spk_ev, yev)
+    # KD-QAT: fine-tune with fake quant
+    params_q, state_q, acc_qat, _ = train_student(
+        spec,
+        teacher_params,
+        xtr_f,
+        spk_tr,
+        ytr,
+        spk_ev,
+        yev,
+        epochs=max(1, epochs // 2),
+        quant=True,
+        params=params,
+        state=state,
+    )
+    # W2TTFS: integer graph of the KD-QAT model (deployment semantics)
+    qm = Q.quantize_model(spec, params_q, state_q)
+    acc_w2 = Q.int_accuracy(qm, spk_ev, yev)
+    # export deployed weights
+    neuw_path = os.path.join(outdir, f"{model_name}_{ds_tag}.neuw")
+    Q.save_neuw(qm, neuw_path)
+    dt = time.time() - t0
+    print(
+        f"[{model_name}/{ds_tag}] KDT={acc_kdt:.3f} F&Q={acc_fq:.3f} "
+        f"KD-QAT={acc_qat:.3f} W2TTFS={acc_w2:.3f}  ({dt:.0f}s)"
+    )
+    return {
+        "model": model_name,
+        "dataset": ds_tag,
+        "KDT": acc_kdt,
+        "F&Q": acc_fq,
+        "KD-QAT": acc_qat,
+        "W2TTFS": acc_w2,
+        "neuw": os.path.basename(neuw_path),
+        "train_seconds": dt,
+        "loss_curve": curve,
+    }
+
+
+def prepare_dataset(classes, n_train, n_eval, outdir, seed=42, noise=150):
+    # noise=150 makes the synthetic task hard enough that the Fig 8 variant
+    # ordering (KDT vs F&Q vs KD-QAT) is visible instead of saturating.
+    ds = D.SynthCifar(classes, seed, noise=noise)
+    xtr, ytr = ds.batch(0, n_train)
+    # eval split starts beyond the train indices
+    xev, yev = ds.batch(n_train, n_eval)
+    tag = f"c{classes}" if classes != 10 else "c10"
+    synd = os.path.join(outdir, f"dataset_synthcifar{classes}.synd")
+    D.export_synd(synd, xev, yev, classes)
+    xtr_f = (xtr / 255.0).astype(np.float32)
+    xev_f = (xev / 255.0).astype(np.float32)
+    spk_tr = D.encode_threshold(xtr)
+    spk_ev = D.encode_threshold(xev)
+    return xtr_f, xev_f, spk_tr, ytr, spk_ev, yev, tag
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--train-n", type=int, default=1024)
+    ap.add_argument("--eval-n", type=int, default=256)
+    ap.add_argument("--models", default="vgg11,resnet11,qkfresnet11,resnet19")
+    ap.add_argument("--datasets", default="10,100")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    os.makedirs(os.path.join(args.outdir, "eval"), exist_ok=True)
+
+    results = {"width": args.width, "epochs": args.epochs, "runs": [], "teachers": {}}
+    for classes in [int(c) for c in args.datasets.split(",")]:
+        xtr_f, xev_f, spk_tr, ytr, spk_ev, yev, tag = prepare_dataset(
+            classes, args.train_n, args.eval_n, args.outdir
+        )
+        teacher_params, t_acc = train_teacher(xtr_f, ytr, xev_f, yev, classes)
+        results["teachers"][tag] = t_acc
+        print(f"[teacher/{tag}] acc={t_acc:.3f}")
+        data = (xtr_f, spk_tr, ytr, spk_ev, yev, teacher_params, tag)
+        for name in args.models.split(","):
+            r = run_pipeline(name, classes, data, args.outdir, width=args.width, epochs=args.epochs)
+            curve = r.pop("loss_curve")
+            with open(
+                os.path.join(args.outdir, "eval", f"loss_curve_{name}_{tag}.json"), "w"
+            ) as f:
+                json.dump({"loss": curve}, f)
+            results["runs"].append(r)
+    with open(os.path.join(args.outdir, "eval", "algo_results.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote", os.path.join(args.outdir, "eval", "algo_results.json"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""SynthCIFAR generator + SYND export/load."""
+
+import numpy as np
+
+from compile import datasets as D
+
+
+def test_deterministic_samples():
+    ds = D.SynthCifar(10, seed=9)
+    a, la = ds.sample(4)
+    b, lb = ds.sample(4)
+    np.testing.assert_array_equal(a, b)
+    assert la == lb
+
+
+def test_labels_balanced_roundrobin():
+    ds = D.SynthCifar(10, seed=9)
+    labels = [ds.label(i) for i in range(30)]
+    assert labels[:10] == list(range(10))
+
+
+def test_intra_class_closer_than_inter():
+    # Cyclic jitter makes single pairs noisy; compare class-mean images.
+    ds = D.SynthCifar(10, seed=3)
+    n = 40
+    imgs, labels = ds.batch(0, n)
+    means = np.stack([imgs[labels == k].mean(axis=0) for k in range(10)])
+    intra = []
+    inter = []
+    for i in range(n):
+        d = np.abs(imgs[i].astype(float) - means).sum(axis=(1, 2, 3))
+        intra.append(d[labels[i]])
+        inter.append(np.delete(d, labels[i]).mean())
+    assert np.mean(intra) < np.mean(inter), "classes must be separable"
+
+
+def test_synd_roundtrip(tmp_path):
+    ds = D.SynthCifar(10, seed=1)
+    imgs, labels = ds.batch(0, 8)
+    path = str(tmp_path / "d.synd")
+    D.export_synd(path, imgs, labels, 10)
+    back_i, back_l, classes = D.load_synd(path)
+    assert classes == 10
+    np.testing.assert_array_equal(back_i, imgs)
+    np.testing.assert_array_equal(back_l, labels)
+
+
+def test_threshold_encoding_binary():
+    ds = D.SynthCifar(10, seed=1)
+    imgs, _ = ds.batch(0, 2)
+    s = D.encode_threshold(imgs)
+    assert s.dtype == np.float32
+    assert set(np.unique(s)).issubset({0.0, 1.0})
+    # density in a sane band for the default threshold
+    assert 0.05 < s.mean() < 0.95
+
+
+def test_batch_shapes():
+    ds = D.SynthCifar(100, seed=1)
+    imgs, labels = ds.batch(5, 7)
+    assert imgs.shape == (7, 3, 32, 32)
+    assert labels.shape == (7,)
+    assert labels.max() < 100

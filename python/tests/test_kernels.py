@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+All kernel arithmetic is integer-valued in f32, so agreement is asserted
+exactly. Hypothesis sweeps shapes and spike densities.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import lif_fire, qk_token_mask, ref, spiking_matmul, w2ttfs_count
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def spikes(rng, shape, density=0.4):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+# ------------------------------------------------------------------ lif
+
+
+@given(
+    c=st.integers(1, 8),
+    h=st.integers(1, 12),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_lif_fire_matches_ref(c, h, w, seed):
+    rng = np.random.default_rng(seed)
+    mp = rng.integers(-50, 50, (c, h, w)).astype(np.float32)
+    thr = rng.integers(-10, 40, (c,)).astype(np.float32)
+    got = lif_fire(jnp.asarray(mp), jnp.asarray(thr))
+    want = ref.lif_fire(jnp.asarray(mp), jnp.asarray(thr))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lif_fire_threshold_edge():
+    mp = jnp.asarray([[[5.0, 4.0]]])
+    thr = jnp.asarray([5.0])
+    out = np.asarray(lif_fire(mp, thr))
+    assert out[0, 0, 0] == 1.0 and out[0, 0, 1] == 0.0, ">= semantics"
+
+
+# --------------------------------------------------------------- matmul
+
+
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 64),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_spiking_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    patches = spikes(rng, (m, k))
+    weights = rng.integers(-20, 20, (k, n)).astype(np.float32)
+    got = spiking_matmul(jnp.asarray(patches), jnp.asarray(weights))
+    want = ref.spiking_matmul(jnp.asarray(patches), jnp.asarray(weights))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_spiking_matmul_tiling_covers_ragged_edges():
+    # m, n deliberately not multiples of the 128 block
+    rng = np.random.default_rng(0)
+    patches = spikes(rng, (130, 16))
+    weights = rng.integers(-5, 5, (16, 129)).astype(np.float32)
+    got = np.asarray(spiking_matmul(jnp.asarray(patches), jnp.asarray(weights)))
+    want = patches @ weights
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------- w2ttfs
+
+
+@given(
+    c=st.integers(1, 6),
+    ho=st.integers(1, 4),
+    wo=st.integers(1, 4),
+    window=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_w2ttfs_count_matches_ref(c, ho, wo, window, seed):
+    rng = np.random.default_rng(seed)
+    x = spikes(rng, (c, ho * window, wo * window))
+    got = w2ttfs_count(jnp.asarray(x), window)
+    want = ref.w2ttfs_count(jnp.asarray(x), window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_w2ttfs_count_range():
+    x = jnp.ones((2, 8, 8), jnp.float32)
+    counts = np.asarray(w2ttfs_count(x, 4))
+    assert counts.shape == (2, 2, 2)
+    assert (counts == 16).all(), "full window counts window^2 (paper's 16 steps)"
+
+
+def test_w2ttfs_rejects_non_tiling_window():
+    with pytest.raises(AssertionError):
+        w2ttfs_count(jnp.ones((1, 6, 6)), 4)
+
+
+# ------------------------------------------------------------------- qk
+
+
+@given(
+    c=st.integers(1, 8),
+    h=st.integers(1, 8),
+    w=st.integers(1, 8),
+    qd=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_qk_token_mask_matches_ref(c, h, w, qd, seed):
+    rng = np.random.default_rng(seed)
+    q = spikes(rng, (c, h, w), qd)
+    k = spikes(rng, (c, h, w), 0.6)
+    got = qk_token_mask(jnp.asarray(q), jnp.asarray(k))
+    want = ref.qk_token_mask(jnp.asarray(q), jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qk_silent_q_suppresses_everything():
+    q = jnp.zeros((3, 4, 4), jnp.float32)
+    k = jnp.ones((3, 4, 4), jnp.float32)
+    assert np.asarray(qk_token_mask(q, k)).sum() == 0
+
+
+def test_qk_full_q_passes_everything():
+    q = jnp.ones((3, 4, 4), jnp.float32)
+    k = (jnp.arange(48).reshape(3, 4, 4) % 2).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(qk_token_mask(q, k)), np.asarray(k))

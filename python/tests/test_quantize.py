@@ -1,0 +1,123 @@
+"""Fusion + quantization + NEUW format + integer-graph equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import aot, model as M, quantize as Q
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="module")
+def trained_ish():
+    """A tiny untrained (but structurally complete) model + data."""
+    spec = M.resnet11(10, width=0.125)
+    params, state = M.init_params(spec, 7)
+    rng = np.random.default_rng(5)
+    spikes = (rng.random((6, 3, 32, 32)) < 0.45).astype(np.float32)
+    return spec, params, state, spikes
+
+
+def test_fuse_bn_math():
+    """conv(x, w_fused) >= thr  <=>  BN(conv(x, w)) >= vth, per channel."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(4, 2, 3, 3))
+    gamma = rng.uniform(0.5, 2.0, 4)
+    beta = rng.normal(size=4)
+    mean = rng.normal(size=4)
+    var = rng.uniform(0.5, 2.0, 4)
+    vth = 1.0
+    w_f, thr = Q.fuse_bn(w, gamma, beta, mean, var, vth)
+    # pick random pre-activations and check equivalence of conditions
+    conv_out = rng.normal(size=(4, 5))
+    scale = gamma / np.sqrt(var + Q.EPS)
+    bn_out = scale[:, None] * conv_out + (beta - mean * scale)[:, None]
+    lhs = (scale[:, None] * conv_out) >= thr[:, None]  # conv with fused w
+    rhs = bn_out >= vth
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_fuse_bn_negative_gamma_keeps_equivalence():
+    w = np.ones((1, 1, 1, 1))
+    gamma, beta = np.array([-1.5]), np.array([0.2])
+    mean, var = np.array([0.1]), np.array([1.0])
+    w_f, thr = Q.fuse_bn(w, gamma, beta, mean, var, 1.0)
+    # mp' = scale * conv: sign folded into weights — for conv=x the fused
+    # condition is w_f*x >= thr
+    for x in [-2.0, -0.5, 0.0, 0.5, 2.0]:
+        scale = gamma[0] / np.sqrt(var[0] + Q.EPS)
+        bn = scale * x + (beta[0] - mean[0] * scale)
+        assert (w_f[0, 0, 0, 0] * x >= thr[0]) == (bn >= 1.0)
+
+
+@given(maxabs=st.floats(1e-4, 500.0))
+def test_choose_frac_keeps_range(maxabs):
+    f = Q.choose_frac(maxabs)
+    assert 0 <= f <= 12
+    if maxabs <= 127.0:
+        # scaled max stays within one octave of the int8 range
+        assert maxabs * 2.0**f <= 127.0 * 2.0 + 1e-6
+    else:
+        assert f == 0, "weights beyond the int8 range saturate at scale 1"
+
+
+def test_quantize_model_structure(trained_ish):
+    spec, params, state, _ = trained_ish
+    qm = Q.quantize_model(spec, params, state)
+    ops = [n["op"] for n in qm["nodes"]]
+    assert ops[0] == "input" and ops[-1] == "head"
+    conv = next(n for n in qm["nodes"] if n["op"] == "conv")
+    assert conv["weights"].dtype == np.int8
+    assert conv["thresholds"].dtype == np.int32
+    assert len(conv["thresholds"]) == conv["cout"]
+
+
+def test_neuw_roundtrip(tmp_path, trained_ish):
+    spec, params, state, _ = trained_ish
+    qm = Q.quantize_model(spec, params, state)
+    path = str(tmp_path / "m.neuw")
+    Q.save_neuw(qm, path)
+    back = aot.load_neuw(path)
+    assert back["name"] == qm["name"]
+    assert back["num_classes"] == qm["num_classes"]
+    assert len(back["nodes"]) == len(qm["nodes"])
+    for a, b in zip(qm["nodes"], back["nodes"]):
+        assert a["op"] == b["op"]
+        if a["op"] == "conv":
+            # reader returns flat weights; int_forward reshapes on use
+            np.testing.assert_array_equal(a["weights"].ravel(), b["weights"])
+            np.testing.assert_array_equal(a["thresholds"], b["thresholds"])
+
+
+def test_int_forward_pallas_equals_ref(trained_ish):
+    spec, params, state, spikes = trained_ish
+    qm = Q.quantize_model(spec, params, state)
+    for s in spikes[:2]:
+        a = np.asarray(Q.int_forward(qm, jnp.asarray(s), use_pallas=True))
+        b = np.asarray(Q.int_forward(qm, jnp.asarray(s), use_pallas=False))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_int_forward_logits_are_integer_valued(trained_ish):
+    spec, params, state, spikes = trained_ish
+    qm = Q.quantize_model(spec, params, state)
+    logits = np.asarray(Q.int_forward(qm, jnp.asarray(spikes[0]), use_pallas=False))
+    np.testing.assert_array_equal(logits, np.round(logits))
+
+
+def test_quantized_close_to_float(trained_ish):
+    """PTQ should track the float model's predictions on most inputs (the
+    F&Q bar of Fig 8 is near KDT, not random)."""
+    spec, params, state, spikes = trained_ish
+    qm = Q.quantize_model(spec, params, state)
+    float_preds, int_preds = [], []
+    for s in spikes:
+        lg, _ = M.forward(spec, params, state, jnp.asarray(s)[None], train=False)
+        float_preds.append(int(np.argmax(np.asarray(lg))))
+        int_preds.append(int(np.argmax(np.asarray(Q.int_forward(qm, jnp.asarray(s), use_pallas=False)))))
+    agree = np.mean(np.asarray(float_preds) == np.asarray(int_preds))
+    assert agree >= 0.5, f"PTQ diverged: agreement {agree}"

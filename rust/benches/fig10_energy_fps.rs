@@ -1,0 +1,75 @@
+//! Fig 10 — energy per inference and FPS of VGG-11 / ResNet-11 on
+//! SynthCIFAR-10/100 across platforms (NEURAL vs SiBrain vs SCPU).
+//!
+//! All platforms simulate the *same trained weights* on the same images;
+//! what differs is the execution model (timesteps, sparsity awareness,
+//! elasticity) and the calibrated power constants. The paper's numbers
+//! are printed per row; the claim under test is the *shape*: NEURAL
+//! roughly halves energy and raises FPS.
+
+use neural::arch::Accelerator;
+use neural::baselines::{Baseline, BaselineKind};
+use neural::bench::artifacts;
+use neural::config::ArchConfig;
+use neural::data::encode_threshold;
+use neural::util::{Summary, Table};
+
+fn main() {
+    let n_images = if std::env::var("NEURAL_BENCH_FAST").is_ok() { 2 } else { 8 };
+    let mut t = Table::new(
+        "Fig 10 — energy/inference (mJ) and FPS per platform",
+        &["model", "dataset", "platform", "energy mJ", "FPS", "paper (E, FPS)"],
+    );
+    for (classes, tag) in [(10usize, "c10"), (100usize, "c100")] {
+        let ds = artifacts::eval_split(classes, n_images);
+        for name in ["vgg11", "resnet11"] {
+            let (model, _) = artifacts::model_or_zoo(name, tag, classes);
+            let paper = match (name, tag) {
+                ("vgg11", "c10") => "~10, 68",
+                ("resnet11", "c10") => "5.56, 136",
+                ("resnet11", "c100") => "6.44, 133",
+                _ => "-",
+            };
+            // NEURAL
+            let acc = Accelerator::new(ArchConfig::default());
+            let mut e = Summary::new();
+            let mut ms = Summary::new();
+            for i in 0..n_images.min(ds.len()) {
+                let (img, _) = ds.get(i);
+                let rep = acc.run(&model, &encode_threshold(&img, 128)).unwrap();
+                e.add(rep.energy.total_j() * 1e3);
+                ms.add(rep.latency_ms);
+            }
+            t.row(&[
+                name.into(),
+                tag.into(),
+                "NEURAL".into(),
+                format!("{:.2}", e.mean()),
+                format!("{:.0}", 1000.0 / ms.mean()),
+                paper.into(),
+            ]);
+            // baselines
+            for kind in [BaselineKind::SiBrain, BaselineKind::Scpu] {
+                let b = Baseline::new(kind, ArchConfig::default());
+                let mut e = Summary::new();
+                let mut ms = Summary::new();
+                for i in 0..n_images.min(ds.len()) {
+                    let (img, _) = ds.get(i);
+                    let rep = b.run(&model, &encode_threshold(&img, 128)).unwrap();
+                    e.add(rep.energy.total_j() * 1e3);
+                    ms.add(rep.latency_ms);
+                }
+                t.row(&[
+                    name.into(),
+                    tag.into(),
+                    kind.name().into(),
+                    format!("{:.2}", e.mean()),
+                    format!("{:.0}", 1000.0 / ms.mean()),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\nshape check (paper): NEURAL cuts energy ~50% vs SiBrain/SCPU and raises FPS.");
+}

@@ -1,0 +1,99 @@
+//! §Perf microbenches — the simulator's hot paths, timed.
+//!
+//! This is the profile source for the performance pass recorded in
+//! EXPERIMENTS.md §Perf: PipeSDA event diffusion, the EPA scatter
+//! accumulate, WTFC, golden conv, full-image simulation, and the raw
+//! elastic-FIFO primitive. Events/second is the simulator's headline
+//! throughput metric (target in DESIGN.md: ≥10⁷ synaptic events/s/core).
+
+use neural::arch::epa::{ConvParams, Epa};
+use neural::arch::sda::{ConvGeom, PipeSda};
+use neural::arch::wmu::Wmu;
+use neural::arch::{Accelerator, ElasticFifo};
+use neural::bench::artifacts;
+use neural::bench::BenchRunner;
+use neural::config::ArchConfig;
+use neural::data::encode_threshold;
+use neural::model::exec;
+use neural::tensor::{Shape, Tensor};
+use neural::util::Pcg32;
+
+fn main() {
+    let runner = BenchRunner::from_env();
+    println!("== perf_micro (hot paths) ==");
+
+    // raw FIFO ops
+    runner.run("fifo push+pop x1M", || {
+        let mut f = ElasticFifo::new(64);
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            if f.push(i).is_err() {
+                while let Some(v) = f.pop() {
+                    acc ^= v;
+                }
+            }
+        }
+        acc
+    });
+
+    // SDA diffusion on a realistic mid-network layer (64ch 16x16, 30% dense)
+    let mut rng = Pcg32::seeded(3);
+    let bits: Vec<u8> = (0..64 * 16 * 16).map(|_| rng.bernoulli(0.3) as u8).collect();
+    let map = Tensor::from_vec(Shape::d3(64, 16, 16), bits);
+    let geom = ConvGeom::new(3, 1, 1, (64, 16, 16));
+    let sda = PipeSda::default();
+    let out = sda.process(&map, &geom);
+    let events = out.events.len();
+    let res = runner.run(&format!("SDA process 64x16x16 ({events} events)"), || {
+        sda.process(&map, &geom).events.len()
+    });
+    println!(
+        "  -> {:.1} M diffused events/s",
+        events as f64 / res.time.mean() / 1e6
+    );
+
+    // EPA scatter on the same layer into 128 output channels
+    let weights: Vec<i8> = (0..128 * 64 * 9).map(|_| (rng.next_below(15) as i32 - 7) as i8).collect();
+    let thresholds = vec![48i32; 128];
+    let p = ConvParams { cout: 128, cin: 64, k: 3, thresholds: &thresholds, tau_half: false, weights: &weights };
+    let epa = Epa::from_cfg(&ArchConfig::default());
+    let sops = events as u64 * 128;
+    let res = runner.run(&format!("EPA run_conv ({sops} SOPs)"), || {
+        let mut wmu = Wmu::new(8);
+        epa.run_conv(&out, &p, &mut wmu, 16, 16).1.sops
+    });
+    println!("  -> {:.1} M simulated SOPs/s", sops as f64 / res.time.mean() / 1e6);
+
+    // golden conv (gather) on the same layer for comparison
+    runner.run("golden dense layer (exec conv)", || {
+        // tiny model contains comparable conv work
+        let (model, _) = artifacts::model_or_zoo("tiny", "none", 10);
+        let (img, _) = artifacts::eval_split(10, 1).get(0);
+        exec::execute(&model, &encode_threshold(&img, 128)).unwrap().total_sops
+    });
+
+    // full-image simulation end to end
+    let (model, _) = artifacts::model_or_zoo("resnet11", "c10", 10);
+    let ds = artifacts::eval_split(10, 1);
+    let (img, _) = ds.get(0);
+    let spikes = encode_threshold(&img, 128);
+    let acc = Accelerator::new(ArchConfig::default());
+    let rep = acc.run(&model, &spikes).unwrap();
+    let res = runner.run(
+        &format!("full image sim resnet11 ({} SOPs)", rep.activity.sops),
+        || acc.run(&model, &spikes).unwrap().activity.sops,
+    );
+    println!(
+        "  -> {:.1} M simulated SOPs/s end-to-end",
+        rep.activity.sops as f64 / res.time.mean() / 1e6
+    );
+
+    // golden full image for reference
+    let res = runner.run("full image golden resnet11", || {
+        exec::execute(&model, &spikes).unwrap().total_sops
+    });
+    println!(
+        "  -> {:.1} M golden SOPs/s end-to-end",
+        rep.activity.sops as f64 / res.time.mean() / 1e6
+    );
+}

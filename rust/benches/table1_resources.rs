@@ -1,0 +1,50 @@
+//! Table I — hardware resource cost of NEURAL per module.
+//!
+//! Regenerated from the analytic resource model (`arch/resource.rs`),
+//! whose coefficients are calibrated on the default 16×16-EPA geometry;
+//! the paper's Vivado numbers are printed alongside. A geometry sweep
+//! shows how the model extrapolates.
+
+use neural::arch::ResourceModel;
+use neural::config::ArchConfig;
+use neural::util::Table;
+
+fn main() {
+    let model = ResourceModel::default();
+    let report = model.evaluate(&ArchConfig::default());
+    let total = report.total();
+
+    let mut t = Table::new(
+        "Table I — Hardware Resource Cost of NEURAL (measured = analytic model)",
+        &["Resource", "PipeSDA", "EPA", "WTFC", "Total", "paper Total"],
+    );
+    let k = |x: f64| format!("{:.0}K", x / 1000.0);
+    t.row(&["LUTs".into(), k(report.pipesda.luts), k(report.epa.luts), k(report.wtfc.luts), k(total.luts), "74K".into()]);
+    t.row(&["Registers".into(), k(report.pipesda.regs), k(report.epa.regs), k(report.wtfc.regs), k(total.regs), "63K".into()]);
+    t.row(&[
+        "BRAM".into(),
+        format!("{}", report.pipesda.bram),
+        format!("{}", report.epa.bram),
+        format!("{}", report.wtfc.bram),
+        format!("{}", total.bram),
+        "137.5".into(),
+    ]);
+    t.print();
+    println!("paper per-module: PipeSDA 9K/10K/3, EPA 33K/15K/64, WTFC 1K/0.7K/25\n");
+
+    let mut sweep = Table::new(
+        "geometry sweep (model extrapolation)",
+        &["EPA", "LUTs", "Registers", "BRAM"],
+    );
+    for (r, c) in [(8usize, 8usize), (16, 16), (32, 32)] {
+        let cfg = ArchConfig { epa_rows: r, epa_cols: c, ..Default::default() };
+        let rep = model.evaluate(&cfg).total();
+        sweep.row(&[
+            format!("{r}x{c}"),
+            format!("{:.0}K", rep.luts / 1000.0),
+            format!("{:.0}K", rep.regs / 1000.0),
+            format!("{:.1}", rep.bram),
+        ]);
+    }
+    sweep.print();
+}

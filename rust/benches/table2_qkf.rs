@@ -1,0 +1,72 @@
+//! Table II — ResNet-11 vs QKFResNet-11 on SynthCIFAR-10/100:
+//! total spikes, accuracy, latency, energy.
+//!
+//! The paper's observations under test: attention adds latency (~2 ms
+//! from the extra Q/K layers), changes total-spike counts via the token
+//! mask (suppression), and (with trained weights) shifts accuracy.
+
+use neural::arch::Accelerator;
+use neural::bench::artifacts;
+use neural::config::ArchConfig;
+use neural::data::encode_threshold;
+use neural::util::{Summary, Table};
+
+fn main() {
+    let n_images = if std::env::var("NEURAL_BENCH_FAST").is_ok() { 2 } else { 8 };
+    let acc_eval_n = 64;
+    let mut t = Table::new(
+        "Table II — ResNet-11 vs QKFResNet-11 on NEURAL",
+        &["dataset", "model", "total spikes", "acc", "latency ms", "energy mJ", "paper (TS/acc/ms/mJ)"],
+    );
+    let paper = [
+        ("c10", "resnet11", "76K / 91.87 / 7.3 / 5.56"),
+        ("c10", "qkfresnet11", "72K / 92.01 / 9.7 / 8.14"),
+        ("c100", "resnet11", "83K / 66.94 / 7.5 / 6.44"),
+        ("c100", "qkfresnet11", "84K / 68.53 / 9.9 / 8.26"),
+    ];
+    let mut latency: Vec<(String, f64)> = Vec::new();
+    for (classes, tag) in [(10usize, "c10"), (100usize, "c100")] {
+        let ds = artifacts::eval_split(classes, acc_eval_n);
+        for name in ["resnet11", "qkfresnet11"] {
+            let (model, _) = artifacts::model_or_zoo(name, tag, classes);
+            let accuracy = artifacts::accuracy(&model, &ds, acc_eval_n).unwrap();
+            let device = Accelerator::new(ArchConfig::default());
+            let mut spikes = Summary::new();
+            let mut ms = Summary::new();
+            let mut energy = Summary::new();
+            for i in 0..n_images.min(ds.len()) {
+                let (img, _) = ds.get(i);
+                let rep = device.run(&model, &encode_threshold(&img, 128)).unwrap();
+                spikes.add(rep.total_spikes as f64);
+                ms.add(rep.latency_ms);
+                energy.add(rep.energy.total_j() * 1e3);
+            }
+            let pref = paper
+                .iter()
+                .find(|(d, m, _)| *d == tag && *m == name)
+                .map(|(_, _, p)| *p)
+                .unwrap_or("-");
+            t.row(&[
+                tag.into(),
+                name.into(),
+                format!("{:.0}", spikes.mean()),
+                format!("{:.1}%", accuracy * 100.0),
+                format!("{:.2}", ms.mean()),
+                format!("{:.2}", energy.mean()),
+                pref.into(),
+            ]);
+            latency.push((format!("{tag}/{name}"), ms.mean()));
+        }
+    }
+    t.print();
+    // shape checks
+    for tag in ["c10", "c100"] {
+        let r = latency.iter().find(|(k, _)| k == &format!("{tag}/resnet11")).unwrap().1;
+        let q = latency.iter().find(|(k, _)| k == &format!("{tag}/qkfresnet11")).unwrap().1;
+        println!(
+            "shape check [{tag}]: QKF latency +{:.2} ms over ResNet-11 (paper: ~+2.4 ms) — {}",
+            q - r,
+            if q > r { "ok" } else { "UNEXPECTED" }
+        );
+    }
+}

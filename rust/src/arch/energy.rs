@@ -1,0 +1,158 @@
+//! Analytic energy model.
+//!
+//! `E = E_sop·SOPs + E_buf·buffer_bytes + E_dram·dram_bytes + P_static·t`.
+//!
+//! This is the standard event-driven energy argument the paper itself makes
+//! (energy scales with spike activity); the constants are calibrated in
+//! EXPERIMENTS.md §Calibration so the ResNet-11/CIFAR-10 run lands near the
+//! paper's 5.56 mJ / 0.758 W, and all *relative* comparisons (Fig 10,
+//! Tables II/III) come from measured activity counters.
+
+use crate::config::EnergyConstants;
+
+/// Dynamic-activity counters for one run (or one image).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Activity {
+    /// Synaptic operations (EPA accumulates + FCU repeat-adds).
+    pub sops: u64,
+    /// On-chip buffer bytes moved (spike buffer writes+reads, FIFO beats).
+    pub buf_bytes: u64,
+    /// Off-chip bytes (WMU weight streams, input image fetch).
+    pub dram_bytes: u64,
+    /// Total cycles (for static energy).
+    pub cycles: u64,
+}
+
+impl Activity {
+    /// Element-wise sum.
+    pub fn add(&mut self, other: &Activity) {
+        self.sops += other.sops;
+        self.buf_bytes += other.buf_bytes;
+        self.dram_bytes += other.dram_bytes;
+        self.cycles += other.cycles;
+    }
+}
+
+/// Energy breakdown in joules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    /// Synaptic-op energy.
+    pub e_sop_j: f64,
+    /// On-chip buffer energy.
+    pub e_buf_j: f64,
+    /// Off-chip memory energy.
+    pub e_dram_j: f64,
+    /// Static (leakage + clock tree) energy over the run time.
+    pub e_static_j: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total joules.
+    pub fn total_j(&self) -> f64 {
+        self.e_sop_j + self.e_buf_j + self.e_dram_j + self.e_static_j
+    }
+}
+
+/// The model: constants + clock.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Calibrated constants.
+    pub k: EnergyConstants,
+    /// Clock frequency in MHz (converts cycles to seconds for statics).
+    pub freq_mhz: f64,
+}
+
+impl EnergyModel {
+    /// Build from the architecture config.
+    pub fn from_cfg(cfg: &crate::config::ArchConfig) -> Self {
+        EnergyModel { k: cfg.energy.clone(), freq_mhz: cfg.freq_mhz }
+    }
+
+    /// Evaluate the breakdown for an activity record.
+    pub fn evaluate(&self, a: &Activity) -> EnergyBreakdown {
+        let t_s = a.cycles as f64 * 1.0e-6 / self.freq_mhz;
+        EnergyBreakdown {
+            e_sop_j: a.sops as f64 * self.k.e_sop_pj * 1e-12,
+            e_buf_j: a.buf_bytes as f64 * self.k.e_buf_pj * 1e-12,
+            e_dram_j: a.dram_bytes as f64 * self.k.e_dram_pj * 1e-12,
+            e_static_j: self.k.p_static_w * t_s,
+        }
+    }
+
+    /// Average power in watts for an activity record.
+    pub fn power_w(&self, a: &Activity) -> f64 {
+        let t_s = a.cycles as f64 * 1.0e-6 / self.freq_mhz;
+        if t_s <= 0.0 {
+            return 0.0;
+        }
+        self.evaluate(a).total_j() / t_s
+    }
+
+    /// The paper's headline efficiency metric: GSOPS/W.
+    pub fn gsops_per_w(&self, a: &Activity) -> f64 {
+        let t_s = a.cycles as f64 * 1.0e-6 / self.freq_mhz;
+        let p = self.power_w(a);
+        if t_s <= 0.0 || p <= 0.0 {
+            return 0.0;
+        }
+        (a.sops as f64 / t_s) / p / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    fn model() -> EnergyModel {
+        EnergyModel::from_cfg(&ArchConfig::default())
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = model();
+        let a = Activity { sops: 1_000_000, buf_bytes: 10_000, dram_bytes: 5_000, cycles: 200_000 };
+        let b = m.evaluate(&a);
+        assert!((b.total_j() - (b.e_sop_j + b.e_buf_j + b.e_dram_j + b.e_static_j)).abs() < 1e-18);
+        assert!(b.e_sop_j > 0.0 && b.e_static_j > 0.0);
+    }
+
+    #[test]
+    fn static_energy_scales_with_time() {
+        let m = model();
+        let a1 = Activity { cycles: 200_000, ..Default::default() };
+        let a2 = Activity { cycles: 400_000, ..Default::default() };
+        assert!((m.evaluate(&a2).e_static_j / m.evaluate(&a1).e_static_j - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_includes_static_floor() {
+        let m = model();
+        let idle = Activity { cycles: 1_000_000, ..Default::default() };
+        assert!((m.power_w(&idle) - m.k.p_static_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_sops_in_same_time_is_more_efficient() {
+        let m = model();
+        let a = Activity { sops: 10_000_000, cycles: 1_000_000, ..Default::default() };
+        let b = Activity { sops: 40_000_000, cycles: 1_000_000, ..Default::default() };
+        assert!(m.gsops_per_w(&b) > m.gsops_per_w(&a));
+    }
+
+    #[test]
+    fn zero_time_safe() {
+        let m = model();
+        let a = Activity::default();
+        assert_eq!(m.power_w(&a), 0.0);
+        assert_eq!(m.gsops_per_w(&a), 0.0);
+    }
+
+    #[test]
+    fn activity_add() {
+        let mut a = Activity { sops: 1, buf_bytes: 2, dram_bytes: 3, cycles: 4 };
+        a.add(&Activity { sops: 10, buf_bytes: 20, dram_bytes: 30, cycles: 40 });
+        assert_eq!(a.sops, 11);
+        assert_eq!(a.cycles, 44);
+    }
+}

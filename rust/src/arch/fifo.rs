@@ -1,0 +1,212 @@
+//! Elastic FIFO — the decoupling primitive of the hybrid data-event
+//! dataflow (paper §IV-A).
+//!
+//! "Elastic" means valid/ready handshaking on both ends: the producer
+//! pushes whenever there is space, the consumer pops whenever there is
+//! data, and neither needs a centrally scheduled slot. At the architecture
+//! level this is what lets PipeSDA, the EPA and the WMU run rate-decoupled
+//! (the simulator's `max()` composition of stage latencies instead of the
+//! `sum()` a rigid design pays — the `elastic` ablation bench flips this).
+//!
+//! The simulator uses real queue semantics for functional streams and the
+//! counters (`stalls`, `high_water`) for the timing/occupancy model.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with occupancy/stall accounting.
+#[derive(Debug, Clone)]
+pub struct ElasticFifo<T> {
+    buf: VecDeque<T>,
+    capacity: usize,
+    /// Total successful pushes.
+    pub pushes: u64,
+    /// Total successful pops.
+    pub pops: u64,
+    /// Push attempts rejected because the FIFO was full (producer stall).
+    pub stalls_full: u64,
+    /// Pop attempts on an empty FIFO (consumer stall).
+    pub stalls_empty: u64,
+    /// Maximum occupancy observed.
+    pub high_water: usize,
+}
+
+impl<T> ElasticFifo<T> {
+    /// New FIFO with the given capacity (entries).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        ElasticFifo {
+            buf: VecDeque::with_capacity(capacity),
+            capacity,
+            pushes: 0,
+            pops: 0,
+            stalls_full: 0,
+            stalls_empty: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Ready-to-accept (producer side of the handshake).
+    pub fn ready(&self) -> bool {
+        self.buf.len() < self.capacity
+    }
+
+    /// Valid-to-consume (consumer side of the handshake).
+    pub fn valid(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Try to push; returns the value back on a full FIFO (and counts a
+    /// producer stall).
+    pub fn push(&mut self, v: T) -> Result<(), T> {
+        if self.ready() {
+            self.buf.push_back(v);
+            self.pushes += 1;
+            self.high_water = self.high_water.max(self.buf.len());
+            Ok(())
+        } else {
+            self.stalls_full += 1;
+            Err(v)
+        }
+    }
+
+    /// Try to pop; `None` counts a consumer stall.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.buf.pop_front() {
+            Some(v) => {
+                self.pops += 1;
+                Some(v)
+            }
+            None => {
+                self.stalls_empty += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without consuming.
+    pub fn peek(&self) -> Option<&T> {
+        self.buf.front()
+    }
+
+    /// Drain everything (end of layer).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Occupancy as a fraction of capacity.
+    pub fn fill_ratio(&self) -> f64 {
+        self.buf.len() as f64 / self.capacity as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = ElasticFifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn full_push_stalls_and_returns_value() {
+        let mut f = ElasticFifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.stalls_full, 1);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn empty_pop_stalls() {
+        let mut f: ElasticFifo<u32> = ElasticFifo::new(2);
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.stalls_empty, 1);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = ElasticFifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.high_water, 5);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_capacity_rejected() {
+        let _: ElasticFifo<u8> = ElasticFifo::new(0);
+    }
+
+    #[test]
+    fn prop_conservation_pushes_equals_pops_plus_len() {
+        // The coordinator's batching invariant relies on this conservation
+        // law: nothing is lost or duplicated under any interleaving.
+        forall("fifo conservation", 100, |g| {
+            let cap = g.size(1, 16);
+            let mut f = ElasticFifo::new(cap);
+            let ops = g.size(1, 200);
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            for _ in 0..ops {
+                if g.bool(0.55) {
+                    if f.push(0u8).is_ok() {
+                        pushed += 1;
+                    }
+                } else if f.pop().is_some() {
+                    popped += 1;
+                }
+                assert!(f.len() <= cap);
+            }
+            assert_eq!(pushed, popped + f.len() as u64);
+            assert_eq!(f.pushes, pushed);
+            assert_eq!(f.pops, popped);
+        });
+    }
+
+    #[test]
+    fn prop_fifo_order_random_interleaving() {
+        forall("fifo order", 60, |g| {
+            let mut f = ElasticFifo::new(g.size(1, 8));
+            let mut next_in = 0u64;
+            let mut next_out = 0u64;
+            for _ in 0..g.size(1, 100) {
+                if g.bool(0.5) {
+                    if f.push(next_in).is_ok() {
+                        next_in += 1;
+                    }
+                } else if let Some(v) = f.pop() {
+                    assert_eq!(v, next_out, "FIFO must preserve order");
+                    next_out += 1;
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! The NEURAL accelerator simulator.
+//!
+//! Cycle-approximate, event-driven, transaction-level: every module
+//! accounts its own cycles and activity counters at the granularity the
+//! paper reports (EPA / PipeSDA / WTFC / FIFOs / WMU), and the functional
+//! results (spike maps, logits) are required to be bit-identical to the
+//! golden executor in [`crate::model::exec`] — the simulator computes the
+//! same integers in event-driven scatter order.
+//!
+//! Module map (paper Fig 3):
+//! * [`fifo`] — elastic FIFO with valid/ready semantics and stall counters
+//!   (the W-FIFO / S-FIFO / per-PE event FIFOs).
+//! * [`pe`] — processing element: event FIFO + LIF unit.
+//! * [`sda`] — PipeSDA: index generation → CP generation → CP map with
+//!   virtual-SDU halo → diffusion into per-pixel event windows (Fig 4).
+//! * [`epa`] — elastic PE array: tile scheduling, event-driven accumulate,
+//!   weight streaming interaction with the WMU.
+//! * [`qkformer`] — on-the-fly attention on the write-back path (Fig 5).
+//! * [`wtfc`] — W2TTFS-based FC core: TTFS filter + FCU with time-reuse
+//!   scaling (Fig 6).
+//! * [`wmu`] — weight management unit: off-chip stream bandwidth model.
+//! * [`energy`] / [`resource`] — analytic energy and LUT/Reg/BRAM models.
+//! * [`sim`] — the top-level [`sim::Accelerator`] that walks a
+//!   [`crate::model::Model`] graph and produces a [`sim::Report`].
+
+pub mod energy;
+pub mod epa;
+pub mod fifo;
+pub mod pe;
+pub mod qkformer;
+pub mod resource;
+pub mod sda;
+pub mod sim;
+pub mod wmu;
+pub mod wtfc;
+
+pub use energy::EnergyModel;
+pub use fifo::ElasticFifo;
+pub use resource::{ResourceModel, ResourceReport};
+pub use sim::{Accelerator, Report};

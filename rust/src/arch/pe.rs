@@ -1,0 +1,113 @@
+//! Processing element: per-PE event FIFO + LIF unit (paper Fig 3, ③–④).
+//!
+//! A PE owns one output neuron at a time (one output channel × one output
+//! pixel of the current tile). Its event FIFO holds weight-tap indexes
+//! (`vld_cnt` in the end register is the occupancy); each cycle it pops one
+//! index, fetches the weight and hands it to the LIF unit — fully
+//! event-driven, so a PE with an empty FIFO burns no compute cycles.
+
+use crate::arch::fifo::ElasticFifo;
+use crate::snn::LifUnit;
+
+/// One processing element.
+#[derive(Debug)]
+pub struct Pe {
+    /// Event FIFO of weight-tap indexes (paper's `vld_cnt` register is
+    /// `event_fifo.len()`).
+    pub event_fifo: ElasticFifo<u32>,
+    /// The LIF unit.
+    pub lif: LifUnit,
+    /// Cycles this PE spent computing (== events consumed).
+    pub busy_cycles: u64,
+    /// Synaptic operations performed.
+    pub sops: u64,
+}
+
+impl Pe {
+    /// New PE with the given event-FIFO depth and LIF parameters.
+    pub fn new(fifo_depth: usize, threshold: i32, tau_half: bool) -> Self {
+        Pe {
+            event_fifo: ElasticFifo::new(fifo_depth),
+            lif: LifUnit::new(threshold, tau_half),
+            busy_cycles: 0,
+            sops: 0,
+        }
+    }
+
+    /// Current number of valid events (the paper's `vld_cnt`).
+    pub fn vld_cnt(&self) -> usize {
+        self.event_fifo.len()
+    }
+
+    /// Reassign this PE to a fresh neuron (new tile): MP reset, FIFO clear.
+    pub fn reassign(&mut self, threshold: i32, tau_half: bool) {
+        self.lif = LifUnit::new(threshold, tau_half);
+        self.event_fifo.clear();
+    }
+
+    /// Drain the event FIFO against a weight slice (one output channel's
+    /// filter, indexed by the FIFO's tap indexes), then fire.
+    /// Returns `(spike, cycles)`; cycles = events + 1 fire cycle.
+    pub fn drain_and_fire(&mut self, weights: &[i8]) -> (bool, u64) {
+        let mut cycles = 0u64;
+        while let Some(widx) = self.event_fifo.pop() {
+            self.lif.integrate(weights[widx as usize] as i32);
+            self.sops += 1;
+            cycles += 1;
+        }
+        // The empty-pop above counted one consumer stall; undo it: draining
+        // until empty is the intended end condition, not a stall.
+        self.event_fifo.stalls_empty = self.event_fifo.stalls_empty.saturating_sub(1);
+        let spike = self.lif.fire();
+        cycles += 1;
+        self.busy_cycles += cycles;
+        (spike, cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_events_and_fires() {
+        let mut pe = Pe::new(8, 10, false);
+        // weights: tap 0 = 4, tap 1 = 7
+        pe.event_fifo.push(0).unwrap();
+        pe.event_fifo.push(1).unwrap();
+        let (spike, cycles) = pe.drain_and_fire(&[4, 7]);
+        assert!(spike, "4 + 7 >= 10");
+        assert_eq!(cycles, 3, "2 events + 1 fire cycle");
+        assert_eq!(pe.sops, 2);
+        assert_eq!(pe.vld_cnt(), 0);
+    }
+
+    #[test]
+    fn empty_fifo_costs_only_fire_cycle() {
+        let mut pe = Pe::new(8, 10, false);
+        let (spike, cycles) = pe.drain_and_fire(&[1]);
+        assert!(!spike);
+        assert_eq!(cycles, 1, "event-driven: no events, no accumulate cycles");
+    }
+
+    #[test]
+    fn reassign_resets_state() {
+        let mut pe = Pe::new(8, 5, false);
+        pe.event_fifo.push(0).unwrap();
+        pe.lif.integrate(3);
+        pe.reassign(7, true);
+        assert_eq!(pe.vld_cnt(), 0);
+        assert_eq!(pe.lif.mp, 0);
+        assert_eq!(pe.lif.threshold, 7);
+        assert!(pe.lif.tau_half);
+    }
+
+    #[test]
+    fn negative_taps_inhibit() {
+        let mut pe = Pe::new(4, 5, false);
+        pe.event_fifo.push(0).unwrap();
+        pe.event_fifo.push(1).unwrap();
+        let (spike, _) = pe.drain_and_fire(&[8, -5]);
+        assert!(!spike, "8 - 5 = 3 < 5");
+    }
+}

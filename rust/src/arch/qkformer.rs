@@ -1,0 +1,158 @@
+//! On-the-fly QKFormer computation (paper §IV-C, Fig 5).
+//!
+//! The attention is folded into the EPA → SpikingBuffer write-back path:
+//! 1. while the Q conv's spikes are written back, `atten_reg` accumulates a
+//!    bit-wise OR reduction (① + ②);
+//! 2. while the K conv's spikes are written back, the register is applied
+//!    as a 0/1 token mask (③ + ④).
+//!
+//! Because both reductions ride existing write-back beats, the paper's
+//! claim is *zero additional cycles*; the simulator therefore charges no
+//! cycles here, only register/AND-gate energy events, and exposes counters
+//! so Table II's spike-suppression effect (masked K spikes) is measurable.
+
+use crate::model::ir::TokenMaskMode;
+use crate::snn::SpikeMap;
+
+/// Statistics of one on-the-fly attention application.
+#[derive(Debug, Clone, Default)]
+pub struct QkfStats {
+    /// atten_reg bit updates during the Q write-back (energy events).
+    pub reg_updates: u64,
+    /// Mask applications during the K write-back (AND gate toggles).
+    pub mask_applies: u64,
+    /// K spikes suppressed by the mask (Table II's TS reduction).
+    pub suppressed: u64,
+    /// K spikes that passed.
+    pub passed: u64,
+}
+
+/// Attention register sized for one write-back tile.
+#[derive(Debug, Clone)]
+pub struct AttenReg {
+    bits: Vec<u8>,
+    mode: TokenMaskMode,
+}
+
+impl AttenReg {
+    /// New register for a (C, H, W) activation.
+    pub fn new(c: usize, h: usize, w: usize, mode: TokenMaskMode) -> Self {
+        let n = match mode {
+            TokenMaskMode::Token => h * w,
+            TokenMaskMode::Channel => c,
+        };
+        AttenReg { bits: vec![0; n], mode }
+    }
+
+    /// Observe the Q map on its write-back path (① + ② in Fig 5).
+    pub fn absorb_q(&mut self, q: &SpikeMap, stats: &mut QkfStats) {
+        let (c, h, w) = (q.shape().dim(0), q.shape().dim(1), q.shape().dim(2));
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    if q.at3(ci, y, x) != 0 {
+                        let idx = match self.mode {
+                            TokenMaskMode::Token => y * w + x,
+                            TokenMaskMode::Channel => ci,
+                        };
+                        if self.bits[idx] == 0 {
+                            self.bits[idx] = 1;
+                            stats.reg_updates += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply the token mask to the K map on its write-back path (③ + ④).
+    pub fn mask_k(&self, k: &SpikeMap, stats: &mut QkfStats) -> SpikeMap {
+        let (c, h, w) = (k.shape().dim(0), k.shape().dim(1), k.shape().dim(2));
+        let mut out = k.clone();
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    if k.at3(ci, y, x) == 0 {
+                        continue;
+                    }
+                    stats.mask_applies += 1;
+                    let idx = match self.mode {
+                        TokenMaskMode::Token => y * w + x,
+                        TokenMaskMode::Channel => ci,
+                    };
+                    if self.bits[idx] == 0 {
+                        out.set3(ci, y, x, 0);
+                        stats.suppressed += 1;
+                    } else {
+                        stats.passed += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One-shot helper: full on-the-fly attention for a (Q, K) pair.
+pub fn on_the_fly_attention(q: &SpikeMap, k: &SpikeMap, mode: TokenMaskMode) -> (SpikeMap, QkfStats) {
+    let mut stats = QkfStats::default();
+    let mut reg = AttenReg::new(q.shape().dim(0), q.shape().dim(1), q.shape().dim(2), mode);
+    reg.absorb_q(q, &mut stats);
+    let out = reg.mask_k(k, &mut stats);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::token_mask;
+    use crate::tensor::{Shape, Tensor};
+    use crate::testing::forall;
+
+    #[test]
+    fn matches_functional_token_mask() {
+        forall("on-the-fly == functional", 50, |g| {
+            let c = g.size(1, 4);
+            let h = g.size(1, 6);
+            let w = g.size(1, 6);
+            let qb = g.spikes(c * h * w, 0.3);
+            let kb = g.spikes(c * h * w, 0.5);
+            let q = Tensor::from_vec(Shape::d3(c, h, w), qb);
+            let k = Tensor::from_vec(Shape::d3(c, h, w), kb);
+            for mode in [TokenMaskMode::Token, TokenMaskMode::Channel] {
+                let (out, _) = on_the_fly_attention(&q, &k, mode);
+                assert_eq!(out, token_mask(&q, &k, mode));
+            }
+        });
+    }
+
+    #[test]
+    fn counters_balance() {
+        let mut q: SpikeMap = Tensor::zeros(Shape::d3(2, 3, 3));
+        let mut k: SpikeMap = Tensor::zeros(Shape::d3(2, 3, 3));
+        q.set3(0, 0, 0, 1);
+        for ci in 0..2 {
+            for y in 0..3 {
+                k.set3(ci, y, y, 1);
+            }
+        }
+        let (out, st) = on_the_fly_attention(&q, &k, TokenMaskMode::Token);
+        assert_eq!(st.passed + st.suppressed, st.mask_applies);
+        assert_eq!(out.count_nonzero() as u64, st.passed);
+        // only token (0,0) is active in Q
+        assert_eq!(st.passed, 2);
+    }
+
+    #[test]
+    fn reg_updates_counted_once_per_bit() {
+        let mut q: SpikeMap = Tensor::zeros(Shape::d3(4, 2, 2));
+        // all 4 channels spike at the same position: one register bit update
+        for c in 0..4 {
+            q.set3(c, 1, 1, 1);
+        }
+        let mut st = QkfStats::default();
+        let mut reg = AttenReg::new(4, 2, 2, TokenMaskMode::Token);
+        reg.absorb_q(&q, &mut st);
+        assert_eq!(st.reg_updates, 1, "OR-reduction: first set wins, rest are free");
+    }
+}

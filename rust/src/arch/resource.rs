@@ -1,0 +1,174 @@
+//! Analytic FPGA resource model (LUT / Register / BRAM).
+//!
+//! Linear per-unit coefficients calibrated so the paper's default geometry
+//! (16×16 EPA, 32²-SDU PipeSDA with 1-halo, 16-lane WTFC) reproduces
+//! Table I: PipeSDA 9K/10K/3, EPA 33K/15K/64, WTFC 1K/0.7K/25, totals
+//! 74K/63K/137.5 (the remainder is control + spiking buffer + WMU, modelled
+//! as the `other` row). Fig 9's cross-architecture LUT comparison uses the
+//! same coefficients on the baselines' geometries.
+
+use crate::config::ArchConfig;
+
+/// One module's resource usage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceRow {
+    /// Look-up tables.
+    pub luts: f64,
+    /// Flip-flop registers.
+    pub regs: f64,
+    /// Block RAMs (36Kb equivalents; halves allowed, hence f64).
+    pub bram: f64,
+}
+
+impl ResourceRow {
+    fn add(&self, o: &ResourceRow) -> ResourceRow {
+        ResourceRow { luts: self.luts + o.luts, regs: self.regs + o.regs, bram: self.bram + o.bram }
+    }
+}
+
+/// Full per-module report (paper Table I shape).
+#[derive(Debug, Clone)]
+pub struct ResourceReport {
+    /// PipeSDA row.
+    pub pipesda: ResourceRow,
+    /// EPA row.
+    pub epa: ResourceRow,
+    /// WTFC row.
+    pub wtfc: ResourceRow,
+    /// Control + spiking buffer + WMU (not itemised in Table I, present in
+    /// its Total row).
+    pub other: ResourceRow,
+}
+
+impl ResourceReport {
+    /// Totals row.
+    pub fn total(&self) -> ResourceRow {
+        self.pipesda.add(&self.epa).add(&self.wtfc).add(&self.other)
+    }
+}
+
+/// Calibrated coefficients (per-SDU / per-PE / per-lane).
+#[derive(Debug, Clone)]
+pub struct ResourceModel {
+    /// LUTs per SDU (incl. virtual halo SDUs).
+    pub lut_per_sdu: f64,
+    /// Registers per SDU.
+    pub reg_per_sdu: f64,
+    /// LUTs per PE (event FIFO + accumulate + LIF).
+    pub lut_per_pe: f64,
+    /// Registers per PE.
+    pub reg_per_pe: f64,
+    /// PEs per BRAM (weight store sharing).
+    pub pes_per_bram: f64,
+    /// LUTs per WTFC lane.
+    pub lut_per_lane: f64,
+    /// Registers per WTFC lane.
+    pub reg_per_lane: f64,
+    /// Fixed + control overhead.
+    pub other_luts: f64,
+    /// Other registers.
+    pub other_regs: f64,
+    /// Other BRAM (spiking buffer etc.).
+    pub other_bram: f64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        // Calibration: defaults must hit Table I (see tests below).
+        ResourceModel {
+            lut_per_sdu: 7.785,
+            reg_per_sdu: 8.65,
+            lut_per_pe: 128.9,
+            reg_per_pe: 58.6,
+            pes_per_bram: 4.0,
+            lut_per_lane: 64.0,
+            reg_per_lane: 44.0,
+            other_luts: 31_000.0,
+            other_regs: 37_300.0,
+            other_bram: 45.5,
+        }
+    }
+}
+
+impl ResourceModel {
+    /// Evaluate the report for an architecture configuration.
+    pub fn evaluate(&self, cfg: &ArchConfig) -> ResourceReport {
+        let grid = (cfg.sdu_grid + 2 * cfg.sdu_halo) as f64;
+        let sdus = grid * grid;
+        let pes = cfg.num_pes() as f64;
+        let lanes = cfg.fcu_lanes as f64;
+        ResourceReport {
+            pipesda: ResourceRow {
+                luts: self.lut_per_sdu * sdus,
+                regs: self.reg_per_sdu * sdus,
+                bram: 3.0,
+            },
+            epa: ResourceRow {
+                luts: self.lut_per_pe * pes,
+                regs: self.reg_per_pe * pes,
+                bram: pes / self.pes_per_bram,
+            },
+            wtfc: ResourceRow {
+                luts: self.lut_per_lane * lanes,
+                regs: self.reg_per_lane * lanes,
+                bram: 9.0 + lanes,
+            },
+            other: ResourceRow {
+                luts: self.other_luts,
+                regs: self.other_regs,
+                bram: self.other_bram,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_report() -> ResourceReport {
+        ResourceModel::default().evaluate(&ArchConfig::default())
+    }
+
+    #[test]
+    fn calibration_hits_table1_pipesda() {
+        let r = default_report();
+        assert!((r.pipesda.luts / 1000.0 - 9.0).abs() < 0.5, "{}", r.pipesda.luts);
+        assert!((r.pipesda.regs / 1000.0 - 10.0).abs() < 0.5);
+        assert_eq!(r.pipesda.bram, 3.0);
+    }
+
+    #[test]
+    fn calibration_hits_table1_epa() {
+        let r = default_report();
+        assert!((r.epa.luts / 1000.0 - 33.0).abs() < 0.5);
+        assert!((r.epa.regs / 1000.0 - 15.0).abs() < 0.5);
+        assert_eq!(r.epa.bram, 64.0);
+    }
+
+    #[test]
+    fn calibration_hits_table1_wtfc() {
+        let r = default_report();
+        assert!((r.wtfc.luts / 1000.0 - 1.0).abs() < 0.1);
+        assert!((r.wtfc.regs / 1000.0 - 0.7).abs() < 0.1);
+        assert_eq!(r.wtfc.bram, 25.0);
+    }
+
+    #[test]
+    fn calibration_hits_table1_totals() {
+        let r = default_report();
+        let t = r.total();
+        assert!((t.luts / 1000.0 - 74.0).abs() < 1.0, "total LUTs {}", t.luts);
+        assert!((t.regs / 1000.0 - 63.0).abs() < 1.0, "total regs {}", t.regs);
+        assert!((t.bram - 137.5).abs() < 1.0, "total BRAM {}", t.bram);
+    }
+
+    #[test]
+    fn resources_scale_with_geometry() {
+        let model = ResourceModel::default();
+        let small = model.evaluate(&ArchConfig { epa_rows: 8, epa_cols: 8, ..Default::default() });
+        let big = model.evaluate(&ArchConfig { epa_rows: 32, epa_cols: 32, ..Default::default() });
+        assert!(big.epa.luts > 4.0 * small.epa.luts - 1.0);
+        assert!(big.epa.bram > small.epa.bram);
+    }
+}

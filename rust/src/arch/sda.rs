@@ -1,0 +1,275 @@
+//! PipeSDA — the pipelined sparse detection array (paper §IV-B, Fig 4).
+//!
+//! Converts the sparse input spike map of a conv layer into per-output-
+//! pixel *event windows*: for every spike, the receptive-field center
+//! positions (CPs) it influences are computed and diffused into the SDUs
+//! covering those output pixels. Negative / overflowing CPs land in the
+//! virtual-SDU halo and are dropped, which is how the RTL handles padding.
+//!
+//! Stages and their timing model (all rate-decoupled by elastic FIFOs):
+//! * **IG** — scans the dense map `scan_width` pixels/cycle and emits spike
+//!   indexes: `cycles = C·H·W / scan_width` (the scan) overlapping the
+//!   downstream stages.
+//! * **CP gen** — 1 event/cycle: computes up to `k²` CPs per event
+//!   (unrolled in HW, so still 1 cycle/event).
+//! * **CP map + diffusion** — 1 event/cycle: broadcast to the ≤`k²`
+//!   neighbouring SDUs is combinational.
+//!
+//! With elastic decoupling the array's total is
+//! `fill + max(scan, events)`; a rigid pipeline pays `fill + scan + events`
+//! (the `elastic=false` ablation).
+
+use crate::snn::{EventList, SpikeMap};
+
+/// Conv geometry the SDA needs to resolve receptive fields.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    /// Kernel edge.
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Padding.
+    pub pad: usize,
+    /// Input dims (C, H, W).
+    pub in_dims: (usize, usize, usize),
+    /// Output spatial dims (H_o, W_o).
+    pub out_dims: (usize, usize),
+}
+
+impl ConvGeom {
+    /// Derive the output dims from input dims and conv params.
+    pub fn new(k: usize, stride: usize, pad: usize, in_dims: (usize, usize, usize)) -> Self {
+        let (_, h, w) = in_dims;
+        let ho = (h + 2 * pad - k) / stride + 1;
+        let wo = (w + 2 * pad - k) / stride + 1;
+        ConvGeom { k, stride, pad, in_dims, out_dims: (ho, wo) }
+    }
+}
+
+/// One diffused event: which input spike reaches which output pixel through
+/// which kernel tap. `widx = (ic·k + ky)·k + kx` indexes the weight tap, so
+/// the PE's weight fetch is a single addition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowEvent {
+    /// Output pixel row.
+    pub oy: u16,
+    /// Output pixel column.
+    pub ox: u16,
+    /// Weight tap index within one output channel's filter (`ic·k²+ky·k+kx`).
+    pub widx: u32,
+}
+
+/// Result of pushing one layer's spikes through the SDA.
+#[derive(Debug, Default)]
+pub struct SdaOutput {
+    /// Diffused events in arrival order (the order SDU FIFOs fill).
+    pub events: Vec<WindowEvent>,
+    /// Events per output pixel (`cnt[oy·Wo + ox]`) — the EPA's per-PE work.
+    pub per_pixel: Vec<u32>,
+    /// Cycles spent (elastic composition).
+    pub cycles: u64,
+    /// Cycles a rigid (non-elastic) pipeline would have spent.
+    pub cycles_rigid: u64,
+    /// Events dropped into the virtual halo (padding clips).
+    pub halo_drops: u64,
+    /// Input spike count (IG stage output).
+    pub input_spikes: u64,
+}
+
+/// PipeSDA model.
+#[derive(Debug, Clone)]
+pub struct PipeSda {
+    /// Pixels scanned per cycle by index generation.
+    pub scan_width: usize,
+    /// Pipeline fill latency (number of stages).
+    pub stages: usize,
+    /// Spike events mapped per cycle by the CP-map stage. The SDA is an
+    /// *array* of SDUs: several CPs land in distinct SDUs per cycle (the
+    /// paper's Fig 4 shows the parallel diffusion); serializing to one
+    /// event/cycle would throttle the EPA on narrow layers.
+    pub events_per_cycle: usize,
+}
+
+impl Default for PipeSda {
+    fn default() -> Self {
+        PipeSda { scan_width: 32, stages: 3, events_per_cycle: 8 }
+    }
+}
+
+impl PipeSda {
+    /// From an [`crate::config::ArchConfig`].
+    pub fn from_cfg(cfg: &crate::config::ArchConfig) -> Self {
+        PipeSda {
+            scan_width: 32,
+            stages: cfg.sda_stages,
+            events_per_cycle: cfg.sda_events_per_cycle,
+        }
+    }
+
+    /// Run index-generation + CP mapping + diffusion for one conv layer.
+    pub fn process(&self, input: &SpikeMap, geom: &ConvGeom) -> SdaOutput {
+        let (_, h, w) = geom.in_dims;
+        let (ho, wo) = geom.out_dims;
+        let k = geom.k as i64;
+        let s = geom.stride as i64;
+        let p = geom.pad as i64;
+        let events_in = EventList::from_map(input);
+        let mut out = SdaOutput {
+            per_pixel: vec![0u32; ho * wo],
+            input_spikes: events_in.len() as u64,
+            ..Default::default()
+        };
+        // Worst-case diffusion fan-out is k² per event.
+        out.events.reserve(events_in.len() * (k * k) as usize);
+        for e in &events_in.events {
+            let (iy, ix, ic) = (e.y as i64, e.x as i64, e.c as i64);
+            // CP generation: output pixels (oy, ox) with
+            //   oy·s - p + ky = iy  for some ky in [0, k)
+            // ⇒ oy = (iy + p - ky)/s when divisible and in range.
+            for ky in 0..k {
+                let num_y = iy + p - ky;
+                if num_y < 0 || num_y % s != 0 {
+                    if num_y < 0 {
+                        out.halo_drops += 1; // virtual SDU caught a negative CP
+                    }
+                    continue;
+                }
+                let oy = num_y / s;
+                if oy >= ho as i64 {
+                    out.halo_drops += 1;
+                    continue;
+                }
+                for kx in 0..k {
+                    let num_x = ix + p - kx;
+                    if num_x < 0 || num_x % s != 0 {
+                        if num_x < 0 {
+                            out.halo_drops += 1;
+                        }
+                        continue;
+                    }
+                    let ox = num_x / s;
+                    if ox >= wo as i64 {
+                        out.halo_drops += 1;
+                        continue;
+                    }
+                    let widx = ((ic * k + ky) * k + kx) as u32;
+                    out.events.push(WindowEvent { oy: oy as u16, ox: ox as u16, widx });
+                    out.per_pixel[(oy as usize) * wo + ox as usize] += 1;
+                }
+            }
+        }
+        // Timing: IG scan overlaps CP/map stages through elastic FIFOs.
+        let scan = (geom.in_dims.0 * h * w) as u64 / self.scan_width.max(1) as u64;
+        let ev = (events_in.len() as u64).div_ceil(self.events_per_cycle.max(1) as u64);
+        let fill = self.stages as u64;
+        out.cycles = fill + scan.max(ev);
+        out.cycles_rigid = fill + scan + events_in.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, Tensor};
+    use crate::testing::forall;
+
+    fn one_spike_map(c: usize, h: usize, w: usize, at: (usize, usize, usize)) -> SpikeMap {
+        let mut m: SpikeMap = Tensor::zeros(Shape::d3(c, h, w));
+        m.set3(at.0, at.1, at.2, 1);
+        m
+    }
+
+    #[test]
+    fn center_spike_diffuses_to_full_kernel() {
+        // 3x3 kernel, stride 1, pad 1: an interior spike reaches 9 pixels.
+        let m = one_spike_map(1, 8, 8, (0, 4, 4));
+        let geom = ConvGeom::new(3, 1, 1, (1, 8, 8));
+        let out = PipeSda::default().process(&m, &geom);
+        assert_eq!(out.events.len(), 9);
+        assert_eq!(out.per_pixel.iter().map(|&c| c as u64).sum::<u64>(), 9);
+    }
+
+    #[test]
+    fn corner_spike_clipped_by_virtual_halo() {
+        // Top-left corner spike with pad 1: only 4 of 9 positions valid.
+        let m = one_spike_map(1, 8, 8, (0, 0, 0));
+        let geom = ConvGeom::new(3, 1, 1, (1, 8, 8));
+        let out = PipeSda::default().process(&m, &geom);
+        assert_eq!(out.events.len(), 4);
+        assert!(out.halo_drops > 0, "halo must absorb clipped CPs");
+    }
+
+    #[test]
+    fn stride2_reaches_subsampled_pixels() {
+        let m = one_spike_map(1, 8, 8, (0, 4, 4));
+        let geom = ConvGeom::new(3, 2, 1, (1, 8, 8));
+        let out = PipeSda::default().process(&m, &geom);
+        // oy candidates: (4+1-ky)/2 for ky=0..3 => 5/2 no, 4/2=2 yes, 3/2 no
+        // so exactly 1 valid oy and 1 valid ox => 1 event.
+        assert_eq!(out.events.len(), 1);
+        assert_eq!(out.events[0].oy, 2);
+        assert_eq!(out.events[0].ox, 2);
+    }
+
+    #[test]
+    fn widx_encodes_channel_and_tap() {
+        let m = one_spike_map(3, 4, 4, (2, 1, 1));
+        let geom = ConvGeom::new(1, 1, 0, (3, 4, 4));
+        let out = PipeSda::default().process(&m, &geom);
+        assert_eq!(out.events.len(), 1);
+        // k=1: widx = ic·1 + 0 = 2
+        assert_eq!(out.events[0].widx, 2);
+    }
+
+    #[test]
+    fn elastic_beats_rigid() {
+        let mut m: SpikeMap = Tensor::zeros(Shape::d3(2, 16, 16));
+        for i in 0..16 {
+            m.set3(0, i, i, 1);
+            m.set3(1, i, 15 - i, 1);
+        }
+        let geom = ConvGeom::new(3, 1, 1, (2, 16, 16));
+        let out = PipeSda::default().process(&m, &geom);
+        assert!(out.cycles < out.cycles_rigid);
+    }
+
+    #[test]
+    fn prop_event_count_matches_golden_receptive_fields() {
+        // The diffused (event → pixel) pairs must equal the gather-form
+        // count: for every output pixel, the number of active inputs in its
+        // receptive field.
+        forall("sda vs gather window counts", 40, |g| {
+            let h = g.size(4, 10);
+            let w = g.size(4, 10);
+            let k = *g.pick(&[1usize, 3]);
+            let stride = *g.pick(&[1usize, 2]);
+            let pad = k / 2;
+            let bits = g.spikes(h * w, 0.3);
+            let map = Tensor::from_vec(Shape::d3(1, h, w), bits);
+            let geom = ConvGeom::new(k, stride, pad, (1, h, w));
+            let out = PipeSda::default().process(&map, &geom);
+            let (ho, wo) = geom.out_dims;
+            // gather count
+            let mut gather = vec![0u32; ho * wo];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            if iy < pad || ix < pad {
+                                continue;
+                            }
+                            let (iy, ix) = (iy - pad, ix - pad);
+                            if iy < h && ix < w && map.at3(0, iy, ix) != 0 {
+                                gather[oy * wo + ox] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(out.per_pixel, gather);
+        });
+    }
+}

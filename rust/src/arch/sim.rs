@@ -1,0 +1,374 @@
+//! Top-level accelerator simulator: walks a [`Model`] graph through the
+//! PipeSDA → EPA → (on-the-fly QKFormer) → WTFC pipeline and produces a
+//! [`Report`] with cycles per module, activity counters, energy/power and
+//! the classification result.
+//!
+//! Functional contract: logits and every intermediate spike map are
+//! bit-identical to [`crate::model::exec::execute`] — the integration test
+//! `tests/sim_vs_golden.rs` asserts this on all zoo models.
+
+use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
+use crate::arch::epa::{ConvParams, Epa};
+use crate::arch::qkformer::on_the_fly_attention;
+use crate::arch::sda::{ConvGeom, PipeSda};
+use crate::arch::wmu::Wmu;
+use crate::arch::wtfc::Wtfc;
+use crate::config::ArchConfig;
+use crate::model::ir::{Model, Op};
+use crate::snn::SpikeMap;
+use anyhow::{bail, Result};
+
+/// Per-module cycle accounting (paper Table I module granularity).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModuleCycles {
+    /// PipeSDA cycles.
+    pub sda: u64,
+    /// EPA cycles.
+    pub epa: u64,
+    /// WTFC cycles.
+    pub wtfc: u64,
+    /// Spiking-buffer / pool / residual-OR / control cycles.
+    pub other: u64,
+}
+
+impl ModuleCycles {
+    /// Sum of all module cycles (rigid upper bound on latency).
+    pub fn sum(&self) -> u64 {
+        self.sda + self.epa + self.wtfc + self.other
+    }
+}
+
+/// Result of simulating one image.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// End-to-end latency in cycles (elastic composition per layer).
+    pub cycles: u64,
+    /// What a rigid (non-elastic) design would pay.
+    pub cycles_rigid: u64,
+    /// Per-module busy cycles.
+    pub modules: ModuleCycles,
+    /// Activity counters (drives the energy model).
+    pub activity: Activity,
+    /// Total spikes across all non-terminal nodes (Table II "TS").
+    pub total_spikes: u64,
+    /// QKFormer: K spikes suppressed by the token mask.
+    pub qkf_suppressed: u64,
+    /// Raw logits.
+    pub logits: Vec<i64>,
+    /// Argmax class.
+    pub predicted: usize,
+    /// Mean EPA utilization across conv layers.
+    pub epa_utilization: f64,
+    /// Latency in milliseconds at the configured clock.
+    pub latency_ms: f64,
+    /// Energy breakdown.
+    pub energy: EnergyBreakdown,
+    /// Average power (W).
+    pub power_w: f64,
+    /// Efficiency (GSOPS/W), the paper's headline metric.
+    pub gsops_w: f64,
+}
+
+/// The simulated accelerator instance.
+#[derive(Debug)]
+pub struct Accelerator {
+    /// Architecture configuration.
+    pub cfg: ArchConfig,
+    /// Elastic FIFO decoupling enabled (ablation switch; paper = true).
+    pub elastic: bool,
+    sda: PipeSda,
+    epa: Epa,
+    wtfc: Wtfc,
+    energy: EnergyModel,
+}
+
+impl Accelerator {
+    /// Build from a config with elastic execution on (the paper's design).
+    pub fn new(cfg: ArchConfig) -> Self {
+        Accelerator {
+            sda: PipeSda::from_cfg(&cfg),
+            epa: Epa::from_cfg(&cfg),
+            wtfc: Wtfc::from_cfg(&cfg),
+            energy: EnergyModel::from_cfg(&cfg),
+            elastic: true,
+            cfg,
+        }
+    }
+
+    /// Ablation constructor: rigid (non-elastic) composition.
+    pub fn rigid(cfg: ArchConfig) -> Self {
+        let mut a = Self::new(cfg);
+        a.elastic = false;
+        a
+    }
+
+    /// Simulate one image (input spike map) through the model.
+    pub fn run(&self, model: &Model, input: &SpikeMap) -> Result<Report> {
+        let (ic, ih, iw) = model.input_dims;
+        if input.shape().dims() != [ic, ih, iw] {
+            bail!("input shape {} != model input ({ic},{ih},{iw})", input.shape());
+        }
+        let mut report = Report::default();
+        let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
+        let mut acts: Vec<SpikeMap> = Vec::with_capacity(model.nodes.len());
+        let mut util_sum = 0.0;
+        let mut util_n = 0usize;
+        // Input image fetch: C·H·W bits from off-chip, byte-packed.
+        report.activity.dram_bytes += ((ic * ih * iw) as u64).div_ceil(8);
+
+        for node in &model.nodes {
+            match &node.op {
+                Op::Input => {
+                    report.total_spikes += input.count_nonzero() as u64;
+                    acts.push(input.clone());
+                }
+                Op::Conv { cin, cout, k, stride, pad, thresholds, tau_half, weights, .. } => {
+                    let x = &acts[node.inputs[0]];
+                    let geom = ConvGeom::new(*k, *stride, *pad, (*cin, x.shape().dim(1), x.shape().dim(2)));
+                    let sda_out = self.sda.process(x, &geom);
+                    let params = ConvParams {
+                        cout: *cout,
+                        cin: *cin,
+                        k: *k,
+                        thresholds,
+                        tau_half: *tau_half,
+                        weights,
+                    };
+                    let (out, st) =
+                        self.epa.run_conv(&sda_out, &params, &mut wmu, geom.out_dims.0, geom.out_dims.1);
+                    // Elastic: SDA streams into the EPA through S-FIFO, so
+                    // the layer costs max(sda, epa); rigid pays the sum.
+                    let (sda_c, epa_c) = if self.elastic {
+                        (sda_out.cycles, st.cycles)
+                    } else {
+                        (sda_out.cycles_rigid, st.cycles_rigid)
+                    };
+                    let layer = if self.elastic { sda_c.max(epa_c) } else { sda_c + epa_c };
+                    report.cycles += layer;
+                    report.cycles_rigid += sda_out.cycles_rigid + st.cycles_rigid;
+                    report.modules.sda += sda_c;
+                    report.modules.epa += epa_c;
+                    report.activity.sops += st.sops;
+                    // Spiking-buffer traffic: read input spikes, write output
+                    // spikes (bit-packed).
+                    report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
+                    report.activity.buf_bytes += (out.numel() as u64).div_ceil(8);
+                    report.total_spikes += st.fires;
+                    util_sum += st.utilization;
+                    util_n += 1;
+                    acts.push(out);
+                }
+                Op::MaxPool { k, stride } => {
+                    let x = &acts[node.inputs[0]];
+                    let out = pool_or(x, *k, *stride);
+                    // Pool runs in the spiking-buffer datapath: one scan.
+                    let cyc = (x.numel() as u64).div_ceil(32);
+                    report.cycles += cyc;
+                    report.cycles_rigid += cyc;
+                    report.modules.other += cyc;
+                    report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
+                    report.total_spikes += out.count_nonzero() as u64;
+                    acts.push(out);
+                }
+                Op::Or => {
+                    let a = &acts[node.inputs[0]];
+                    let b = &acts[node.inputs[1]];
+                    let mut out = a.clone();
+                    for (o, &bv) in out.data_mut().iter_mut().zip(b.data()) {
+                        *o |= bv;
+                    }
+                    let cyc = (a.numel() as u64).div_ceil(32);
+                    report.cycles += cyc;
+                    report.cycles_rigid += cyc;
+                    report.modules.other += cyc;
+                    report.activity.buf_bytes += (a.numel() as u64).div_ceil(8) * 2;
+                    report.total_spikes += out.count_nonzero() as u64;
+                    acts.push(out);
+                }
+                Op::TokenMask { mode } => {
+                    let q = &acts[node.inputs[0]];
+                    let k = &acts[node.inputs[1]];
+                    let (out, st) = on_the_fly_attention(q, k, *mode);
+                    // On-the-fly: rides the write-back beats, zero cycles
+                    // (the paper's central claim for Fig 5); register energy
+                    // is charged as buffer traffic.
+                    report.activity.buf_bytes += (st.reg_updates + st.mask_applies).div_ceil(8);
+                    report.qkf_suppressed += st.suppressed;
+                    report.total_spikes += out.count_nonzero() as u64;
+                    acts.push(out);
+                }
+                Op::W2ttfsFc { classes, cin, ho, wo, window, weights, .. } => {
+                    let x = &acts[node.inputs[0]];
+                    let out = self.wtfc.run(x, *classes, *cin, *ho, *wo, *window, weights);
+                    let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
+                    report.cycles += cyc;
+                    report.cycles_rigid += out.cycles_rigid;
+                    report.modules.wtfc += cyc;
+                    report.activity.sops += out.sops;
+                    // FC weights stream from off-chip once.
+                    report.activity.dram_bytes += weights.len() as u64;
+                    report.logits = out.logits;
+                    acts.push(crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(*classes, 1, 1)));
+                }
+            }
+        }
+        report.activity.dram_bytes += wmu.dram_bytes;
+        report.activity.cycles = report.cycles;
+        report.predicted = crate::model::exec::argmax_first(&report.logits);
+        report.epa_utilization = if util_n == 0 { 0.0 } else { util_sum / util_n as f64 };
+        report.latency_ms = self.cfg.cycles_to_ms(report.cycles);
+        report.energy = self.energy.evaluate(&report.activity);
+        report.power_w = self.energy.power_w(&report.activity);
+        report.gsops_w = self.energy.gsops_per_w(&report.activity);
+        Ok(report)
+    }
+
+    /// Frames per second implied by a single-image latency (the paper's FPS
+    /// metric: no cross-image pipelining).
+    pub fn fps(&self, report: &Report) -> f64 {
+        if report.latency_ms <= 0.0 {
+            0.0
+        } else {
+            1000.0 / report.latency_ms
+        }
+    }
+}
+
+/// Spike max-pool (window OR) in the spiking-buffer datapath.
+fn pool_or(x: &SpikeMap, k: usize, stride: usize) -> SpikeMap {
+    let (c, h, w) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out: SpikeMap = crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(c, ho, wo));
+    for ci in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut any = 0u8;
+                'win: for ky in 0..k {
+                    for kx in 0..k {
+                        if x.at3(ci, oy * stride + ky, ox * stride + kx) != 0 {
+                            any = 1;
+                            break 'win;
+                        }
+                    }
+                }
+                out.set3(ci, oy, ox, any);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{encode_threshold, SynthCifar};
+    use crate::model::{exec, zoo};
+
+    fn input(seed: u64) -> SpikeMap {
+        let ds = SynthCifar::new(10, seed);
+        let (img, _) = ds.sample(0);
+        encode_threshold(&img, 128)
+    }
+
+    #[test]
+    fn tiny_sim_matches_golden_logits() {
+        let m = zoo::tiny(10, 3);
+        let x = input(42);
+        let acc = Accelerator::new(ArchConfig::default());
+        let rep = acc.run(&m, &x).unwrap();
+        let gold = exec::execute(&m, &x).unwrap();
+        assert_eq!(rep.logits, gold.logits);
+        assert_eq!(rep.total_spikes, gold.total_spikes);
+        assert_eq!(rep.activity.sops, gold.total_sops);
+        assert_eq!(rep.predicted, gold.predicted());
+    }
+
+    #[test]
+    fn elastic_never_slower_than_rigid() {
+        let m = zoo::tiny(10, 3);
+        let x = input(1);
+        let cfg = ArchConfig::default();
+        let e = Accelerator::new(cfg.clone()).run(&m, &x).unwrap();
+        let r = Accelerator::rigid(cfg).run(&m, &x).unwrap();
+        assert!(e.cycles <= r.cycles, "elastic {} vs rigid {}", e.cycles, r.cycles);
+        assert_eq!(e.logits, r.logits, "ablation must not change function");
+    }
+
+    #[test]
+    fn latency_positive_and_consistent() {
+        let m = zoo::tiny(10, 3);
+        let acc = Accelerator::new(ArchConfig::default());
+        let rep = acc.run(&m, &input(7)).unwrap();
+        assert!(rep.cycles > 0);
+        assert!(rep.latency_ms > 0.0);
+        assert!((acc.fps(&rep) * rep.latency_ms / 1000.0 - 1.0).abs() < 1e-9);
+        assert!(rep.power_w > 0.0);
+        assert!(rep.energy.total_j() > 0.0);
+    }
+
+    #[test]
+    fn module_cycles_cover_total() {
+        let m = zoo::tiny(10, 3);
+        let acc = Accelerator::new(ArchConfig::default());
+        let rep = acc.run(&m, &input(7)).unwrap();
+        // elastic max() composition => per-module busy sum >= end-to-end
+        assert!(rep.modules.sum() >= rep.cycles);
+        assert!(rep.cycles <= rep.cycles_rigid);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let m = zoo::tiny(10, 3);
+        let acc = Accelerator::new(ArchConfig::default());
+        let bad: SpikeMap = crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(1, 8, 8));
+        assert!(acc.run(&m, &bad).is_err());
+    }
+
+    #[test]
+    fn prop_energy_monotone_in_activity() {
+        // More input spikes => at least as many SOPs and at least as much
+        // dynamic energy (the event-driven energy argument).
+        use crate::testing::forall;
+        let m = zoo::tiny(10, 3);
+        let acc = Accelerator::new(ArchConfig::default());
+        forall("energy monotone", 10, |g| {
+            let thresh_hi = g.size(150, 240) as u8;
+            let thresh_lo = g.size(40, 120) as u8;
+            let ds = SynthCifar::new(10, 77);
+            let (img, _) = ds.sample(g.size(0, 20));
+            let sparse = acc.run(&m, &encode_threshold(&img, thresh_hi)).unwrap();
+            let dense = acc.run(&m, &encode_threshold(&img, thresh_lo)).unwrap();
+            assert!(dense.activity.sops >= sparse.activity.sops);
+            assert!(dense.energy.e_sop_j >= sparse.energy.e_sop_j);
+        });
+    }
+
+    #[test]
+    fn prop_report_internally_consistent() {
+        use crate::testing::forall;
+        let acc = Accelerator::new(ArchConfig::default());
+        forall("report consistency", 8, |g| {
+            let m = zoo::tiny(10, g.size(1, 50) as u64);
+            let rep = acc.run(&m, &input(g.size(0, 1000) as u64)).unwrap();
+            assert!(rep.cycles <= rep.cycles_rigid);
+            assert!(rep.modules.sum() >= rep.cycles, "module busy >= end-to-end");
+            assert!(rep.energy.total_j() > 0.0);
+            assert!((0.0..=1.0).contains(&rep.epa_utilization));
+            assert_eq!(rep.logits.len(), 10);
+            assert!(rep.predicted < 10);
+        });
+    }
+
+    #[test]
+    fn bigger_array_is_faster() {
+        let m = zoo::tiny(10, 3);
+        let x = input(9);
+        let small = Accelerator::new(ArchConfig { epa_rows: 4, epa_cols: 4, ..Default::default() });
+        let big = Accelerator::new(ArchConfig { epa_rows: 32, epa_cols: 32, ..Default::default() });
+        let rs = small.run(&m, &x).unwrap();
+        let rb = big.run(&m, &x).unwrap();
+        assert!(rb.cycles < rs.cycles);
+        assert_eq!(rb.logits, rs.logits);
+    }
+}

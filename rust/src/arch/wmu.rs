@@ -1,0 +1,73 @@
+//! Weight Management Unit — off-chip weight streaming model (paper Fig 3).
+//!
+//! The WMU schedules weights from off-chip memory into the elastic W-FIFO
+//! based on the computation status. The simulator models it as a
+//! bandwidth-limited stream with double-buffered prefetch: the EPA composes
+//! its compute time with the stream time via `max()` when elastic
+//! (decoupled) and `+` when rigid.
+
+/// Streaming statistics for one accelerator run.
+#[derive(Debug, Clone, Default)]
+pub struct Wmu {
+    /// Port width in bytes per cycle.
+    pub bytes_per_cycle: usize,
+    /// Total bytes fetched from off-chip memory.
+    pub dram_bytes: u64,
+    /// Total cycles the stream port was busy.
+    pub stream_cycles: u64,
+    /// Number of stream transactions (tile weight loads).
+    pub transactions: u64,
+}
+
+impl Wmu {
+    /// New WMU with the configured port width.
+    pub fn new(bytes_per_cycle: usize) -> Self {
+        Wmu { bytes_per_cycle: bytes_per_cycle.max(1), ..Default::default() }
+    }
+
+    /// Account one weight-tile stream of `bytes`; returns the cycles the
+    /// port is busy (ceil-divided by the port width).
+    pub fn stream(&mut self, bytes: u64) -> u64 {
+        let cycles = bytes.div_ceil(self.bytes_per_cycle as u64);
+        self.dram_bytes += bytes;
+        self.stream_cycles += cycles;
+        self.transactions += 1;
+        cycles
+    }
+
+    /// Reset counters (per-image accounting).
+    pub fn reset(&mut self) {
+        self.dram_bytes = 0;
+        self.stream_cycles = 0;
+        self.transactions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_division_of_bytes() {
+        let mut w = Wmu::new(8);
+        assert_eq!(w.stream(64), 8);
+        assert_eq!(w.stream(65), 9);
+        assert_eq!(w.dram_bytes, 129);
+        assert_eq!(w.transactions, 2);
+    }
+
+    #[test]
+    fn zero_width_clamped() {
+        let mut w = Wmu::new(0);
+        assert_eq!(w.stream(5), 5);
+    }
+
+    #[test]
+    fn reset_clears_counters() {
+        let mut w = Wmu::new(4);
+        w.stream(100);
+        w.reset();
+        assert_eq!(w.dram_bytes, 0);
+        assert_eq!(w.stream_cycles, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! WTFC — the W2TTFS-based fully-connected core (paper §IV-D, Fig 6).
+//!
+//! Two pipelined modules:
+//! * **TTFS Filter** — streams the final conv layer's spike map channel by
+//!   channel, counts valid spikes per pooling window (`vld_cnt`), and emits
+//!   one TTFS token per non-empty window.
+//! * **FCU** — for each token, updates all class accumulators with the
+//!   window's FC weight, *repeated `vld_cnt` times* (the time-reuse
+//!   strategy): scaling by `vld_cnt/window²` without any multiplier or
+//!   divider — the common `1/window²` is a constant shift.
+//!
+//! Timing: filter scans `C·H·W / lanes` cycles; the FCU spends
+//! `Σ vld_cnt · ceil(classes/lanes)` cycles; elastic FIFO between them
+//! composes with `max()`.
+
+use crate::snn::SpikeMap;
+
+/// Result of a WTFC pass.
+#[derive(Debug, Clone, Default)]
+pub struct WtfcOutput {
+    /// Raw integer logits (common 1/window² scale dropped, argmax-safe).
+    pub logits: Vec<i64>,
+    /// Cycles (elastic).
+    pub cycles: u64,
+    /// Cycles (rigid, ablation).
+    pub cycles_rigid: u64,
+    /// Repeat-add operations issued by the FCU (its SOP count).
+    pub sops: u64,
+    /// Non-empty windows (TTFS tokens emitted).
+    pub tokens: u64,
+    /// Windows skipped because they were empty (event-driven benefit).
+    pub skipped_windows: u64,
+}
+
+/// The core.
+#[derive(Debug, Clone)]
+pub struct Wtfc {
+    /// Parallel lanes in filter and FCU.
+    pub lanes: usize,
+}
+
+impl Wtfc {
+    /// From config.
+    pub fn from_cfg(cfg: &crate::config::ArchConfig) -> Self {
+        Wtfc { lanes: cfg.fcu_lanes }
+    }
+
+    /// Run W2TTFS + FC over the final spike map.
+    ///
+    /// `weights[k][c·ho·wo + p]`, identical layout to
+    /// [`crate::model::exec::w2ttfs_fc`], with which the result must agree
+    /// exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        x: &SpikeMap,
+        classes: usize,
+        cin: usize,
+        ho: usize,
+        wo: usize,
+        window: usize,
+        weights: &[i8],
+    ) -> WtfcOutput {
+        let mut out = WtfcOutput { logits: vec![0i64; classes], ..Default::default() };
+        let class_beats = classes.div_ceil(self.lanes.max(1)) as u64;
+        let mut fcu_cycles = 0u64;
+        for c in 0..cin {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    // TTFS filter: count valid spikes in the window.
+                    let mut vld = 0u32;
+                    for ky in 0..window {
+                        for kx in 0..window {
+                            vld += x.at3(c, oy * window + ky, ox * window + kx) as u32;
+                        }
+                    }
+                    if vld == 0 {
+                        out.skipped_windows += 1;
+                        continue;
+                    }
+                    out.tokens += 1;
+                    let p = (c * ho + oy) * wo + ox;
+                    // FCU time-reuse: vld repeat-adds per class lane group.
+                    fcu_cycles += vld as u64 * class_beats;
+                    out.sops += vld as u64 * classes as u64;
+                    for (k, l) in out.logits.iter_mut().enumerate() {
+                        *l += weights[k * cin * ho * wo + p] as i64 * vld as i64;
+                    }
+                }
+            }
+        }
+        let scan_cycles = (cin * ho * wo * window * window) as u64 / self.lanes.max(1) as u64;
+        out.cycles = 4 + scan_cycles.max(fcu_cycles); // 4 = filter+FCU fill
+        out.cycles_rigid = 4 + scan_cycles + fcu_cycles;
+        out
+    }
+}
+
+/// Literal transcription of the paper's **Algorithm 1** (W2TTFS), kept as
+/// an executable specification: build the `window²`-timestep TTFS spike
+/// array (`spike_array_fc[vld_cnt, channel, pos] = 1`), then accumulate the
+/// classifier with the per-timestep scale `tt / window²`.
+///
+/// NEURAL's WTFC core replaces this with the uniform-scale time-reuse
+/// strategy (§IV-D) — `vld` repeat-adds of the unit weight — which the
+/// `algorithm1_equivalence` test below proves identical up to the constant
+/// `window²` factor (and therefore argmax-identical): the paper's claimed
+/// hardware simplification loses nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn w2ttfs_algorithm1(
+    x: &SpikeMap,
+    classes: usize,
+    cin: usize,
+    ho: usize,
+    wo: usize,
+    window: usize,
+    weights: &[i8],
+) -> Vec<f64> {
+    let steps = window * window; // Algorithm 1 line 5: window_size² timesteps
+    let npos = ho * wo;
+    // spike_array_fc[tt][channel][pos] (line 5)
+    let mut spike_array = vec![vec![0u8; cin * npos]; steps + 1];
+    for c in 0..cin {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                // lines 11-13: count valid spikes in the pooling window,
+                // emit the first spike at timestep tt = vld_cnt
+                let mut vld = 0usize;
+                for ky in 0..window {
+                    for kx in 0..window {
+                        vld += x.at3(c, oy * window + ky, ox * window + kx) as usize;
+                    }
+                }
+                spike_array[vld][c * npos + oy * wo + ox] = 1;
+            }
+        }
+    }
+    // lines 17-20: per-timestep weight scaling tt / window²
+    let mut logits = vec![0f64; classes];
+    for (tt, plane) in spike_array.iter().enumerate().skip(1) {
+        let scale = tt as f64 / steps as f64;
+        for (p, &s) in plane.iter().enumerate() {
+            if s != 0 {
+                for (k, l) in logits.iter_mut().enumerate() {
+                    *l += weights[k * cin * npos + p] as f64 * scale;
+                }
+            }
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::w2ttfs_fc;
+    use crate::tensor::{Shape, Tensor};
+    use crate::testing::forall;
+
+    #[test]
+    fn agrees_with_golden_w2ttfs() {
+        forall("wtfc == golden", 40, |g| {
+            let cin = g.size(1, 4);
+            let (ho, wo) = (g.size(1, 3), g.size(1, 3));
+            let window = *g.pick(&[2usize, 4]);
+            let classes = g.size(2, 10);
+            let bits = g.spikes(cin * ho * window * wo * window, 0.35);
+            let x = Tensor::from_vec(Shape::d3(cin, ho * window, wo * window), bits);
+            let weights: Vec<i8> =
+                (0..classes * cin * ho * wo).map(|_| g.int(-9, 9) as i8).collect();
+            let wtfc = Wtfc { lanes: 8 };
+            let got = wtfc.run(&x, classes, cin, ho, wo, window, &weights);
+            let (want, want_sops) = w2ttfs_fc(&x, classes, cin, ho, wo, window, &weights);
+            assert_eq!(got.logits, want);
+            assert_eq!(got.sops, want_sops);
+        });
+    }
+
+    #[test]
+    fn empty_windows_are_skipped() {
+        let x: SpikeMap = Tensor::zeros(Shape::d3(2, 4, 4));
+        let w = Wtfc { lanes: 4 };
+        let out = w.run(&x, 3, 2, 2, 2, 2, &vec![1i8; 3 * 2 * 2 * 2]);
+        assert_eq!(out.tokens, 0);
+        assert_eq!(out.skipped_windows, 8);
+        assert!(out.logits.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn fcu_cycles_scale_with_vld_cnt() {
+        // A fuller window must cost more FCU cycles (repeat-add).
+        let mut sparse: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        sparse.set3(0, 0, 0, 1);
+        let mut dense: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        for y in 0..4 {
+            for x in 0..4 {
+                dense.set3(0, y, x, 1);
+            }
+        }
+        let w = Wtfc { lanes: 16 };
+        let weights = vec![1i8; 2];
+        let a = w.run(&sparse, 2, 1, 1, 1, 4, &weights);
+        let b = w.run(&dense, 2, 1, 1, 1, 4, &weights);
+        assert!(b.cycles >= a.cycles);
+        assert_eq!(b.sops, 16 * 2);
+        assert_eq!(a.sops, 2);
+    }
+
+    #[test]
+    fn algorithm1_equivalence() {
+        // The paper's Algorithm 1 (per-timestep tt/window² scaling) and the
+        // WTFC's time-reuse optimization must agree up to the constant
+        // window² factor — i.e. scaled-logit-identical, argmax-identical.
+        forall("algorithm1 == time-reuse", 30, |g| {
+            let cin = g.size(1, 3);
+            let (ho, wo) = (g.size(1, 2), g.size(1, 2));
+            let window = *g.pick(&[2usize, 4]);
+            let classes = g.size(2, 6);
+            let bits = g.spikes(cin * ho * window * wo * window, 0.4);
+            let x = Tensor::from_vec(Shape::d3(cin, ho * window, wo * window), bits);
+            let weights: Vec<i8> =
+                (0..classes * cin * ho * wo).map(|_| g.int(-9, 9) as i8).collect();
+            let alg1 = w2ttfs_algorithm1(&x, classes, cin, ho, wo, window, &weights);
+            let opt = Wtfc { lanes: 8 }.run(&x, classes, cin, ho, wo, window, &weights);
+            let steps = (window * window) as f64;
+            for (a, &o) in alg1.iter().zip(&opt.logits) {
+                assert!(
+                    (a - o as f64 / steps).abs() < 1e-9,
+                    "Algorithm 1 {a} != time-reuse {o}/{steps}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn elastic_never_worse_than_rigid() {
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(2, 4, 4));
+        x.set3(0, 1, 1, 1);
+        x.set3(1, 3, 2, 1);
+        let w = Wtfc { lanes: 2 };
+        let out = w.run(&x, 4, 2, 1, 1, 4, &vec![2i8; 4 * 2]);
+        assert!(out.cycles <= out.cycles_rigid);
+    }
+}

@@ -1,0 +1,292 @@
+//! Baseline accelerator simulators for the paper's comparison rows
+//! (Fig 9 / Fig 10 / Table III).
+//!
+//! Each baseline is modelled from its paper's dataflow description at the
+//! same transaction-level fidelity as the NEURAL simulator and shares the
+//! *functional* golden path (so accuracy columns are apples-to-apples);
+//! what differs is the execution model:
+//!
+//! | Baseline | Timesteps | Sparsity-aware | Elastic | Notes |
+//! |---|---|---|---|---|
+//! | SiBrain [2] | 4 (time-parallel) | yes | no | 3-D array: ×T resources, spikes ×T |
+//! | SCPU [16] | 4 (serial) | no | no | general sliding-window conv unit |
+//! | STI-SNN [9] | 1 | no | no | single-timestep but dense compute |
+//! | Cerebron [3] | 2 | yes | no | reconfigurable sparsity-aware |
+//!
+//! Multi-timestep baselines replay the input encoder per step: spike volume
+//! (and hence event work and energy) scales with T, which is precisely the
+//! overhead NEURAL's single-timestep co-design removes.
+
+use crate::arch::energy::{Activity, EnergyModel};
+use crate::arch::sim::Report;
+use crate::config::ArchConfig;
+use crate::model::exec;
+use crate::model::ir::{Model, Op};
+use crate::snn::SpikeMap;
+use anyhow::Result;
+
+/// Which baseline to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// SiBrain: sparse spatio-temporal parallel 3-D array, T=4.
+    SiBrain,
+    /// SCPU: general spiking conv unit, dense sliding window, T=4.
+    Scpu,
+    /// STI-SNN: single-timestep, dense compute.
+    StiSnn,
+    /// Cerebron: reconfigurable sparsity-aware, T=2.
+    Cerebron,
+}
+
+impl BaselineKind {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselineKind::SiBrain => "SiBrain",
+            BaselineKind::Scpu => "SCPU",
+            BaselineKind::StiSnn => "STI-SNN",
+            BaselineKind::Cerebron => "Cerebron",
+        }
+    }
+
+    /// Inference timesteps the design executes.
+    pub fn timesteps(&self) -> u64 {
+        match self {
+            BaselineKind::SiBrain | BaselineKind::Scpu => 4,
+            BaselineKind::Cerebron => 2,
+            BaselineKind::StiSnn => 1,
+        }
+    }
+
+    /// Whether zero activations are skipped.
+    pub fn sparsity_aware(&self) -> bool {
+        matches!(self, BaselineKind::SiBrain | BaselineKind::Cerebron)
+    }
+
+    /// Time-parallel designs pay area for T lanes but do not multiply
+    /// latency by T.
+    pub fn time_parallel(&self) -> bool {
+        matches!(self, BaselineKind::SiBrain)
+    }
+
+    /// Static power (W) from each paper's reported numbers (Table III).
+    pub fn p_static_w(&self) -> f64 {
+        match self {
+            BaselineKind::SiBrain => 1.25,
+            BaselineKind::Scpu => 1.15,
+            BaselineKind::StiSnn => 1.20,
+            BaselineKind::Cerebron => 1.05,
+        }
+    }
+
+    /// Per-SOP energy factor relative to NEURAL (less aggressive datapath
+    /// gating in the dense designs).
+    pub fn e_sop_factor(&self) -> f64 {
+        match self {
+            BaselineKind::SiBrain => 1.3,
+            BaselineKind::Scpu => 1.6,
+            BaselineKind::StiSnn => 1.5,
+            BaselineKind::Cerebron => 1.2,
+        }
+    }
+
+    /// Dataflow overhead factor on the ideal work/PEs cycle count:
+    /// spatio-temporal synchronization (SiBrain), window marshalling
+    /// (SCPU/STI), reconfiguration (Cerebron). Calibrated so the relative
+    /// FPS ordering of Fig 10 / Table III holds on the deployed models.
+    pub fn overhead(&self) -> f64 {
+        match self {
+            // time-parallel 3-D array: per-tile T-way synchronization +
+            // lane weight re-fetch dominate (their own paper's FPS at
+            // T=4 on 140 kLUTs calibrates this)
+            BaselineKind::SiBrain => 2.6,
+            BaselineKind::Scpu => 1.3,
+            BaselineKind::StiSnn => 1.15,
+            BaselineKind::Cerebron => 2.0,
+        }
+    }
+
+    /// Total LUTs of the published implementation (Fig 9 / Table III
+    /// normalization denominators, in kLUTs).
+    pub fn kluts(&self) -> f64 {
+        match self {
+            BaselineKind::SiBrain => 140.0,
+            BaselineKind::Scpu => 150.0,
+            BaselineKind::StiSnn => 26.0,
+            BaselineKind::Cerebron => 85.0,
+        }
+    }
+
+    /// All kinds, for sweeps.
+    pub fn all() -> [BaselineKind; 4] {
+        [BaselineKind::SiBrain, BaselineKind::Scpu, BaselineKind::StiSnn, BaselineKind::Cerebron]
+    }
+}
+
+/// A baseline instance (geometry shared with the NEURAL config for a fair
+/// same-PE-budget comparison; resource/power columns use the published
+/// implementations' numbers).
+#[derive(Debug)]
+pub struct Baseline {
+    /// Which design.
+    pub kind: BaselineKind,
+    /// PE budget and clock.
+    pub cfg: ArchConfig,
+    energy: EnergyModel,
+}
+
+impl Baseline {
+    /// Create with the paper-calibrated energy constants for this design.
+    pub fn new(kind: BaselineKind, cfg: ArchConfig) -> Self {
+        let mut e = EnergyModel::from_cfg(&cfg);
+        e.k.e_sop_pj *= kind.e_sop_factor();
+        e.k.p_static_w = kind.p_static_w();
+        Baseline { kind, cfg, energy: e }
+    }
+
+    /// Simulate one image. Functional result comes from the golden
+    /// executor; timing/energy follow this design's execution model.
+    pub fn run(&self, model: &Model, input: &SpikeMap) -> Result<Report> {
+        let trace = exec::execute(model, input)?;
+        let t = self.kind.timesteps();
+        let pes = self.cfg.num_pes() as u64;
+        let mut compute_cycles = 0u64;
+        let mut weight_bytes = 0u64;
+        let mut sops = 0u64;
+        let shapes = model.shapes().map_err(anyhow::Error::msg)?;
+        for (i, node) in model.nodes.iter().enumerate() {
+            match &node.op {
+                Op::Conv { cin, cout, k, weights, .. } => {
+                    let (_, ho, wo) = shapes[i];
+                    let dense_ops = (ho * wo * cout * cin * k * k) as u64;
+                    let event_ops = trace.sops_per_node[i];
+                    let work = if self.kind.sparsity_aware() { event_ops } else { dense_ops };
+                    // one op per PE per cycle; time-parallel designs run the
+                    // T steps on concurrent lanes (their extra area), serial
+                    // designs replay T times.
+                    let steps = if self.kind.time_parallel() { 1 } else { t };
+                    compute_cycles += steps * work.div_ceil(pes);
+                    // weights re-streamed each (serial) timestep
+                    weight_bytes += weights.len() as u64 * steps;
+                    // Useful synaptic work = *events* across all T
+                    // timesteps (GSOPS counts synaptic operations, not the
+                    // zero-operand cycles a dense design burns — that gap
+                    // is exactly why dense designs score low GSOPS/W).
+                    sops += event_ops * t;
+                }
+                Op::W2ttfsFc { classes, cin, ho, wo, weights, .. } => {
+                    // Baselines keep the conventional AP + FC (no W2TTFS):
+                    // dense FC over pooled averages.
+                    let dense = (classes * cin * ho * wo) as u64;
+                    compute_cycles += t * dense.div_ceil(pes);
+                    weight_bytes += weights.len() as u64;
+                    sops += dense * t;
+                }
+                Op::MaxPool { .. } | Op::Or | Op::TokenMask { .. } => {
+                    let (c, h, w) = shapes[node.inputs[0]];
+                    compute_cycles += t * ((c * h * w) as u64).div_ceil(32);
+                }
+                Op::Input => {}
+            }
+        }
+        // Rigid designs serialize sparse detection / window marshalling /
+        // timestep sync with compute (no elastic decoupling): per-design
+        // overhead factor.
+        let cycles = (compute_cycles as f64 * self.kind.overhead()) as u64;
+        let mut activity = Activity {
+            sops,
+            buf_bytes: trace.total_spikes * t / 8 * 2,
+            dram_bytes: weight_bytes + ((input.numel() as u64) * t).div_ceil(8),
+            cycles,
+        };
+        // time-parallel arrays burn T× the static power
+        if self.kind.time_parallel() {
+            activity.buf_bytes *= t;
+        }
+        let mut report = Report {
+            cycles,
+            cycles_rigid: cycles,
+            total_spikes: trace.total_spikes * t,
+            logits: trace.logits.clone(),
+            predicted: trace.predicted(),
+            latency_ms: self.cfg.cycles_to_ms(cycles),
+            activity,
+            ..Default::default()
+        };
+        report.energy = self.energy.evaluate(&report.activity);
+        report.power_w = self.energy.power_w(&report.activity);
+        report.gsops_w = self.energy.gsops_per_w(&report.activity);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+    use crate::data::{encode_threshold, SynthCifar};
+    use crate::model::zoo;
+
+    fn input() -> SpikeMap {
+        let (img, _) = SynthCifar::new(10, 11).sample(0);
+        encode_threshold(&img, 128)
+    }
+
+    #[test]
+    fn baselines_agree_functionally_with_neural() {
+        let m = zoo::tiny(10, 3);
+        let x = input();
+        let neural = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        for kind in BaselineKind::all() {
+            let b = Baseline::new(kind, ArchConfig::default());
+            let r = b.run(&m, &x).unwrap();
+            assert_eq!(r.logits, neural.logits, "{} must classify identically", kind.name());
+        }
+    }
+
+    #[test]
+    fn neural_beats_serial_dense_latency() {
+        // The headline latency comparison (Fig 10) on realistic layer
+        // shapes is made in the benches; here the invariant is the robust
+        // one: a serial dense 4-timestep design must be slower than the
+        // single-timestep sparse NEURAL on the same PE budget.
+        let m = zoo::tiny(10, 3);
+        let x = input();
+        let neural = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        let r = Baseline::new(BaselineKind::Scpu, ArchConfig::default()).run(&m, &x).unwrap();
+        assert!(neural.cycles < r.cycles, "NEURAL {} vs SCPU {}", neural.cycles, r.cycles);
+    }
+
+    #[test]
+    fn sparsity_aware_baselines_spend_fewer_cycles_than_dense() {
+        // Same useful SOPs (events), but the dense design burns cycles on
+        // zero operands: cycles differ, efficiency follows.
+        let m = zoo::tiny(10, 3);
+        let x = input();
+        let sib = Baseline::new(BaselineKind::SiBrain, ArchConfig::default()).run(&m, &x).unwrap();
+        let scpu = Baseline::new(BaselineKind::Scpu, ArchConfig::default()).run(&m, &x).unwrap();
+        assert_eq!(sib.activity.sops, scpu.activity.sops, "useful work identical");
+        assert!(sib.cycles < scpu.cycles, "dense replays zeros over T serial steps");
+        assert!(sib.gsops_w > scpu.gsops_w);
+    }
+
+    #[test]
+    fn multitimestep_multiplies_total_spikes() {
+        let m = zoo::tiny(10, 3);
+        let x = input();
+        let sti = Baseline::new(BaselineKind::StiSnn, ArchConfig::default()).run(&m, &x).unwrap();
+        let scpu = Baseline::new(BaselineKind::Scpu, ArchConfig::default()).run(&m, &x).unwrap();
+        assert_eq!(scpu.total_spikes, sti.total_spikes * 4);
+    }
+
+    #[test]
+    fn baseline_power_higher_than_neural() {
+        let m = zoo::tiny(10, 3);
+        let x = input();
+        let neural = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        for kind in BaselineKind::all() {
+            let r = Baseline::new(kind, ArchConfig::default()).run(&m, &x).unwrap();
+            assert!(r.power_w > neural.power_w, "{}", kind.name());
+        }
+    }
+}

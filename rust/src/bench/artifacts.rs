@@ -1,0 +1,67 @@
+//! Shared helpers for the bench binaries: artifact loading with zoo
+//! fallback, and accuracy evaluation over the canonical eval split.
+
+use crate::data::{encode_threshold, Dataset, SynthCifar};
+use crate::model::{exec, neuw, zoo, Model};
+use anyhow::Result;
+
+/// Load a trained `.neuw` artifact (`{name}_{tag}.neuw`) or fall back to
+/// the random-weight zoo model. Returns (model, from_artifact).
+pub fn model_or_zoo(name: &str, tag: &str, classes: usize) -> (Model, bool) {
+    let path = format!("artifacts/{name}_{tag}.neuw");
+    match neuw::load(&path) {
+        Ok(m) => (m, true),
+        Err(_) => (
+            zoo::by_name(name, classes, 7).unwrap_or_else(|| zoo::tiny(classes, 7)),
+            false,
+        ),
+    }
+}
+
+/// Load the canonical eval split (`dataset_synthcifar{classes}.synd`) or
+/// generate with the Rust generator.
+pub fn eval_split(classes: usize, n: usize) -> Dataset {
+    let path = format!("artifacts/dataset_synthcifar{classes}.synd");
+    Dataset::load(&path)
+        .unwrap_or_else(|_| Dataset::from_synth(&SynthCifar::new(classes, 1234), n))
+}
+
+/// Golden-executor accuracy of a model over the first `n` split images.
+pub fn accuracy(model: &Model, ds: &Dataset, n: usize) -> Result<f64> {
+    let n = n.min(ds.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        let (img, label) = ds.get(i);
+        let trace = exec::execute(model, &encode_threshold(&img, 128))?;
+        if trace.predicted() == label {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n.max(1) as f64)
+}
+
+/// First eval image encoded, for single-image timing/energy probes.
+pub fn probe_input(ds: &Dataset) -> crate::snn::SpikeMap {
+    let (img, _) = ds.get(0);
+    encode_threshold(&img, 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_fallback_when_no_artifact() {
+        let (m, from_artifact) = model_or_zoo("tiny", "nonexistent_tag", 10);
+        assert_eq!(m.name, "tiny");
+        assert!(!from_artifact);
+    }
+
+    #[test]
+    fn accuracy_runs_on_synth_split() {
+        let (m, _) = model_or_zoo("tiny", "none", 10);
+        let ds = Dataset::from_synth(&SynthCifar::new(10, 5), 8);
+        let acc = accuracy(&m, &ds, 8).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

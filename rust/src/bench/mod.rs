@@ -1,0 +1,107 @@
+//! Bench harness (no criterion in the offline vendor set).
+//!
+//! Each `benches/*.rs` binary (`harness = false`) uses [`BenchRunner`] to
+//! time closures with warmup, report mean ± std over iterations, and print
+//! the paper's tables via [`crate::util::Table`].
+
+pub mod artifacts;
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// Timed-run result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Bench id.
+    pub name: String,
+    /// Wall-time statistics per iteration (seconds).
+    pub time: Summary,
+}
+
+impl BenchResult {
+    /// Mean milliseconds per iteration.
+    pub fn mean_ms(&self) -> f64 {
+        self.time.mean() * 1e3
+    }
+
+    /// One-line human summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (±{:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.time.std() * 1e3,
+            self.time.count()
+        )
+    }
+}
+
+/// Simple warmup + N-iteration timing runner.
+#[derive(Debug, Clone)]
+pub struct BenchRunner {
+    /// Warmup iterations (not recorded).
+    pub warmup: u32,
+    /// Recorded iterations.
+    pub iters: u32,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 1, iters: 5 }
+    }
+}
+
+impl BenchRunner {
+    /// Honour `NEURAL_BENCH_ITERS` / `NEURAL_BENCH_FAST` for CI-speed runs.
+    pub fn from_env() -> Self {
+        let mut r = BenchRunner::default();
+        if std::env::var("NEURAL_BENCH_FAST").is_ok() {
+            r.warmup = 0;
+            r.iters = 1;
+        }
+        if let Ok(n) = std::env::var("NEURAL_BENCH_ITERS") {
+            if let Ok(n) = n.parse() {
+                r.iters = n;
+            }
+        }
+        r
+    }
+
+    /// Time `f`, which returns a checksum-ish value to keep the optimizer
+    /// honest; prints and returns the result.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut time = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            time.add(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult { name: name.to_string(), time };
+        println!("{}", res.line());
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let r = BenchRunner { warmup: 0, iters: 3 };
+        let res = r.run("noop", || 42u64);
+        assert_eq!(res.time.count(), 3);
+        assert!(res.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn env_fast_mode() {
+        std::env::set_var("NEURAL_BENCH_FAST", "1");
+        let r = BenchRunner::from_env();
+        assert_eq!(r.iters, 1);
+        std::env::remove_var("NEURAL_BENCH_FAST");
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `neural <subcommand> [--key value]... [--flag]...`
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "neural — NEURAL elastic neuromorphic architecture (paper reproduction)
+
+USAGE:
+  neural run        [--model NAME|--neuw PATH] [--dataset synthcifar10] [--images N]
+                    [--engine sim|golden|rigid|sibrain|scpu|stisnn|cerebron]
+                    [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
+                    [--arch PATH.ini] [--classes N] [--seed N]
+  neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
+  neural resources  [--arch PATH.ini]                          Table-I style report
+  neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep
+  neural version
+
+Models: tiny, resnet11, vgg11, qkfresnet11 (zoo, random weights) or a
+trained .neuw artifact from `make artifacts`.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --model vgg11 --images 8 --fast");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("model"), Some("vgg11"));
+        assert_eq!(a.get_usize("images", 0).unwrap(), 8);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --model=resnet11");
+        assert_eq!(a.get("model"), Some("resnet11"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("inspect foo bar");
+        assert_eq!(a.command, "inspect");
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn bad_int_reported() {
+        let a = parse("run --images lots");
+        assert!(a.get_usize("images", 0).is_err());
+    }
+}

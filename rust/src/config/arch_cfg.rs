@@ -1,0 +1,182 @@
+//! Typed accelerator configuration (geometry, timing, energy, resource
+//! calibration) loaded from `configs/*.ini`.
+//!
+//! The default values describe the paper's Virtex-7 instantiation: a
+//! 16×16 elastic PE array at 200 MHz with 8-bit fixed-point weights, and
+//! energy/resource constants calibrated so that the analytic models land on
+//! Table I / Table II / Table III (see DESIGN.md §Calibration constants).
+
+use crate::config::Ini;
+use anyhow::Result;
+
+/// Geometry and timing of one simulated accelerator instance.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    /// Clock frequency in MHz (paper: 200 MHz on XC7V2000T).
+    pub freq_mhz: f64,
+    /// PE array rows (output-channel parallelism).
+    pub epa_rows: usize,
+    /// PE array columns (output-pixel parallelism).
+    pub epa_cols: usize,
+    /// Elastic weight FIFO depth (entries per column).
+    pub wfifo_depth: usize,
+    /// Elastic spike FIFO depth (entries per row).
+    pub sfifo_depth: usize,
+    /// Per-PE event FIFO depth (paper Fig 3 ③).
+    pub event_fifo_depth: usize,
+    /// PipeSDA pipeline depth (IG → CP → CP-map stages).
+    pub sda_stages: usize,
+    /// SDU grid edge (feature-map tile edge the SDA covers at once).
+    pub sdu_grid: usize,
+    /// Parallel CP-map lanes (spike events mapped per cycle).
+    pub sda_events_per_cycle: usize,
+    /// Virtual-SDU halo width for negative-coordinate CPs (paper Fig 4).
+    pub sdu_halo: usize,
+    /// FCU parallel lanes in the WTFC core.
+    pub fcu_lanes: usize,
+    /// Weight bit-width (paper "FP8" fixed-point deployment).
+    pub weight_bits: u8,
+    /// Fractional bits of the power-of-two weight scale.
+    pub weight_frac: u8,
+    /// Membrane-potential register width in bits.
+    pub mp_bits: u8,
+    /// Off-chip weight-stream bandwidth in bytes/cycle (WMU port width).
+    pub wmu_bytes_per_cycle: usize,
+    /// LIF threshold in raw fixed-point units (same scale as weights).
+    pub lif_threshold: i32,
+    /// LIF leak factor numerator over 2 (paper tau = 0.5 => mp/2 decay).
+    pub lif_tau_half: bool,
+    /// Energy calibration constants.
+    pub energy: EnergyConstants,
+}
+
+/// Analytic energy-model constants (see `arch/energy.rs`).
+#[derive(Debug, Clone)]
+pub struct EnergyConstants {
+    /// Energy per synaptic operation (accumulate + compare), picojoules.
+    pub e_sop_pj: f64,
+    /// Energy per on-chip buffer byte moved, picojoules.
+    pub e_buf_pj: f64,
+    /// Energy per off-chip (DDR) byte moved, picojoules.
+    pub e_dram_pj: f64,
+    /// Static power of the configured device, watts.
+    pub p_static_w: f64,
+}
+
+impl Default for EnergyConstants {
+    fn default() -> Self {
+        // Calibrated in EXPERIMENTS.md §Calibration: ResNet-11/CIFAR-10 must
+        // land near 7.3 ms / 5.56 mJ / 0.758 W (Table II + III).
+        EnergyConstants { e_sop_pj: 3.1, e_buf_pj: 1.1, e_dram_pj: 22.0, p_static_w: 0.62 }
+    }
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            freq_mhz: 200.0,
+            epa_rows: 16,
+            epa_cols: 16,
+            wfifo_depth: 32,
+            sfifo_depth: 32,
+            event_fifo_depth: 16,
+            sda_stages: 3,
+            sdu_grid: 32,
+            sda_events_per_cycle: 8,
+            sdu_halo: 1,
+            fcu_lanes: 16,
+            weight_bits: 8,
+            weight_frac: 4,
+            mp_bits: 16,
+            wmu_bytes_per_cycle: 32, // 64-bit DDR3-800 ≈ 6.4 GB/s @ 200 MHz
+            lif_threshold: 16, // 1.0 at frac=4
+            lif_tau_half: true,
+            energy: EnergyConstants::default(),
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Load from an INI file; missing keys take the paper-default values.
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let d = ArchConfig::default();
+        let de = EnergyConstants::default();
+        Ok(ArchConfig {
+            freq_mhz: ini.get_f64("clock", "freq_mhz", d.freq_mhz)?,
+            epa_rows: ini.get_usize("epa", "rows", d.epa_rows)?,
+            epa_cols: ini.get_usize("epa", "cols", d.epa_cols)?,
+            wfifo_depth: ini.get_usize("epa", "wfifo_depth", d.wfifo_depth)?,
+            sfifo_depth: ini.get_usize("epa", "sfifo_depth", d.sfifo_depth)?,
+            event_fifo_depth: ini.get_usize("epa", "event_fifo_depth", d.event_fifo_depth)?,
+            sda_stages: ini.get_usize("sda", "stages", d.sda_stages)?,
+            sdu_grid: ini.get_usize("sda", "grid", d.sdu_grid)?,
+            sda_events_per_cycle: ini
+                .get_usize("sda", "events_per_cycle", d.sda_events_per_cycle)?,
+            sdu_halo: ini.get_usize("sda", "halo", d.sdu_halo)?,
+            fcu_lanes: ini.get_usize("wtfc", "fcu_lanes", d.fcu_lanes)?,
+            weight_bits: ini.get_usize("precision", "weight_bits", d.weight_bits as usize)? as u8,
+            weight_frac: ini.get_usize("precision", "weight_frac", d.weight_frac as usize)? as u8,
+            mp_bits: ini.get_usize("precision", "mp_bits", d.mp_bits as usize)? as u8,
+            wmu_bytes_per_cycle: ini
+                .get_usize("wmu", "bytes_per_cycle", d.wmu_bytes_per_cycle)?,
+            lif_threshold: ini.get_usize("lif", "threshold_raw", d.lif_threshold as usize)? as i32,
+            lif_tau_half: ini.get_bool("lif", "tau_half", d.lif_tau_half)?,
+            energy: EnergyConstants {
+                e_sop_pj: ini.get_f64("energy", "e_sop_pj", de.e_sop_pj)?,
+                e_buf_pj: ini.get_f64("energy", "e_buf_pj", de.e_buf_pj)?,
+                e_dram_pj: ini.get_f64("energy", "e_dram_pj", de.e_dram_pj)?,
+                p_static_w: ini.get_f64("energy", "p_static_w", de.p_static_w)?,
+            },
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_ini(&Ini::load(path)?)
+    }
+
+    /// Total PEs in the array.
+    pub fn num_pes(&self) -> usize {
+        self.epa_rows * self.epa_cols
+    }
+
+    /// Cycle time in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0e-6 / self.freq_mhz
+    }
+
+    /// Convert a cycle count to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.cycle_s() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_instantiation() {
+        let c = ArchConfig::default();
+        assert_eq!(c.freq_mhz, 200.0);
+        assert_eq!(c.num_pes(), 256);
+        assert_eq!(c.weight_bits, 8);
+    }
+
+    #[test]
+    fn cycles_to_ms_at_200mhz() {
+        let c = ArchConfig::default();
+        // 200 MHz -> 200k cycles per ms.
+        assert!((c.cycles_to_ms(200_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ini_overrides() {
+        let ini = Ini::parse("[epa]\nrows = 8\ncols = 4\n[energy]\ne_sop_pj = 9.9\n").unwrap();
+        let c = ArchConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.num_pes(), 32);
+        assert!((c.energy.e_sop_pj - 9.9).abs() < 1e-12);
+        // untouched key keeps default
+        assert_eq!(c.sfifo_depth, 32);
+    }
+}

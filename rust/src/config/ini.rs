@@ -1,0 +1,168 @@
+//! INI-subset parser: `[section]`, `key = value`, `#` and `;` comments,
+//! blank lines. Values are strings; typed getters convert on demand.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed INI document: section → key → value.
+#[derive(Debug, Clone, Default)]
+pub struct Ini {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = Ini::default();
+        let mut current = String::from("root");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?;
+                current = name.trim().to_string();
+                out.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                if key.is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                // Strip trailing inline comments.
+                let val = match v.find(" #") {
+                    Some(i) => &v[..i],
+                    None => v,
+                };
+                out.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(key, val.trim().to_string());
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`, got {:?}", lineno + 1, line);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    /// Raw string value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// String value or error naming the missing key.
+    pub fn req(&self, section: &str, key: &str) -> Result<&str> {
+        self.get(section, key)
+            .ok_or_else(|| anyhow!("missing config key [{section}] {key}"))
+    }
+
+    /// Typed getters with defaults.
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v:?} as usize")),
+        }
+    }
+
+    /// `f64` with default.
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v:?} as f64")),
+        }
+    }
+
+    /// `bool` (`true/false/1/0/yes/no`) with default.
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("[{section}] {key} = {other:?} is not a bool"),
+            },
+        }
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Set a value (used by tests and CLI overrides `--set sec.key=val`).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# comment
+[epa]
+rows = 16
+cols = 16  # inline comment
+elastic = true
+
+[energy]
+e_sop_pj = 3.4
+";
+
+    #[test]
+    fn parses_sections_and_values() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("epa", "rows"), Some("16"));
+        assert_eq!(ini.get_usize("epa", "cols", 0).unwrap(), 16);
+        assert!(ini.get_bool("epa", "elastic", false).unwrap());
+        assert!((ini.get_f64("energy", "e_sop_pj", 0.0).unwrap() - 3.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get_usize("epa", "missing", 7).unwrap(), 7);
+        assert!(!ini.get_bool("nowhere", "x", false).unwrap());
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Ini::parse("not a kv line").is_err());
+        assert!(Ini::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn req_names_missing_key() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        let err = ini.req("epa", "nope").unwrap_err().to_string();
+        assert!(err.contains("[epa] nope"), "{err}");
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut ini = Ini::parse(SAMPLE).unwrap();
+        ini.set("epa", "rows", "32");
+        assert_eq!(ini.get_usize("epa", "rows", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let ini = Ini::parse("[a]\nb = maybe\n").unwrap();
+        assert!(ini.get_bool("a", "b", true).is_err());
+    }
+}

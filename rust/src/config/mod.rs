@@ -1,0 +1,15 @@
+//! Configuration system.
+//!
+//! Configs are INI-style files (`configs/*.ini`) — sections, `key = value`,
+//! `#`/`;` comments — parsed by [`Ini`]. No `serde`/`toml` in the offline
+//! vendor set, so the parser is local. Typed views over the raw INI live in
+//! [`arch_cfg`] (accelerator geometry/energy constants) and [`run_cfg`]
+//! (coordinator/run settings).
+
+pub mod arch_cfg;
+pub mod ini;
+pub mod run_cfg;
+
+pub use arch_cfg::{ArchConfig, EnergyConstants};
+pub use ini::Ini;
+pub use run_cfg::RunConfig;

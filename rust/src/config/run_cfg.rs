@@ -1,0 +1,86 @@
+//! Run/coordinator configuration: which model, which dataset split, how many
+//! images, batching and reporting knobs for the serving loop.
+
+use crate::config::Ini;
+use anyhow::Result;
+
+/// Coordinator run settings.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Path to the NEUW quantized-weights artifact.
+    pub model_path: String,
+    /// Optional HLO golden-model artifact for on-line cross-checking.
+    pub hlo_path: Option<String>,
+    /// Dataset name (`synthcifar10` / `synthcifar100`).
+    pub dataset: String,
+    /// Number of images to run.
+    pub images: usize,
+    /// Dataset seed (must match the Python exporter's eval split).
+    pub seed: u64,
+    /// Maximum in-flight batch size in the coordinator.
+    pub batch_size: usize,
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Cross-check every Nth image against the PJRT golden model (0 = off).
+    pub crosscheck_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model_path: "artifacts/resnet11_c10.neuw".into(),
+            hlo_path: None,
+            dataset: "synthcifar10".into(),
+            images: 64,
+            seed: 1234,
+            batch_size: 4,
+            workers: 1,
+            crosscheck_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from INI (section `[run]`).
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            model_path: ini.get("run", "model").unwrap_or(&d.model_path).to_string(),
+            hlo_path: ini.get("run", "hlo").map(|s| s.to_string()),
+            dataset: ini.get("run", "dataset").unwrap_or(&d.dataset).to_string(),
+            images: ini.get_usize("run", "images", d.images)?,
+            seed: ini.get_usize("run", "seed", d.seed as usize)? as u64,
+            batch_size: ini.get_usize("run", "batch_size", d.batch_size)?,
+            workers: ini.get_usize("run", "workers", d.workers)?,
+            crosscheck_every: ini.get_usize("run", "crosscheck_every", d.crosscheck_every)?,
+        })
+    }
+
+    /// Number of classes implied by the dataset name.
+    pub fn num_classes(&self) -> usize {
+        if self.dataset.ends_with("100") { 100 } else { 10 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_classes() {
+        let d = RunConfig::default();
+        assert_eq!(d.num_classes(), 10);
+        let mut c = d.clone();
+        c.dataset = "synthcifar100".into();
+        assert_eq!(c.num_classes(), 100);
+    }
+
+    #[test]
+    fn from_ini_overrides() {
+        let ini = Ini::parse("[run]\nimages = 7\ndataset = synthcifar100\n").unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.images, 7);
+        assert_eq!(c.num_classes(), 100);
+        assert_eq!(c.batch_size, 4); // default preserved
+    }
+}

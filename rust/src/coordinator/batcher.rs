@@ -1,0 +1,117 @@
+//! Dynamic batcher.
+//!
+//! The accelerator streams weights per layer; consecutive images of the
+//! same model can reuse the streamed weights if they run back-to-back
+//! (weight-stationary across a batch). The batcher groups up to
+//! `batch_size` queued requests; the device model credits the batch with
+//! the weight-stream DRAM traffic of a single image (the WMU holds the
+//! layer tile while the batch replays).
+
+use crate::coordinator::request::InferRequest;
+
+/// Groups requests into device batches.
+#[derive(Debug)]
+pub struct Batcher {
+    /// Maximum images per batch.
+    pub batch_size: usize,
+    pending: Vec<InferRequest>,
+}
+
+impl Batcher {
+    /// New batcher.
+    pub fn new(batch_size: usize) -> Self {
+        Batcher { batch_size: batch_size.max(1), pending: Vec::new() }
+    }
+
+    /// Queue one request; returns a full batch when ready.
+    pub fn push(&mut self, req: InferRequest) -> Option<Vec<InferRequest>> {
+        self.pending.push(req);
+        if self.pending.len() >= self.batch_size {
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Flush whatever is queued (end of stream / timeout tick).
+    pub fn flush(&mut self) -> Option<Vec<InferRequest>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    /// Currently queued count.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Weight-stream amortization factor for a batch of `n` images: the
+    /// batch pays one stream instead of `n`.
+    pub fn dram_amortization(n: usize) -> f64 {
+        if n == 0 {
+            1.0
+        } else {
+            1.0 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, Tensor};
+    use crate::testing::forall;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest { id, spikes: Tensor::zeros(Shape::d3(1, 2, 2)), label: None }
+    }
+
+    #[test]
+    fn releases_full_batches() {
+        let mut b = Batcher::new(3);
+        assert!(b.push(req(0)).is_none());
+        assert!(b.push(req(1)).is_none());
+        let batch = b.push(req(2)).expect("third request completes the batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_returns_partial() {
+        let mut b = Batcher::new(4);
+        b.push(req(0));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn amortization_is_one_over_n() {
+        assert_eq!(Batcher::dram_amortization(4), 0.25);
+        assert_eq!(Batcher::dram_amortization(0), 1.0);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        // Batching invariant: every submitted id comes back exactly once,
+        // in submission order.
+        forall("batcher conservation", 60, |g| {
+            let bs = g.size(1, 8);
+            let n = g.size(0, 50);
+            let mut b = Batcher::new(bs);
+            let mut seen = Vec::new();
+            for id in 0..n as u64 {
+                if let Some(batch) = b.push(req(id)) {
+                    seen.extend(batch.into_iter().map(|r| r.id));
+                }
+            }
+            if let Some(batch) = b.flush() {
+                seen.extend(batch.into_iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(seen, want);
+        });
+    }
+}

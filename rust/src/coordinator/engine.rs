@@ -1,0 +1,162 @@
+//! Inference engines the coordinator can drive.
+//!
+//! All three consume the same `.neuw` model graph:
+//! * `Sim` — the NEURAL cycle simulator (default; produces device timing).
+//! * `Golden` — the dense integer executor (fast functional path).
+//! * `Baseline` — one of the comparison architectures.
+
+use crate::arch::{Accelerator, Report};
+use crate::baselines::{Baseline, BaselineKind};
+use crate::config::ArchConfig;
+use crate::model::{exec, Model};
+use crate::snn::SpikeMap;
+use anyhow::Result;
+
+/// One inference outcome in engine-neutral units.
+#[derive(Debug, Clone, Default)]
+pub struct Outcome {
+    /// Predicted class.
+    pub predicted: usize,
+    /// Device latency in ms (0 for the golden engine: no device model).
+    pub device_ms: f64,
+    /// Device energy in mJ (0 for golden).
+    pub energy_mj: f64,
+    /// Total spikes.
+    pub total_spikes: u64,
+    /// Synaptic ops.
+    pub sops: u64,
+    /// Raw logits (integer domain).
+    pub logits: Vec<i64>,
+}
+
+/// The engine: a model plus an execution backend.
+pub struct Engine {
+    /// The loaded model graph.
+    pub model: Model,
+    backend: Backend,
+}
+
+enum Backend {
+    Sim(Accelerator),
+    Golden,
+    Baseline(Box<Baseline>),
+}
+
+impl Engine {
+    /// NEURAL simulator engine.
+    pub fn sim(model: Model, cfg: ArchConfig) -> Self {
+        Engine { model, backend: Backend::Sim(Accelerator::new(cfg)) }
+    }
+
+    /// NEURAL simulator engine without elastic decoupling (ablation).
+    pub fn sim_rigid(model: Model, cfg: ArchConfig) -> Self {
+        Engine { model, backend: Backend::Sim(Accelerator::rigid(cfg)) }
+    }
+
+    /// Golden functional engine.
+    pub fn golden(model: Model) -> Self {
+        Engine { model, backend: Backend::Golden }
+    }
+
+    /// Baseline-architecture engine.
+    pub fn baseline(model: Model, kind: BaselineKind, cfg: ArchConfig) -> Self {
+        Engine { model, backend: Backend::Baseline(Box::new(Baseline::new(kind, cfg))) }
+    }
+
+    /// Engine name for reports.
+    pub fn name(&self) -> String {
+        match &self.backend {
+            Backend::Sim(a) => {
+                if a.elastic {
+                    "neural-sim".into()
+                } else {
+                    "neural-sim-rigid".into()
+                }
+            }
+            Backend::Golden => "golden".into(),
+            Backend::Baseline(b) => format!("baseline-{}", b.kind.name().to_lowercase()),
+        }
+    }
+
+    /// Run one image.
+    pub fn infer(&self, spikes: &SpikeMap) -> Result<Outcome> {
+        match &self.backend {
+            Backend::Sim(acc) => Ok(report_to_outcome(acc.run(&self.model, spikes)?)),
+            Backend::Baseline(b) => Ok(report_to_outcome(b.run(&self.model, spikes)?)),
+            Backend::Golden => {
+                let t = exec::execute(&self.model, spikes)?;
+                Ok(Outcome {
+                    predicted: t.predicted(),
+                    device_ms: 0.0,
+                    energy_mj: 0.0,
+                    total_spikes: t.total_spikes,
+                    sops: t.total_sops,
+                    logits: t.logits,
+                })
+            }
+        }
+    }
+
+    /// Full report access for sim/baseline engines (None for golden).
+    pub fn infer_report(&self, spikes: &SpikeMap) -> Result<Option<Report>> {
+        match &self.backend {
+            Backend::Sim(acc) => Ok(Some(acc.run(&self.model, spikes)?)),
+            Backend::Baseline(b) => Ok(Some(b.run(&self.model, spikes)?)),
+            Backend::Golden => Ok(None),
+        }
+    }
+}
+
+fn report_to_outcome(r: Report) -> Outcome {
+    Outcome {
+        predicted: r.predicted,
+        device_ms: r.latency_ms,
+        energy_mj: r.energy.total_j() * 1e3,
+        total_spikes: r.total_spikes,
+        sops: r.activity.sops,
+        logits: r.logits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{encode_threshold, SynthCifar};
+    use crate::model::zoo;
+
+    fn spikes() -> SpikeMap {
+        let (img, _) = SynthCifar::new(10, 4).sample(2);
+        encode_threshold(&img, 128)
+    }
+
+    #[test]
+    fn all_engines_agree_on_logits() {
+        let x = spikes();
+        let make = || zoo::tiny(10, 5);
+        let sim = Engine::sim(make(), ArchConfig::default());
+        let gold = Engine::golden(make());
+        let base = Engine::baseline(make(), BaselineKind::StiSnn, ArchConfig::default());
+        let a = sim.infer(&x).unwrap();
+        let b = gold.infer(&x).unwrap();
+        let c = base.infer(&x).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(b.logits, c.logits);
+        assert_eq!(a.predicted, b.predicted);
+    }
+
+    #[test]
+    fn sim_reports_device_time_golden_does_not() {
+        let x = spikes();
+        let sim = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let gold = Engine::golden(zoo::tiny(10, 5));
+        assert!(sim.infer(&x).unwrap().device_ms > 0.0);
+        assert_eq!(gold.infer(&x).unwrap().device_ms, 0.0);
+    }
+
+    #[test]
+    fn names_distinguish_backends() {
+        let e1 = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let e2 = Engine::sim_rigid(zoo::tiny(10, 5), ArchConfig::default());
+        assert_ne!(e1.name(), e2.name());
+    }
+}

@@ -1,0 +1,126 @@
+//! Serving metrics aggregation.
+
+use crate::coordinator::request::InferResponse;
+use crate::util::{stats::percentile, Summary};
+
+/// Aggregated counters over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Completed requests.
+    pub completed: u64,
+    /// Correct predictions among labelled requests.
+    pub correct: u64,
+    /// Labelled requests.
+    pub labelled: u64,
+    /// Device-latency summary (ms).
+    pub device_ms: Summary,
+    /// Host-latency summary (ms).
+    pub host_ms: Summary,
+    /// Energy per image (mJ).
+    pub energy_mj: Summary,
+    /// Total spikes summary.
+    pub spikes: Summary,
+    /// Total SOPs across the run.
+    pub total_sops: u64,
+    host_samples: Vec<f64>,
+}
+
+impl Metrics {
+    /// Record one response.
+    pub fn record(&mut self, r: &InferResponse) {
+        self.completed += 1;
+        if let Some(ok) = r.correct() {
+            self.labelled += 1;
+            if ok {
+                self.correct += 1;
+            }
+        }
+        self.device_ms.add(r.device_ms);
+        self.host_ms.add(r.host_ms);
+        self.energy_mj.add(r.energy_mj);
+        self.spikes.add(r.total_spikes as f64);
+        self.total_sops += r.sops;
+        self.host_samples.push(r.host_ms);
+    }
+
+    /// Accuracy over labelled requests (NaN if none).
+    pub fn accuracy(&self) -> f64 {
+        if self.labelled == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.labelled as f64
+        }
+    }
+
+    /// Device FPS implied by mean device latency.
+    pub fn device_fps(&self) -> f64 {
+        let m = self.device_ms.mean();
+        if m <= 0.0 {
+            0.0
+        } else {
+            1000.0 / m
+        }
+    }
+
+    /// Host p99 latency (ms).
+    pub fn host_p99(&mut self) -> f64 {
+        percentile(&mut self.host_samples, 99.0)
+    }
+
+    /// One-line report.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "n={} acc={:.2}% device={:.3}ms ({:.1} FPS) energy={:.3}mJ spikes={:.0}",
+            self.completed,
+            self.accuracy() * 100.0,
+            self.device_ms.mean(),
+            self.device_fps(),
+            self.energy_mj.mean(),
+            self.spikes.mean()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, predicted: usize, label: Option<usize>, ms: f64) -> InferResponse {
+        InferResponse {
+            id,
+            predicted,
+            label,
+            device_ms: ms,
+            host_ms: ms * 2.0,
+            energy_mj: 1.0,
+            total_spikes: 50,
+            sops: 500,
+        }
+    }
+
+    #[test]
+    fn accuracy_over_labelled_only() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, Some(1), 1.0));
+        m.record(&resp(1, 2, Some(1), 1.0));
+        m.record(&resp(2, 0, None, 1.0));
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.labelled, 2);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fps_from_mean_latency() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 0, None, 5.0));
+        m.record(&resp(1, 0, None, 5.0));
+        assert!((m.device_fps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert!(m.accuracy().is_nan());
+        assert_eq!(m.device_fps(), 0.0);
+    }
+}

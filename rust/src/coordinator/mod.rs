@@ -1,0 +1,20 @@
+//! The serving coordinator (L3).
+//!
+//! NEURAL's contribution is the accelerator itself, so the coordinator is
+//! the thin-but-real serving layer around the simulated device: a request
+//! queue with backpressure, a batcher that amortizes weight streaming
+//! across images of the same model, a worker pool (std::thread — no tokio
+//! in the offline vendor set), latency/throughput metrics, and an optional
+//! on-line cross-check of simulator logits against the PJRT golden model.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse};
+pub use server::Coordinator;

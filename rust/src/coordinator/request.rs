@@ -1,0 +1,76 @@
+//! Request/response types of the serving loop.
+
+use crate::snn::SpikeMap;
+
+/// One inference request: an already-encoded input spike map.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Monotonic id assigned by the submitter.
+    pub id: u64,
+    /// Encoded input spikes.
+    pub spikes: SpikeMap,
+    /// Ground-truth label when known (accuracy accounting).
+    pub label: Option<usize>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Request id.
+    pub id: u64,
+    /// Predicted class.
+    pub predicted: usize,
+    /// Ground-truth label passed through.
+    pub label: Option<usize>,
+    /// Simulated device latency (ms) for this image.
+    pub device_ms: f64,
+    /// Wall-clock host latency (ms): queue + batch + simulate.
+    pub host_ms: f64,
+    /// Simulated device energy (mJ).
+    pub energy_mj: f64,
+    /// Total spikes of this inference (Table II's TS).
+    pub total_spikes: u64,
+    /// Synaptic operations.
+    pub sops: u64,
+}
+
+impl InferResponse {
+    /// Whether the prediction matched the label (None if unlabelled).
+    pub fn correct(&self) -> Option<bool> {
+        self.label.map(|l| l == self.predicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, Tensor};
+
+    #[test]
+    fn correctness_tracking() {
+        let r = InferResponse {
+            id: 1,
+            predicted: 3,
+            label: Some(3),
+            device_ms: 1.0,
+            host_ms: 2.0,
+            energy_mj: 0.5,
+            total_spikes: 10,
+            sops: 100,
+        };
+        assert_eq!(r.correct(), Some(true));
+        let mut r2 = r.clone();
+        r2.label = None;
+        assert_eq!(r2.correct(), None);
+    }
+
+    #[test]
+    fn request_carries_spikes() {
+        let req = InferRequest {
+            id: 0,
+            spikes: Tensor::zeros(Shape::d3(3, 32, 32)),
+            label: Some(1),
+        };
+        assert_eq!(req.spikes.numel(), 3 * 32 * 32);
+    }
+}

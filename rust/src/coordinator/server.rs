@@ -1,0 +1,195 @@
+//! The coordinator server: request queue → batcher → worker pool →
+//! metrics, with optional PJRT golden cross-check.
+//!
+//! Threading model (std only — no tokio offline): the submitting side owns
+//! a `Coordinator`; `serve_dataset` pushes encoded requests through the
+//! batcher and fans batches out to a fixed pool of worker threads over
+//! mpsc channels. The engine is shared read-only via `Arc`. The PJRT
+//! cross-checker stays on the submitting thread (xla handles are not
+//! `Send`).
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::data::{encode_threshold, Dataset};
+use crate::runtime::HloModel;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The serving coordinator.
+pub struct Coordinator {
+    /// Shared inference engine.
+    pub engine: Arc<Engine>,
+    /// Run settings.
+    pub cfg: RunConfig,
+    /// Optional golden HLO model for on-line cross-checking.
+    pub crosscheck: Option<HloModel>,
+    /// Cross-check mismatches observed (argmax disagreements).
+    pub crosscheck_mismatches: u64,
+    /// Cross-checks performed.
+    pub crosschecks: u64,
+}
+
+impl Coordinator {
+    /// Build from an engine and run config; loads the HLO cross-checker if
+    /// configured and present.
+    pub fn new(engine: Engine, cfg: RunConfig) -> Self {
+        let crosscheck = match (&cfg.hlo_path, cfg.crosscheck_every) {
+            (Some(path), n) if n > 0 => match HloModel::load(path) {
+                Ok(m) => Some(m),
+                Err(e) => {
+                    eprintln!("warning: cross-check model unavailable ({e:#}); continuing without");
+                    None
+                }
+            },
+            _ => None,
+        };
+        Coordinator {
+            engine: Arc::new(engine),
+            cfg,
+            crosscheck,
+            crosscheck_mismatches: 0,
+            crosschecks: 0,
+        }
+    }
+
+    /// Serve `n` images from a dataset through the batched worker pool;
+    /// returns the final metrics.
+    pub fn serve_dataset(&mut self, ds: &Dataset, n: usize) -> Result<Metrics> {
+        let n = n.min(ds.len());
+        let mut batcher = Batcher::new(self.cfg.batch_size);
+        let workers = self.cfg.workers.max(1);
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<(InferRequest, Instant)>>();
+        let (resp_tx, resp_rx) = mpsc::channel::<InferResponse>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let engine = Arc::clone(&self.engine);
+            let rx = Arc::clone(&batch_rx);
+            let tx = resp_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    for (req, t0) in batch {
+                        match engine.infer(&req.spikes) {
+                            Ok(out) => {
+                                let resp = InferResponse {
+                                    id: req.id,
+                                    predicted: out.predicted,
+                                    label: req.label,
+                                    device_ms: out.device_ms,
+                                    host_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                    energy_mj: out.energy_mj,
+                                    total_spikes: out.total_spikes,
+                                    sops: out.sops,
+                                };
+                                if tx.send(resp).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("worker: inference failed for request {}: {e:#}", req.id);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        drop(resp_tx);
+
+        // Submit + cross-check on this thread.
+        for i in 0..n {
+            let (img, label) = ds.get(i);
+            let spikes = encode_threshold(&img, 128);
+            if let Some(hlo) = &self.crosscheck {
+                if self.cfg.crosscheck_every > 0 && i % self.cfg.crosscheck_every == 0 {
+                    let sim_pred = self.engine.infer(&spikes)?.predicted;
+                    let hlo_pred = hlo.predict(&spikes).context("cross-check inference")?;
+                    self.crosschecks += 1;
+                    if sim_pred != hlo_pred {
+                        self.crosscheck_mismatches += 1;
+                        eprintln!(
+                            "cross-check mismatch on image {i}: sim={sim_pred} hlo={hlo_pred}"
+                        );
+                    }
+                }
+            }
+            let req = InferRequest { id: i as u64, spikes, label: Some(label) };
+            if let Some(batch) = batcher.push(req) {
+                let stamped = batch.into_iter().map(|r| (r, Instant::now())).collect();
+                batch_tx.send(stamped).context("worker pool hung up")?;
+            }
+        }
+        if let Some(batch) = batcher.flush() {
+            let stamped = batch.into_iter().map(|r| (r, Instant::now())).collect();
+            batch_tx.send(stamped).context("worker pool hung up")?;
+        }
+        drop(batch_tx);
+
+        let mut metrics = Metrics::default();
+        for resp in resp_rx {
+            metrics.record(&resp);
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, RunConfig};
+    use crate::data::SynthCifar;
+    use crate::model::zoo;
+
+    fn dataset(n: usize) -> Dataset {
+        Dataset::from_synth(&SynthCifar::new(10, 2), n)
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let engine = Engine::golden(zoo::tiny(10, 5));
+        let mut coord = Coordinator::new(engine, RunConfig { batch_size: 3, workers: 2, ..Default::default() });
+        let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.labelled, 10);
+    }
+
+    #[test]
+    fn sim_engine_produces_device_metrics() {
+        let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let mut coord = Coordinator::new(engine, RunConfig { batch_size: 2, workers: 1, ..Default::default() });
+        let m = coord.serve_dataset(&dataset(4), 4).unwrap();
+        assert!(m.device_ms.mean() > 0.0);
+        assert!(m.energy_mj.mean() > 0.0);
+        assert!(m.device_fps() > 0.0);
+    }
+
+    #[test]
+    fn partial_batch_flushes() {
+        let engine = Engine::golden(zoo::tiny(10, 5));
+        // batch 8 > n 5: everything arrives via the flush path
+        let mut coord = Coordinator::new(engine, RunConfig { batch_size: 8, workers: 1, ..Default::default() });
+        let m = coord.serve_dataset(&dataset(5), 5).unwrap();
+        assert_eq!(m.completed, 5);
+    }
+
+    #[test]
+    fn multiple_workers_complete() {
+        let engine = Engine::golden(zoo::tiny(10, 5));
+        let mut coord = Coordinator::new(engine, RunConfig { batch_size: 1, workers: 4, ..Default::default() });
+        let m = coord.serve_dataset(&dataset(12), 12).unwrap();
+        assert_eq!(m.completed, 12);
+    }
+}

@@ -1,0 +1,79 @@
+//! Input spike encoders.
+//!
+//! NEURAL executes a *single* timestep, so the input image must become one
+//! binary spike map. The paper's models use direct threshold encoding on
+//! the first layer (the "input spiking image" of Fig 4); a stochastic
+//! Bernoulli encoder is provided for the rate-coding ablation bench.
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Deterministic threshold encoding: spike where `pixel >= thresh`.
+/// This is the encoder the quantized models are trained with
+/// (`python/compile/datasets.py::encode_threshold` is the twin).
+pub fn encode_threshold(img: &Tensor<u8>, thresh: u8) -> Tensor<u8> {
+    img.map(|p| (p >= thresh) as u8)
+}
+
+/// Stochastic rate encoding: spike with probability `pixel / 255`.
+/// Used only by the encoding-ablation bench; seeded for reproducibility.
+pub fn encode_bernoulli(img: &Tensor<u8>, seed: u64) -> Tensor<u8> {
+    let mut rng = Pcg32::new(seed, 0xE);
+    let data: Vec<u8> = img
+        .data()
+        .iter()
+        .map(|&p| rng.bernoulli(p as f32 / 255.0) as u8)
+        .collect();
+    Tensor::from_vec(img.shape().clone(), data)
+}
+
+/// Spike density of a binary map (fraction of ones).
+pub fn density(spikes: &Tensor<u8>) -> f64 {
+    if spikes.numel() == 0 {
+        return 0.0;
+    }
+    spikes.count_nonzero() as f64 / spikes.numel() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    fn ramp() -> Tensor<u8> {
+        Tensor::from_vec(Shape::d3(1, 1, 8), vec![0, 32, 64, 96, 128, 160, 192, 255])
+    }
+
+    #[test]
+    fn threshold_is_binary_and_monotonic() {
+        let s = encode_threshold(&ramp(), 128);
+        assert_eq!(s.data(), &[0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn threshold_zero_spikes_everywhere() {
+        let s = encode_threshold(&ramp(), 0);
+        assert_eq!(s.count_nonzero(), 8);
+    }
+
+    #[test]
+    fn bernoulli_tracks_intensity() {
+        let bright = Tensor::from_vec(Shape::d1(4096), vec![230u8; 4096]);
+        let dark = Tensor::from_vec(Shape::d1(4096), vec![25u8; 4096]);
+        let db = density(&encode_bernoulli(&bright, 1));
+        let dd = density(&encode_bernoulli(&dark, 1));
+        assert!(db > 0.8 && dd < 0.2, "db={db} dd={dd}");
+    }
+
+    #[test]
+    fn bernoulli_deterministic_by_seed() {
+        let img = ramp();
+        assert_eq!(encode_bernoulli(&img, 9).data(), encode_bernoulli(&img, 9).data());
+    }
+
+    #[test]
+    fn density_bounds() {
+        let s = encode_threshold(&ramp(), 128);
+        assert!((density(&s) - 0.5).abs() < 1e-9);
+    }
+}

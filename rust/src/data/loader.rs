@@ -1,0 +1,170 @@
+//! Loader for the `.synd` dataset files exported by
+//! `python/compile/datasets.py` (the canonical split used for training and
+//! accuracy reporting, so Rust-side accuracy matches Python-side eval).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   4 bytes  b"SYND"
+//! version u32      1
+//! n       u32      number of samples
+//! classes u32
+//! c,h,w   u8 ×3    image dims (3, 32, 32)
+//! then n records: label u16, pixels c*h*w u8 (CHW order)
+//! ```
+
+use crate::tensor::{Shape, Tensor};
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory labelled image dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Number of classes.
+    pub num_classes: usize,
+    /// Image dims (C, H, W).
+    pub dims: (usize, usize, usize),
+    /// Flat images, CHW per record.
+    images: Vec<u8>,
+    labels: Vec<u16>,
+}
+
+impl Dataset {
+    /// Load a `.synd` file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening dataset {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parsing dataset {}", path.display()))
+    }
+
+    /// Parse from bytes.
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 19 || &buf[0..4] != b"SYND" {
+            bail!("not a SYND dataset (bad magic)");
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let version = rd_u32(4);
+        if version != 1 {
+            bail!("unsupported SYND version {version}");
+        }
+        let n = rd_u32(8) as usize;
+        let classes = rd_u32(12) as usize;
+        let (c, h, w) = (buf[16] as usize, buf[17] as usize, buf[18] as usize);
+        let px = c * h * w;
+        let rec = 2 + px;
+        let body = &buf[19..];
+        if body.len() != n * rec {
+            bail!("SYND body length {} != {} records of {}", body.len(), n, rec);
+        }
+        let mut images = Vec::with_capacity(n * px);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let r = &body[i * rec..(i + 1) * rec];
+            let label = u16::from_le_bytes([r[0], r[1]]);
+            if label as usize >= classes {
+                bail!("record {i}: label {label} out of range {classes}");
+            }
+            labels.push(label);
+            images.extend_from_slice(&r[2..]);
+        }
+        Ok(Dataset { num_classes: classes, dims: (c, h, w), images, labels })
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Get sample `i` as (CHW tensor, label).
+    pub fn get(&self, i: usize) -> (Tensor<u8>, usize) {
+        let (c, h, w) = self.dims;
+        let px = c * h * w;
+        let img = Tensor::from_vec(
+            Shape::d3(c, h, w),
+            self.images[i * px..(i + 1) * px].to_vec(),
+        );
+        (img, self.labels[i] as usize)
+    }
+
+    /// Serialize back to SYND bytes (used by tests and the Rust generator).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (c, h, w) = self.dims;
+        let px = c * h * w;
+        let mut out = Vec::with_capacity(19 + self.len() * (2 + px));
+        out.extend_from_slice(b"SYND");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.num_classes as u32).to_le_bytes());
+        out.push(c as u8);
+        out.push(h as u8);
+        out.push(w as u8);
+        for i in 0..self.len() {
+            out.extend_from_slice(&self.labels[i].to_le_bytes());
+            out.extend_from_slice(&self.images[i * px..(i + 1) * px]);
+        }
+        out
+    }
+
+    /// Build a Dataset in memory from the Rust generator (artifact-free runs).
+    pub fn from_synth(gen: &crate::data::SynthCifar, n: usize) -> Self {
+        let mut images = Vec::with_capacity(n * 3 * 32 * 32);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let (img, label) = gen.sample(i);
+            images.extend_from_slice(img.data());
+            labels.push(label as u16);
+        }
+        Dataset { num_classes: gen.num_classes, dims: (3, 32, 32), images, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthCifar;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let d = Dataset::from_synth(&SynthCifar::new(10, 3), 12);
+        let bytes = d.to_bytes();
+        let d2 = Dataset::parse(&bytes).unwrap();
+        assert_eq!(d2.len(), 12);
+        assert_eq!(d2.num_classes, 10);
+        for i in 0..12 {
+            let (a, la) = d.get(i);
+            let (b, lb) = d2.get(i);
+            assert_eq!(a.data(), b.data());
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Dataset::parse(b"NOPE00000000000000000").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let d = Dataset::from_synth(&SynthCifar::new(10, 3), 2);
+        let mut bytes = d.to_bytes();
+        bytes.truncate(bytes.len() - 5);
+        assert!(Dataset::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let d = Dataset::from_synth(&SynthCifar::new(10, 3), 1);
+        let mut bytes = d.to_bytes();
+        bytes[19] = 200; // label lo byte
+        bytes[20] = 0;
+        assert!(Dataset::parse(&bytes).is_err());
+    }
+}

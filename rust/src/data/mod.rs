@@ -1,0 +1,19 @@
+//! Datasets and spike encoding.
+//!
+//! The paper evaluates on CIFAR-10/100, which are not available in this
+//! offline environment; DESIGN.md documents the substitution with
+//! **SynthCIFAR**, a procedurally generated 32×32×3 class-conditional
+//! dataset. The canonical generator lives in `python/compile/datasets.py`
+//! (used for training); the eval split is exported to
+//! `artifacts/dataset_*.synd` and loaded here by [`loader`]. [`synth`] is a
+//! Rust-native generator with the same structure (class template tile +
+//! per-sample jitter and noise) for artifact-free benches and property
+//! tests. [`encode`] converts images to single-timestep input spike maps.
+
+pub mod encode;
+pub mod loader;
+pub mod synth;
+
+pub use encode::{encode_bernoulli, encode_threshold};
+pub use loader::Dataset;
+pub use synth::SynthCifar;

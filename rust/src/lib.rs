@@ -1,0 +1,47 @@
+//! # NEURAL — An Elastic Neuromorphic Architecture (reproduction)
+//!
+//! Rust reproduction of *"NEURAL: An Elastic Neuromorphic Architecture with
+//! Hybrid Data-Event Execution and On-the-fly Attention Dataflow"*
+//! (Chen & Merchant, CS.AR 2025).
+//!
+//! The crate is organised as the L3 layer of a three-layer Rust + JAX +
+//! Pallas stack (see `DESIGN.md`):
+//!
+//! * [`arch`] — the cycle-approximate simulator of the NEURAL accelerator:
+//!   elastic FIFOs, the elastic PE array (EPA), the pipelined sparse
+//!   detection array (PipeSDA), the W2TTFS FC core (WTFC), the on-the-fly
+//!   QKFormer write-back path, the weight management unit (WMU), and the
+//!   energy/resource analytic models.
+//! * [`baselines`] — simulators of the accelerators the paper compares
+//!   against (SiBrain, SCPU, STI-SNN, Cerebron-like).
+//! * [`model`] — the quantized SNN model IR, the NEUW weight-file loader,
+//!   and an integer-exact functional executor (the golden reference the
+//!   simulator is checked against).
+//! * [`snn`] — LIF neuron arithmetic and spike-map representations shared
+//!   by the simulator and the golden executor.
+//! * [`coordinator`] — the serving layer: request queue, batcher, layer
+//!   scheduler and metrics, driving images through a simulated accelerator.
+//! * [`runtime`] — PJRT runtime that loads the JAX-lowered HLO golden model
+//!   (`artifacts/*.hlo.txt`) and executes it via the `xla` crate.
+//! * [`data`] — SynthCIFAR dataset generator and spike encoders (bitwise
+//!   twin of `python/compile/datasets.py`).
+//! * [`tensor`], [`config`], [`util`], [`testing`], [`bench`] — substrates
+//!   built from `std` because the offline vendor set has no
+//!   tokio/clap/serde/criterion/proptest.
+
+pub mod arch;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod snn;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

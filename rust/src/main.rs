@@ -1,0 +1,224 @@
+//! `neural` — CLI launcher for the NEURAL reproduction.
+//!
+//! See `neural --help` / [`neural::cli::USAGE`].
+
+use anyhow::{bail, Context, Result};
+use neural::arch::{ResourceModel, ResourceReport};
+use neural::baselines::BaselineKind;
+use neural::cli::{Args, USAGE};
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::{neuw, zoo, Model};
+use neural::util::Table;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "inspect" => cmd_inspect(args),
+        "resources" => cmd_resources(args),
+        "sweep" => cmd_sweep(args),
+        "version" => {
+            println!("neural {}", neural::VERSION);
+            Ok(())
+        }
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Load a model from `--neuw` artifact or the `--model` zoo name.
+fn load_model(args: &Args) -> Result<Model> {
+    let classes = args.get_usize("classes", 10)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    if let Some(path) = args.get("neuw") {
+        return neuw::load(path);
+    }
+    let name = args.get_or("model", "tiny");
+    zoo::by_name(&name, classes, seed)
+        .with_context(|| format!("unknown zoo model {name:?} (tiny|resnet11|vgg11|qkfresnet11)"))
+}
+
+fn load_arch(args: &Args) -> Result<ArchConfig> {
+    match args.get("arch") {
+        Some(path) => ArchConfig::load(path),
+        None => Ok(ArchConfig::default()),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let arch = load_arch(args)?;
+    let engine_name = args.get_or("engine", "sim");
+    let engine = match engine_name.as_str() {
+        "sim" => Engine::sim(model, arch),
+        "rigid" => Engine::sim_rigid(model, arch),
+        "golden" => Engine::golden(model),
+        "sibrain" => Engine::baseline(model, BaselineKind::SiBrain, arch),
+        "scpu" => Engine::baseline(model, BaselineKind::Scpu, arch),
+        "stisnn" => Engine::baseline(model, BaselineKind::StiSnn, arch),
+        "cerebron" => Engine::baseline(model, BaselineKind::Cerebron, arch),
+        other => bail!("unknown engine {other:?}"),
+    };
+    let mut run_cfg = RunConfig {
+        dataset: args.get_or("dataset", "synthcifar10"),
+        images: args.get_usize("images", 16)?,
+        batch_size: args.get_usize("batch", 4)?,
+        workers: args.get_usize("workers", 1)?,
+        seed: args.get_usize("seed", 1234)? as u64,
+        crosscheck_every: args.get_usize("crosscheck-every", 0)?,
+        hlo_path: args.get("hlo").map(|s| s.to_string()),
+        ..Default::default()
+    };
+    // Dataset: prefer the python-exported eval split, fall back to the
+    // Rust generator.
+    let ds_path = format!("artifacts/dataset_{}.synd", run_cfg.dataset);
+    let ds = if std::path::Path::new(&ds_path).exists() && !args.flag("synth") {
+        println!("dataset: {ds_path}");
+        Dataset::load(&ds_path)?
+    } else {
+        println!("dataset: SynthCifar (rust generator, seed {})", run_cfg.seed);
+        Dataset::from_synth(
+            &SynthCifar::new(run_cfg.num_classes(), run_cfg.seed),
+            run_cfg.images,
+        )
+    };
+    run_cfg.images = run_cfg.images.min(ds.len());
+    let engine_label = engine.name();
+    let mut coord = Coordinator::new(engine, run_cfg.clone());
+    let t0 = std::time::Instant::now();
+    let mut metrics = coord.serve_dataset(&ds, run_cfg.images)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "engine={} model-classes={} images={}",
+        engine_label, ds.num_classes, run_cfg.images
+    );
+    println!("{}", metrics.summary_line());
+    println!(
+        "host: wall={:.2}s throughput={:.1} img/s p99={:.2}ms",
+        wall,
+        metrics.completed as f64 / wall.max(1e-9),
+        metrics.host_p99()
+    );
+    if coord.crosschecks > 0 {
+        println!(
+            "cross-check: {}/{} mismatches vs PJRT golden",
+            coord.crosscheck_mismatches, coord.crosschecks
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let shapes = model.shapes().map_err(anyhow::Error::msg)?;
+    println!(
+        "model {} — {} nodes, {} conv layers, {} params, input {:?}, {} classes",
+        model.name,
+        model.nodes.len(),
+        model.num_convs(),
+        model.num_params(),
+        model.input_dims,
+        model.num_classes
+    );
+    let mut t = Table::new("graph", &["id", "op", "inputs", "out dims"]);
+    for (i, node) in model.nodes.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            node.op.name().to_string(),
+            format!("{:?}", node.inputs),
+            format!("{:?}", shapes[i]),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Sweep EPA geometries for a model and report the latency/resource
+/// Pareto frontier (the "elastic connectivity" sizing view).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use neural::arch::{Accelerator, ResourceModel};
+    use neural::data::{encode_threshold, SynthCifar};
+    let model = load_model(args)?;
+    let (img, _) = SynthCifar::new(model.num_classes, 99).sample(0);
+    let spikes = encode_threshold(&img, 128);
+    let rmodel = ResourceModel::default();
+    let mut t = Table::new(
+        "EPA geometry sweep — latency vs area Pareto",
+        &["EPA", "latency ms", "FPS", "energy mJ", "kLUTs", "util"],
+    );
+    for edge in [4usize, 8, 16, 32, 64] {
+        let cfg = ArchConfig { epa_rows: edge, epa_cols: edge, ..Default::default() };
+        let kluts = rmodel.evaluate(&cfg).total().luts / 1000.0;
+        let acc = Accelerator::new(cfg);
+        let rep = acc.run(&model, &spikes)?;
+        t.row(&[
+            format!("{edge}x{edge}"),
+            format!("{:.3}", rep.latency_ms),
+            format!("{:.0}", acc.fps(&rep)),
+            format!("{:.3}", rep.energy.total_j() * 1e3),
+            format!("{kluts:.0}"),
+            format!("{:.1}%", rep.epa_utilization * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    let report: ResourceReport = ResourceModel::default().evaluate(&arch);
+    let mut t = Table::new(
+        "Hardware Resource Cost (Table I shape)",
+        &["Resource", "PipeSDA", "EPA", "WTFC", "Other", "Total"],
+    );
+    let total = report.total();
+    let fmt_k = |x: f64| format!("{:.1}K", x / 1000.0);
+    t.row(&[
+        "LUTs".into(),
+        fmt_k(report.pipesda.luts),
+        fmt_k(report.epa.luts),
+        fmt_k(report.wtfc.luts),
+        fmt_k(report.other.luts),
+        fmt_k(total.luts),
+    ]);
+    t.row(&[
+        "Registers".into(),
+        fmt_k(report.pipesda.regs),
+        fmt_k(report.epa.regs),
+        fmt_k(report.wtfc.regs),
+        fmt_k(report.other.regs),
+        fmt_k(total.regs),
+    ]);
+    t.row(&[
+        "BRAM".into(),
+        format!("{}", report.pipesda.bram),
+        format!("{}", report.epa.bram),
+        format!("{}", report.wtfc.bram),
+        format!("{}", report.other.bram),
+        format!("{}", total.bram),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,416 @@
+//! Golden functional executor: dense gather-form, integer-exact.
+//!
+//! This is the reference the cycle simulator is validated against: both
+//! consume the same `.neuw` graph and the integration tests require
+//! *identical* spike maps and logits (the simulator computes the same
+//! integers in event-driven scatter order). It is also the CPU-fast path
+//! the coordinator uses when asked for `--engine golden`.
+
+use crate::model::ir::{Model, Op, TokenMaskMode};
+use crate::snn::lif::lif_fire_scalar;
+use crate::snn::SpikeMap;
+use crate::tensor::{Shape, Tensor};
+use anyhow::{bail, Result};
+
+/// Per-node activity record produced alongside the logits.
+#[derive(Debug, Clone, Default)]
+pub struct ExecTrace {
+    /// Spikes emitted per node (dense count of ones).
+    pub spikes_per_node: Vec<u64>,
+    /// Synaptic operations per node (spike × fan-out pairs actually
+    /// accumulated — the paper's SOP metric).
+    pub sops_per_node: Vec<u64>,
+    /// Total spikes across all nodes (paper Table II "Total Spikes").
+    pub total_spikes: u64,
+    /// Total SOPs.
+    pub total_sops: u64,
+    /// Raw integer logits of the terminal classifier.
+    pub logits: Vec<i64>,
+}
+
+impl ExecTrace {
+    /// Argmax class of the logits. First maximum wins on ties — the same
+    /// convention as `jnp.argmax`, so cross-language checks agree exactly.
+    pub fn predicted(&self) -> usize {
+        argmax_first(&self.logits)
+    }
+}
+
+/// First-maximum argmax (`jnp.argmax` tie convention).
+pub fn argmax_first(xs: &[i64]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Execute the model on one input spike map; returns the trace.
+pub fn execute(model: &Model, input: &SpikeMap) -> Result<ExecTrace> {
+    let (ic, ih, iw) = model.input_dims;
+    if input.shape().dims() != [ic, ih, iw] {
+        bail!("input shape {} != model input ({ic},{ih},{iw})", input.shape());
+    }
+    let mut acts: Vec<SpikeMap> = Vec::with_capacity(model.nodes.len());
+    let mut trace = ExecTrace::default();
+    for node in &model.nodes {
+        let (out, sops) = match &node.op {
+            Op::Input => (input.clone(), 0),
+            Op::Conv { cin, cout, k, stride, pad, thresholds, tau_half, weights, .. } => {
+                conv_lif(&acts[node.inputs[0]], *cin, *cout, *k, *stride, *pad, thresholds, *tau_half, weights)
+            }
+            Op::MaxPool { k, stride } => (maxpool_or(&acts[node.inputs[0]], *k, *stride), 0),
+            Op::Or => {
+                let a = &acts[node.inputs[0]];
+                let b = &acts[node.inputs[1]];
+                let mut out = a.clone();
+                for (o, &bv) in out.data_mut().iter_mut().zip(b.data()) {
+                    *o |= bv;
+                }
+                (out, 0)
+            }
+            Op::TokenMask { mode } => {
+                (token_mask(&acts[node.inputs[0]], &acts[node.inputs[1]], *mode), 0)
+            }
+            Op::W2ttfsFc { classes, cin, ho, wo, window, weights, .. } => {
+                let (logits, sops) =
+                    w2ttfs_fc(&acts[node.inputs[0]], *classes, *cin, *ho, *wo, *window, weights);
+                trace.logits = logits;
+                // terminal "activation" is a placeholder map
+                (Tensor::zeros(Shape::d3(*classes, 1, 1)), sops)
+            }
+        };
+        let spikes = out.count_nonzero() as u64;
+        // Input spikes are counted (they enter PipeSDA); terminal FC has none.
+        let is_terminal = matches!(node.op, Op::W2ttfsFc { .. });
+        trace.spikes_per_node.push(if is_terminal { 0 } else { spikes });
+        trace.sops_per_node.push(sops);
+        trace.total_sops += sops;
+        if !is_terminal {
+            trace.total_spikes += spikes;
+        }
+        acts.push(out);
+    }
+    Ok(trace)
+}
+
+/// Dense integer conv + LIF fire. Returns (spike map, SOP count).
+/// SOPs count each (active input, reachable output) accumulation — the same
+/// pairs the event-driven scatter in the simulator performs.
+#[allow(clippy::too_many_arguments)]
+fn conv_lif(
+    x: &SpikeMap,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    thresholds: &[i32],
+    tau_half: bool,
+    weights: &[i8],
+) -> (SpikeMap, u64) {
+    let (h, w) = (x.shape().dim(1), x.shape().dim(2));
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out: SpikeMap = Tensor::zeros(Shape::d3(cout, ho, wo));
+    let mut sops: u64 = 0;
+    // Perf (§Perf opt-2): weights transposed to [tap][oc] once per layer so
+    // the per-active-input accumulate walks contiguous memory (same trick
+    // as the EPA scatter path — see arch/epa.rs).
+    let taps = cin * k * k;
+    let mut wt = vec![0i32; taps * cout];
+    for oc in 0..cout {
+        for t in 0..taps {
+            wt[t * cout + oc] = weights[oc * taps + t] as i32;
+        }
+    }
+    // Gather loop. For speed, precompute the active-input positions once per
+    // (oy, ox) window across all input channels.
+    let mut mp = vec![0i32; cout];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            mp.fill(0);
+            let mut active = 0u64;
+            for ic in 0..cin {
+                for ky in 0..k {
+                    let iy = oy * stride + ky;
+                    if iy < pad || iy - pad >= h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = ox * stride + kx;
+                        if ix < pad || ix - pad >= w {
+                            continue;
+                        }
+                        if x.at3(ic, iy - pad, ix - pad) != 0 {
+                            active += 1;
+                            let wbase = (ic * k + ky) * k + kx;
+                            // accumulate this input into every output channel
+                            let wrow = &wt[wbase * cout..(wbase + 1) * cout];
+                            for (m, &wv) in mp.iter_mut().zip(wrow) {
+                                *m += wv;
+                            }
+                        }
+                    }
+                }
+            }
+            sops += active * cout as u64;
+            for oc in 0..cout {
+                if lif_fire_scalar(mp[oc], thresholds[oc], tau_half) {
+                    out.set3(oc, oy, ox, 1);
+                }
+            }
+        }
+    }
+    (out, sops)
+}
+
+/// Spike max-pool = OR over the window.
+fn maxpool_or(x: &SpikeMap, k: usize, stride: usize) -> SpikeMap {
+    let (c, h, w) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out: SpikeMap = Tensor::zeros(Shape::d3(c, ho, wo));
+    for ci in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut any = 0u8;
+                'win: for ky in 0..k {
+                    for kx in 0..k {
+                        if x.at3(ci, oy * stride + ky, ox * stride + kx) != 0 {
+                            any = 1;
+                            break 'win;
+                        }
+                    }
+                }
+                out.set3(ci, oy, ox, any);
+            }
+        }
+    }
+    out
+}
+
+/// QKFormer on-the-fly attention (functional form of paper Fig 5):
+/// reduce Q with bit-OR along `mode`, then mask K.
+pub fn token_mask(q: &SpikeMap, k: &SpikeMap, mode: TokenMaskMode) -> SpikeMap {
+    let (c, h, w) = (q.shape().dim(0), q.shape().dim(1), q.shape().dim(2));
+    let mut out = k.clone();
+    match mode {
+        TokenMaskMode::Token => {
+            // mask[p] = OR_c Q[c, p]
+            let mut mask = vec![0u8; h * w];
+            for ci in 0..c {
+                for (p, m) in mask.iter_mut().enumerate() {
+                    *m |= q.at3(ci, p / w, p % w);
+                }
+            }
+            for ci in 0..c {
+                for (p, m) in mask.iter().enumerate() {
+                    if *m == 0 {
+                        out.set3(ci, p / w, p % w, 0);
+                    }
+                }
+            }
+        }
+        TokenMaskMode::Channel => {
+            // mask[c] = OR_p Q[c, p]
+            for ci in 0..c {
+                let mut any = 0u8;
+                for y in 0..h {
+                    for x in 0..w {
+                        any |= q.at3(ci, y, x);
+                    }
+                }
+                if any == 0 {
+                    for y in 0..h {
+                        for x in 0..w {
+                            out.set3(ci, y, x, 0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// W2TTFS + FC (functional form of Algorithm 1 + the time-reuse scaling):
+/// `logits[k] = Σ_{c,p} W[k][c,p] · vld_cnt[c,p]`, where `vld_cnt` counts
+/// spikes in each pooling window. The common 1/window² factor is dropped
+/// (argmax-invariant; hardware applies it as repeated unit-adds).
+/// Returns (logits, SOPs) where SOPs counts the repeat-adds the FCU issues.
+pub fn w2ttfs_fc(
+    x: &SpikeMap,
+    classes: usize,
+    cin: usize,
+    ho: usize,
+    wo: usize,
+    window: usize,
+    weights: &[i8],
+) -> (Vec<i64>, u64) {
+    let mut logits = vec![0i64; classes];
+    let mut sops: u64 = 0;
+    for c in 0..cin {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut vld = 0i64;
+                for ky in 0..window {
+                    for kx in 0..window {
+                        vld += x.at3(c, oy * window + ky, ox * window + kx) as i64;
+                    }
+                }
+                if vld == 0 {
+                    continue; // TTFS filter emits nothing: event-driven skip
+                }
+                let p = (c * ho + oy) * wo + ox;
+                sops += vld as u64 * classes as u64;
+                for (k, l) in logits.iter_mut().enumerate() {
+                    *l += weights[k * cin * ho * wo + p] as i64 * vld;
+                }
+            }
+        }
+    }
+    (logits, sops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{encode_threshold, SynthCifar};
+    use crate::model::zoo;
+    use crate::testing::forall;
+
+    fn run_tiny(seed: u64) -> ExecTrace {
+        let m = zoo::tiny(10, 3);
+        let ds = SynthCifar::new(10, seed);
+        let (img, _) = ds.sample(0);
+        execute(&m, &encode_threshold(&img, 128)).unwrap()
+    }
+
+    #[test]
+    fn tiny_model_runs_and_counts() {
+        let t = run_tiny(42);
+        assert_eq!(t.logits.len(), 10);
+        assert!(t.total_spikes > 0, "network must not be silent");
+        assert!(t.total_sops > 0);
+        assert_eq!(t.spikes_per_node.len(), 5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run_tiny(42);
+        let b = run_tiny(42);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_sops, b.total_sops);
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_spikes() {
+        // 1x1 conv, single channel, weight=+8, threshold 8: out == in.
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        x.set3(0, 1, 2, 1);
+        x.set3(0, 3, 3, 1);
+        let (y, sops) = conv_lif(&x, 1, 1, 1, 1, 0, &[8], false, &[8]);
+        assert_eq!(y, x);
+        assert_eq!(sops, 2);
+    }
+
+    #[test]
+    fn conv_threshold_blocks_weak_input() {
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 3, 3));
+        x.set3(0, 1, 1, 1);
+        // weight 3 < threshold 8: no fire anywhere
+        let (y, _) = conv_lif(&x, 1, 1, 3, 1, 1, &[8], false, &[3; 9]);
+        assert_eq!(y.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn maxpool_or_window() {
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        x.set3(0, 0, 0, 1);
+        let y = maxpool_or(&x, 2, 2);
+        assert_eq!(y.at3(0, 0, 0), 1);
+        assert_eq!(y.count_nonzero(), 1);
+    }
+
+    #[test]
+    fn token_mask_zeroes_inactive_tokens() {
+        let mut q: SpikeMap = Tensor::zeros(Shape::d3(2, 2, 2));
+        let mut k: SpikeMap = Tensor::zeros(Shape::d3(2, 2, 2));
+        // K active everywhere; Q active only at position (0,0)
+        for c in 0..2 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    k.set3(c, y, x, 1);
+                }
+            }
+        }
+        q.set3(1, 0, 0, 1);
+        let out = token_mask(&q, &k, TokenMaskMode::Token);
+        assert_eq!(out.at3(0, 0, 0), 1);
+        assert_eq!(out.at3(1, 0, 0), 1);
+        assert_eq!(out.count_nonzero(), 2, "only token (0,0) survives");
+    }
+
+    #[test]
+    fn channel_mask_zeroes_inactive_channels() {
+        let mut q: SpikeMap = Tensor::zeros(Shape::d3(2, 2, 2));
+        let mut k: SpikeMap = Tensor::zeros(Shape::d3(2, 2, 2));
+        k.set3(0, 1, 1, 1);
+        k.set3(1, 1, 1, 1);
+        q.set3(0, 0, 1, 1); // channel 0 active, channel 1 silent
+        let out = token_mask(&q, &k, TokenMaskMode::Channel);
+        assert_eq!(out.at3(0, 1, 1), 1);
+        assert_eq!(out.at3(1, 1, 1), 0);
+    }
+
+    #[test]
+    fn w2ttfs_counts_windows() {
+        // 1 channel 4x4, window 2 -> 2x2 counts.
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        x.set3(0, 0, 0, 1);
+        x.set3(0, 1, 1, 1); // window (0,0): vld=2
+        x.set3(0, 2, 3, 1); // window (1,1): vld=1
+        // classes=1, weights all 1 -> logit = 2 + 1 = 3
+        let (logits, sops) = w2ttfs_fc(&x, 1, 1, 2, 2, 2, &[1, 1, 1, 1]);
+        assert_eq!(logits[0], 3);
+        assert_eq!(sops, 3);
+    }
+
+    #[test]
+    fn w2ttfs_scale_invariance_of_argmax() {
+        // Dividing all counts by window^2 must not change argmax: verify by
+        // comparing against an explicitly scaled float computation.
+        forall("w2ttfs argmax scale-invariant", 30, |g| {
+            let cin = 2;
+            let (ho, wo, window) = (2, 2, 2);
+            let classes = 4;
+            let bits = g.spikes(cin * (ho * window) * (wo * window), 0.4);
+            let x = Tensor::from_vec(Shape::d3(cin, ho * window, wo * window), bits);
+            let n = classes * cin * ho * wo;
+            let weights: Vec<i8> = (0..n).map(|_| g.int(-8, 8) as i8).collect();
+            let (logits, _) = w2ttfs_fc(&x, classes, cin, ho, wo, window, &weights);
+            let scaled: Vec<f64> =
+                logits.iter().map(|&l| l as f64 / (window * window) as f64).collect();
+            let am_int =
+                (0..classes).max_by_key(|&i| logits[i]).unwrap();
+            let am_f = (0..classes)
+                .max_by(|&a, &b| scaled[a].partial_cmp(&scaled[b]).unwrap())
+                .unwrap();
+            assert_eq!(am_int, am_f);
+        });
+    }
+
+    #[test]
+    fn full_models_execute() {
+        let ds = SynthCifar::new(10, 5);
+        let (img, _) = ds.sample(1);
+        let spikes = encode_threshold(&img, 128);
+        for m in [zoo::resnet11(10, 7), zoo::qkfresnet11(10, 7)] {
+            let t = execute(&m, &spikes).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(t.total_spikes > 100, "{} too silent: {}", m.name, t.total_spikes);
+        }
+    }
+}

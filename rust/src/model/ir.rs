@@ -1,0 +1,273 @@
+//! Model intermediate representation.
+//!
+//! Design decisions (mirrored in `python/compile/model.py`, documented in
+//! DESIGN.md):
+//!
+//! * Single timestep, τ = 0.5 LIF with hard reset; BN is fused into the
+//!   conv weights by the quantizer, so a `Conv` node is conv→LIF.
+//! * Residual joins are spike-wise OR (SEW-"OR" variant) — keeps every edge
+//!   binary, which is what lets NEURAL route activations as events.
+//! * Inner downsampling uses stride-2 convs (ResNet) or spike max-pool =
+//!   window-OR (VGG). Only the final average pool is W2TTFS-converted,
+//!   exactly as the paper does.
+//! * The QKFormer block appears as a `TokenMask` node fed by its Q and K
+//!   convs; the simulator executes it on the write-back path (Fig 5).
+
+/// How the QK attention mask is reduced from the Q spike map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenMaskMode {
+    /// Mask per token (spatial position): `mask[p] = OR_c Q[c, p]`
+    /// (QKFormer's Q-K token attention, the variant in paper Fig 5).
+    Token,
+    /// Mask per channel: `mask[c] = OR_p Q[c, p]` (QKFormer's channel
+    /// attention, kept for the ablation bench).
+    Channel,
+}
+
+/// One operation in the graph. All activations are binary spike maps except
+/// the terminal `W2ttfsFc` output (integer logits).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Network input: the threshold-encoded spike image.
+    Input,
+    /// Fused conv + LIF. Weights are `[cout, cin, k, k]` int8, row-major.
+    Conv {
+        /// Input channels.
+        cin: usize,
+        /// Output channels.
+        cout: usize,
+        /// Kernel edge.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+        /// Fractional bits of the weight scale.
+        frac: u8,
+        /// Per-output-channel LIF thresholds in raw weight-scale
+        /// units (BN fusion folds per-channel biases in here).
+        thresholds: Vec<i32>,
+        /// Apply τ=0.5 leak before threshold.
+        tau_half: bool,
+        /// Quantized weights.
+        weights: Vec<i8>,
+    },
+    /// Spike max-pool (window OR).
+    MaxPool {
+        /// Window edge.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Residual join: element-wise OR of two same-shape spike maps.
+    Or,
+    /// QKFormer on-the-fly attention: input 0 = Q map, input 1 = K map;
+    /// output = K masked by the reduced Q activation state.
+    TokenMask {
+        /// Reduction direction.
+        mode: TokenMaskMode,
+    },
+    /// Terminal W2TTFS + fully-connected classifier.
+    /// `weights[k][c * ho * wo + p]` multiplies window-count `vld_cnt[c, p]`;
+    /// the common 1/window² scale is constant so argmax is unaffected
+    /// (the hardware realizes it with the time-reuse repeat-add).
+    W2ttfsFc {
+        /// Number of classes.
+        classes: usize,
+        /// Input channels.
+        cin: usize,
+        /// Pooled output height.
+        ho: usize,
+        /// Pooled output width.
+        wo: usize,
+        /// Pooling window edge (`window²` time steps in Algorithm 1).
+        window: usize,
+        /// Fractional bits of the FC weight scale.
+        frac: u8,
+        /// Quantized FC weights, `[classes, cin * ho * wo]`.
+        weights: Vec<i8>,
+    },
+}
+
+impl Op {
+    /// Short op name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv { .. } => "conv",
+            Op::MaxPool { .. } => "maxpool",
+            Op::Or => "or",
+            Op::TokenMask { .. } => "tokenmask",
+            Op::W2ttfsFc { .. } => "w2ttfs_fc",
+        }
+    }
+}
+
+/// A node: op + indices of its producer nodes.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// The operation.
+    pub op: Op,
+    /// Producer node ids (graph is a DAG in topological order).
+    pub inputs: Vec<usize>,
+}
+
+/// A full model graph.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Human-readable name (`vgg11`, `resnet11`, `qkfresnet11`).
+    pub name: String,
+    /// Input dims (C, H, W) of the spike image.
+    pub input_dims: (usize, usize, usize),
+    /// Number of classes.
+    pub num_classes: usize,
+    /// Topologically ordered nodes; node 0 is `Input`; the last node is the
+    /// `W2ttfsFc` terminal.
+    pub nodes: Vec<Node>,
+}
+
+impl Model {
+    /// Validate structural invariants; returns an error string on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".into());
+        }
+        if !matches!(self.nodes[0].op, Op::Input) {
+            return Err("node 0 must be Input".into());
+        }
+        if !matches!(self.nodes.last().unwrap().op, Op::W2ttfsFc { .. }) {
+            return Err("last node must be W2ttfsFc".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!("node {i} references non-topological input {inp}"));
+                }
+            }
+            let want = match n.op {
+                Op::Input => 0,
+                Op::Or | Op::TokenMask { .. } => 2,
+                _ => 1,
+            };
+            if n.inputs.len() != want {
+                return Err(format!(
+                    "node {i} ({}) expects {want} inputs, has {}",
+                    n.op.name(),
+                    n.inputs.len()
+                ));
+            }
+            if let Op::Conv { cin, cout, k, weights, thresholds, .. } = &n.op {
+                if weights.len() != cin * cout * k * k {
+                    return Err(format!("node {i}: conv weight count mismatch"));
+                }
+                if thresholds.len() != *cout {
+                    return Err(format!("node {i}: conv threshold count mismatch"));
+                }
+            }
+            if let Op::W2ttfsFc { classes, cin, ho, wo, weights, .. } = &n.op {
+                if weights.len() != classes * cin * ho * wo {
+                    return Err(format!("node {i}: fc weight count mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Propagate activation shapes; index i = output dims of node i.
+    /// The terminal FC reports `(classes, 1, 1)`.
+    pub fn shapes(&self) -> Result<Vec<(usize, usize, usize)>, String> {
+        let mut out: Vec<(usize, usize, usize)> = Vec::with_capacity(self.nodes.len());
+        for (i, n) in self.nodes.iter().enumerate() {
+            let dims = match &n.op {
+                Op::Input => self.input_dims,
+                Op::Conv { cin, cout, k, stride, pad, .. } => {
+                    let (c, h, w) = out[n.inputs[0]];
+                    if c != *cin {
+                        return Err(format!("node {i}: cin {cin} != producer C {c}"));
+                    }
+                    let ho = (h + 2 * pad - k) / stride + 1;
+                    let wo = (w + 2 * pad - k) / stride + 1;
+                    (*cout, ho, wo)
+                }
+                Op::MaxPool { k, stride } => {
+                    let (c, h, w) = out[n.inputs[0]];
+                    ((c), (h - k) / stride + 1, (w - k) / stride + 1)
+                }
+                Op::Or | Op::TokenMask { .. } => {
+                    let a = out[n.inputs[0]];
+                    let b = out[n.inputs[1]];
+                    if a != b {
+                        return Err(format!("node {i}: shape mismatch {a:?} vs {b:?}"));
+                    }
+                    a
+                }
+                Op::W2ttfsFc { classes, cin, ho, wo, window, .. } => {
+                    let (c, h, w) = out[n.inputs[0]];
+                    if c != *cin || h != ho * window || w != wo * window {
+                        return Err(format!(
+                            "node {i}: w2ttfs expects ({cin},{},{}) got ({c},{h},{w})",
+                            ho * window,
+                            wo * window
+                        ));
+                    }
+                    (*classes, 1, 1)
+                }
+            };
+            out.push(dims);
+        }
+        Ok(out)
+    }
+
+    /// Total parameter count (int8 weights).
+    pub fn num_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv { weights, .. } => weights.len(),
+                Op::W2ttfsFc { weights, .. } => weights.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Count conv nodes (the simulator's EPA workload).
+    pub fn num_convs(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.op, Op::Conv { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::model::zoo;
+
+    #[test]
+    fn zoo_models_validate_and_shape() {
+        for m in [zoo::resnet11(10, 7), zoo::vgg11(10, 7), zoo::qkfresnet11(10, 7)] {
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            let shapes = m.shapes().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert_eq!(*shapes.last().unwrap(), (10, 1, 1), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_graphs() {
+        let mut m = zoo::resnet11(10, 7);
+        m.nodes[2].inputs = vec![5]; // forward reference
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn shape_propagation_conv() {
+        let m = zoo::resnet11(10, 7);
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes[0], (3, 32, 32));
+        // first conv is 3->64, stride 1, pad 1, k 3 => same spatial
+        assert_eq!(shapes[1].1, 32);
+    }
+
+    #[test]
+    fn param_counts_positive() {
+        assert!(zoo::vgg11(10, 1).num_params() > 100_000);
+        assert!(zoo::qkfresnet11(10, 1).num_params() > zoo::resnet11(10, 1).num_params());
+    }
+}

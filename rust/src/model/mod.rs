@@ -1,0 +1,20 @@
+//! Quantized SNN model IR, loader and golden executor.
+//!
+//! * [`ir`] — the node graph the whole stack agrees on: binary spike maps
+//!   flow between nodes; every conv carries fused-BN int8 weights and its
+//!   LIF threshold; the terminal node is the W2TTFS-FC classifier.
+//! * [`neuw`] — the `.neuw` binary format written by
+//!   `python/compile/quantize.py` and read here.
+//! * [`exec`] — integer-exact functional executor (dense gather form); the
+//!   cycle simulator's event-driven scatter form must produce *identical*
+//!   spikes and logits, which the integration tests assert.
+//! * [`zoo`] — programmatic VGG-11 / ResNet-11 / QKFResNet-11 builders with
+//!   seeded random weights, for artifact-free tests and benches.
+
+pub mod exec;
+pub mod ir;
+pub mod neuw;
+pub mod zoo;
+
+pub use exec::{execute, ExecTrace};
+pub use ir::{Model, Node, Op, TokenMaskMode};

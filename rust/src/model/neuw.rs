@@ -1,0 +1,291 @@
+//! `.neuw` — the quantized-model interchange format.
+//!
+//! Written by `python/compile/quantize.py` after KD-QAT, read here by the
+//! coordinator/simulator. Little-endian layout:
+//!
+//! ```text
+//! magic    4  b"NEUW"
+//! version  u32 = 1
+//! name_len u8, name bytes (utf-8)
+//! classes  u32
+//! in_c/h/w u8 ×3
+//! n_nodes  u32
+//! per node:
+//!   op      u8   (0=input 1=conv 2=maxpool 3=or 4=tokenmask 5=w2ttfs_fc)
+//!   n_in    u8,  inputs u32 × n_in
+//!   payload (op-specific, see read_node)
+//! ```
+
+use crate::model::ir::{Model, Node, Op, TokenMaskMode};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"NEUW";
+const VERSION: u32 = 1;
+
+/// Serialize a model to `.neuw` bytes.
+pub fn to_bytes(model: &Model) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    let name = model.name.as_bytes();
+    out.push(name.len() as u8);
+    out.extend_from_slice(name);
+    out.extend_from_slice(&(model.num_classes as u32).to_le_bytes());
+    out.push(model.input_dims.0 as u8);
+    out.push(model.input_dims.1 as u8);
+    out.push(model.input_dims.2 as u8);
+    out.extend_from_slice(&(model.nodes.len() as u32).to_le_bytes());
+    for node in &model.nodes {
+        write_node(&mut out, node);
+    }
+    out
+}
+
+fn write_node(out: &mut Vec<u8>, node: &Node) {
+    let opcode: u8 = match node.op {
+        Op::Input => 0,
+        Op::Conv { .. } => 1,
+        Op::MaxPool { .. } => 2,
+        Op::Or => 3,
+        Op::TokenMask { .. } => 4,
+        Op::W2ttfsFc { .. } => 5,
+    };
+    out.push(opcode);
+    out.push(node.inputs.len() as u8);
+    for &i in &node.inputs {
+        out.extend_from_slice(&(i as u32).to_le_bytes());
+    }
+    match &node.op {
+        Op::Input | Op::Or => {}
+        Op::Conv { cin, cout, k, stride, pad, frac, thresholds, tau_half, weights } => {
+            out.extend_from_slice(&(*cin as u32).to_le_bytes());
+            out.extend_from_slice(&(*cout as u32).to_le_bytes());
+            out.push(*k as u8);
+            out.push(*stride as u8);
+            out.push(*pad as u8);
+            out.push(*frac);
+            for t in thresholds {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            out.push(*tau_half as u8);
+            out.extend_from_slice(unsafe {
+                std::slice::from_raw_parts(weights.as_ptr() as *const u8, weights.len())
+            });
+        }
+        Op::MaxPool { k, stride } => {
+            out.push(*k as u8);
+            out.push(*stride as u8);
+        }
+        Op::TokenMask { mode } => {
+            out.push(matches!(mode, TokenMaskMode::Channel) as u8);
+        }
+        Op::W2ttfsFc { classes, cin, ho, wo, window, frac, weights } => {
+            out.extend_from_slice(&(*classes as u32).to_le_bytes());
+            out.extend_from_slice(&(*cin as u32).to_le_bytes());
+            out.push(*ho as u8);
+            out.push(*wo as u8);
+            out.push(*window as u8);
+            out.push(*frac);
+            out.extend_from_slice(unsafe {
+                std::slice::from_raw_parts(weights.as_ptr() as *const u8, weights.len())
+            });
+        }
+    }
+}
+
+/// Cursor-based reader.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated NEUW file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>> {
+        let raw = self.take(n)?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+}
+
+/// Parse `.neuw` bytes into a validated [`Model`].
+pub fn from_bytes(buf: &[u8]) -> Result<Model> {
+    let mut rd = Rd { buf, pos: 0 };
+    if rd.take(4)? != MAGIC {
+        bail!("not a NEUW file (bad magic)");
+    }
+    let version = rd.u32()?;
+    if version != VERSION {
+        bail!("unsupported NEUW version {version}");
+    }
+    let name_len = rd.u8()? as usize;
+    let name = String::from_utf8(rd.take(name_len)?.to_vec()).context("model name utf-8")?;
+    let classes = rd.u32()? as usize;
+    let in_c = rd.u8()? as usize;
+    let in_h = rd.u8()? as usize;
+    let in_w = rd.u8()? as usize;
+    let n_nodes = rd.u32()? as usize;
+    if n_nodes > 100_000 {
+        bail!("implausible node count {n_nodes}");
+    }
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        nodes.push(read_node(&mut rd)?);
+    }
+    if rd.pos != buf.len() {
+        bail!("{} trailing bytes after last node", buf.len() - rd.pos);
+    }
+    let model = Model { name, input_dims: (in_c, in_h, in_w), num_classes: classes, nodes };
+    model.validate().map_err(|e| anyhow::anyhow!("invalid NEUW graph: {e}"))?;
+    model.shapes().map_err(|e| anyhow::anyhow!("NEUW shape check: {e}"))?;
+    Ok(model)
+}
+
+fn read_node(rd: &mut Rd) -> Result<Node> {
+    let opcode = rd.u8()?;
+    let n_in = rd.u8()? as usize;
+    let mut inputs = Vec::with_capacity(n_in);
+    for _ in 0..n_in {
+        inputs.push(rd.u32()? as usize);
+    }
+    let op = match opcode {
+        0 => Op::Input,
+        1 => {
+            let cin = rd.u32()? as usize;
+            let cout = rd.u32()? as usize;
+            let k = rd.u8()? as usize;
+            let stride = rd.u8()? as usize;
+            let pad = rd.u8()? as usize;
+            let frac = rd.u8()?;
+            if cout > 1_000_000 {
+                bail!("implausible cout {cout}");
+            }
+            let mut thresholds = Vec::with_capacity(cout);
+            for _ in 0..cout {
+                thresholds.push(rd.i32()?);
+            }
+            let tau_half = rd.u8()? != 0;
+            if k == 0 || stride == 0 || cin == 0 || cout == 0 {
+                bail!("conv with zero geometry");
+            }
+            let weights = rd.i8_vec(cin * cout * k * k)?;
+            Op::Conv { cin, cout, k, stride, pad, frac, thresholds, tau_half, weights }
+        }
+        2 => {
+            let k = rd.u8()? as usize;
+            let stride = rd.u8()? as usize;
+            Op::MaxPool { k, stride }
+        }
+        3 => Op::Or,
+        4 => {
+            let mode = if rd.u8()? != 0 { TokenMaskMode::Channel } else { TokenMaskMode::Token };
+            Op::TokenMask { mode }
+        }
+        5 => {
+            let classes = rd.u32()? as usize;
+            let cin = rd.u32()? as usize;
+            let ho = rd.u8()? as usize;
+            let wo = rd.u8()? as usize;
+            let window = rd.u8()? as usize;
+            let frac = rd.u8()?;
+            let weights = rd.i8_vec(classes * cin * ho * wo)?;
+            Op::W2ttfsFc { classes, cin, ho, wo, window, frac, weights }
+        }
+        other => bail!("unknown opcode {other}"),
+    };
+    Ok(Node { op, inputs })
+}
+
+/// Load a model from a `.neuw` file.
+pub fn load(path: impl AsRef<Path>) -> Result<Model> {
+    let path = path.as_ref();
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening model {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    from_bytes(&buf).with_context(|| format!("parsing model {}", path.display()))
+}
+
+/// Save a model to a `.neuw` file.
+pub fn save(model: &Model, path: impl AsRef<Path>) -> Result<()> {
+    let bytes = to_bytes(model);
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for m in [zoo::tiny(10, 1), zoo::resnet11(10, 1), zoo::vgg11(10, 1), zoo::qkfresnet11(100, 1)] {
+            let bytes = to_bytes(&m);
+            let m2 = from_bytes(&bytes).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert_eq!(m2.name, m.name);
+            assert_eq!(m2.num_classes, m.num_classes);
+            assert_eq!(m2.nodes.len(), m.nodes.len());
+            assert_eq!(m2.num_params(), m.num_params());
+            // spot-check weight bytes survive
+            if let (Op::Conv { weights: a, .. }, Op::Conv { weights: b, .. }) =
+                (&m.nodes[1].op, &m2.nodes[1].op)
+            {
+                assert_eq!(a, b);
+            } else {
+                panic!("node 1 should be conv");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let mut bytes = to_bytes(&zoo::tiny(10, 1));
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_anywhere() {
+        let bytes = to_bytes(&zoo::tiny(10, 1));
+        for cut in [5, 10, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(from_bytes(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = to_bytes(&zoo::tiny(10, 1));
+        bytes.push(0);
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("neural_test_neuw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.neuw");
+        let m = zoo::tiny(10, 9);
+        save(&m, &path).unwrap();
+        let m2 = load(&path).unwrap();
+        assert_eq!(m2.name, "tiny");
+    }
+}

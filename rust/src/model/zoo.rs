@@ -1,0 +1,261 @@
+//! Programmatic model builders with seeded random weights.
+//!
+//! These mirror the topologies `python/compile/model.py` trains (the
+//! authoritative weights arrive via `.neuw` artifacts); the zoo exists so
+//! tests, examples and benches can run without artifacts. Thresholds are
+//! set proportional to fan-in so random-weight networks keep plausible
+//! spike activity through depth (the simulator's workload shape — spike
+//! density per layer — is what the benches measure, not accuracy).
+
+use crate::model::ir::{Model, Node, Op, TokenMaskMode};
+use crate::util::Pcg32;
+
+/// Draw conv weights: uniform int8 in [-6, 8] (slight positive bias keeps
+/// deep activity alive with fan-in-proportional thresholds).
+fn rand_weights(rng: &mut Pcg32, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_below(15) as i32 - 6) as i8).collect()
+}
+
+/// Fan-in-proportional LIF threshold: fire when roughly a third of the
+/// receptive field is active at mean weight ≈ 1.
+fn threshold_for(cin: usize, k: usize) -> i32 {
+    ((cin * k * k) as i32 / 3).max(4)
+}
+
+struct Builder {
+    nodes: Vec<Node>,
+    rng: Pcg32,
+    frac: u8,
+}
+
+impl Builder {
+    fn new(seed: u64) -> Self {
+        Builder {
+            nodes: vec![Node { op: Op::Input, inputs: vec![] }],
+            rng: Pcg32::new(seed, 2024),
+            frac: 4,
+        }
+    }
+
+    fn conv(&mut self, from: usize, cin: usize, cout: usize, k: usize, stride: usize, pad: usize) -> usize {
+        let weights = rand_weights(&mut self.rng, cin * cout * k * k);
+        self.nodes.push(Node {
+            op: Op::Conv {
+                cin,
+                cout,
+                k,
+                stride,
+                pad,
+                frac: self.frac,
+                thresholds: vec![threshold_for(cin, k); cout],
+                tau_half: false,
+                weights,
+            },
+            inputs: vec![from],
+        });
+        self.nodes.len() - 1
+    }
+
+    fn maxpool(&mut self, from: usize, k: usize, stride: usize) -> usize {
+        self.nodes.push(Node { op: Op::MaxPool { k, stride }, inputs: vec![from] });
+        self.nodes.len() - 1
+    }
+
+    fn or(&mut self, a: usize, b: usize) -> usize {
+        self.nodes.push(Node { op: Op::Or, inputs: vec![a, b] });
+        self.nodes.len() - 1
+    }
+
+    fn token_mask(&mut self, q: usize, k: usize, mode: TokenMaskMode) -> usize {
+        self.nodes.push(Node { op: Op::TokenMask { mode }, inputs: vec![q, k] });
+        self.nodes.len() - 1
+    }
+
+    fn w2ttfs_fc(&mut self, from: usize, classes: usize, cin: usize, ho: usize, wo: usize, window: usize) -> usize {
+        let weights = rand_weights(&mut self.rng, classes * cin * ho * wo);
+        self.nodes.push(Node {
+            op: Op::W2ttfsFc { classes, cin, ho, wo, window, frac: self.frac, weights },
+            inputs: vec![from],
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Residual basic block: main path conv(s2?)→conv, skip 1×1 conv (or
+    /// identity when shape-preserving), OR join.
+    fn res_block(&mut self, from: usize, cin: usize, cout: usize, stride: usize) -> usize {
+        let a = self.conv(from, cin, cout, 3, stride, 1);
+        let b = self.conv(a, cout, cout, 3, 1, 1);
+        let skip = if stride == 1 && cin == cout {
+            from // identity skip
+        } else {
+            self.conv(from, cin, cout, 1, stride, 0)
+        };
+        self.or(b, skip)
+    }
+
+    /// QKFormer block on the write-back path: Q and K 1×1 convs from the
+    /// same input, token mask, residual OR (paper Fig 2/Fig 5).
+    fn qkf_block(&mut self, from: usize, c: usize) -> usize {
+        let q = self.conv(from, c, c, 1, 1, 0);
+        let k = self.conv(from, c, c, 1, 1, 0);
+        let masked = self.token_mask(q, k, TokenMaskMode::Token);
+        self.or(masked, from)
+    }
+
+    fn finish(self, name: &str, classes: usize) -> Model {
+        let m = Model {
+            name: name.to_string(),
+            input_dims: (3, 32, 32),
+            num_classes: classes,
+            nodes: self.nodes,
+        };
+        debug_assert_eq!(m.validate(), Ok(()));
+        m
+    }
+}
+
+/// ResNet-11 (the SCPU/SiBrain deployment topology): stem conv + three
+/// stride-2 residual blocks (2 main + 1 skip conv each) + W2TTFS window 4
+/// over the final 4×4×512 map (=> `window² = 16` TTFS steps, the paper's
+/// own example) + FC = 11 weight layers.
+pub fn resnet11(classes: usize, seed: u64) -> Model {
+    let mut b = Builder::new(seed);
+    let stem = b.conv(0, 3, 64, 3, 1, 1); // 32x32
+    let r1 = b.res_block(stem, 64, 128, 2); // 16x16
+    let r2 = b.res_block(r1, 128, 256, 2); // 8x8
+    let r3 = b.res_block(r2, 256, 512, 2); // 4x4
+    b.w2ttfs_fc(r3, classes, 512, 1, 1, 4);
+    b.finish("resnet11", classes)
+}
+
+/// VGG-11 (8 conv + classifier): spike max-pools between stages, final 2×2
+/// map converted by W2TTFS window 2.
+pub fn vgg11(classes: usize, seed: u64) -> Model {
+    let mut b = Builder::new(seed);
+    let c1 = b.conv(0, 3, 64, 3, 1, 1); // 32
+    let p1 = b.maxpool(c1, 2, 2); // 16
+    let c2 = b.conv(p1, 64, 128, 3, 1, 1);
+    let p2 = b.maxpool(c2, 2, 2); // 8
+    let c3 = b.conv(p2, 128, 256, 3, 1, 1);
+    let c4 = b.conv(c3, 256, 256, 3, 1, 1);
+    let p3 = b.maxpool(c4, 2, 2); // 4
+    let c5 = b.conv(p3, 256, 512, 3, 1, 1);
+    let c6 = b.conv(c5, 512, 512, 3, 1, 1);
+    let p4 = b.maxpool(c6, 2, 2); // 2
+    let c7 = b.conv(p4, 512, 512, 3, 1, 1);
+    let c8 = b.conv(c7, 512, 512, 3, 1, 1);
+    b.w2ttfs_fc(c8, classes, 512, 1, 1, 2);
+    b.finish("vgg11", classes)
+}
+
+/// QKFResNet-11: ResNet-11 augmented with QKFormer blocks after the second
+/// and third residual stages (paper Fig 2a).
+pub fn qkfresnet11(classes: usize, seed: u64) -> Model {
+    let mut b = Builder::new(seed);
+    let stem = b.conv(0, 3, 64, 3, 1, 1);
+    let r1 = b.res_block(stem, 64, 128, 2);
+    let r2 = b.res_block(r1, 128, 256, 2);
+    let a2 = b.qkf_block(r2, 256);
+    let r3 = b.res_block(a2, 256, 512, 2);
+    let a3 = b.qkf_block(r3, 512);
+    b.w2ttfs_fc(a3, classes, 512, 1, 1, 4);
+    b.finish("qkfresnet11", classes)
+}
+
+/// ResNet-19-like (Fig 8(b) family): stem + 3-2-2 residual stages
+/// (stride-2 entry block + identity-skip stride-1 blocks), W2TTFS window 4.
+/// 18 convs + FC = 19 weight layers.
+pub fn resnet19(classes: usize, seed: u64) -> Model {
+    let mut b = Builder::new(seed);
+    let stem = b.conv(0, 3, 64, 3, 1, 1); // 32
+    let r1 = b.res_block(stem, 64, 128, 2); // 16, 3 convs
+    let r1b = b.res_block(r1, 128, 128, 1); // 2 convs (identity skip)
+    let r1c = b.res_block(r1b, 128, 128, 1); // 2 convs
+    let r2 = b.res_block(r1c, 128, 256, 2); // 8, 3 convs
+    let r2b = b.res_block(r2, 256, 256, 1); // 2 convs
+    let r3 = b.res_block(r2b, 256, 512, 2); // 4, 3 convs
+    let r3b = b.res_block(r3, 512, 512, 1); // 2 convs
+    b.w2ttfs_fc(r3b, classes, 512, 1, 1, 4);
+    b.finish("resnet19", classes)
+}
+
+/// A deliberately tiny model (2 convs) for fast unit/property tests.
+pub fn tiny(classes: usize, seed: u64) -> Model {
+    let mut b = Builder::new(seed);
+    let c1 = b.conv(0, 3, 8, 3, 1, 1); // 32x32
+    let p = b.maxpool(c1, 2, 2); // 16
+    let c2 = b.conv(p, 8, 16, 3, 2, 1); // 8
+    b.w2ttfs_fc(c2, classes, 16, 2, 2, 4);
+    b.finish("tiny", classes)
+}
+
+/// Look up a zoo model by name.
+pub fn by_name(name: &str, classes: usize, seed: u64) -> Option<Model> {
+    match name {
+        "resnet11" => Some(resnet11(classes, seed)),
+        "resnet19" => Some(resnet19(classes, seed)),
+        "vgg11" => Some(vgg11(classes, seed)),
+        "qkfresnet11" => Some(qkfresnet11(classes, seed)),
+        "tiny" => Some(tiny(classes, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet11_has_eleven_weight_layers() {
+        let m = resnet11(10, 1);
+        // 10 convs (stem + 3 blocks × (2 main + 1 skip)) + FC = 11.
+        assert_eq!(m.num_convs() + 1, 11);
+    }
+
+    #[test]
+    fn vgg11_has_eight_convs() {
+        assert_eq!(vgg11(10, 1).num_convs(), 8);
+    }
+
+    #[test]
+    fn qkf_adds_attention_nodes() {
+        let m = qkfresnet11(10, 1);
+        let masks = m
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::TokenMask { .. }))
+            .count();
+        assert_eq!(masks, 2);
+    }
+
+    #[test]
+    fn seeds_change_weights() {
+        let a = resnet11(10, 1);
+        let b = resnet11(10, 2);
+        let wa = match &a.nodes[1].op {
+            Op::Conv { weights, .. } => weights.clone(),
+            _ => panic!(),
+        };
+        let wb = match &b.nodes[1].op {
+            Op::Conv { weights, .. } => weights.clone(),
+            _ => panic!(),
+        };
+        assert_ne!(wa, wb);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("vgg11", 10, 1).is_some());
+        assert!(by_name("resnet19", 10, 1).is_some());
+        assert!(by_name("alexnet", 10, 1).is_none());
+    }
+
+    #[test]
+    fn resnet19_has_nineteen_weight_layers() {
+        let m = resnet19(10, 1);
+        // 18 convs (stem + 6 blocks × 3) + FC = 19 weight layers.
+        assert_eq!(m.num_convs() + 1, 19);
+        assert_eq!(m.validate(), Ok(()));
+        assert_eq!(*m.shapes().unwrap().last().unwrap(), (10, 1, 1));
+    }
+}

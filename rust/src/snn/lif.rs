@@ -1,0 +1,138 @@
+//! Fixed-point Leaky-Integrate-and-Fire unit.
+//!
+//! Matches the paper's deployment model (τ = 0.5, single timestep, hard
+//! reset) and the Python quantizer's integer semantics exactly: the
+//! membrane potential (MP) is an `i32` accumulator in the weight scale
+//! (`2^-frac`), weights are `i8`, and the decay is an arithmetic right
+//! shift (τ = 0.5 ⇒ `mp >> 1`). The hardware LIF unit (paper Fig 3 ④)
+//! performs: accumulate events → leak → threshold compare → spike + reset.
+
+/// One LIF neuron's state and parameters in raw fixed-point units.
+#[derive(Debug, Clone, Copy)]
+pub struct LifUnit {
+    /// Membrane potential accumulator (raw, weight scale).
+    pub mp: i32,
+    /// Firing threshold (raw, weight scale).
+    pub threshold: i32,
+    /// Apply τ=0.5 leak (`mp >> 1`) before the threshold compare.
+    pub tau_half: bool,
+}
+
+impl LifUnit {
+    /// Fresh neuron with zero MP.
+    pub fn new(threshold: i32, tau_half: bool) -> Self {
+        LifUnit { mp: 0, threshold, tau_half }
+    }
+
+    /// Accumulate one synaptic event (weight already fetched by the PE).
+    #[inline]
+    pub fn integrate(&mut self, weight: i32) {
+        self.mp = self.mp.saturating_add(weight);
+    }
+
+    /// End-of-accumulation step: leak, compare, emit spike, hard reset on
+    /// fire. Returns `true` if a spike is emitted. In single-timestep mode
+    /// this is called exactly once per neuron per image.
+    #[inline]
+    pub fn fire(&mut self) -> bool {
+        if self.tau_half {
+            self.mp >>= 1;
+        }
+        if self.mp >= self.threshold {
+            self.mp = 0; // hard reset
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Single-timestep helper: integrate a pre-summed contribution and fire.
+    #[inline]
+    pub fn step(&mut self, summed: i32) -> bool {
+        self.integrate(summed);
+        self.fire()
+    }
+}
+
+/// Batch helper used by the golden executor: given a pre-accumulated raw MP
+/// lane, apply leak + threshold and return the spike bit. Kept as a free
+/// function so the hot loop can stay branch-light over slices.
+#[inline]
+pub fn lif_fire_scalar(mp: i32, threshold: i32, tau_half: bool) -> bool {
+    let v = if tau_half { mp >> 1 } else { mp };
+    v >= threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_at_threshold() {
+        let mut n = LifUnit::new(16, false);
+        n.integrate(15);
+        assert!(!n.fire());
+        let mut n = LifUnit::new(16, false);
+        n.integrate(16);
+        assert!(n.fire());
+        assert_eq!(n.mp, 0, "hard reset after fire");
+    }
+
+    #[test]
+    fn leak_halves_before_compare() {
+        // mp = 30, tau=0.5 -> 15 < 16: no spike.
+        let mut n = LifUnit::new(16, true);
+        n.integrate(30);
+        assert!(!n.fire());
+        // mp = 32 -> 16 >= 16: spike.
+        let mut n = LifUnit::new(16, true);
+        n.integrate(32);
+        assert!(n.fire());
+    }
+
+    #[test]
+    fn subthreshold_mp_persists_without_fire() {
+        let mut n = LifUnit::new(100, false);
+        n.integrate(30);
+        assert!(!n.fire());
+        assert_eq!(n.mp, 30, "no reset when silent");
+        n.integrate(80);
+        assert!(n.fire());
+    }
+
+    #[test]
+    fn negative_weights_inhibit() {
+        let mut n = LifUnit::new(10, false);
+        n.integrate(15);
+        n.integrate(-8);
+        assert!(!n.fire());
+    }
+
+    #[test]
+    fn saturating_accumulate() {
+        let mut n = LifUnit::new(10, false);
+        n.mp = i32::MAX - 1;
+        n.integrate(100);
+        assert_eq!(n.mp, i32::MAX);
+    }
+
+    #[test]
+    fn scalar_matches_unit() {
+        for mp in [-50, -1, 0, 15, 16, 31, 32, 100] {
+            for tau in [false, true] {
+                let mut n = LifUnit::new(16, tau);
+                n.integrate(mp);
+                assert_eq!(n.fire(), lif_fire_scalar(mp, 16, tau), "mp={mp} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_shift_leak_on_negative_mp() {
+        // -3 >> 1 == -2 (arithmetic): documents the RTL `>>>` semantics.
+        let mut n = LifUnit::new(0, true);
+        n.integrate(-3);
+        // leaked mp = -2 < 0 = threshold 0? -2 < 0 so no fire
+        assert!(!n.fire());
+    }
+}

@@ -1,0 +1,127 @@
+//! Spike-map representations.
+//!
+//! The simulator moves between two views of the same activation:
+//! * [`SpikeMap`] — dense binary CHW map (what the Spiking Buffer stores);
+//! * [`EventList`] — sparse (c, y, x) coordinate list (what PipeSDA's index
+//!   generation stage produces, paper Fig 4 "Index Generation").
+
+use crate::tensor::{Shape, Tensor};
+
+/// Dense binary spike map over (C, H, W).
+pub type SpikeMap = Tensor<u8>;
+
+/// One spike event: channel + spatial coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Channel index.
+    pub c: u16,
+    /// Row.
+    pub y: u16,
+    /// Column.
+    pub x: u16,
+}
+
+/// Sparse view of a spike map, in raster order (the order the IG stage
+/// scans the dense map).
+#[derive(Debug, Clone, Default)]
+pub struct EventList {
+    /// Events in (c, y, x) raster order.
+    pub events: Vec<Event>,
+    /// Shape of the originating dense map.
+    pub dims: (usize, usize, usize),
+}
+
+impl EventList {
+    /// Extract all spike coordinates from a dense map (IG stage).
+    /// Perf (§Perf opt-3): walk the flat slice once instead of per-element
+    /// `at3` index arithmetic — the IG scan runs on every layer input.
+    pub fn from_map(map: &SpikeMap) -> Self {
+        let (c, h, w) = (map.shape().dim(0), map.shape().dim(1), map.shape().dim(2));
+        let mut events = Vec::with_capacity(map.numel() / 8);
+        let plane = h * w;
+        for (i, &v) in map.data().iter().enumerate() {
+            if v != 0 {
+                let ci = i / plane;
+                let rem = i % plane;
+                events.push(Event { c: ci as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
+            }
+        }
+        EventList { events, dims: (c, h, w) }
+    }
+
+    /// Rebuild the dense map (inverse of `from_map`).
+    pub fn to_map(&self) -> SpikeMap {
+        let (c, h, w) = self.dims;
+        let mut map = Tensor::zeros(Shape::d3(c, h, w));
+        for e in &self.events {
+            map.set3(e.c as usize, e.y as usize, e.x as usize, 1);
+        }
+        map
+    }
+
+    /// Number of events (the paper's "Total Spikes" metric counts these).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True if no spikes.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Spike density relative to the dense map size.
+    pub fn density(&self) -> f64 {
+        let n = self.dims.0 * self.dims.1 * self.dims.2;
+        if n == 0 { 0.0 } else { self.events.len() as f64 / n as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn roundtrip_dense_sparse_dense() {
+        let mut map: SpikeMap = Tensor::zeros(Shape::d3(2, 4, 4));
+        map.set3(0, 1, 2, 1);
+        map.set3(1, 3, 0, 1);
+        let ev = EventList::from_map(&map);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev.to_map(), map);
+    }
+
+    #[test]
+    fn raster_order() {
+        let mut map: SpikeMap = Tensor::zeros(Shape::d3(1, 2, 2));
+        map.set3(0, 0, 1, 1);
+        map.set3(0, 1, 0, 1);
+        let ev = EventList::from_map(&map);
+        assert_eq!(ev.events[0], Event { c: 0, y: 0, x: 1 });
+        assert_eq!(ev.events[1], Event { c: 0, y: 1, x: 0 });
+    }
+
+    #[test]
+    fn density_matches_count() {
+        let mut map: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
+        for i in 0..4 {
+            map.set3(0, i, i, 1);
+        }
+        let ev = EventList::from_map(&map);
+        assert!((ev.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_roundtrip_preserves_spikes() {
+        forall("event roundtrip", 50, |g| {
+            let c = g.size(1, 3);
+            let h = g.size(1, 8);
+            let w = g.size(1, 8);
+            let bits = g.spikes(c * h * w, 0.3);
+            let map = Tensor::from_vec(Shape::d3(c, h, w), bits);
+            let ev = EventList::from_map(&map);
+            assert_eq!(ev.to_map(), map);
+            assert_eq!(ev.len(), map.count_nonzero());
+        });
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal dense tensor substrate.
+//!
+//! The offline vendor set has no `ndarray`, so the model executor and the
+//! simulator share this small row-major tensor. Only what the SNN stack
+//! needs is implemented: shapes up to 4-D, elementwise ops, conv/pool
+//! helpers live in [`crate::model::exec`] where layout choices are made.
+
+mod shape;
+pub use shape::Shape;
+
+/// Dense row-major tensor over an element type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled (default-filled) tensor.
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        Tensor { shape, data: vec![T::default(); n] }
+    }
+
+    /// Build from a data vector; panics if the length mismatches the shape.
+    pub fn from_vec(shape: Shape, data: Vec<T>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "tensor data/shape mismatch");
+        Tensor { shape, data }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Flat data slice.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat data slice.
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Indexed get for a (c, h, w) CHW tensor.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> T {
+        let (_, hh, ww) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        debug_assert!(c < self.shape.dim(0) && h < hh && w < ww);
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    /// Indexed set for a (c, h, w) CHW tensor.
+    #[inline]
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, v: T) {
+        let (hh, ww) = (self.shape.dim(1), self.shape.dim(2));
+        self.data[(c * hh + h) * ww + w] = v;
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(&mut self, shape: Shape) {
+        assert_eq!(shape.numel(), self.numel(), "reshape element-count mismatch");
+        self.shape = shape;
+    }
+
+    /// Map elementwise into a new tensor.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+}
+
+impl Tensor<f32> {
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Index of the maximum element (argmax over the flat view).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+impl Tensor<u8> {
+    /// Number of non-zero elements (spike count for binary maps).
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut t: Tensor<f32> = Tensor::zeros(Shape::d3(2, 3, 4));
+        assert_eq!(t.numel(), 24);
+        t.set3(1, 2, 3, 5.0);
+        assert_eq!(t.at3(1, 2, 3), 5.0);
+        assert_eq!(t.at3(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn row_major_layout() {
+        let t = Tensor::from_vec(Shape::d3(1, 2, 2), vec![1u8, 2, 3, 4]);
+        assert_eq!(t.at3(0, 0, 0), 1);
+        assert_eq!(t.at3(0, 0, 1), 2);
+        assert_eq!(t.at3(0, 1, 0), 3);
+        assert_eq!(t.at3(0, 1, 1), 4);
+    }
+
+    #[test]
+    fn argmax_and_sum() {
+        let t = Tensor::from_vec(Shape::d1(4), vec![0.0f32, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+        assert_eq!(t.sum(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_checks_len() {
+        let _ = Tensor::from_vec(Shape::d1(3), vec![1u8, 2]);
+    }
+
+    #[test]
+    fn count_nonzero_counts_spikes() {
+        let t = Tensor::from_vec(Shape::d1(5), vec![0u8, 1, 0, 1, 1]);
+        assert_eq!(t.count_nonzero(), 3);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = Tensor::from_vec(Shape::d1(3), vec![1u8, 0, 2]);
+        let f = t.map(|x| x as f32 * 2.0);
+        assert_eq!(f.data(), &[2.0, 0.0, 4.0]);
+    }
+}

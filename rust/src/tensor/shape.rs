@@ -1,0 +1,84 @@
+//! Tensor shapes (up to 4 dimensions, enough for NCHW activations).
+
+/// A small-vector shape: 1–4 dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    dims: [usize; 4],
+    rank: u8,
+}
+
+impl Shape {
+    /// 1-D shape.
+    pub fn d1(a: usize) -> Self {
+        Shape { dims: [a, 1, 1, 1], rank: 1 }
+    }
+
+    /// 2-D shape.
+    pub fn d2(a: usize, b: usize) -> Self {
+        Shape { dims: [a, b, 1, 1], rank: 2 }
+    }
+
+    /// 3-D shape (C, H, W).
+    pub fn d3(a: usize, b: usize, c: usize) -> Self {
+        Shape { dims: [a, b, c, 1], rank: 3 }
+    }
+
+    /// 4-D shape (N, C, H, W) or (Cout, Cin, Kh, Kw).
+    pub fn d4(a: usize, b: usize, c: usize, d: usize) -> Self {
+        Shape { dims: [a, b, c, d], rank: 4 }
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    /// Size of dimension `i` (panics if out of rank).
+    pub fn dim(&self, i: usize) -> usize {
+        assert!(i < self.rank as usize, "dim {i} out of rank {}", self.rank);
+        self.dims[i]
+    }
+
+    /// Dimensions as a slice.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}]",
+            self.dims().iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_products() {
+        assert_eq!(Shape::d1(7).numel(), 7);
+        assert_eq!(Shape::d3(2, 3, 4).numel(), 24);
+        assert_eq!(Shape::d4(2, 3, 4, 5).numel(), 120);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Shape::d3(3, 32, 32).to_string(), "[3x32x32]");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of rank")]
+    fn dim_bounds_checked() {
+        let _ = Shape::d2(2, 2).dim(2);
+    }
+}

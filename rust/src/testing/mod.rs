@@ -1,0 +1,216 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the subset the test suite needs: seeded generators built on
+//! [`crate::util::Pcg32`], a `forall` runner that reports the failing seed,
+//! and greedy input shrinking for integer vectors. Coordinator invariants
+//! (routing, batching, FIFO state) are property-tested with this.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath)
+//! use neural::testing::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.int(-1000, 1000);
+//!     let b = g.int(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Random-input generator handed to each property iteration.
+pub struct Gen {
+    rng: Pcg32,
+    /// Log of drawn values, printed when a property fails.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed, 77), trace: Vec::new() }
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        let v = lo + (self.rng.next_u32() as u64 % span) as i64;
+        self.trace.push(format!("int({lo},{hi})={v}"));
+        v
+    }
+
+    /// `usize` in `[lo, hi]` inclusive.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform `f32` in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.next_f32() * (hi - lo);
+        self.trace.push(format!("f32({lo},{hi})={v}"));
+        v
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f32) -> bool {
+        let v = self.rng.bernoulli(p);
+        self.trace.push(format!("bool({p})={v}"));
+        v
+    }
+
+    /// Vector of integers.
+    pub fn vec_int(&mut self, len_lo: usize, len_hi: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let n = self.size(len_lo, len_hi);
+        (0..n).map(|_| self.int(lo, hi)).collect()
+    }
+
+    /// Binary spike map of the given size with spike probability `p`.
+    pub fn spikes(&mut self, n: usize, p: f32) -> Vec<u8> {
+        (0..n).map(|_| self.bool(p) as u8).collect()
+    }
+
+    /// Pick one of the provided choices.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.size(0, xs.len() - 1);
+        &xs[i]
+    }
+}
+
+/// Run `prop` against `iters` seeded inputs; on panic, re-raise with the
+/// failing seed and the drawn-value trace so the case can be replayed with
+/// [`replay`].
+pub fn forall(name: &str, iters: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = env_seed();
+    for i in 0..iters {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(payload) = result {
+            // Re-run to collect the trace (deterministic).
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            eprintln!(
+                "property {name:?} failed at iter {i} (seed {seed}).\n  replay: NEURAL_PROP_SEED={seed} (single-iteration)\n  trace: {}",
+                g.trace.join(", ")
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+fn env_seed() -> u64 {
+    std::env::var("NEURAL_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Greedy shrink of an integer vector against a failing predicate: tries to
+/// drop elements and halve magnitudes while the predicate still fails, and
+/// returns the smallest failing input found.
+pub fn shrink_vec(mut input: Vec<i64>, fails: impl Fn(&[i64]) -> bool) -> Vec<i64> {
+    assert!(fails(&input), "shrink_vec requires a failing input");
+    loop {
+        let mut improved = false;
+        // Try removing each element.
+        let mut i = 0;
+        while i < input.len() {
+            let mut candidate = input.clone();
+            candidate.remove(i);
+            if fails(&candidate) {
+                input = candidate;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Try halving magnitudes, then stepping toward zero.
+        for i in 0..input.len() {
+            let mut candidate = input.clone();
+            while candidate[i] != 0 {
+                let half = candidate[i] / 2;
+                if half == candidate[i] {
+                    break;
+                }
+                candidate[i] = half;
+                if fails(&candidate) {
+                    input = candidate.clone();
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+            // decrement pass (bounded) to squeeze past the halving plateau
+            let mut candidate = input.clone();
+            for _ in 0..64 {
+                let step = candidate[i].signum();
+                if step == 0 {
+                    break;
+                }
+                candidate[i] -= step;
+                if fails(&candidate) {
+                    input = candidate.clone();
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("abs non-negative", 200, |g| {
+            let x = g.int(-5000, 5000);
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    fn forall_is_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        assert_eq!(a.int(0, 1000), b.int(0, 1000));
+        assert_eq!(a.f32(0.0, 1.0), b.f32(0.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_reports_failure() {
+        forall("always false somewhere", 50, |g| {
+            let x = g.int(0, 100);
+            assert!(x < 95, "found big value");
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Failing predicate: any vector whose sum exceeds 10.
+        let start = vec![50, 3, 40, 7];
+        let min = shrink_vec(start, |v| v.iter().sum::<i64>() > 10);
+        // A single element just above 10 is the minimal failing shape.
+        assert_eq!(min.len(), 1);
+        assert!(min[0] > 10 && min[0] <= 13, "{min:?}");
+    }
+
+    #[test]
+    fn spikes_respect_probability_extremes() {
+        let mut g = Gen::new(5);
+        assert!(g.spikes(64, 0.0).iter().all(|&s| s == 0));
+        assert!(g.spikes(64, 1.0).iter().all(|&s| s == 1));
+    }
+}

@@ -1,0 +1,136 @@
+//! Fixed-point arithmetic matching the paper's "FP8" deployment precision.
+//!
+//! The paper quantizes weights and membrane potentials to 8-bit fixed point
+//! after operator (BN) fusion. We mirror `python/compile/quantize.py`:
+//! weights are stored as `i8` with a per-layer power-of-two scale
+//! (`value = q * 2^-frac_bits`), and the accumulator/membrane potential is a
+//! 32-bit fixed-point value in the same scale. Power-of-two scales keep the
+//! hardware multiplication-free (shifts only), which is what the WTFC's
+//! "time-reuse" trick also relies on.
+
+/// A 32-bit fixed-point number with a runtime fractional-bit count.
+///
+/// `Fx` is deliberately minimal: the simulator does all membrane-potential
+/// arithmetic in raw `i32` lanes for speed, and uses `Fx` at the edges
+/// (thresholds, reporting, tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fx {
+    /// Raw quantized value.
+    pub raw: i32,
+    /// Number of fractional bits (scale = 2^-frac).
+    pub frac: u8,
+}
+
+impl Fx {
+    /// Quantize a float with round-to-nearest-even into `frac` fractional bits.
+    pub fn from_f32(x: f32, frac: u8) -> Self {
+        let scaled = x as f64 * (1u64 << frac) as f64;
+        Fx { raw: round_half_even(scaled) as i32, frac }
+    }
+
+    /// Back to float.
+    pub fn to_f32(self) -> f32 {
+        self.raw as f32 / (1u64 << self.frac) as f32
+    }
+
+    /// Saturating add of two values in the same scale.
+    pub fn add(self, rhs: Fx) -> Fx {
+        assert_eq!(self.frac, rhs.frac, "fixed-point scale mismatch");
+        Fx { raw: self.raw.saturating_add(rhs.raw), frac: self.frac }
+    }
+
+    /// Re-scale to a different fractional-bit count (shift, round toward
+    /// negative infinity on narrowing — matches the Verilog `>>>`).
+    pub fn rescale(self, frac: u8) -> Fx {
+        let raw = if frac >= self.frac {
+            self.raw << (frac - self.frac)
+        } else {
+            self.raw >> (self.frac - frac)
+        };
+        Fx { raw, frac }
+    }
+}
+
+/// Round-half-to-even ("banker's rounding"), the mode jax/numpy use; keeping
+/// it identical on both sides makes quantized weights bit-exact across the
+/// Python exporter and this loader.
+pub fn round_half_even(x: f64) -> i64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor as i64 + 1
+    } else if diff < 0.5 {
+        floor as i64
+    } else {
+        let f = floor as i64;
+        if f % 2 == 0 { f } else { f + 1 }
+    }
+}
+
+/// Quantize an `f32` to `i8` with scale `2^-frac`, saturating to [-128, 127].
+pub fn quant_i8(x: f32, frac: u8) -> i8 {
+    let q = round_half_even(x as f64 * (1u64 << frac) as f64);
+    q.clamp(-128, 127) as i8
+}
+
+/// Dequantize an `i8` back to `f32`.
+pub fn dequant_i8(q: i8, frac: u8) -> f32 {
+    q as f32 / (1u64 << frac) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_for_representable() {
+        for frac in [0u8, 2, 4, 6] {
+            for raw in -100..100 {
+                let x = raw as f32 / (1 << frac) as f32;
+                assert_eq!(Fx::from_f32(x, frac).to_f32(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn half_even_rounding() {
+        assert_eq!(round_half_even(0.5), 0);
+        assert_eq!(round_half_even(1.5), 2);
+        assert_eq!(round_half_even(2.5), 2);
+        assert_eq!(round_half_even(-0.5), 0);
+        assert_eq!(round_half_even(-1.5), -2);
+        assert_eq!(round_half_even(0.49), 0);
+        assert_eq!(round_half_even(0.51), 1);
+    }
+
+    #[test]
+    fn quant_saturates() {
+        assert_eq!(quant_i8(100.0, 4), 127);
+        assert_eq!(quant_i8(-100.0, 4), -128);
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_lsb() {
+        for i in 0..200 {
+            let x = (i as f32 - 100.0) * 0.031;
+            let q = quant_i8(x, 4);
+            if (-128..=127).contains(&(round_half_even(x as f64 * 16.0))) {
+                assert!((dequant_i8(q, 4) - x).abs() <= 0.5 / 16.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_shifts() {
+        let a = Fx { raw: 12, frac: 2 };
+        assert_eq!(a.rescale(4).raw, 48);
+        assert_eq!(a.rescale(4).to_f32(), a.to_f32());
+        assert_eq!(Fx { raw: 13, frac: 2 }.rescale(0).raw, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale mismatch")]
+    fn add_rejects_mixed_scales() {
+        let _ = Fx { raw: 1, frac: 2 }.add(Fx { raw: 1, frac: 3 });
+    }
+}

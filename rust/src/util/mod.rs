@@ -1,0 +1,16 @@
+//! Shared utilities: deterministic RNG, fixed-point arithmetic, simple
+//! statistics, and a tiny table printer used by the bench harness.
+//!
+//! Everything here is `std`-only: the offline vendor set has neither `rand`
+//! nor `serde`, so the PCG32 generator and fixed-point helpers are local.
+
+pub mod fixed;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use fixed::Fx;
+pub use rng::Pcg32;
+pub use stats::Summary;
+pub use table::Table;

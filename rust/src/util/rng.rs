@@ -1,0 +1,153 @@
+//! PCG32 pseudo-random generator (O'Neill 2014, `pcg32_random_r`).
+//!
+//! Deterministic and seedable: simulator runs, property tests and the
+//! Rust-side SynthCIFAR generator must replay exactly from a seed. The
+//! canonical eval split is exported by Python to `artifacts/*.synd` and
+//! loaded byte-identical on this side (see `data::loader`).
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6364136223846793005;
+
+    /// Create a generator from a seed and stream id (standard PCG seeding).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform `u32` in `[0, bound)` without modulo bias (Lemire rejection).
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform `f32` in `[0, 1)` using the top 24 bits.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform `f64` in `[0, 1)` from two draws.
+    pub fn next_f64(&mut self) -> f64 {
+        let hi = (self.next_u32() >> 6) as u64; // 26 bits
+        let lo = (self.next_u32() >> 5) as u64; // 27 bits
+        ((hi << 27) | lo) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+
+    /// Standard normal via Box–Muller (single value; the pair's twin is
+    /// discarded to keep the stream position deterministic per call).
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(f32::MIN_POSITIVE);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_below(xs.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Pcg32::new(42, 54);
+        let mut b = Pcg32::new(42, 54);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn reference_vector_pcg32() {
+        // First outputs of pcg32 with seed=42, seq=54 from the PCG paper's
+        // reference implementation (also asserted by the Python twin).
+        let mut r = Pcg32::new(42, 54);
+        let expect: [u32; 6] = [
+            0xa15c02b7, 0x7b47f409, 0xba1d3330, 0x83d2f293, 0xbfa4784b, 0xcbed606e,
+        ];
+        for e in expect {
+            assert_eq!(r.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..1000 {
+            assert!(r.next_below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate_roughly_matches() {
+        let mut r = Pcg32::seeded(3);
+        let n = 20_000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.25)).count();
+        let rate = hits as f32 / n as f32;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

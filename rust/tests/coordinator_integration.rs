@@ -1,0 +1,74 @@
+//! Integration: the serving coordinator end-to-end over the simulator
+//! engine — batching, workers, metrics, and engine equivalence.
+
+use neural::baselines::BaselineKind;
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::zoo;
+
+fn ds(n: usize) -> Dataset {
+    Dataset::from_synth(&SynthCifar::new(10, 77), n)
+}
+
+#[test]
+fn serve_many_batches_with_workers() {
+    let engine = Engine::sim(zoo::tiny(10, 2), ArchConfig::default());
+    let cfg = RunConfig { batch_size: 3, workers: 2, ..Default::default() };
+    let mut coord = Coordinator::new(engine, cfg);
+    let mut metrics = coord.serve_dataset(&ds(20), 20).unwrap();
+    assert_eq!(metrics.completed, 20);
+    assert!(metrics.device_fps() > 0.0);
+    assert!(metrics.host_p99() > 0.0);
+    assert!(metrics.accuracy() >= 0.0);
+}
+
+#[test]
+fn engines_agree_on_predictions_through_coordinator() {
+    let data = ds(8);
+    let mut preds: Vec<Vec<bool>> = Vec::new();
+    for engine in [
+        Engine::sim(zoo::tiny(10, 2), ArchConfig::default()),
+        Engine::golden(zoo::tiny(10, 2)),
+        Engine::baseline(zoo::tiny(10, 2), BaselineKind::SiBrain, ArchConfig::default()),
+    ] {
+        let mut coord = Coordinator::new(engine, RunConfig { batch_size: 2, workers: 1, ..Default::default() });
+        let m = coord.serve_dataset(&data, 8).unwrap();
+        // same accuracy across engines = same predictions on same data
+        preds.push(vec![m.accuracy() > 0.0; 1]);
+        assert_eq!(m.completed, 8);
+    }
+}
+
+#[test]
+fn accuracy_identical_across_engines() {
+    let data = ds(12);
+    let mut accs = Vec::new();
+    for engine in [
+        Engine::sim(zoo::tiny(10, 2), ArchConfig::default()),
+        Engine::golden(zoo::tiny(10, 2)),
+        Engine::sim_rigid(zoo::tiny(10, 2), ArchConfig::default()),
+    ] {
+        let mut coord =
+            Coordinator::new(engine, RunConfig { batch_size: 4, workers: 1, ..Default::default() });
+        let m = coord.serve_dataset(&data, 12).unwrap();
+        accs.push((m.accuracy() * 1e6) as i64);
+    }
+    assert_eq!(accs[0], accs[1]);
+    assert_eq!(accs[0], accs[2]);
+}
+
+#[test]
+fn throughput_scales_down_with_single_worker_on_large_batch() {
+    // smoke: both configs complete; worker pool does not deadlock on
+    // batch > queue edge cases
+    for (bs, workers) in [(1, 1), (16, 2), (5, 3)] {
+        let engine = Engine::golden(zoo::tiny(10, 2));
+        let mut coord = Coordinator::new(
+            engine,
+            RunConfig { batch_size: bs, workers, ..Default::default() },
+        );
+        let m = coord.serve_dataset(&ds(10), 10).unwrap();
+        assert_eq!(m.completed, 10, "bs={bs} workers={workers}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Integration: the NEURAL cycle simulator must be functionally
+//! bit-identical to the golden dense executor on every zoo model — same
+//! logits, same spike counts, same SOP counts — and the elastic/rigid
+//! ablation must never change function, only timing.
+
+use neural::arch::Accelerator;
+use neural::config::ArchConfig;
+use neural::data::{encode_threshold, SynthCifar};
+use neural::model::{exec, zoo};
+
+fn spikes(seed: u64, idx: usize) -> neural::snn::SpikeMap {
+    let (img, _) = SynthCifar::new(10, seed).sample(idx);
+    encode_threshold(&img, 128)
+}
+
+#[test]
+fn simulator_matches_golden_on_all_zoo_models() {
+    let acc = Accelerator::new(ArchConfig::default());
+    for model in [
+        zoo::tiny(10, 3),
+        zoo::resnet11(10, 3),
+        zoo::vgg11(10, 3),
+        zoo::qkfresnet11(10, 3),
+    ] {
+        let x = spikes(7, 0);
+        let sim = acc.run(&model, &x).unwrap();
+        let gold = exec::execute(&model, &x).unwrap();
+        assert_eq!(sim.logits, gold.logits, "{}: logits differ", model.name);
+        assert_eq!(sim.total_spikes, gold.total_spikes, "{}: spike counts differ", model.name);
+        assert_eq!(sim.activity.sops, gold.total_sops, "{}: SOPs differ", model.name);
+        assert_eq!(sim.predicted, gold.predicted(), "{}", model.name);
+    }
+}
+
+#[test]
+fn simulator_matches_golden_across_inputs() {
+    let acc = Accelerator::new(ArchConfig::default());
+    let model = zoo::tiny(10, 9);
+    for idx in 0..16 {
+        let x = spikes(42, idx);
+        let sim = acc.run(&model, &x).unwrap();
+        let gold = exec::execute(&model, &x).unwrap();
+        assert_eq!(sim.logits, gold.logits, "input {idx}");
+    }
+}
+
+#[test]
+fn rigid_ablation_same_function_slower_time() {
+    let cfg = ArchConfig::default();
+    let elastic = Accelerator::new(cfg.clone());
+    let rigid = Accelerator::rigid(cfg);
+    let model = zoo::resnet11(10, 5);
+    let x = spikes(11, 1);
+    let e = elastic.run(&model, &x).unwrap();
+    let r = rigid.run(&model, &x).unwrap();
+    assert_eq!(e.logits, r.logits);
+    assert_eq!(e.total_spikes, r.total_spikes);
+    assert!(e.cycles < r.cycles, "elastic {} !< rigid {}", e.cycles, r.cycles);
+}
+
+#[test]
+fn geometry_sweep_preserves_function() {
+    // Any EPA geometry must compute the same network function; only the
+    // timing may change (smaller arrays take longer).
+    let model = zoo::tiny(10, 4);
+    let x = spikes(5, 2);
+    let gold = exec::execute(&model, &x).unwrap();
+    let mut last_cycles = 0u64;
+    for (rows, cols) in [(4, 4), (8, 8), (16, 16), (32, 32)] {
+        let acc = Accelerator::new(ArchConfig {
+            epa_rows: rows,
+            epa_cols: cols,
+            ..Default::default()
+        });
+        let rep = acc.run(&model, &x).unwrap();
+        assert_eq!(rep.logits, gold.logits, "{rows}x{cols}");
+        if last_cycles > 0 {
+            assert!(rep.cycles <= last_cycles, "bigger array must not be slower");
+        }
+        last_cycles = rep.cycles;
+    }
+}
+
+#[test]
+fn qkformer_suppression_only_in_qkf_models() {
+    let acc = Accelerator::new(ArchConfig::default());
+    let plain = acc.run(&zoo::resnet11(10, 3), &spikes(3, 0)).unwrap();
+    assert_eq!(plain.qkf_suppressed, 0, "no token mask in plain resnet");
+    // The QKF model has token masks; any single input may keep every token
+    // active, so accumulate suppression over several sparse inputs.
+    let model = zoo::qkfresnet11(10, 3);
+    let ds = SynthCifar::new(10, 7);
+    let mut suppressed = 0u64;
+    for idx in 0..6 {
+        let (img, _) = ds.sample(idx);
+        // high threshold => sparse input => sparse Q => inactive tokens
+        let x = encode_threshold(&img, 224);
+        suppressed += acc.run(&model, &x).unwrap().qkf_suppressed;
+    }
+    assert!(suppressed > 0, "token mask suppressed nothing across 6 sparse inputs");
+}
