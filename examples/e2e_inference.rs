@@ -1,4 +1,4 @@
-//! End-to-end driver (the EXPERIMENTS.md validation run).
+//! End-to-end driver (the DESIGN.md three-way-agreement validation run).
 //!
 //! ```bash
 //! cargo run --release --example e2e_inference -- [images] [batch]

@@ -1,21 +1,28 @@
-//! §Perf microbenches — the simulator's hot paths, timed.
+//! §Perf microbenches — the simulator's hot paths, timed, and the numbers
+//! recorded to `BENCH_perf.json` so every PR extends a perf trajectory
+//! (DESIGN.md §Perf documents the layout and targets: ≥10⁷ synaptic
+//! events/s/core on the SDA→EPA hot path).
 //!
-//! This is the profile source for the performance pass recorded in
-//! EXPERIMENTS.md §Perf: PipeSDA event diffusion, the EPA scatter
-//! accumulate, WTFC, golden conv, full-image simulation, and the raw
-//! elastic-FIFO primitive. Events/second is the simulator's headline
-//! throughput metric (target in DESIGN.md: ≥10⁷ synaptic events/s/core).
+//! The headline comparison is the fused zero-materialization SDA→EPA
+//! stream (`Epa::run_conv_fused`, the default path) against the
+//! materializing event-vector path (`PipeSda::process` + `Epa::run_conv`,
+//! the validation mode) on the same mid-network layer — both measured in
+//! the same run. The batch section measures how a 16-image batch scales
+//! across the coordinator's engine pool from 1 to 4 workers.
 
-use neural::arch::epa::{ConvParams, Epa};
+use neural::arch::epa::{ConvParams, ConvScratch, Epa};
 use neural::arch::sda::{ConvGeom, PipeSda};
 use neural::arch::wmu::Wmu;
 use neural::arch::{Accelerator, ElasticFifo};
 use neural::bench::artifacts;
 use neural::bench::BenchRunner;
 use neural::config::ArchConfig;
+use neural::coordinator::{Engine, EnginePool, InferRequest};
 use neural::data::encode_threshold;
 use neural::model::exec;
+use neural::snn::PackedSpikeMap;
 use neural::tensor::{Shape, Tensor};
+use neural::util::json::Json;
 use neural::util::Pcg32;
 
 fn main() {
@@ -36,64 +43,139 @@ fn main() {
         acc
     });
 
-    // SDA diffusion on a realistic mid-network layer (64ch 16x16, 30% dense)
+    // The combined SDA + EPA hot path on a realistic mid-network layer
+    // (64ch 16x16, 30% dense, into 128 output channels).
     let mut rng = Pcg32::seeded(3);
     let bits: Vec<u8> = (0..64 * 16 * 16).map(|_| rng.bernoulli(0.3) as u8).collect();
     let map = Tensor::from_vec(Shape::d3(64, 16, 16), bits);
+    let packed = PackedSpikeMap::from_map(&map);
     let geom = ConvGeom::new(3, 1, 1, (64, 16, 16));
     let sda = PipeSda::default();
-    let out = sda.process(&map, &geom);
-    let events = out.events.len();
-    let res = runner.run(&format!("SDA process 64x16x16 ({events} events)"), || {
-        sda.process(&map, &geom).events.len()
-    });
-    println!(
-        "  -> {:.1} M diffused events/s",
-        events as f64 / res.time.mean() / 1e6
-    );
-
-    // EPA scatter on the same layer into 128 output channels
-    let weights: Vec<i8> = (0..128 * 64 * 9).map(|_| (rng.next_below(15) as i32 - 7) as i8).collect();
+    let weights: Vec<i8> =
+        (0..128 * 64 * 9).map(|_| (rng.next_below(15) as i32 - 7) as i8).collect();
     let thresholds = vec![48i32; 128];
-    let p = ConvParams { cout: 128, cin: 64, k: 3, thresholds: &thresholds, tau_half: false, weights: &weights };
+    let p = ConvParams {
+        cout: 128,
+        cin: 64,
+        k: 3,
+        thresholds: &thresholds,
+        tau_half: false,
+        weights: &weights,
+    };
     let epa = Epa::from_cfg(&ArchConfig::default());
+    let events = sda.process(&map, &geom).events.len();
     let sops = events as u64 * 128;
-    let res = runner.run(&format!("EPA run_conv ({sops} SOPs)"), || {
+
+    // materializing path: event vector built, then replayed by the scatter
+    let mat = runner.run(&format!("SDA+EPA materializing ({events} events)"), || {
+        let out = sda.process(&map, &geom);
         let mut wmu = Wmu::new(8);
         epa.run_conv(&out, &p, &mut wmu, 16, 16).1.sops
     });
-    println!("  -> {:.1} M simulated SOPs/s", sops as f64 / res.time.mean() / 1e6);
 
-    // golden conv (gather) on the same layer for comparison
+    // fused path: packed scan streams straight into the membrane scatter
+    let mut scratch = ConvScratch::default();
+    let fused = runner.run(&format!("SDA+EPA fused stream ({events} events)"), || {
+        let mut wmu = Wmu::new(8);
+        epa.run_conv_fused(&sda, &packed, &geom, &p, &mut wmu, &mut scratch).1.sops
+    });
+
+    let fused_speedup = mat.time.mean() / fused.time.mean();
+    let fused_events_s = events as f64 / fused.time.mean();
+    let fused_sops_s = sops as f64 / fused.time.mean();
+    println!("  -> fused speedup {fused_speedup:.2}x over materializing");
+    println!("  -> {:.1} M diffused events/s fused", fused_events_s / 1e6);
+    println!("  -> {:.1} M simulated SOPs/s fused", fused_sops_s / 1e6);
+
+    // golden conv (gather) on comparable work for reference
     runner.run("golden dense layer (exec conv)", || {
-        // tiny model contains comparable conv work
         let (model, _) = artifacts::model_or_zoo("tiny", "none", 10);
         let (img, _) = artifacts::eval_split(10, 1).get(0);
         exec::execute(&model, &encode_threshold(&img, 128)).unwrap().total_sops
     });
 
-    // full-image simulation end to end
+    // full-image simulation end to end (fused default path)
     let (model, _) = artifacts::model_or_zoo("resnet11", "c10", 10);
-    let ds = artifacts::eval_split(10, 1);
+    let ds = artifacts::eval_split(10, 16);
     let (img, _) = ds.get(0);
     let spikes = encode_threshold(&img, 128);
     let acc = Accelerator::new(ArchConfig::default());
     let rep = acc.run(&model, &spikes).unwrap();
-    let res = runner.run(
+    let full = runner.run(
         &format!("full image sim resnet11 ({} SOPs)", rep.activity.sops),
         || acc.run(&model, &spikes).unwrap().activity.sops,
     );
-    println!(
-        "  -> {:.1} M simulated SOPs/s end-to-end",
-        rep.activity.sops as f64 / res.time.mean() / 1e6
-    );
+    let full_sops_s = rep.activity.sops as f64 / full.time.mean();
+    println!("  -> {:.1} M simulated SOPs/s end-to-end", full_sops_s / 1e6);
 
     // golden full image for reference
-    let res = runner.run("full image golden resnet11", || {
+    let gold = runner.run("full image golden resnet11", || {
         exec::execute(&model, &spikes).unwrap().total_sops
     });
     println!(
         "  -> {:.1} M golden SOPs/s end-to-end",
-        rep.activity.sops as f64 / res.time.mean() / 1e6
+        rep.activity.sops as f64 / gold.time.mean() / 1e6
     );
+
+    // coordinator batch path: 16-image batch across the engine pool
+    let n = 16.min(ds.len());
+    let reqs: Vec<InferRequest> = (0..n)
+        .map(|i| {
+            let (img, label) = ds.get(i);
+            InferRequest { id: i as u64, spikes: encode_threshold(&img, 128), label: Some(label) }
+        })
+        .collect();
+    let mut batch_ms = Vec::new();
+    let worker_counts = [1usize, 4];
+    for &w in &worker_counts {
+        let pool = EnginePool::new(Engine::sim(model.clone(), ArchConfig::default()), w);
+        let r = runner.run(&format!("batch {n} images, {w} worker(s)"), || {
+            pool.run_batch(&reqs).len()
+        });
+        batch_ms.push(r.time.mean() * 1e3);
+    }
+    let batch_speedup = batch_ms[0] / batch_ms[1];
+    println!("  -> batch speedup 1->4 workers: {batch_speedup:.2}x");
+
+    // record the trajectory point
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_micro".into())),
+        (
+            "sda_epa",
+            Json::obj(vec![
+                ("events", Json::Num(events as f64)),
+                ("sops", Json::Num(sops as f64)),
+                ("materializing_ms", Json::Num(mat.time.mean() * 1e3)),
+                ("fused_ms", Json::Num(fused.time.mean() * 1e3)),
+                ("fused_speedup", Json::Num(fused_speedup)),
+                ("fused_events_per_s", Json::Num(fused_events_s)),
+                ("fused_sops_per_s", Json::Num(fused_sops_s)),
+            ]),
+        ),
+        (
+            "full_image",
+            Json::obj(vec![
+                ("model", Json::Str(model.name.clone())),
+                ("sim_ms", Json::Num(full.time.mean() * 1e3)),
+                ("sops", Json::Num(rep.activity.sops as f64)),
+                ("sim_sops_per_s", Json::Num(full_sops_s)),
+            ]),
+        ),
+        (
+            "batch",
+            Json::obj(vec![
+                ("images", Json::Num(n as f64)),
+                (
+                    "workers",
+                    Json::Arr(worker_counts.iter().map(|&w| Json::Num(w as f64)).collect()),
+                ),
+                ("ms", Json::Arr(batch_ms.iter().map(|&m| Json::Num(m)).collect())),
+                ("speedup_1_to_4", Json::Num(batch_speedup)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_perf.json", doc.to_text() + "\n") {
+        Ok(()) => println!("wrote BENCH_perf.json"),
+        Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+    }
 }

@@ -4,8 +4,8 @@
 //!
 //! This is the standard event-driven energy argument the paper itself makes
 //! (energy scales with spike activity); the constants are calibrated in
-//! EXPERIMENTS.md §Calibration so the ResNet-11/CIFAR-10 run lands near the
-//! paper's 5.56 mJ / 0.758 W, and all *relative* comparisons (Fig 10,
+//! DESIGN.md §Calibration constants so the ResNet-11/CIFAR-10 run lands near
+//! the paper's 5.56 mJ / 0.758 W, and all *relative* comparisons (Fig 10,
 //! Tables II/III) come from measured activity counters.
 
 use crate::config::EnergyConstants;

@@ -7,20 +7,25 @@
 //! array level (a tile starts as soon as both FIFOs present data) and
 //! *event-driven* inside each PE (per-PE event FIFO + LIF).
 //!
-//! Two execution paths with identical arithmetic:
-//! * [`Epa::run_conv`] — the batch path: flat-array scatter accumulate over
-//!   the SDA's diffused events, with an analytic cycle model derived from
-//!   per-pixel event counts. This is the hot path the coordinator uses.
+//! Three execution paths with identical arithmetic:
+//! * [`Epa::run_conv_fused`] — the hot path: the PipeSDA streams each
+//!   diffused event straight into the membrane-lane scatter through the
+//!   [`EventSink`] trait (zero event materialization), input and output
+//!   spike maps stay word-packed, and scratch buffers are reused across
+//!   layers. This is what [`crate::arch::Accelerator`] runs by default.
+//! * [`Epa::run_conv`] — the materializing batch path: flat-array scatter
+//!   accumulate over an [`SdaOutput`] event vector. Kept as the
+//!   validation-mode reference the fused path must match bit for bit.
 //! * [`Epa::run_conv_detailed`] — object-level simulation with real
 //!   [`Pe`]/FIFO instances, used on small layers to validate the batch
 //!   path's cycles and spikes (see the `detailed_matches_batch` test).
 
 use crate::arch::pe::Pe;
-use crate::arch::sda::SdaOutput;
+use crate::arch::sda::{ConvGeom, EventSink, PipeSda, SdaOutput, SdaStats};
 use crate::arch::wmu::Wmu;
 use crate::config::ArchConfig;
 use crate::snn::lif::lif_fire_scalar;
-use crate::snn::SpikeMap;
+use crate::snn::{PackedSpikeMap, SpikeMap};
 use crate::tensor::{Shape, Tensor};
 
 /// Conv parameters the EPA needs beyond the SDA geometry.
@@ -59,8 +64,52 @@ pub struct EpaStats {
     pub utilization: f64,
 }
 
+/// Reusable scratch for the fused conv path: the transposed weight matrix,
+/// the membrane lanes and the per-pixel event counts. Holding these across
+/// layers (and across images) keeps the hot loop allocation-free.
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    wt: Vec<i32>,
+    mp: Vec<i32>,
+    per_pixel: Vec<u32>,
+}
+
+/// The fused consumer: scatters each diffused event into all `cout`
+/// membrane lanes of its pixel the moment the SDA emits it.
+struct ScatterSink<'a> {
+    wt: &'a [i32],
+    mp: &'a mut [i32],
+    per_pixel: &'a mut [u32],
+    cout: usize,
+    wo: usize,
+}
+
+impl EventSink for ScatterSink<'_> {
+    #[inline]
+    fn event(&mut self, oy: u16, ox: u16, widx: u32) {
+        let pix = oy as usize * self.wo + ox as usize;
+        self.per_pixel[pix] += 1;
+        let widx = widx as usize;
+        let wrow = &self.wt[widx * self.cout..(widx + 1) * self.cout];
+        let lanes = &mut self.mp[pix * self.cout..(pix + 1) * self.cout];
+        for (m, &w) in lanes.iter_mut().zip(wrow) {
+            *m += w;
+        }
+    }
+}
+
+/// Transpose `[oc][tap]` weights into the scatter-friendly `[tap][oc]`
+/// layout (shared by the materializing and fused paths — see §Perf opt-1).
+fn transpose_weights(weights: &[i8], cout: usize, taps: usize, wt: &mut [i32]) {
+    for oc in 0..cout {
+        for t in 0..taps {
+            wt[t * cout + oc] = weights[oc * taps + t] as i32;
+        }
+    }
+}
+
 /// The array.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Epa {
     /// Rows (output-channel parallelism).
     pub rows: usize,
@@ -74,6 +123,64 @@ impl Epa {
     /// From architecture config.
     pub fn from_cfg(cfg: &ArchConfig) -> Self {
         Epa { rows: cfg.epa_rows, cols: cfg.epa_cols, tile_fill: 2 }
+    }
+
+    /// Analytic tile timing from per-pixel event counts: (elastic, rigid)
+    /// compute cycles. One implementation serves both conv paths so the
+    /// bit-identical contract cannot silently diverge.
+    ///
+    /// Elastic composition: the per-PE event FIFOs decouple the columns,
+    /// so a tile drains in ceil(Σ events / cols) cycles (busy PEs keep
+    /// draining while idle ones accept the next window — the S-FIFO
+    /// keeps feeding). A rigid array synchronizes columns per window and
+    /// pays the *slowest* pixel: max(events). This is the architectural
+    /// payoff of §IV-A and what `ablation_elastic` measures.
+    fn conv_timing(&self, per_pixel: &[u32], cout: usize) -> (u64, u64) {
+        let chan_tiles = cout.div_ceil(self.rows) as u64;
+        let mut compute = 0u64;
+        let mut compute_rigid = 0u64;
+        for tile_base in (0..per_pixel.len()).step_by(self.cols) {
+            let hi = (tile_base + self.cols).min(per_pixel.len());
+            let tile = &per_pixel[tile_base..hi];
+            let sum_ev: u64 = tile.iter().map(|&c| c as u64).sum();
+            let max_ev = tile.iter().copied().max().unwrap_or(0) as u64;
+            // each channel tile replays this pixel tile's event stream
+            compute += chan_tiles * (sum_ev.div_ceil(self.cols as u64) + 1 + self.tile_fill);
+            compute_rigid += chan_tiles * (max_ev + 1 + self.tile_fill);
+        }
+        (compute, compute_rigid)
+    }
+
+    /// Assemble the layer stats from the shared timing model (both conv
+    /// paths funnel through here).
+    fn conv_stats(
+        &self,
+        per_pixel: &[u32],
+        events: u64,
+        fires: u64,
+        p: &ConvParams,
+        wmu: &mut Wmu,
+    ) -> EpaStats {
+        let (compute, compute_rigid) = self.conv_timing(per_pixel, p.cout);
+        // Weights for one channel tile are streamed once and held in the
+        // per-PE weight store while all pixel tiles replay
+        // (weight-stationary).
+        let taps = p.cin * p.k * p.k;
+        let weight_cycles = wmu.stream((p.cout * taps) as u64);
+        let sops = events * p.cout as u64;
+        EpaStats {
+            compute_cycles: compute,
+            weight_cycles,
+            cycles: compute.max(weight_cycles),
+            cycles_rigid: compute_rigid + weight_cycles,
+            sops,
+            fires,
+            utilization: if compute == 0 {
+                0.0
+            } else {
+                sops as f64 / (compute as f64 * (self.rows * self.cols) as f64)
+            },
+        }
     }
 
     /// Batch path: functional scatter + analytic timing.
@@ -90,11 +197,7 @@ impl Epa {
         // is O(weights) and amortized over all events; the previous
         // oc-strided walk missed cache on every accumulate.
         let mut wt = vec![0i32; taps * p.cout];
-        for oc in 0..p.cout {
-            for t in 0..taps {
-                wt[t * p.cout + oc] = p.weights[oc * taps + t] as i32;
-            }
-        }
+        transpose_weights(p.weights, p.cout, taps, &mut wt);
         // Membrane lanes: mp[pixel * cout + oc].
         let mut mp = vec![0i32; p.cout * npix];
         for ev in &sda.events {
@@ -119,44 +222,64 @@ impl Epa {
             }
         }
 
-        // ---- timing ----
-        // Elastic composition: the per-PE event FIFOs decouple the columns,
-        // so a tile drains in ceil(Σ events / cols) cycles (busy PEs keep
-        // draining while idle ones accept the next window — the S-FIFO
-        // keeps feeding). A rigid array synchronizes columns per window and
-        // pays the *slowest* pixel: max(events). This is the architectural
-        // payoff of §IV-A and what `ablation_elastic` measures.
-        let chan_tiles = p.cout.div_ceil(self.rows) as u64;
-        let mut compute = 0u64;
-        let mut compute_rigid = 0u64;
-        for tile_base in (0..npix).step_by(self.cols) {
-            let hi = (tile_base + self.cols).min(npix);
-            let tile = &sda.per_pixel[tile_base..hi];
-            let sum_ev: u64 = tile.iter().map(|&c| c as u64).sum();
-            let max_ev = tile.iter().copied().max().unwrap_or(0) as u64;
-            // each channel tile replays this pixel tile's event stream
-            compute += chan_tiles * (sum_ev.div_ceil(self.cols as u64) + 1 + self.tile_fill);
-            compute_rigid += chan_tiles * (max_ev + 1 + self.tile_fill);
-        }
-        // Weights for one channel tile are streamed once and held in the
-        // per-PE weight store while all pixel tiles replay (weight-stationary).
-        let weight_bytes = (p.cout * taps) as u64;
-        let weight_cycles = wmu.stream(weight_bytes);
-        let sops = sda.events.len() as u64 * p.cout as u64;
-        let stats = EpaStats {
-            compute_cycles: compute,
-            weight_cycles,
-            cycles: compute.max(weight_cycles),
-            cycles_rigid: compute_rigid + weight_cycles,
-            sops,
-            fires,
-            utilization: if compute == 0 {
-                0.0
-            } else {
-                sops as f64 / (compute as f64 * (self.rows * self.cols) as f64)
-            },
-        };
+        let stats = self.conv_stats(&sda.per_pixel, sda.events.len() as u64, fires, p, wmu);
         (out, stats)
+    }
+
+    /// Fused path: stream the PipeSDA's diffusion directly into the
+    /// membrane-lane scatter with no intermediate event vector, consuming
+    /// and producing word-packed spike maps.
+    ///
+    /// Functionally and cycle-wise bit-identical to
+    /// `sda.process(..)` + [`Epa::run_conv`] on the same input (asserted by
+    /// `tests/fused_stream_equivalence.rs` and the `sim_vs_golden`
+    /// contract); only the schedule differs — and the fused schedule is
+    /// division-free, allocation-free and never re-reads the event stream.
+    pub fn run_conv_fused(
+        &self,
+        sda: &PipeSda,
+        input: &PackedSpikeMap,
+        geom: &ConvGeom,
+        p: &ConvParams,
+        wmu: &mut Wmu,
+        scratch: &mut ConvScratch,
+    ) -> (PackedSpikeMap, EpaStats, SdaStats) {
+        let (ho, wo) = geom.out_dims;
+        let taps = p.cin * p.k * p.k;
+        let npix = ho * wo;
+        // Same [tap][oc] weight transpose as the materializing path, into
+        // reused scratch.
+        scratch.wt.clear();
+        scratch.wt.resize(taps * p.cout, 0);
+        transpose_weights(p.weights, p.cout, taps, &mut scratch.wt);
+        scratch.mp.clear();
+        scratch.mp.resize(npix * p.cout, 0);
+        scratch.per_pixel.clear();
+        scratch.per_pixel.resize(npix, 0);
+        let sda_stats = {
+            let mut sink = ScatterSink {
+                wt: &scratch.wt,
+                mp: &mut scratch.mp,
+                per_pixel: &mut scratch.per_pixel,
+                cout: p.cout,
+                wo,
+            };
+            sda.stream(input, geom, &mut sink)
+        };
+        // Fire and pack the output bits directly.
+        let mut out = PackedSpikeMap::zeros((p.cout, ho, wo));
+        let mut fires = 0u64;
+        for oc in 0..p.cout {
+            for pix in 0..npix {
+                if lif_fire_scalar(scratch.mp[pix * p.cout + oc], p.thresholds[oc], p.tau_half) {
+                    out.set(oc * npix + pix);
+                    fires += 1;
+                }
+            }
+        }
+
+        let stats = self.conv_stats(&scratch.per_pixel, sda_stats.events, fires, p, wmu);
+        (out, stats, sda_stats)
     }
 
     /// Detailed path: drive real [`Pe`] objects tile by tile. O(pes) object
@@ -283,6 +406,33 @@ mod tests {
         assert_eq!(out, gold, "event-driven scatter must equal gather conv");
         assert_eq!(stats.sops, sda.events.len() as u64 * 8);
         assert!(stats.cycles <= stats.cycles_rigid);
+    }
+
+    #[test]
+    fn fused_matches_materializing_bitwise() {
+        let sda = PipeSda::default();
+        let mut scratch = ConvScratch::default();
+        for (seed, stride) in [(11u64, 1usize), (9, 2), (21, 1)] {
+            let (map, weights, geom) = random_case(seed, 3, 8, 10, 10, 3, stride, 0.3);
+            let p = ConvParams { cout: 8, cin: 3, k: 3, thresholds: &[5; 8], tau_half: false, weights: &weights };
+            let epa = Epa { rows: 4, cols: 4, tile_fill: 2 };
+            let sda_out = sda.process(&map, &geom);
+            let mut wmu_a = Wmu::new(8);
+            let (out_mat, st_mat) =
+                epa.run_conv(&sda_out, &p, &mut wmu_a, geom.out_dims.0, geom.out_dims.1);
+            let packed = PackedSpikeMap::from_map(&map);
+            let mut wmu_b = Wmu::new(8);
+            let (out_fused, st_fused, sda_st) =
+                epa.run_conv_fused(&sda, &packed, &geom, &p, &mut wmu_b, &mut scratch);
+            assert_eq!(out_fused.to_map(), out_mat, "seed={seed} stride={stride}");
+            assert_eq!(st_fused.sops, st_mat.sops);
+            assert_eq!(st_fused.fires, st_mat.fires);
+            assert_eq!(st_fused.compute_cycles, st_mat.compute_cycles);
+            assert_eq!(st_fused.cycles, st_mat.cycles);
+            assert_eq!(st_fused.cycles_rigid, st_mat.cycles_rigid);
+            assert_eq!(sda_st, sda_out.stats());
+            assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes);
+        }
     }
 
     #[test]

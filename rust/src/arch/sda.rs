@@ -18,8 +18,18 @@
 //! With elastic decoupling the array's total is
 //! `fill + max(scan, events)`; a rigid pipeline pays `fill + scan + events`
 //! (the `elastic=false` ablation).
+//!
+//! Two software execution paths model the same pipeline:
+//! * [`PipeSda::process`] — the materializing path: collects every diffused
+//!   event into a [`SdaOutput`] vector. Kept as the validation/detailed
+//!   mode reference; the fused path must match it event for event.
+//! * [`PipeSda::stream`] — the zero-materialization path: scans a
+//!   word-packed map with `trailing_zeros` and hands each diffused
+//!   `(oy, ox, widx)` straight to an [`EventSink`] (the EPA's membrane
+//!   scatter), never allocating an event list. Strides 1 and 2 are
+//!   specialized so the hot loop is division-free.
 
-use crate::snn::{EventList, SpikeMap};
+use crate::snn::{EventList, PackedSpikeMap, SpikeMap};
 
 /// Conv geometry the SDA needs to resolve receptive fields.
 #[derive(Debug, Clone, Copy)]
@@ -38,10 +48,14 @@ pub struct ConvGeom {
 
 impl ConvGeom {
     /// Derive the output dims from input dims and conv params.
+    ///
+    /// When the (padded) input is smaller than the kernel the window fits
+    /// nowhere, so the output dimension clamps to 0 instead of panicking on
+    /// `usize` underflow — every spike then lands in the virtual halo.
     pub fn new(k: usize, stride: usize, pad: usize, in_dims: (usize, usize, usize)) -> Self {
         let (_, h, w) = in_dims;
-        let ho = (h + 2 * pad - k) / stride + 1;
-        let wo = (w + 2 * pad - k) / stride + 1;
+        let ho = if h + 2 * pad >= k { (h + 2 * pad - k) / stride + 1 } else { 0 };
+        let wo = if w + 2 * pad >= k { (w + 2 * pad - k) / stride + 1 } else { 0 };
         ConvGeom { k, stride, pad, in_dims, out_dims: (ho, wo) }
     }
 }
@@ -59,6 +73,32 @@ pub struct WindowEvent {
     pub widx: u32,
 }
 
+/// Consumer of the diffused event stream: the fused SDA→EPA hookup. The
+/// EPA's membrane-lane scatter implements this to accumulate events as they
+/// are generated; [`MaterializeSink`] implements it to collect them for the
+/// detailed/validation mode.
+pub trait EventSink {
+    /// One diffused event reaching output pixel `(oy, ox)` through weight
+    /// tap `widx` (`ic·k² + ky·k + kx`).
+    fn event(&mut self, oy: u16, ox: u16, widx: u32);
+}
+
+/// Scalar results of one streamed SDA pass — everything [`SdaOutput`]
+/// carries except the materialized event vector.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SdaStats {
+    /// Cycles spent (elastic composition).
+    pub cycles: u64,
+    /// Cycles a rigid (non-elastic) pipeline would have spent.
+    pub cycles_rigid: u64,
+    /// Events dropped into the virtual halo (padding clips).
+    pub halo_drops: u64,
+    /// Input spike count (IG stage output).
+    pub input_spikes: u64,
+    /// Diffused events delivered to the sink.
+    pub events: u64,
+}
+
 /// Result of pushing one layer's spikes through the SDA.
 #[derive(Debug, Default)]
 pub struct SdaOutput {
@@ -74,6 +114,51 @@ pub struct SdaOutput {
     pub halo_drops: u64,
     /// Input spike count (IG stage output).
     pub input_spikes: u64,
+}
+
+impl SdaOutput {
+    /// The scalar view of this output, for comparison against a streamed
+    /// pass over the same input.
+    pub fn stats(&self) -> SdaStats {
+        SdaStats {
+            cycles: self.cycles,
+            cycles_rigid: self.cycles_rigid,
+            halo_drops: self.halo_drops,
+            input_spikes: self.input_spikes,
+            events: self.events.len() as u64,
+        }
+    }
+}
+
+/// An [`EventSink`] that materializes the stream into the [`SdaOutput`]
+/// vectors — the validation-mode consumer behind the same trait as the
+/// fused scatter.
+#[derive(Debug, Default)]
+pub struct MaterializeSink {
+    /// Collected events in arrival order.
+    pub events: Vec<WindowEvent>,
+    /// Events per output pixel (`cnt[oy·Wo + ox]`).
+    pub per_pixel: Vec<u32>,
+    wo: usize,
+}
+
+impl MaterializeSink {
+    /// Sink sized for one conv geometry.
+    pub fn for_geom(geom: &ConvGeom) -> Self {
+        MaterializeSink {
+            events: Vec::new(),
+            per_pixel: vec![0u32; geom.out_dims.0 * geom.out_dims.1],
+            wo: geom.out_dims.1,
+        }
+    }
+}
+
+impl EventSink for MaterializeSink {
+    #[inline]
+    fn event(&mut self, oy: u16, ox: u16, widx: u32) {
+        self.events.push(WindowEvent { oy, ox, widx });
+        self.per_pixel[oy as usize * self.wo + ox as usize] += 1;
+    }
 }
 
 /// PipeSDA model.
@@ -166,6 +251,133 @@ impl PipeSda {
         out.cycles_rigid = fill + scan + events_in.len() as u64;
         out
     }
+
+    /// Zero-materialization pass: scan the word-packed map and feed every
+    /// diffused event straight into `sink`, with no event list in between.
+    ///
+    /// Contract (asserted by `tests/fused_stream_equivalence.rs`): for the
+    /// same input this produces exactly the events of [`PipeSda::process`],
+    /// in the same order, with bit-identical cycle counts, halo drops and
+    /// spike counts. Strides 1 and 2 run division-free.
+    pub fn stream<S: EventSink>(
+        &self,
+        input: &PackedSpikeMap,
+        geom: &ConvGeom,
+        sink: &mut S,
+    ) -> SdaStats {
+        match geom.stride {
+            1 => self.stream_impl(input, geom, sink, Some),
+            2 => self.stream_impl(input, geom, sink, |num| {
+                if num & 1 == 0 {
+                    Some(num >> 1)
+                } else {
+                    None
+                }
+            }),
+            s => {
+                let s = s as i64;
+                self.stream_impl(input, geom, sink, move |num| {
+                    if num % s == 0 {
+                        Some(num / s)
+                    } else {
+                        None
+                    }
+                })
+            }
+        }
+    }
+
+    /// Shared stream body, monomorphized per stride specialization. `quot`
+    /// maps a non-negative CP numerator to its output coordinate, or `None`
+    /// when the stride does not divide it (no halo drop in that case,
+    /// matching the materializing path).
+    fn stream_impl<S: EventSink>(
+        &self,
+        input: &PackedSpikeMap,
+        geom: &ConvGeom,
+        sink: &mut S,
+        quot: impl Fn(i64) -> Option<i64>,
+    ) -> SdaStats {
+        let (c, h, w) = input.dims();
+        debug_assert_eq!((c, h, w), geom.in_dims, "packed input dims must match geometry");
+        let (ho, wo) = geom.out_dims;
+        let (k, p) = (geom.k as i64, geom.pad as i64);
+        let plane = h * w;
+        let mut stats = SdaStats::default();
+        // Per-spike CP candidate lists, allocated once and reused (≤ k
+        // valid rows / columns each).
+        let mut ys: Vec<(i64, i64)> = Vec::with_capacity(geom.k);
+        let mut xs: Vec<(i64, i64)> = Vec::with_capacity(geom.k);
+        for (wi, &word) in input.words().iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            let mut bits = word;
+            while bits != 0 {
+                let i = base + bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ic = (i / plane) as i64;
+                let rem = i % plane;
+                let iy = (rem / w) as i64;
+                let ix = (rem % w) as i64;
+                stats.input_spikes += 1;
+                // Row side: one halo drop per ky whose CP is negative or
+                // past the last SDU row.
+                ys.clear();
+                for ky in 0..k {
+                    let num = iy + p - ky;
+                    if num < 0 {
+                        stats.halo_drops += 1;
+                        continue;
+                    }
+                    let Some(oy) = quot(num) else { continue };
+                    if oy >= ho as i64 {
+                        stats.halo_drops += 1;
+                        continue;
+                    }
+                    ys.push((oy, ky));
+                }
+                if ys.is_empty() {
+                    continue;
+                }
+                // Column side, computed once per spike. The materializing
+                // path re-walks the columns for every valid row, so its
+                // column halo drops count once per (valid row, clipped
+                // column) pair — multiply to match exactly.
+                xs.clear();
+                let mut x_drops = 0u64;
+                for kx in 0..k {
+                    let num = ix + p - kx;
+                    if num < 0 {
+                        x_drops += 1;
+                        continue;
+                    }
+                    let Some(ox) = quot(num) else { continue };
+                    if ox >= wo as i64 {
+                        x_drops += 1;
+                        continue;
+                    }
+                    xs.push((ox, kx));
+                }
+                stats.halo_drops += x_drops * ys.len() as u64;
+                stats.events += (ys.len() * xs.len()) as u64;
+                for &(oy, ky) in ys.iter() {
+                    let wrow = ((ic * k + ky) * k) as u32;
+                    for &(ox, kx) in xs.iter() {
+                        sink.event(oy as u16, ox as u16, wrow + kx as u32);
+                    }
+                }
+            }
+        }
+        // Timing: identical elastic composition to the materializing path.
+        let scan = (geom.in_dims.0 * h * w) as u64 / self.scan_width.max(1) as u64;
+        let ev = stats.input_spikes.div_ceil(self.events_per_cycle.max(1) as u64);
+        let fill = self.stages as u64;
+        stats.cycles = fill + scan.max(ev);
+        stats.cycles_rigid = fill + scan + stats.input_spikes;
+        stats
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +444,40 @@ mod tests {
         let geom = ConvGeom::new(3, 1, 1, (2, 16, 16));
         let out = PipeSda::default().process(&m, &geom);
         assert!(out.cycles < out.cycles_rigid);
+    }
+
+    #[test]
+    fn stream_matches_process_on_basic_cases() {
+        let sda = PipeSda::default();
+        for (at, k, stride, pad) in [
+            ((0usize, 4usize, 4usize), 3usize, 1usize, 1usize),
+            ((0, 0, 0), 3, 1, 1),
+            ((0, 4, 4), 3, 2, 1),
+            ((0, 7, 7), 5, 2, 2),
+        ] {
+            let m = one_spike_map(1, 8, 8, at);
+            let geom = ConvGeom::new(k, stride, pad, (1, 8, 8));
+            let out = sda.process(&m, &geom);
+            let packed = crate::snn::PackedSpikeMap::from_map(&m);
+            let mut sink = MaterializeSink::for_geom(&geom);
+            let stats = sda.stream(&packed, &geom, &mut sink);
+            assert_eq!(sink.events, out.events, "k={k} s={stride} p={pad}");
+            assert_eq!(sink.per_pixel, out.per_pixel);
+            assert_eq!(stats, out.stats());
+        }
+    }
+
+    #[test]
+    fn geom_clamps_when_kernel_exceeds_input() {
+        // Regression: (h + 2p - k) underflowed before; now clamps to zero
+        // output rows and every CP lands in the halo.
+        let geom = ConvGeom::new(7, 1, 0, (1, 3, 3));
+        assert_eq!(geom.out_dims, (0, 0));
+        let m = one_spike_map(1, 3, 3, (0, 1, 1));
+        let out = PipeSda::default().process(&m, &geom);
+        assert!(out.events.is_empty());
+        assert!(out.halo_drops > 0);
+        assert_eq!(out.per_pixel.len(), 0);
     }
 
     #[test]

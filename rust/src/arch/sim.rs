@@ -6,16 +6,24 @@
 //! Functional contract: logits and every intermediate spike map are
 //! bit-identical to [`crate::model::exec::execute`] — the integration test
 //! `tests/sim_vs_golden.rs` asserts this on all zoo models.
+//!
+//! Hot-path layout (see DESIGN.md §Hot path): activations travel between
+//! layers as word-packed bit maps ([`PackedSpikeMap`]); conv layers run the
+//! fused zero-materialization SDA→EPA stream by default
+//! ([`crate::arch::epa::Epa::run_conv_fused`]); pooling and residual OR are
+//! word-wise; spike counting is popcount. [`Accelerator::materializing`]
+//! builds the validation-mode instance that routes convs through the
+//! event-vector path instead — both must produce bit-identical reports.
 
 use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
-use crate::arch::epa::{ConvParams, Epa};
+use crate::arch::epa::{ConvParams, ConvScratch, Epa};
 use crate::arch::qkformer::on_the_fly_attention;
 use crate::arch::sda::{ConvGeom, PipeSda};
 use crate::arch::wmu::Wmu;
 use crate::arch::wtfc::Wtfc;
 use crate::config::ArchConfig;
 use crate::model::ir::{Model, Op};
-use crate::snn::SpikeMap;
+use crate::snn::{PackedSpikeMap, SpikeMap};
 use anyhow::{bail, Result};
 
 /// Per-module cycle accounting (paper Table I module granularity).
@@ -70,12 +78,15 @@ pub struct Report {
 }
 
 /// The simulated accelerator instance.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Accelerator {
     /// Architecture configuration.
     pub cfg: ArchConfig,
     /// Elastic FIFO decoupling enabled (ablation switch; paper = true).
     pub elastic: bool,
+    /// Fused zero-materialization conv path (default). `false` routes convs
+    /// through the materializing event-vector path for validation.
+    pub fused: bool,
     sda: PipeSda,
     epa: Epa,
     wtfc: Wtfc,
@@ -91,6 +102,7 @@ impl Accelerator {
             wtfc: Wtfc::from_cfg(&cfg),
             energy: EnergyModel::from_cfg(&cfg),
             elastic: true,
+            fused: true,
             cfg,
         }
     }
@@ -102,6 +114,15 @@ impl Accelerator {
         a
     }
 
+    /// Validation-mode constructor: materializing (event-vector) conv path.
+    /// Reports must be bit-identical to the fused default; only host-side
+    /// speed differs.
+    pub fn materializing(cfg: ArchConfig) -> Self {
+        let mut a = Self::new(cfg);
+        a.fused = false;
+        a
+    }
+
     /// Simulate one image (input spike map) through the model.
     pub fn run(&self, model: &Model, input: &SpikeMap) -> Result<Report> {
         let (ic, ih, iw) = model.input_dims;
@@ -110,7 +131,8 @@ impl Accelerator {
         }
         let mut report = Report::default();
         let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
-        let mut acts: Vec<SpikeMap> = Vec::with_capacity(model.nodes.len());
+        let mut acts: Vec<PackedSpikeMap> = Vec::with_capacity(model.nodes.len());
+        let mut scratch = ConvScratch::default();
         let mut util_sum = 0.0;
         let mut util_n = 0usize;
         // Input image fetch: C·H·W bits from off-chip, byte-packed.
@@ -119,13 +141,14 @@ impl Accelerator {
         for node in &model.nodes {
             match &node.op {
                 Op::Input => {
-                    report.total_spikes += input.count_nonzero() as u64;
-                    acts.push(input.clone());
+                    let packed = PackedSpikeMap::from_map(input);
+                    report.total_spikes += packed.count_ones() as u64;
+                    acts.push(packed);
                 }
                 Op::Conv { cin, cout, k, stride, pad, thresholds, tau_half, weights, .. } => {
                     let x = &acts[node.inputs[0]];
-                    let geom = ConvGeom::new(*k, *stride, *pad, (*cin, x.shape().dim(1), x.shape().dim(2)));
-                    let sda_out = self.sda.process(x, &geom);
+                    let (_, xh, xw) = x.dims();
+                    let geom = ConvGeom::new(*k, *stride, *pad, (*cin, xh, xw));
                     let params = ConvParams {
                         cout: *cout,
                         cin: *cin,
@@ -134,18 +157,35 @@ impl Accelerator {
                         tau_half: *tau_half,
                         weights,
                     };
-                    let (out, st) =
-                        self.epa.run_conv(&sda_out, &params, &mut wmu, geom.out_dims.0, geom.out_dims.1);
+                    // Fused default: packed scan → sink scatter, no event
+                    // vector. Validation mode materializes the events and
+                    // replays them; both yield bit-identical reports.
+                    let (out, st, sda_c, sda_cr) = if self.fused {
+                        let (out, st, sda_st) =
+                            self.epa.run_conv_fused(&self.sda, x, &geom, &params, &mut wmu, &mut scratch);
+                        (out, st, sda_st.cycles, sda_st.cycles_rigid)
+                    } else {
+                        let dense = x.to_map();
+                        let sda_out = self.sda.process(&dense, &geom);
+                        let (out, st) = self.epa.run_conv(
+                            &sda_out,
+                            &params,
+                            &mut wmu,
+                            geom.out_dims.0,
+                            geom.out_dims.1,
+                        );
+                        (PackedSpikeMap::from_map(&out), st, sda_out.cycles, sda_out.cycles_rigid)
+                    };
                     // Elastic: SDA streams into the EPA through S-FIFO, so
                     // the layer costs max(sda, epa); rigid pays the sum.
                     let (sda_c, epa_c) = if self.elastic {
-                        (sda_out.cycles, st.cycles)
+                        (sda_c, st.cycles)
                     } else {
-                        (sda_out.cycles_rigid, st.cycles_rigid)
+                        (sda_cr, st.cycles_rigid)
                     };
                     let layer = if self.elastic { sda_c.max(epa_c) } else { sda_c + epa_c };
                     report.cycles += layer;
-                    report.cycles_rigid += sda_out.cycles_rigid + st.cycles_rigid;
+                    report.cycles_rigid += sda_cr + st.cycles_rigid;
                     report.modules.sda += sda_c;
                     report.modules.epa += epa_c;
                     report.activity.sops += st.sops;
@@ -160,46 +200,45 @@ impl Accelerator {
                 }
                 Op::MaxPool { k, stride } => {
                     let x = &acts[node.inputs[0]];
-                    let out = pool_or(x, *k, *stride);
+                    let out = pool_or(x, *k, *stride)?;
                     // Pool runs in the spiking-buffer datapath: one scan.
                     let cyc = (x.numel() as u64).div_ceil(32);
                     report.cycles += cyc;
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
-                    report.total_spikes += out.count_nonzero() as u64;
+                    report.total_spikes += out.count_ones() as u64;
                     acts.push(out);
                 }
                 Op::Or => {
                     let a = &acts[node.inputs[0]];
                     let b = &acts[node.inputs[1]];
+                    // Residual join: word-wise OR over the packed maps.
                     let mut out = a.clone();
-                    for (o, &bv) in out.data_mut().iter_mut().zip(b.data()) {
-                        *o |= bv;
-                    }
+                    out.or_assign(b);
                     let cyc = (a.numel() as u64).div_ceil(32);
                     report.cycles += cyc;
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (a.numel() as u64).div_ceil(8) * 2;
-                    report.total_spikes += out.count_nonzero() as u64;
+                    report.total_spikes += out.count_ones() as u64;
                     acts.push(out);
                 }
                 Op::TokenMask { mode } => {
-                    let q = &acts[node.inputs[0]];
-                    let k = &acts[node.inputs[1]];
-                    let (out, st) = on_the_fly_attention(q, k, *mode);
+                    let q = acts[node.inputs[0]].to_map();
+                    let k = acts[node.inputs[1]].to_map();
+                    let (out, st) = on_the_fly_attention(&q, &k, *mode);
                     // On-the-fly: rides the write-back beats, zero cycles
                     // (the paper's central claim for Fig 5); register energy
                     // is charged as buffer traffic.
                     report.activity.buf_bytes += (st.reg_updates + st.mask_applies).div_ceil(8);
                     report.qkf_suppressed += st.suppressed;
                     report.total_spikes += out.count_nonzero() as u64;
-                    acts.push(out);
+                    acts.push(PackedSpikeMap::from_map(&out));
                 }
                 Op::W2ttfsFc { classes, cin, ho, wo, window, weights, .. } => {
-                    let x = &acts[node.inputs[0]];
-                    let out = self.wtfc.run(x, *classes, *cin, *ho, *wo, *window, weights);
+                    let x = acts[node.inputs[0]].to_map();
+                    let out = self.wtfc.run(&x, *classes, *cin, *ho, *wo, *window, weights);
                     let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
                     report.cycles += cyc;
                     report.cycles_rigid += out.cycles_rigid;
@@ -208,7 +247,7 @@ impl Accelerator {
                     // FC weights stream from off-chip once.
                     report.activity.dram_bytes += weights.len() as u64;
                     report.logits = out.logits;
-                    acts.push(crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(*classes, 1, 1)));
+                    acts.push(PackedSpikeMap::zeros((*classes, 1, 1)));
                 }
             }
         }
@@ -234,29 +273,62 @@ impl Accelerator {
     }
 }
 
-/// Spike max-pool (window OR) in the spiking-buffer datapath.
-fn pool_or(x: &SpikeMap, k: usize, stride: usize) -> SpikeMap {
-    let (c, h, w) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+/// Spike max-pool (window OR) in the spiking-buffer datapath, word-packed:
+/// each output row is built by OR-ing `k` packed input rows and collapsing
+/// the horizontal window with shifted ORs — no per-pixel byte walk.
+///
+/// Errors (instead of the former `usize`-underflow panic) when the window
+/// does not fit the input.
+pub fn pool_or(x: &PackedSpikeMap, k: usize, stride: usize) -> Result<PackedSpikeMap> {
+    let (c, h, w) = x.dims();
+    if k == 0 || stride == 0 {
+        bail!("pool window k={k} / stride={stride} must be positive");
+    }
+    if h < k || w < k {
+        bail!("pool window k={k} does not fit input {c}x{h}x{w}");
+    }
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
-    let mut out: SpikeMap = crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(c, ho, wo));
-    for ci in 0..c {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let mut any = 0u8;
-                'win: for ky in 0..k {
-                    for kx in 0..k {
-                        if x.at3(ci, oy * stride + ky, ox * stride + kx) != 0 {
-                            any = 1;
-                            break 'win;
+    let mut out = PackedSpikeMap::zeros((c, ho, wo));
+    if w <= 64 {
+        // Fast path: one input row fits a single word. OR the k window rows
+        // into `acc`, then `horiz` bit i = OR of acc bits [i, i+k).
+        for ci in 0..c {
+            for oy in 0..ho {
+                let mut acc = 0u64;
+                for ky in 0..k {
+                    acc |= x.bits_at((ci * h + oy * stride + ky) * w, w);
+                }
+                let mut horiz = acc;
+                for sh in 1..k {
+                    horiz |= acc >> sh;
+                }
+                for ox in 0..wo {
+                    if (horiz >> (ox * stride)) & 1 != 0 {
+                        out.set((ci * ho + oy) * wo + ox);
+                    }
+                }
+            }
+        }
+    } else {
+        // General path for wide maps: per-window bit probe.
+        for ci in 0..c {
+            for oy in 0..ho {
+                'pix: for ox in 0..wo {
+                    for ky in 0..k {
+                        let row = (ci * h + oy * stride + ky) * w + ox * stride;
+                        for kx in 0..k {
+                            if x.get(row + kx) {
+                                out.set((ci * ho + oy) * wo + ox);
+                                continue 'pix;
+                            }
                         }
                     }
                 }
-                out.set3(ci, oy, ox, any);
             }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -282,6 +354,81 @@ mod tests {
         assert_eq!(rep.total_spikes, gold.total_spikes);
         assert_eq!(rep.activity.sops, gold.total_sops);
         assert_eq!(rep.predicted, gold.predicted());
+    }
+
+    #[test]
+    fn fused_and_materializing_reports_bit_identical() {
+        // The fused zero-materialization path is the default; the
+        // materializing path is the validation mode. Everything the report
+        // carries must match exactly.
+        for model in [zoo::tiny(10, 3), zoo::resnet11(10, 3), zoo::qkfresnet11(10, 3)] {
+            let x = input(13);
+            let fused = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
+            let mat = Accelerator::materializing(ArchConfig::default()).run(&model, &x).unwrap();
+            assert_eq!(fused.logits, mat.logits, "{}", model.name);
+            assert_eq!(fused.cycles, mat.cycles, "{}", model.name);
+            assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{}", model.name);
+            assert_eq!(fused.modules.sda, mat.modules.sda, "{}", model.name);
+            assert_eq!(fused.modules.epa, mat.modules.epa, "{}", model.name);
+            assert_eq!(fused.modules.wtfc, mat.modules.wtfc, "{}", model.name);
+            assert_eq!(fused.modules.other, mat.modules.other, "{}", model.name);
+            assert_eq!(fused.total_spikes, mat.total_spikes, "{}", model.name);
+            assert_eq!(fused.qkf_suppressed, mat.qkf_suppressed, "{}", model.name);
+            assert_eq!(fused.activity.sops, mat.activity.sops, "{}", model.name);
+            assert_eq!(fused.activity.buf_bytes, mat.activity.buf_bytes, "{}", model.name);
+            assert_eq!(fused.activity.dram_bytes, mat.activity.dram_bytes, "{}", model.name);
+            assert!(
+                (fused.energy.total_j() - mat.energy.total_j()).abs() < 1e-18,
+                "{}",
+                model.name
+            );
+        }
+    }
+
+    #[test]
+    fn pool_window_that_does_not_fit_errors() {
+        // Regression: (h - k)/stride + 1 used to underflow-panic when the
+        // pooled map was smaller than the window.
+        let x = PackedSpikeMap::from_map(&input(1));
+        assert!(pool_or(&x, 64, 2).is_err());
+        assert!(pool_or(&x, 33, 1).is_err());
+        assert!(pool_or(&x, 2, 2).is_ok());
+    }
+
+    #[test]
+    fn packed_pool_matches_dense_window_or() {
+        use crate::testing::forall;
+        forall("packed pool == dense pool", 60, |g| {
+            let c = g.size(1, 3);
+            let h = g.size(2, 12);
+            let w = g.size(2, 12);
+            let k = g.size(1, h.min(w).min(4));
+            let stride = g.size(1, 3);
+            let bits = g.spikes(c * h * w, 0.3);
+            let dense = crate::tensor::Tensor::from_vec(crate::tensor::Shape::d3(c, h, w), bits);
+            let packed = PackedSpikeMap::from_map(&dense);
+            let got = pool_or(&packed, k, stride).unwrap().to_map();
+            // independent dense reference
+            let (ho, wo) = ((h - k) / stride + 1, (w - k) / stride + 1);
+            let mut want: SpikeMap =
+                crate::tensor::Tensor::zeros(crate::tensor::Shape::d3(c, ho, wo));
+            for ci in 0..c {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut any = 0u8;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                if dense.at3(ci, oy * stride + ky, ox * stride + kx) != 0 {
+                                    any = 1;
+                                }
+                            }
+                        }
+                        want.set3(ci, oy, ox, any);
+                    }
+                }
+            }
+            assert_eq!(got, want, "c={c} h={h} w={w} k={k} s={stride}");
+        });
     }
 
     #[test]

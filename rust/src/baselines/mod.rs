@@ -126,7 +126,7 @@ impl BaselineKind {
 /// A baseline instance (geometry shared with the NEURAL config for a fair
 /// same-PE-budget comparison; resource/power columns use the published
 /// implementations' numbers).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Baseline {
     /// Which design.
     pub kind: BaselineKind,

@@ -76,9 +76,12 @@ pub const USAGE: &str = "neural — NEURAL elastic neuromorphic architecture (pa
 
 USAGE:
   neural run        [--model NAME|--neuw PATH] [--dataset synthcifar10] [--images N]
-                    [--engine sim|golden|rigid|sibrain|scpu|stisnn|cerebron]
+                    [--engine sim|golden|rigid|materializing|sibrain|scpu|stisnn|cerebron]
                     [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
                     [--arch PATH.ini] [--classes N] [--seed N]
+                    (--workers N sizes the engine pool: one simulator replica
+                     per worker thread, batches fan out across them;
+                     `materializing` runs the event-vector validation path)
   neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
   neural resources  [--arch PATH.ini]                          Table-I style report
   neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep

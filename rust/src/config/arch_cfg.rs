@@ -65,7 +65,7 @@ pub struct EnergyConstants {
 
 impl Default for EnergyConstants {
     fn default() -> Self {
-        // Calibrated in EXPERIMENTS.md §Calibration: ResNet-11/CIFAR-10 must
+        // Calibrated in DESIGN.md §Calibration constants: ResNet-11/CIFAR-10 must
         // land near 7.3 ms / 5.56 mJ / 0.758 W (Table II + III).
         EnergyConstants { e_sop_pj: 3.1, e_buf_pj: 1.1, e_dram_pj: 22.0, p_static_w: 0.62 }
     }

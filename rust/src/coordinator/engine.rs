@@ -29,13 +29,17 @@ pub struct Outcome {
     pub logits: Vec<i64>,
 }
 
-/// The engine: a model plus an execution backend.
+/// The engine: a model plus an execution backend. `Clone` builds an
+/// independent replica for the [`crate::coordinator::EnginePool`] — one
+/// engine per worker thread, no shared mutable state.
+#[derive(Clone)]
 pub struct Engine {
     /// The loaded model graph.
     pub model: Model,
     backend: Backend,
 }
 
+#[derive(Clone)]
 enum Backend {
     Sim(Accelerator),
     Golden,
@@ -53,6 +57,12 @@ impl Engine {
         Engine { model, backend: Backend::Sim(Accelerator::rigid(cfg)) }
     }
 
+    /// NEURAL simulator engine on the materializing (event-vector) conv
+    /// path — the validation mode; reports are bit-identical to `sim`.
+    pub fn sim_materializing(model: Model, cfg: ArchConfig) -> Self {
+        Engine { model, backend: Backend::Sim(Accelerator::materializing(cfg)) }
+    }
+
     /// Golden functional engine.
     pub fn golden(model: Model) -> Self {
         Engine { model, backend: Backend::Golden }
@@ -66,13 +76,11 @@ impl Engine {
     /// Engine name for reports.
     pub fn name(&self) -> String {
         match &self.backend {
-            Backend::Sim(a) => {
-                if a.elastic {
-                    "neural-sim".into()
-                } else {
-                    "neural-sim-rigid".into()
-                }
-            }
+            Backend::Sim(a) => match (a.elastic, a.fused) {
+                (true, true) => "neural-sim".into(),
+                (true, false) => "neural-sim-materializing".into(),
+                (false, _) => "neural-sim-rigid".into(),
+            },
             Backend::Golden => "golden".into(),
             Backend::Baseline(b) => format!("baseline-{}", b.kind.name().to_lowercase()),
         }
@@ -157,6 +165,33 @@ mod tests {
     fn names_distinguish_backends() {
         let e1 = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
         let e2 = Engine::sim_rigid(zoo::tiny(10, 5), ArchConfig::default());
+        let e3 = Engine::sim_materializing(zoo::tiny(10, 5), ArchConfig::default());
         assert_ne!(e1.name(), e2.name());
+        assert_ne!(e1.name(), e3.name());
+    }
+
+    #[test]
+    fn materializing_engine_identical_outcome() {
+        let x = spikes();
+        let a = Engine::sim(zoo::tiny(10, 5), ArchConfig::default()).infer(&x).unwrap();
+        let b = Engine::sim_materializing(zoo::tiny(10, 5), ArchConfig::default())
+            .infer(&x)
+            .unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.device_ms, b.device_ms);
+        assert_eq!(a.energy_mj, b.energy_mj);
+        assert_eq!(a.total_spikes, b.total_spikes);
+        assert_eq!(a.sops, b.sops);
+    }
+
+    #[test]
+    fn cloned_engine_is_deterministic_replica() {
+        let x = spikes();
+        let e = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let c = e.clone();
+        let a = e.infer(&x).unwrap();
+        let b = c.infer(&x).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.sops, b.sops);
     }
 }

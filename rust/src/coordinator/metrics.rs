@@ -22,10 +22,33 @@ pub struct Metrics {
     pub spikes: Summary,
     /// Total SOPs across the run.
     pub total_sops: u64,
+    /// Device batches dispatched to the engine pool.
+    pub batches: u64,
+    /// Requests dispatched across all batches (≥ `completed`: failures are
+    /// dispatched but never complete).
+    pub dispatched: u64,
+    /// Largest batch dispatched.
+    pub max_batch: u64,
     host_samples: Vec<f64>,
 }
 
 impl Metrics {
+    /// Record one batch dispatch of `n` requests.
+    pub fn record_batch(&mut self, n: usize) {
+        self.batches += 1;
+        self.dispatched += n as u64;
+        self.max_batch = self.max_batch.max(n as u64);
+    }
+
+    /// Mean requests per dispatched batch (0 if none).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.dispatched as f64 / self.batches as f64
+        }
+    }
+
     /// Record one response.
     pub fn record(&mut self, r: &InferResponse) {
         self.completed += 1;
@@ -70,13 +93,16 @@ impl Metrics {
     /// One-line report.
     pub fn summary_line(&self) -> String {
         format!(
-            "n={} acc={:.2}% device={:.3}ms ({:.1} FPS) energy={:.3}mJ spikes={:.0}",
+            "n={} acc={:.2}% device={:.3}ms ({:.1} FPS) energy={:.3}mJ spikes={:.0} batches={} (mean {:.1}/max {})",
             self.completed,
             self.accuracy() * 100.0,
             self.device_ms.mean(),
             self.device_fps(),
             self.energy_mj.mean(),
-            self.spikes.mean()
+            self.spikes.mean(),
+            self.batches,
+            self.mean_batch(),
+            self.max_batch
         )
     }
 }
@@ -122,5 +148,20 @@ mod tests {
         let m = Metrics::default();
         assert!(m.accuracy().is_nan());
         assert_eq!(m.device_fps(), 0.0);
+        assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn batch_counters() {
+        let mut m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(2);
+        for i in 0..6 {
+            m.record(&resp(i, 0, None, 1.0));
+        }
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.dispatched, 6);
+        assert_eq!(m.max_batch, 4);
+        assert!((m.mean_batch() - 3.0).abs() < 1e-12);
     }
 }

@@ -3,18 +3,22 @@
 //! NEURAL's contribution is the accelerator itself, so the coordinator is
 //! the thin-but-real serving layer around the simulated device: a request
 //! queue with backpressure, a batcher that amortizes weight streaming
-//! across images of the same model, a worker pool (std::thread — no tokio
-//! in the offline vendor set), latency/throughput metrics, and an optional
-//! on-line cross-check of simulator logits against the PJRT golden model.
+//! across images of the same model, an engine pool that fans each batch
+//! out across cores (scoped `std::thread` — no tokio in the offline vendor
+//! set — with one engine replica per worker and a deterministic in-order
+//! result merge), latency/throughput metrics, and an optional on-line
+//! cross-check of simulator logits against the PJRT golden model.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod server;
 
 pub use batcher::Batcher;
 pub use engine::Engine;
 pub use metrics::Metrics;
+pub use pool::{BatchResult, EnginePool};
 pub use request::{InferRequest, InferResponse};
 pub use server::Coordinator;

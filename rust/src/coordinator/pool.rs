@@ -1,0 +1,168 @@
+//! Engine pool: one independent [`Engine`] replica per worker thread.
+//!
+//! The coordinator's batch path fans a [`crate::coordinator::Batcher`]
+//! batch out across CPU cores with `std::thread::scope` (no extra deps, no
+//! long-lived worker threads to shut down): the batch is split into
+//! contiguous chunks, each chunk runs on its own engine replica, and every
+//! result is written to its request's slot — so the merged outcome vector
+//! is in submission order and bit-deterministic regardless of thread
+//! interleaving.
+
+use crate::coordinator::engine::{Engine, Outcome};
+use crate::coordinator::request::InferRequest;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One per-request result of a batch run.
+pub struct BatchResult {
+    /// The inference outcome (`Err` if the engine failed on this request).
+    pub outcome: Result<Outcome>,
+    /// Host latency for this request: batch dispatch → its inference
+    /// finished, in milliseconds.
+    pub host_ms: f64,
+}
+
+/// A fixed set of engine replicas that batches fan out over.
+pub struct EnginePool {
+    engines: Vec<Engine>,
+}
+
+impl EnginePool {
+    /// Build a pool of `workers` replicas of `engine` (at least one).
+    pub fn new(engine: Engine, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let mut engines = Vec::with_capacity(workers);
+        for _ in 1..workers {
+            engines.push(engine.clone());
+        }
+        engines.push(engine);
+        EnginePool { engines }
+    }
+
+    /// Number of worker engines.
+    pub fn workers(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// A reference engine (for single-shot inference such as cross-checks).
+    pub fn engine(&self) -> &Engine {
+        &self.engines[0]
+    }
+
+    /// Run every request of a batch, one contiguous chunk per worker, and
+    /// return the per-request results in submission order.
+    ///
+    /// Deterministic merge: result `i` always belongs to `batch[i]`; with a
+    /// deterministic engine every functional field of the result vector is
+    /// identical for any worker count (only the measured `host_ms` varies).
+    pub fn run_batch(&self, batch: &[InferRequest]) -> Vec<BatchResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.engines.len().min(batch.len());
+        let chunk = batch.len().div_ceil(workers);
+        let t0 = Instant::now();
+        let mut results: Vec<Option<BatchResult>> = Vec::with_capacity(batch.len());
+        results.resize_with(batch.len(), || None);
+        std::thread::scope(|scope| {
+            let mut slots: &mut [Option<BatchResult>] = &mut results;
+            let mut reqs: &[InferRequest] = batch;
+            for engine in &self.engines {
+                if reqs.is_empty() {
+                    break;
+                }
+                let take = chunk.min(reqs.len());
+                let (chunk_reqs, rest_reqs) = reqs.split_at(take);
+                let taken = std::mem::take(&mut slots);
+                let (chunk_slots, rest_slots) = taken.split_at_mut(take);
+                reqs = rest_reqs;
+                slots = rest_slots;
+                scope.spawn(move || {
+                    for (req, slot) in chunk_reqs.iter().zip(chunk_slots.iter_mut()) {
+                        let outcome = engine.infer(&req.spikes);
+                        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        *slot = Some(BatchResult { outcome, host_ms });
+                    }
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|slot| slot.expect("every batch slot is covered by exactly one worker chunk"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::data::SynthCifar;
+    use crate::data::{encode_threshold, Dataset};
+    use crate::model::zoo;
+
+    fn batch(n: usize) -> Vec<InferRequest> {
+        let ds = Dataset::from_synth(&SynthCifar::new(10, 5), n);
+        (0..n)
+            .map(|i| {
+                let (img, label) = ds.get(i);
+                InferRequest { id: i as u64, spikes: encode_threshold(&img, 128), label: Some(label) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_merge_is_deterministic_across_worker_counts() {
+        let reqs = batch(9);
+        let reference: Vec<Outcome> = EnginePool::new(
+            Engine::sim(zoo::tiny(10, 2), ArchConfig::default()),
+            1,
+        )
+        .run_batch(&reqs)
+        .into_iter()
+        .map(|r| r.outcome.unwrap())
+        .collect();
+        for workers in [2usize, 3, 4, 8] {
+            let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), workers);
+            let got: Vec<Outcome> =
+                pool.run_batch(&reqs).into_iter().map(|r| r.outcome.unwrap()).collect();
+            assert_eq!(got.len(), reference.len());
+            for (g, r) in got.iter().zip(&reference) {
+                assert_eq!(g.logits, r.logits, "workers={workers}");
+                assert_eq!(g.predicted, r.predicted, "workers={workers}");
+                assert_eq!(g.sops, r.sops, "workers={workers}");
+                assert_eq!(g.total_spikes, r.total_spikes, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let pool = EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 4);
+        assert!(pool.run_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_requests() {
+        let pool = EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 8);
+        let out = pool.run_batch(&batch(3));
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.outcome.is_ok()));
+        assert!(out.iter().all(|r| r.host_ms >= 0.0));
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 0);
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.run_batch(&batch(2)).len(), 2);
+    }
+
+    #[test]
+    fn mod_export_alias() {
+        // EnginePool and BatchResult are part of the coordinator surface.
+        let pool: crate::coordinator::EnginePool =
+            EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 2);
+        let _: Vec<super::BatchResult> = pool.run_batch(&batch(1));
+    }
+}

@@ -1,29 +1,29 @@
-//! The coordinator server: request queue → batcher → worker pool →
+//! The coordinator server: request queue → batcher → engine pool →
 //! metrics, with optional PJRT golden cross-check.
 //!
 //! Threading model (std only — no tokio offline): the submitting side owns
 //! a `Coordinator`; `serve_dataset` pushes encoded requests through the
-//! batcher and fans batches out to a fixed pool of worker threads over
-//! mpsc channels. The engine is shared read-only via `Arc`. The PJRT
-//! cross-checker stays on the submitting thread (xla handles are not
-//! `Send`).
+//! batcher, and every released batch fans out across the
+//! [`EnginePool`] — one engine replica per worker, scoped threads, results
+//! merged back in submission order (deterministic metrics regardless of
+//! scheduling). The PJRT cross-checker stays on the submitting thread
+//! (xla handles are not `Send`).
 
 use crate::config::RunConfig;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::EnginePool;
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
 use anyhow::{Context, Result};
-use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
 
 /// The serving coordinator.
 pub struct Coordinator {
-    /// Shared inference engine.
-    pub engine: Arc<Engine>,
+    /// Engine replicas, one per worker.
+    pub pool: EnginePool,
     /// Run settings.
     pub cfg: RunConfig,
     /// Optional golden HLO model for on-line cross-checking.
@@ -35,8 +35,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build from an engine and run config; loads the HLO cross-checker if
-    /// configured and present.
+    /// Build from an engine and run config (the pool size comes from
+    /// `cfg.workers`); loads the HLO cross-checker if configured and
+    /// present.
     pub fn new(engine: Engine, cfg: RunConfig) -> Self {
         let crosscheck = match (&cfg.hlo_path, cfg.crosscheck_every) {
             (Some(path), n) if n > 0 => match HloModel::load(path) {
@@ -49,7 +50,7 @@ impl Coordinator {
             _ => None,
         };
         Coordinator {
-            engine: Arc::new(engine),
+            pool: EnginePool::new(engine, cfg.workers),
             cfg,
             crosscheck,
             crosscheck_mismatches: 0,
@@ -57,62 +58,26 @@ impl Coordinator {
         }
     }
 
-    /// Serve `n` images from a dataset through the batched worker pool;
-    /// returns the final metrics.
+    /// Serve `n` images from a dataset through the batched engine pool;
+    /// returns the final metrics (recorded in submission order).
+    ///
+    /// Released batches are buffered until up to `workers` of them are
+    /// pending and dispatched together, so small batch sizes (down to
+    /// `--batch 1`) still keep every worker engine busy. Encoding and
+    /// inference do not overlap (each dispatch is a barrier) — a deliberate
+    /// trade for deterministic in-order metrics; `encode_threshold` is
+    /// microseconds against milliseconds of simulation per image.
     pub fn serve_dataset(&mut self, ds: &Dataset, n: usize) -> Result<Metrics> {
         let n = n.min(ds.len());
         let mut batcher = Batcher::new(self.cfg.batch_size);
-        let workers = self.cfg.workers.max(1);
-        let (batch_tx, batch_rx) = mpsc::channel::<Vec<(InferRequest, Instant)>>();
-        let (resp_tx, resp_rx) = mpsc::channel::<InferResponse>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
-
-        let mut handles = Vec::new();
-        for _ in 0..workers {
-            let engine = Arc::clone(&self.engine);
-            let rx = Arc::clone(&batch_rx);
-            let tx = resp_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                loop {
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    for (req, t0) in batch {
-                        match engine.infer(&req.spikes) {
-                            Ok(out) => {
-                                let resp = InferResponse {
-                                    id: req.id,
-                                    predicted: out.predicted,
-                                    label: req.label,
-                                    device_ms: out.device_ms,
-                                    host_ms: t0.elapsed().as_secs_f64() * 1e3,
-                                    energy_mj: out.energy_mj,
-                                    total_spikes: out.total_spikes,
-                                    sops: out.sops,
-                                };
-                                if tx.send(resp).is_err() {
-                                    return;
-                                }
-                            }
-                            Err(e) => {
-                                eprintln!("worker: inference failed for request {}: {e:#}", req.id);
-                            }
-                        }
-                    }
-                }
-            }));
-        }
-        drop(resp_tx);
-
-        // Submit + cross-check on this thread.
+        let mut metrics = Metrics::default();
+        let mut pending: Vec<(Vec<InferRequest>, Instant)> = Vec::new();
         for i in 0..n {
             let (img, label) = ds.get(i);
             let spikes = encode_threshold(&img, 128);
             if let Some(hlo) = &self.crosscheck {
                 if self.cfg.crosscheck_every > 0 && i % self.cfg.crosscheck_every == 0 {
-                    let sim_pred = self.engine.infer(&spikes)?.predicted;
+                    let sim_pred = self.pool.engine().infer(&spikes)?.predicted;
                     let hlo_pred = hlo.predict(&spikes).context("cross-check inference")?;
                     self.crosschecks += 1;
                     if sim_pred != hlo_pred {
@@ -125,24 +90,55 @@ impl Coordinator {
             }
             let req = InferRequest { id: i as u64, spikes, label: Some(label) };
             if let Some(batch) = batcher.push(req) {
-                let stamped = batch.into_iter().map(|r| (r, Instant::now())).collect();
-                batch_tx.send(stamped).context("worker pool hung up")?;
+                pending.push((batch, Instant::now()));
+                if pending.len() >= self.pool.workers() {
+                    self.dispatch(&mut pending, &mut metrics);
+                }
             }
         }
         if let Some(batch) = batcher.flush() {
-            let stamped = batch.into_iter().map(|r| (r, Instant::now())).collect();
-            batch_tx.send(stamped).context("worker pool hung up")?;
+            pending.push((batch, Instant::now()));
         }
-        drop(batch_tx);
-
-        let mut metrics = Metrics::default();
-        for resp in resp_rx {
-            metrics.record(&resp);
-        }
-        for h in handles {
-            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
-        }
+        self.dispatch(&mut pending, &mut metrics);
         Ok(metrics)
+    }
+
+    /// Fan the pending batches across the pool in one combined run and
+    /// record every outcome in submission order. `host_ms` covers the full
+    /// host latency: batch release (queueing in `pending`) → inference
+    /// finished.
+    fn dispatch(&self, pending: &mut Vec<(Vec<InferRequest>, Instant)>, metrics: &mut Metrics) {
+        if pending.is_empty() {
+            return;
+        }
+        let mut all: Vec<InferRequest> = Vec::new();
+        let mut queued_ms: Vec<f64> = Vec::new();
+        for (batch, released) in pending.drain(..) {
+            metrics.record_batch(batch.len());
+            let waited = released.elapsed().as_secs_f64() * 1e3;
+            queued_ms.resize(queued_ms.len() + batch.len(), waited);
+            all.extend(batch);
+        }
+        let results = self.pool.run_batch(&all);
+        for ((req, result), queued) in all.iter().zip(results).zip(queued_ms) {
+            match result.outcome {
+                Ok(out) => {
+                    metrics.record(&InferResponse {
+                        id: req.id,
+                        predicted: out.predicted,
+                        label: req.label,
+                        device_ms: out.device_ms,
+                        host_ms: queued + result.host_ms,
+                        energy_mj: out.energy_mj,
+                        total_spikes: out.total_spikes,
+                        sops: out.sops,
+                    });
+                }
+                Err(e) => {
+                    eprintln!("worker: inference failed for request {}: {e:#}", req.id);
+                }
+            }
+        }
     }
 }
 

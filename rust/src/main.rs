@@ -74,6 +74,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = match engine_name.as_str() {
         "sim" => Engine::sim(model, arch),
         "rigid" => Engine::sim_rigid(model, arch),
+        "materializing" => Engine::sim_materializing(model, arch),
         "golden" => Engine::golden(model),
         "sibrain" => Engine::baseline(model, BaselineKind::SiBrain, arch),
         "scpu" => Engine::baseline(model, BaselineKind::Scpu, arch),

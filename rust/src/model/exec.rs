@@ -61,7 +61,7 @@ pub fn execute(model: &Model, input: &SpikeMap) -> Result<ExecTrace> {
             Op::Conv { cin, cout, k, stride, pad, thresholds, tau_half, weights, .. } => {
                 conv_lif(&acts[node.inputs[0]], *cin, *cout, *k, *stride, *pad, thresholds, *tau_half, weights)
             }
-            Op::MaxPool { k, stride } => (maxpool_or(&acts[node.inputs[0]], *k, *stride), 0),
+            Op::MaxPool { k, stride } => (maxpool_or(&acts[node.inputs[0]], *k, *stride)?, 0),
             Op::Or => {
                 let a = &acts[node.inputs[0]];
                 let b = &acts[node.inputs[1]];
@@ -112,8 +112,10 @@ fn conv_lif(
     weights: &[i8],
 ) -> (SpikeMap, u64) {
     let (h, w) = (x.shape().dim(1), x.shape().dim(2));
-    let ho = (h + 2 * pad - k) / stride + 1;
-    let wo = (w + 2 * pad - k) / stride + 1;
+    // Same clamp as ConvGeom::new: a kernel larger than the padded input
+    // has zero valid output positions (no usize underflow).
+    let ho = if h + 2 * pad >= k { (h + 2 * pad - k) / stride + 1 } else { 0 };
+    let wo = if w + 2 * pad >= k { (w + 2 * pad - k) / stride + 1 } else { 0 };
     let mut out: SpikeMap = Tensor::zeros(Shape::d3(cout, ho, wo));
     let mut sops: u64 = 0;
     // Perf (§Perf opt-2): weights transposed to [tap][oc] once per layer so
@@ -167,9 +169,16 @@ fn conv_lif(
     (out, sops)
 }
 
-/// Spike max-pool = OR over the window.
-fn maxpool_or(x: &SpikeMap, k: usize, stride: usize) -> SpikeMap {
+/// Spike max-pool = OR over the window. Errors (instead of the former
+/// `usize`-underflow panic) when the window does not fit the input.
+fn maxpool_or(x: &SpikeMap, k: usize, stride: usize) -> Result<SpikeMap> {
     let (c, h, w) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    if k == 0 || stride == 0 {
+        bail!("pool window k={k} / stride={stride} must be positive");
+    }
+    if h < k || w < k {
+        bail!("pool window k={k} does not fit input {c}x{h}x{w}");
+    }
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
     let mut out: SpikeMap = Tensor::zeros(Shape::d3(c, ho, wo));
@@ -189,7 +198,7 @@ fn maxpool_or(x: &SpikeMap, k: usize, stride: usize) -> SpikeMap {
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// QKFormer on-the-fly attention (functional form of paper Fig 5):
@@ -330,9 +339,27 @@ mod tests {
     fn maxpool_or_window() {
         let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 4, 4));
         x.set3(0, 0, 0, 1);
-        let y = maxpool_or(&x, 2, 2);
+        let y = maxpool_or(&x, 2, 2).unwrap();
         assert_eq!(y.at3(0, 0, 0), 1);
         assert_eq!(y.count_nonzero(), 1);
+    }
+
+    #[test]
+    fn maxpool_rejects_oversized_window() {
+        // Regression: used to underflow-panic on (h - k) when k > h.
+        let x: SpikeMap = Tensor::zeros(Shape::d3(1, 3, 3));
+        assert!(maxpool_or(&x, 4, 1).is_err());
+    }
+
+    #[test]
+    fn conv_kernel_larger_than_input_clamps_to_empty() {
+        // Regression: (h + 2p - k) used to underflow when the padded input
+        // was smaller than the kernel; now the output is empty.
+        let mut x: SpikeMap = Tensor::zeros(Shape::d3(1, 3, 3));
+        x.set3(0, 1, 1, 1);
+        let (y, sops) = conv_lif(&x, 1, 2, 7, 1, 0, &[1; 2], false, &[1; 2 * 49]);
+        assert_eq!(y.numel(), 0);
+        assert_eq!(sops, 0);
     }
 
     #[test]

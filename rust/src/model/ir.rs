@@ -185,12 +185,28 @@ impl Model {
                     if c != *cin {
                         return Err(format!("node {i}: cin {cin} != producer C {c}"));
                     }
+                    if *stride == 0 {
+                        return Err(format!("node {i}: conv stride must be positive"));
+                    }
+                    if h + 2 * pad < *k || w + 2 * pad < *k {
+                        return Err(format!(
+                            "node {i}: conv kernel k={k} exceeds padded input {h}x{w} (pad {pad})"
+                        ));
+                    }
                     let ho = (h + 2 * pad - k) / stride + 1;
                     let wo = (w + 2 * pad - k) / stride + 1;
                     (*cout, ho, wo)
                 }
                 Op::MaxPool { k, stride } => {
                     let (c, h, w) = out[n.inputs[0]];
+                    if *k == 0 || *stride == 0 {
+                        return Err(format!("node {i}: pool window/stride must be positive"));
+                    }
+                    if h < *k || w < *k {
+                        return Err(format!(
+                            "node {i}: pool window k={k} does not fit input {h}x{w}"
+                        ));
+                    }
                     ((c), (h - k) / stride + 1, (w - k) / stride + 1)
                 }
                 Op::Or | Op::TokenMask { .. } => {
@@ -263,6 +279,23 @@ mod tests {
         assert_eq!(shapes[0], (3, 32, 32));
         // first conv is 3->64, stride 1, pad 1, k 3 => same spatial
         assert_eq!(shapes[1].1, 32);
+    }
+
+    #[test]
+    fn shapes_reject_windows_larger_than_input() {
+        use super::{Model, Node, Op};
+        // Regression: shape propagation used to underflow on usize when a
+        // pool/conv window exceeded its input; now it reports an error.
+        let m = Model {
+            name: "bad-pool".into(),
+            input_dims: (1, 8, 8),
+            num_classes: 10,
+            nodes: vec![
+                Node { op: Op::Input, inputs: vec![] },
+                Node { op: Op::MaxPool { k: 40, stride: 2 }, inputs: vec![0] },
+            ],
+        };
+        assert!(m.shapes().is_err());
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! PJRT runtime: load JAX-lowered HLO text and execute it on the CPU
+//! client via the `xla` crate.
+//!
+//! This is the bridge to L2/L1: `python/compile/aot.py` lowers the
+//! quantized SNN forward (which calls the Pallas kernels with
+//! `interpret=True`) to HLO *text* (`artifacts/*.hlo.txt`); the
+//! coordinator loads it here once and can cross-check the simulator's
+//! integer logits against the golden JAX computation on live traffic.
+//! HLO text — not serialized protos — is the interchange format because
+//! the crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction
+//! ids (see /opt/xla-example/README.md).
+
+use crate::snn::SpikeMap;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled HLO executable on the PJRT CPU client.
+pub struct HloModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path it was loaded from (for reports).
+    pub path: String,
+}
+
+impl HloModel {
+    /// Load and compile an HLO text file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow).context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_string_lossy().as_ref())
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(to_anyhow).context("compiling HLO")?;
+        Ok(HloModel { exe, path: path.display().to_string() })
+    }
+
+    /// Execute on a spike map input (u8 0/1 → f32 CHW, batch 1 added).
+    /// Returns the model's logits.
+    ///
+    /// The AOT graph is lowered with `return_tuple=True`, so the result is
+    /// unwrapped with `to_tuple1`.
+    pub fn logits(&self, spikes: &SpikeMap) -> Result<Vec<f32>> {
+        let data: Vec<f32> = spikes.data().iter().map(|&b| b as f32).collect();
+        let dims = spikes.shape().dims();
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&[1, dims[0] as i64, dims[1] as i64, dims[2] as i64])
+            .map_err(to_anyhow)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(to_anyhow)?[0][0]
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let out = result.to_tuple1().map_err(to_anyhow)?;
+        out.to_vec::<f32>().map_err(to_anyhow)
+    }
+
+    /// Argmax helper (first maximum wins, `jnp.argmax` convention).
+    pub fn predict(&self, spikes: &SpikeMap) -> Result<usize> {
+        let logits = self.logits(spikes)?;
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        Ok(best)
+    }
+}
+
+/// The `xla` crate has its own error type; fold it into anyhow.
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+// Runtime tests that need artifacts live in rust/tests/runtime_hlo.rs and
+// are skipped when artifacts/ has not been built.

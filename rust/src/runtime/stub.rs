@@ -1,0 +1,46 @@
+//! API-compatible stand-in for the PJRT runtime when the `pjrt` feature
+//! (and with it the `xla` crate) is unavailable. `load` always errors, so
+//! every caller that handles a missing cross-check model keeps working.
+
+use crate::snn::SpikeMap;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Placeholder for the compiled HLO executable. Never constructed in
+/// stub builds: [`HloModel::load`] always returns an error.
+pub struct HloModel {
+    /// Path it would have been loaded from (API parity with the real type).
+    pub path: String,
+}
+
+impl HloModel {
+    /// Always errors: the crate was built without the `pjrt` feature.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime disabled: built without the `pjrt` feature (xla crate not vendored); \
+             cannot load {}",
+            path.as_ref().display()
+        )
+    }
+
+    /// Unreachable in stub builds (no instance can exist).
+    pub fn logits(&self, _spikes: &SpikeMap) -> Result<Vec<f32>> {
+        bail!("PJRT runtime disabled: built without the `pjrt` feature")
+    }
+
+    /// Unreachable in stub builds (no instance can exist).
+    pub fn predict(&self, _spikes: &SpikeMap) -> Result<usize> {
+        bail!("PJRT runtime disabled: built without the `pjrt` feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_disabled_feature() {
+        let err = HloModel::load("artifacts/resnet11_c10.hlo.txt").err().unwrap();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+}

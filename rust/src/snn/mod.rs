@@ -1,9 +1,9 @@
 //! Spiking-neuron primitives shared by the golden executor and the cycle
 //! simulator: the fixed-point LIF unit and spike-map representations
-//! (dense binary map + sparse event list).
+//! (dense binary map, word-packed bit map, sparse event list).
 
 pub mod lif;
 pub mod spikes;
 
 pub use lif::LifUnit;
-pub use spikes::{EventList, SpikeMap};
+pub use spikes::{EventList, PackedSpikeMap, SpikeMap};

@@ -1,7 +1,13 @@
 //! Spike-map representations.
 //!
-//! The simulator moves between two views of the same activation:
-//! * [`SpikeMap`] — dense binary CHW map (what the Spiking Buffer stores);
+//! The simulator moves between three views of the same activation:
+//! * [`SpikeMap`] — dense binary CHW map, one byte per pixel (the golden
+//!   executor's working format);
+//! * [`PackedSpikeMap`] — the same map bit-packed into `u64` words (what the
+//!   Spiking Buffer actually stores in hardware: one bit per pixel). The
+//!   simulator's hot path runs entirely on this form: the IG scan is
+//!   `trailing_zeros` over words, residual OR is word-wise, spike counting
+//!   is `count_ones`;
 //! * [`EventList`] — sparse (c, y, x) coordinate list (what PipeSDA's index
 //!   generation stage produces, paper Fig 4 "Index Generation").
 
@@ -76,6 +82,108 @@ impl EventList {
     }
 }
 
+/// Bit-packed binary spike map over (C, H, W): 64 pixels per `u64` word in
+/// flat CHW raster order (bit `i & 63` of word `i >> 6` is flat pixel `i`).
+///
+/// Invariant: pad bits past `numel()` in the last word are always zero, so
+/// [`PackedSpikeMap::count_ones`] is an exact popcount.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedSpikeMap {
+    words: Vec<u64>,
+    dims: (usize, usize, usize),
+}
+
+impl PackedSpikeMap {
+    /// All-zero map of the given (C, H, W) dims.
+    pub fn zeros(dims: (usize, usize, usize)) -> Self {
+        let n = dims.0 * dims.1 * dims.2;
+        PackedSpikeMap { words: vec![0u64; n.div_ceil(64)], dims }
+    }
+
+    /// Pack a dense byte map (any nonzero byte becomes a set bit).
+    pub fn from_map(map: &SpikeMap) -> Self {
+        let dims = (map.shape().dim(0), map.shape().dim(1), map.shape().dim(2));
+        let mut out = Self::zeros(dims);
+        for (i, &v) in map.data().iter().enumerate() {
+            if v != 0 {
+                out.words[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        out
+    }
+
+    /// Unpack to the dense byte form (inverse of `from_map` on binary maps).
+    pub fn to_map(&self) -> SpikeMap {
+        let (c, h, w) = self.dims;
+        let mut map: SpikeMap = Tensor::zeros(Shape::d3(c, h, w));
+        for (i, v) in map.data_mut().iter_mut().enumerate() {
+            *v = ((self.words[i >> 6] >> (i & 63)) & 1) as u8;
+        }
+        map
+    }
+
+    /// Map dims (C, H, W).
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// Number of pixels (bits) in the map.
+    pub fn numel(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2
+    }
+
+    /// The packed words, flat CHW order.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Bit at flat index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.numel());
+        (self.words[i >> 6] >> (i & 63)) & 1 != 0
+    }
+
+    /// Set the bit at flat index `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.numel());
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    /// Spike count: one popcount per word instead of a byte walk.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Word-wise OR with a same-shape map (the residual `Op::Or` join).
+    pub fn or_assign(&mut self, other: &PackedSpikeMap) {
+        assert_eq!(self.dims, other.dims, "packed OR shape mismatch");
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Extract `len` (≤ 64) consecutive bits starting at flat bit `start`
+    /// as the low bits of a `u64` (used by the packed pooling fast path).
+    #[inline]
+    pub fn bits_at(&self, start: usize, len: usize) -> u64 {
+        debug_assert!(len >= 1 && len <= 64);
+        debug_assert!(start + len <= self.numel());
+        let wi = start >> 6;
+        let off = start & 63;
+        let mut lo = self.words[wi] >> off;
+        if off != 0 && off + len > 64 {
+            lo |= self.words[wi + 1] << (64 - off);
+        }
+        if len == 64 {
+            lo
+        } else {
+            lo & ((1u64 << len) - 1)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,5 +231,74 @@ mod tests {
             assert_eq!(ev.to_map(), map);
             assert_eq!(ev.len(), map.count_nonzero());
         });
+    }
+
+    #[test]
+    fn prop_packed_roundtrip_and_popcount() {
+        // Packed ↔ unpacked roundtrip over sizes that straddle word
+        // boundaries, plus exact popcount (pad bits must stay clear).
+        forall("packed roundtrip", 80, |g| {
+            let c = g.size(1, 4);
+            let h = g.size(1, 11);
+            let w = g.size(1, 17);
+            let bits = g.spikes(c * h * w, 0.35);
+            let map = Tensor::from_vec(Shape::d3(c, h, w), bits);
+            let packed = PackedSpikeMap::from_map(&map);
+            assert_eq!(packed.to_map(), map);
+            assert_eq!(packed.count_ones(), map.count_nonzero());
+            assert_eq!(packed.numel(), map.numel());
+            for i in 0..map.numel() {
+                assert_eq!(packed.get(i), map.data()[i] != 0, "bit {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_packed_or_matches_byte_or() {
+        forall("packed OR", 40, |g| {
+            let n = g.size(1, 200);
+            let a_bits = g.spikes(n, 0.3);
+            let b_bits = g.spikes(n, 0.3);
+            let a = Tensor::from_vec(Shape::d3(1, 1, n), a_bits);
+            let b = Tensor::from_vec(Shape::d3(1, 1, n), b_bits);
+            let mut pa = PackedSpikeMap::from_map(&a);
+            pa.or_assign(&PackedSpikeMap::from_map(&b));
+            let mut dense = a.clone();
+            for (o, &bv) in dense.data_mut().iter_mut().zip(b.data()) {
+                *o |= bv;
+            }
+            assert_eq!(pa.to_map(), dense);
+        });
+    }
+
+    #[test]
+    fn prop_bits_at_window_extraction() {
+        forall("bits_at", 60, |g| {
+            let n = g.size(1, 300);
+            let bits = g.spikes(n, 0.4);
+            let map = Tensor::from_vec(Shape::d3(1, 1, n), bits.clone());
+            let packed = PackedSpikeMap::from_map(&map);
+            let len = g.size(1, 64.min(n));
+            let start = g.size(0, n - len);
+            let got = packed.bits_at(start, len);
+            for (j, &b) in bits[start..start + len].iter().enumerate() {
+                assert_eq!((got >> j) & 1, b as u64, "start={start} len={len} j={j}");
+            }
+            if len < 64 {
+                assert_eq!(got >> len, 0, "bits beyond len must be clear");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_set_and_get() {
+        let mut p = PackedSpikeMap::zeros((2, 5, 13));
+        p.set(0);
+        p.set(63);
+        p.set(64);
+        p.set(129);
+        assert!(p.get(0) && p.get(63) && p.get(64) && p.get(129));
+        assert!(!p.get(1) && !p.get(65));
+        assert_eq!(p.count_ones(), 4);
     }
 }

@@ -94,8 +94,21 @@ impl Tensor<f32> {
 
 impl Tensor<u8> {
     /// Number of non-zero elements (spike count for binary maps).
+    ///
+    /// Word-packed scan: reads eight bytes as one `u64` and skips all-zero
+    /// words, so sparse spike maps count at word speed (the fully packed
+    /// representation lives in `snn::PackedSpikeMap`, whose popcount the
+    /// simulator's hot path uses instead).
     pub fn count_nonzero(&self) -> usize {
-        self.data.iter().filter(|&&x| x != 0).count()
+        let mut chunks = self.data.chunks_exact(8);
+        let mut n = 0usize;
+        for c in chunks.by_ref() {
+            let word = u64::from_le_bytes(c.try_into().expect("chunks_exact(8) yields 8 bytes"));
+            if word != 0 {
+                n += c.iter().filter(|&&b| b != 0).count();
+            }
+        }
+        n + chunks.remainder().iter().filter(|&&b| b != 0).count()
     }
 }
 
@@ -138,6 +151,18 @@ mod tests {
     fn count_nonzero_counts_spikes() {
         let t = Tensor::from_vec(Shape::d1(5), vec![0u8, 1, 0, 1, 1]);
         assert_eq!(t.count_nonzero(), 3);
+    }
+
+    #[test]
+    fn count_nonzero_across_word_boundaries() {
+        // Exercise the 8-byte chunked scan: full words, a zero word in the
+        // middle, and a non-multiple-of-8 tail.
+        for n in [7usize, 8, 9, 16, 23, 64, 65] {
+            let data: Vec<u8> = (0..n).map(|i| ((i % 3 == 0) && (i / 8) % 2 == 0) as u8).collect();
+            let want = data.iter().filter(|&&b| b != 0).count();
+            let t = Tensor::from_vec(Shape::d1(n), data);
+            assert_eq!(t.count_nonzero(), want, "n={n}");
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Minimal JSON parser (recursive descent) — the offline vendor set has no
-//! serde, and the Fig 8 bench must read `artifacts/eval/algo_results.json`
-//! written by the Python training pipeline.
+//! Minimal JSON parser and writer (recursive descent) — the offline vendor
+//! set has no serde. The Fig 8 bench reads
+//! `artifacts/eval/algo_results.json` written by the Python training
+//! pipeline, and `perf_micro` writes the `BENCH_perf.json` perf baseline.
 //!
 //! Supports the full JSON value grammar; numbers are parsed as f64.
 
@@ -67,6 +68,70 @@ impl Json {
             Json::Str(s) => Some(s),
             _ => None,
         }
+    }
+
+    /// Serialize to canonical compact JSON text (object keys are already
+    /// sorted by the `BTreeMap`).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        self.write_to(&mut s);
+        s
+    }
+
+    fn write_to(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_to(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write_to(out);
+                    out.push(':');
+                    v.write_to(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Convenience: an object from (key, value) pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 }
 
@@ -246,5 +311,23 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert!(matches!(Json::parse("{}").unwrap(), Json::Obj(_)));
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let doc = Json::obj(vec![
+            ("name", Json::Str("perf_micro".into())),
+            ("events_per_s", Json::Num(12.5e6)),
+            ("ok", Json::Bool(true)),
+            ("tags", Json::Arr(vec![Json::Str("a\"b".into()), Json::Null])),
+        ]);
+        let text = doc.to_text();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn writer_escapes_control_chars() {
+        let j = Json::Str("a\nb\u{1}".into());
+        assert_eq!(j.to_text(), "\"a\\nb\\u0001\"");
     }
 }

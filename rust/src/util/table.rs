@@ -68,7 +68,7 @@ impl Table {
         print!("{}", self.render());
     }
 
-    /// Render as comma-separated values (for EXPERIMENTS.md extraction).
+    /// Render as comma-separated values (for report extraction).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str(&self.header.join(","));

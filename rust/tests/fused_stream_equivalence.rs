@@ -1,0 +1,107 @@
+//! Property tests for the fused zero-materialization SDA→EPA path: across
+//! random geometries (k ∈ {1,3,5,7}, stride ∈ {1,2}, pad ∈ 0..=3,
+//! densities 0–50%), the streaming path must produce exactly the events of
+//! the materializing path — same order, same cycles, same per-pixel
+//! counts, same halo drops — and the fused EPA must produce bit-identical
+//! spike maps and stats. Plus the packed↔unpacked spike-map roundtrip on
+//! shapes that straddle word boundaries.
+
+use neural::arch::epa::{ConvParams, ConvScratch, Epa};
+use neural::arch::sda::{ConvGeom, MaterializeSink, PipeSda};
+use neural::arch::wmu::Wmu;
+use neural::config::ArchConfig;
+use neural::snn::{PackedSpikeMap, SpikeMap};
+use neural::tensor::{Shape, Tensor};
+use neural::testing::forall;
+
+#[test]
+fn prop_stream_and_process_identical_across_geometries() {
+    forall("fused stream == materializing SDA", 120, |g| {
+        let c = g.size(1, 4);
+        let h = g.size(1, 12);
+        let w = g.size(1, 12);
+        let k = *g.pick(&[1usize, 3, 5, 7]);
+        let stride = *g.pick(&[1usize, 2]);
+        let pad = g.size(0, 3);
+        let density = g.f32(0.0, 0.5);
+        let bits = g.spikes(c * h * w, density);
+        let map: SpikeMap = Tensor::from_vec(Shape::d3(c, h, w), bits);
+        let geom = ConvGeom::new(k, stride, pad, (c, h, w));
+
+        let sda = PipeSda::default();
+        let out = sda.process(&map, &geom);
+
+        let packed = PackedSpikeMap::from_map(&map);
+        let mut sink = MaterializeSink::for_geom(&geom);
+        let stats = sda.stream(&packed, &geom, &mut sink);
+
+        let label = format!("c={c} h={h} w={w} k={k} s={stride} p={pad}");
+        assert_eq!(sink.events, out.events, "events differ: {label}");
+        assert_eq!(sink.per_pixel, out.per_pixel, "per_pixel differs: {label}");
+        assert_eq!(stats, out.stats(), "stats differ: {label}");
+    });
+}
+
+#[test]
+fn prop_fused_epa_matches_materializing_epa() {
+    forall("fused EPA == materializing EPA", 60, |g| {
+        let cin = g.size(1, 3);
+        let cout = g.size(1, 8);
+        let h = g.size(2, 10);
+        let w = g.size(2, 10);
+        let k = *g.pick(&[1usize, 3, 5]);
+        let stride = *g.pick(&[1usize, 2]);
+        let pad = g.size(0, 2);
+        let density = g.f32(0.0, 0.5);
+        let bits = g.spikes(cin * h * w, density);
+        let map: SpikeMap = Tensor::from_vec(Shape::d3(cin, h, w), bits);
+        let geom = ConvGeom::new(k, stride, pad, (cin, h, w));
+        let weights: Vec<i8> = (0..cout * cin * k * k).map(|_| g.int(-7, 7) as i8).collect();
+        let thresholds: Vec<i32> = (0..cout).map(|_| g.int(1, 12) as i32).collect();
+        let tau_half = g.bool(0.5);
+        let p = ConvParams { cout, cin, k, thresholds: &thresholds, tau_half, weights: &weights };
+        let epa = Epa::from_cfg(&ArchConfig::default());
+        let sda = PipeSda::default();
+
+        let sda_out = sda.process(&map, &geom);
+        let mut wmu_a = Wmu::new(8);
+        let (out_mat, st_mat) =
+            epa.run_conv(&sda_out, &p, &mut wmu_a, geom.out_dims.0, geom.out_dims.1);
+
+        let packed = PackedSpikeMap::from_map(&map);
+        let mut wmu_b = Wmu::new(8);
+        let mut scratch = ConvScratch::default();
+        let (out_fused, st_fused, sda_stats) =
+            epa.run_conv_fused(&sda, &packed, &geom, &p, &mut wmu_b, &mut scratch);
+
+        let label = format!("cin={cin} cout={cout} h={h} w={w} k={k} s={stride} p={pad}");
+        assert_eq!(out_fused.to_map(), out_mat, "spike maps differ: {label}");
+        assert_eq!(sda_stats, sda_out.stats(), "SDA stats differ: {label}");
+        assert_eq!(st_fused.sops, st_mat.sops, "{label}");
+        assert_eq!(st_fused.fires, st_mat.fires, "{label}");
+        assert_eq!(st_fused.compute_cycles, st_mat.compute_cycles, "{label}");
+        assert_eq!(st_fused.weight_cycles, st_mat.weight_cycles, "{label}");
+        assert_eq!(st_fused.cycles, st_mat.cycles, "{label}");
+        assert_eq!(st_fused.cycles_rigid, st_mat.cycles_rigid, "{label}");
+        assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes, "{label}");
+        assert_eq!(wmu_a.stream_cycles, wmu_b.stream_cycles, "{label}");
+    });
+}
+
+#[test]
+fn prop_packed_roundtrip_across_word_boundaries() {
+    forall("packed <-> unpacked roundtrip", 100, |g| {
+        // sizes chosen to land on, just under and just over u64 boundaries
+        let n = *g.pick(&[1usize, 63, 64, 65, 127, 128, 129, 200]);
+        let density = g.f32(0.0, 0.5);
+        let bits = g.spikes(n, density);
+        let map: SpikeMap = Tensor::from_vec(Shape::d3(1, 1, n), bits);
+        let packed = PackedSpikeMap::from_map(&map);
+        assert_eq!(packed.to_map(), map);
+        assert_eq!(packed.count_ones(), map.count_nonzero());
+        // pad bits beyond numel must be zero for exact popcounts
+        let spare = packed.words().len() * 64 - n;
+        let total_bits: usize = packed.words().iter().map(|w| w.count_ones() as usize).sum();
+        assert_eq!(total_bits, map.count_nonzero(), "spare={spare}");
+    });
+}
