@@ -16,6 +16,7 @@ use neural::config::ArchConfig;
 use neural::data::{encode_threshold, SynthCifar};
 use neural::model::ir::TokenMaskMode;
 use neural::model::zoo;
+use neural::snn::PackedSpikeMap;
 use neural::tensor::{Shape, Tensor};
 use neural::util::{Pcg32, Table};
 
@@ -30,11 +31,16 @@ fn main() -> Result<()> {
         Shape::d3(8, 8, 8),
         (0..8 * 64).map(|_| rng.bernoulli(0.5) as u8).collect(),
     );
-    let (masked, st) = on_the_fly_attention(&q, &k, TokenMaskMode::Token);
+    // The write-back path operates on the word-packed maps directly.
+    let (masked, st) = on_the_fly_attention(
+        &PackedSpikeMap::from_map(&q),
+        &PackedSpikeMap::from_map(&k),
+        TokenMaskMode::Token,
+    );
     println!("== on-the-fly QK token attention (one write-back) ==");
     println!("Q spikes -> atten_reg updates : {}", st.reg_updates);
     println!("K spikes masked               : {} of {}", st.suppressed, st.suppressed + st.passed);
-    println!("K spikes after mask           : {}", masked.count_nonzero());
+    println!("K spikes after mask           : {}", masked.count_ones());
     println!("extra cycles                  : 0 (rides the write-back beats)\n");
 
     // 2. macro view: ResNet-11 vs QKFResNet-11 (Table II shape)

@@ -7,19 +7,29 @@
 //! stream (`Epa::run_conv_fused`, the default path) against the
 //! materializing event-vector path (`PipeSda::process` + `Epa::run_conv`,
 //! the validation mode) on the same mid-network layer — both measured in
-//! the same run. The batch section measures how a 16-image batch scales
-//! across the coordinator's engine pool from 1 to 4 workers.
+//! the same run. The packed QKFormer attention register and the packed
+//! WTFC TTFS filter are each timed against their byte-map validation
+//! walks, and a full qkfresnet11 image pits the packed default against the
+//! materializing mode end to end. The batch section measures how a
+//! 16-image batch scales across the coordinator's engine pool from 1 to 4
+//! workers, and the weight-DRAM section records the per-image weight
+//! stream bytes for a standalone image vs an image inside a 4-batch (the
+//! batcher's amortization credit backed by the per-worker transposed
+//! weight cache).
 
 use neural::arch::epa::{ConvParams, ConvScratch, Epa};
+use neural::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use neural::arch::sda::{ConvGeom, PipeSda};
 use neural::arch::wmu::Wmu;
-use neural::arch::{Accelerator, ElasticFifo};
+use neural::arch::wtfc::Wtfc;
+use neural::arch::{Accelerator, ElasticFifo, SimScratch};
 use neural::bench::artifacts;
 use neural::bench::BenchRunner;
 use neural::config::ArchConfig;
-use neural::coordinator::{Engine, EnginePool, InferRequest};
+use neural::coordinator::{Batcher, Engine, EnginePool, InferRequest};
 use neural::data::encode_threshold;
 use neural::model::exec;
+use neural::model::ir::TokenMaskMode;
 use neural::snn::PackedSpikeMap;
 use neural::tensor::{Shape, Tensor};
 use neural::util::json::Json;
@@ -87,6 +97,40 @@ fn main() {
     println!("  -> {:.1} M diffused events/s fused", fused_events_s / 1e6);
     println!("  -> {:.1} M simulated SOPs/s fused", fused_sops_s / 1e6);
 
+    // Packed QKFormer attention register vs the byte-map validation walk,
+    // on the qkfresnet11 stage-2 attention shape (256ch 8x8).
+    let qk_bits = |rng: &mut Pcg32, p: f32| -> Vec<u8> {
+        (0..256 * 8 * 8).map(|_| rng.bernoulli(p) as u8).collect()
+    };
+    let q_map = Tensor::from_vec(Shape::d3(256, 8, 8), qk_bits(&mut rng, 0.15));
+    let k_map = Tensor::from_vec(Shape::d3(256, 8, 8), qk_bits(&mut rng, 0.4));
+    let (q_packed, k_packed) = (PackedSpikeMap::from_map(&q_map), PackedSpikeMap::from_map(&k_map));
+    let qkf_byte = runner.run("QKF token mask byte (validation)", || {
+        on_the_fly_attention_bytes(&q_map, &k_map, TokenMaskMode::Token).1.passed
+    });
+    let qkf_packed = runner.run("QKF token mask packed", || {
+        on_the_fly_attention(&q_packed, &k_packed, TokenMaskMode::Token).1.passed
+    });
+    let qkf_speedup = qkf_byte.time.mean() / qkf_packed.time.mean();
+    println!("  -> packed QKF speedup {qkf_speedup:.2}x over byte walk");
+
+    // Packed WTFC TTFS filter vs the byte-map walk, on the resnet11
+    // terminal shape (512ch 4x4, window 4) with 10 classes.
+    let wtfc_bits: Vec<u8> = (0..512 * 16).map(|_| rng.bernoulli(0.3) as u8).collect();
+    let wtfc_map = Tensor::from_vec(Shape::d3(512, 4, 4), wtfc_bits);
+    let wtfc_packed_map = PackedSpikeMap::from_map(&wtfc_map);
+    let fc_weights: Vec<i8> =
+        (0..10 * 512).map(|_| (rng.next_below(15) as i32 - 7) as i8).collect();
+    let wtfc = Wtfc::from_cfg(&ArchConfig::default());
+    let wtfc_byte = runner.run("WTFC filter byte (validation)", || {
+        wtfc.run(&wtfc_map, 10, 512, 1, 1, 4, &fc_weights).sops
+    });
+    let wtfc_packed = runner.run("WTFC filter packed", || {
+        wtfc.run_packed(&wtfc_packed_map, 10, 512, 1, 1, 4, &fc_weights).sops
+    });
+    let wtfc_speedup = wtfc_byte.time.mean() / wtfc_packed.time.mean();
+    println!("  -> packed WTFC speedup {wtfc_speedup:.2}x over byte walk");
+
     // golden conv (gather) on comparable work for reference
     runner.run("golden dense layer (exec conv)", || {
         let (model, _) = artifacts::model_or_zoo("tiny", "none", 10);
@@ -115,6 +159,36 @@ fn main() {
     println!(
         "  -> {:.1} M golden SOPs/s end-to-end",
         rep.activity.sops as f64 / gold.time.mean() / 1e6
+    );
+
+    // Full-image qkfresnet11: the packed default (fused convs + packed
+    // attention register + packed TTFS filter, warm weight cache) against
+    // the byte-map materializing validation mode — the PR-gating ratio for
+    // the packed QKFormer/WTFC paths.
+    let (qkf_model, _) = artifacts::model_or_zoo("qkfresnet11", "c10", 10);
+    let acc_mat = Accelerator::materializing(ArchConfig::default());
+    let mut sim_scratch = SimScratch::default();
+    let qkf_mat = runner.run("full image qkfresnet11 materializing (byte)", || {
+        acc_mat.run(&qkf_model, &spikes).unwrap().activity.sops
+    });
+    let qkf_fused = runner.run("full image qkfresnet11 fused (packed)", || {
+        acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, 1.0).unwrap().activity.sops
+    });
+    let qkf_full_speedup = qkf_mat.time.mean() / qkf_fused.time.mean();
+    println!("  -> qkfresnet11 packed-path speedup {qkf_full_speedup:.2}x over byte validation");
+
+    // Batch weight-stream accounting: per-image weight DRAM bytes for a
+    // standalone image vs an image inside a 4-batch (the batcher's credit,
+    // made physically honest by the per-worker transposed-weight cache).
+    let single_rep = acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, 1.0).unwrap();
+    let batch4_rep = acc
+        .run_cached(&qkf_model, &spikes, &mut sim_scratch, Batcher::dram_amortization(4))
+        .unwrap();
+    let weight_dram_ratio =
+        batch4_rep.weight_dram_bytes as f64 / single_rep.weight_dram_bytes as f64;
+    println!(
+        "  -> weight DRAM/image: {} B single, {} B in 4-batch ({weight_dram_ratio:.3}x)",
+        single_rep.weight_dram_bytes, batch4_rep.weight_dram_bytes
     );
 
     // coordinator batch path: 16-image batch across the engine pool
@@ -153,12 +227,44 @@ fn main() {
             ]),
         ),
         (
+            "qkformer",
+            Json::obj(vec![
+                ("byte_ms", Json::Num(qkf_byte.time.mean() * 1e3)),
+                ("packed_ms", Json::Num(qkf_packed.time.mean() * 1e3)),
+                ("packed_speedup", Json::Num(qkf_speedup)),
+            ]),
+        ),
+        (
+            "wtfc",
+            Json::obj(vec![
+                ("byte_ms", Json::Num(wtfc_byte.time.mean() * 1e3)),
+                ("packed_ms", Json::Num(wtfc_packed.time.mean() * 1e3)),
+                ("packed_speedup", Json::Num(wtfc_speedup)),
+            ]),
+        ),
+        (
             "full_image",
             Json::obj(vec![
                 ("model", Json::Str(model.name.clone())),
                 ("sim_ms", Json::Num(full.time.mean() * 1e3)),
                 ("sops", Json::Num(rep.activity.sops as f64)),
                 ("sim_sops_per_s", Json::Num(full_sops_s)),
+            ]),
+        ),
+        (
+            "qkfresnet11_full",
+            Json::obj(vec![
+                ("materializing_ms", Json::Num(qkf_mat.time.mean() * 1e3)),
+                ("fused_ms", Json::Num(qkf_fused.time.mean() * 1e3)),
+                ("packed_speedup", Json::Num(qkf_full_speedup)),
+            ]),
+        ),
+        (
+            "weight_dram",
+            Json::obj(vec![
+                ("per_image_bytes_single", Json::Num(single_rep.weight_dram_bytes as f64)),
+                ("per_image_bytes_batch4", Json::Num(batch4_rep.weight_dram_bytes as f64)),
+                ("batch4_ratio", Json::Num(weight_dram_ratio)),
             ]),
         ),
         (

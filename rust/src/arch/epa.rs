@@ -108,6 +108,124 @@ fn transpose_weights(weights: &[i8], cout: usize, taps: usize, wt: &mut [i32]) {
     }
 }
 
+/// Per-layer cache of transposed `[tap][oc]` weight matrices, keyed by node
+/// id. Each engine-pool worker owns a stable [`crate::arch::Accelerator`],
+/// so holding the transposed weights across the images of a batch makes the
+/// weight-stationary story real: the transpose runs once per layer per
+/// batch instead of once per layer per image (and backs the batch's
+/// amortized weight-stream DRAM accounting).
+///
+/// An entry is revalidated on every lookup by the source slice's address,
+/// length and a sampled content fingerprint (see [`weight_fingerprint`]),
+/// so swapping the model under the same node ids recomputes instead of
+/// serving stale weights — even when the allocator hands the new weight
+/// buffer the old buffer's address. The fingerprint samples ≤ 65 bytes, so
+/// a collision needs a different weight vector that agrees on address,
+/// length and every probed byte; callers that swap models on a live engine
+/// and want certainty rather than astronomical odds should also call
+/// [`WeightCache::clear`].
+#[derive(Debug, Default)]
+pub struct WeightCache {
+    entries: std::collections::HashMap<usize, CachedWt>,
+    /// Reuses served across the cache lifetime.
+    pub hits: u64,
+    /// Transposes performed (cold or invalidated entries).
+    pub misses: u64,
+}
+
+#[derive(Debug)]
+struct CachedWt {
+    src_ptr: usize,
+    src_len: usize,
+    src_fp: u64,
+    // Cached transpose shape: wt.len() alone cannot distinguish layouts
+    // with equal cout·taps products (e.g. 4×6 vs 6×4).
+    cout: usize,
+    taps: usize,
+    wt: Vec<i32>,
+}
+
+/// Sampled FNV-1a fingerprint of a weight slice: the length, up to 64
+/// strided probes and the final byte. O(1) per validation, independent of
+/// the layer size.
+fn weight_fingerprint(weights: &[i8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let n = weights.len();
+    let mut h = 0xcbf29ce484222325u64 ^ n as u64;
+    h = h.wrapping_mul(PRIME);
+    if n == 0 {
+        return h;
+    }
+    let step = (n / 64).max(1);
+    let mut i = 0;
+    while i < n {
+        h ^= weights[i] as u8 as u64;
+        h = h.wrapping_mul(PRIME);
+        i += step;
+    }
+    h ^= weights[n - 1] as u8 as u64;
+    h.wrapping_mul(PRIME)
+}
+
+impl WeightCache {
+    /// The transposed weights for `node_id`, recomputed only when the
+    /// source weight slice (address, length or sampled fingerprint) or
+    /// shape changed.
+    pub fn transposed(
+        &mut self,
+        node_id: usize,
+        weights: &[i8],
+        cout: usize,
+        taps: usize,
+    ) -> &[i32] {
+        let ptr = weights.as_ptr() as usize;
+        let len = weights.len();
+        let fp = weight_fingerprint(weights);
+        let entry = self.entries.entry(node_id).or_insert_with(|| CachedWt {
+            src_ptr: 0,
+            src_len: usize::MAX,
+            src_fp: 0,
+            cout: 0,
+            taps: 0,
+            wt: Vec::new(),
+        });
+        if entry.src_ptr == ptr
+            && entry.src_len == len
+            && entry.src_fp == fp
+            && entry.cout == cout
+            && entry.taps == taps
+        {
+            self.hits += 1;
+        } else {
+            entry.wt.clear();
+            entry.wt.resize(taps * cout, 0);
+            transpose_weights(weights, cout, taps, &mut entry.wt);
+            entry.src_ptr = ptr;
+            entry.src_len = len;
+            entry.src_fp = fp;
+            entry.cout = cout;
+            entry.taps = taps;
+            self.misses += 1;
+        }
+        &entry.wt
+    }
+
+    /// Drop every entry (e.g. when retiring a model).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Number of layers currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// The array.
 #[derive(Debug, Clone)]
 pub struct Epa {
@@ -244,21 +362,43 @@ impl Epa {
         wmu: &mut Wmu,
         scratch: &mut ConvScratch,
     ) -> (PackedSpikeMap, EpaStats, SdaStats) {
-        let (ho, wo) = geom.out_dims;
         let taps = p.cin * p.k * p.k;
-        let npix = ho * wo;
         // Same [tap][oc] weight transpose as the materializing path, into
         // reused scratch.
         scratch.wt.clear();
         scratch.wt.resize(taps * p.cout, 0);
         transpose_weights(p.weights, p.cout, taps, &mut scratch.wt);
+        let wt = std::mem::take(&mut scratch.wt);
+        let result = self.run_conv_fused_cached(sda, input, geom, p, &wt, wmu, scratch);
+        scratch.wt = wt;
+        result
+    }
+
+    /// Fused path with a caller-provided transposed weight matrix
+    /// (`wt[tap][oc]`, e.g. from a [`WeightCache`] shared across the images
+    /// of a batch). Identical results to [`Epa::run_conv_fused`]; only the
+    /// per-image transpose is skipped.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_conv_fused_cached(
+        &self,
+        sda: &PipeSda,
+        input: &PackedSpikeMap,
+        geom: &ConvGeom,
+        p: &ConvParams,
+        wt: &[i32],
+        wmu: &mut Wmu,
+        scratch: &mut ConvScratch,
+    ) -> (PackedSpikeMap, EpaStats, SdaStats) {
+        let (ho, wo) = geom.out_dims;
+        let npix = ho * wo;
+        debug_assert_eq!(wt.len(), p.cin * p.k * p.k * p.cout, "transposed weight shape");
         scratch.mp.clear();
         scratch.mp.resize(npix * p.cout, 0);
         scratch.per_pixel.clear();
         scratch.per_pixel.resize(npix, 0);
         let sda_stats = {
             let mut sink = ScatterSink {
-                wt: &scratch.wt,
+                wt,
                 mp: &mut scratch.mp,
                 per_pixel: &mut scratch.per_pixel,
                 cout: p.cout,
@@ -433,6 +573,75 @@ mod tests {
             assert_eq!(sda_st, sda_out.stats());
             assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes);
         }
+    }
+
+    #[test]
+    fn weight_cache_reuses_across_images_and_revalidates() {
+        let mut weights_a: Vec<i8> = (0..4 * 6).map(|i| i as i8).collect();
+        let mut cache = WeightCache::default();
+        // Cold: transpose once.
+        let wt1 = cache.transposed(3, &weights_a, 4, 6).to_vec();
+        let mut want = vec![0i32; 4 * 6];
+        transpose_weights(&weights_a, 4, 6, &mut want);
+        assert_eq!(wt1, want);
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        // Warm: same node, same slice identity — served from cache.
+        let wt2 = cache.transposed(3, &weights_a, 4, 6).to_vec();
+        assert_eq!(wt2, want);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+        // Different node id: its own entry.
+        cache.transposed(5, &weights_a, 4, 6);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+        assert_eq!(cache.len(), 2);
+        // Same node id, different backing slice: revalidation recomputes.
+        let weights_b: Vec<i8> = (0..4 * 6).map(|i| -(i as i8)).collect();
+        let wt3 = cache.transposed(3, &weights_b, 4, 6).to_vec();
+        transpose_weights(&weights_b, 4, 6, &mut want);
+        assert_eq!(wt3, want);
+        assert_eq!(cache.misses, 3);
+        // Same bytes, swapped transpose shape (4x6 -> 6x4): equal products
+        // must not alias — the stored (cout, taps) forces a recompute.
+        let wt_swapped = cache.transposed(3, &weights_b, 6, 4).to_vec();
+        let mut want_swapped = vec![0i32; 24];
+        transpose_weights(&weights_b, 6, 4, &mut want_swapped);
+        assert_eq!(wt_swapped, want_swapped);
+        assert_eq!(cache.misses, 4, "swapped (cout, taps) must invalidate");
+        // Same address AND length but changed content (the allocator-reuse
+        // hazard): the sampled fingerprint must force a recompute.
+        weights_a[0] = 77;
+        let wt4 = cache.transposed(5, &weights_a, 4, 6).to_vec();
+        transpose_weights(&weights_a, 4, 6, &mut want);
+        assert_eq!(wt4, want);
+        assert_eq!(cache.misses, 5, "in-place weight change must invalidate");
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fused_cached_matches_fused_transposing() {
+        let sda = PipeSda::default();
+        let (map, weights, geom) = random_case(17, 3, 8, 10, 10, 3, 1, 0.3);
+        let p = ConvParams { cout: 8, cin: 3, k: 3, thresholds: &[5; 8], tau_half: false, weights: &weights };
+        let epa = Epa { rows: 4, cols: 4, tile_fill: 2 };
+        let packed = PackedSpikeMap::from_map(&map);
+        let mut scratch_a = ConvScratch::default();
+        let mut wmu_a = Wmu::new(8);
+        let (out_a, st_a, sda_a) =
+            epa.run_conv_fused(&sda, &packed, &geom, &p, &mut wmu_a, &mut scratch_a);
+        let mut cache = WeightCache::default();
+        let mut scratch_b = ConvScratch::default();
+        let mut wmu_b = Wmu::new(8);
+        let wt = cache.transposed(0, &weights, 8, 27).to_vec();
+        let (out_b, st_b, sda_b) =
+            epa.run_conv_fused_cached(&sda, &packed, &geom, &p, &wt, &mut wmu_b, &mut scratch_b);
+        assert_eq!(out_a, out_b);
+        assert_eq!(st_a.sops, st_b.sops);
+        assert_eq!(st_a.fires, st_b.fires);
+        assert_eq!(st_a.cycles, st_b.cycles);
+        assert_eq!(st_a.cycles_rigid, st_b.cycles_rigid);
+        assert_eq!(sda_a, sda_b);
+        assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes);
     }
 
     #[test]

@@ -37,4 +37,4 @@ pub mod wtfc;
 pub use energy::EnergyModel;
 pub use fifo::ElasticFifo;
 pub use resource::{ResourceModel, ResourceReport};
-pub use sim::{Accelerator, Report};
+pub use sim::{Accelerator, Report, SimScratch};

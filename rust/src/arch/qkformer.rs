@@ -10,9 +10,18 @@
 //! claim is *zero additional cycles*; the simulator therefore charges no
 //! cycles here, only register/AND-gate energy events, and exposes counters
 //! so Table II's spike-suppression effect (masked K spikes) is measurable.
+//!
+//! Hot-path layout: [`AttenReg`] holds the register as `u64` words and
+//! operates directly on [`PackedSpikeMap`] activations — the Q absorb is a
+//! word-wise OR across channel planes, the K mask a word-wise AND against
+//! the register — so the attention never unpacks a byte map. The original
+//! one-byte-per-bit implementation is kept as
+//! [`on_the_fly_attention_bytes`], the validation mode the simulator's
+//! materializing path runs; both must produce bit-identical outputs and
+//! [`QkfStats`].
 
 use crate::model::ir::TokenMaskMode;
-use crate::snn::SpikeMap;
+use crate::snn::{PackedSpikeMap, SpikeMap};
 
 /// Statistics of one on-the-fly attention application.
 #[derive(Debug, Clone, Default)]
@@ -27,10 +36,13 @@ pub struct QkfStats {
     pub passed: u64,
 }
 
-/// Attention register sized for one write-back tile.
+/// Attention register sized for one write-back tile, bit-packed: one `u64`
+/// word covers 64 token positions (Token mode) or 64 channels (Channel
+/// mode).
 #[derive(Debug, Clone)]
 pub struct AttenReg {
-    bits: Vec<u8>,
+    words: Vec<u64>,
+    nbits: usize,
     mode: TokenMaskMode,
 }
 
@@ -41,50 +53,101 @@ impl AttenReg {
             TokenMaskMode::Token => h * w,
             TokenMaskMode::Channel => c,
         };
-        AttenReg { bits: vec![0; n], mode }
+        AttenReg { words: vec![0u64; n.div_ceil(64)], nbits: n, mode }
+    }
+
+    #[inline]
+    fn bit(&self, i: usize) -> bool {
+        (self.words[i >> 6] >> (i & 63)) & 1 != 0
     }
 
     /// Observe the Q map on its write-back path (① + ② in Fig 5).
-    pub fn absorb_q(&mut self, q: &SpikeMap, stats: &mut QkfStats) {
-        let (c, h, w) = (q.shape().dim(0), q.shape().dim(1), q.shape().dim(2));
-        for ci in 0..c {
-            for y in 0..h {
-                for x in 0..w {
-                    if q.at3(ci, y, x) != 0 {
-                        let idx = match self.mode {
-                            TokenMaskMode::Token => y * w + x,
-                            TokenMaskMode::Channel => ci,
-                        };
-                        if self.bits[idx] == 0 {
-                            self.bits[idx] = 1;
-                            stats.reg_updates += 1;
+    ///
+    /// Token mode ORs every channel plane into the register word-wise;
+    /// Channel mode popcount-tests each plane. `reg_updates` counts 0→1
+    /// bit transitions exactly as the byte-map walk does (each register
+    /// bit's first set, regardless of how many Q spikes map onto it).
+    pub fn absorb_q(&mut self, q: &PackedSpikeMap, stats: &mut QkfStats) {
+        let (c, h, w) = q.dims();
+        let plane = h * w;
+        match self.mode {
+            TokenMaskMode::Token => {
+                debug_assert_eq!(plane, self.nbits, "token register must cover the Q plane");
+                for ci in 0..c {
+                    let base = ci * plane;
+                    for (j, rw) in self.words.iter_mut().enumerate() {
+                        let start = j * 64;
+                        let len = (self.nbits - start).min(64);
+                        let fresh = q.bits_at(base + start, len) & !*rw;
+                        if fresh != 0 {
+                            stats.reg_updates += fresh.count_ones() as u64;
+                            *rw |= fresh;
                         }
+                    }
+                }
+            }
+            TokenMaskMode::Channel => {
+                debug_assert_eq!(c, self.nbits, "channel register must cover the Q channels");
+                for ci in 0..c {
+                    if !self.bit(ci) && q.count_ones_range(ci * plane, plane) != 0 {
+                        self.words[ci >> 6] |= 1u64 << (ci & 63);
+                        stats.reg_updates += 1;
                     }
                 }
             }
         }
     }
 
-    /// Apply the token mask to the K map on its write-back path (③ + ④).
-    pub fn mask_k(&self, k: &SpikeMap, stats: &mut QkfStats) -> SpikeMap {
-        let (c, h, w) = (k.shape().dim(0), k.shape().dim(1), k.shape().dim(2));
-        let mut out = k.clone();
-        for ci in 0..c {
-            for y in 0..h {
-                for x in 0..w {
-                    if k.at3(ci, y, x) == 0 {
+    /// Apply the token mask to the K map on its write-back path (③ + ④):
+    /// a word-wise AND of each K channel plane against the register.
+    pub fn mask_k(&self, k: &PackedSpikeMap, stats: &mut QkfStats) -> PackedSpikeMap {
+        let (c, h, w) = k.dims();
+        let plane = h * w;
+        let mut out = PackedSpikeMap::zeros((c, h, w));
+        match self.mode {
+            TokenMaskMode::Token => {
+                for ci in 0..c {
+                    let base = ci * plane;
+                    for (j, &rw) in self.words.iter().enumerate() {
+                        let start = j * 64;
+                        let len = (self.nbits - start).min(64);
+                        let kb = k.bits_at(base + start, len);
+                        if kb == 0 {
+                            continue;
+                        }
+                        let keep = kb & rw;
+                        let kept = keep.count_ones() as u64;
+                        stats.mask_applies += kb.count_ones() as u64;
+                        stats.passed += kept;
+                        stats.suppressed += kb.count_ones() as u64 - kept;
+                        if keep != 0 {
+                            out.or_bits_at(base + start, len, keep);
+                        }
+                    }
+                }
+            }
+            TokenMaskMode::Channel => {
+                for ci in 0..c {
+                    let base = ci * plane;
+                    let kc = k.count_ones_range(base, plane);
+                    if kc == 0 {
                         continue;
                     }
-                    stats.mask_applies += 1;
-                    let idx = match self.mode {
-                        TokenMaskMode::Token => y * w + x,
-                        TokenMaskMode::Channel => ci,
-                    };
-                    if self.bits[idx] == 0 {
-                        out.set3(ci, y, x, 0);
-                        stats.suppressed += 1;
+                    stats.mask_applies += kc;
+                    if self.bit(ci) {
+                        stats.passed += kc;
+                        // Active channel: copy the K plane through word-wise.
+                        let mut off = 0usize;
+                        while off < plane {
+                            let len = (plane - off).min(64);
+                            let kb = k.bits_at(base + off, len);
+                            if kb != 0 {
+                                out.or_bits_at(base + off, len, kb);
+                            }
+                            off += len;
+                        }
                     } else {
-                        stats.passed += 1;
+                        stats.suppressed += kc;
                     }
                 }
             }
@@ -93,12 +156,74 @@ impl AttenReg {
     }
 }
 
-/// One-shot helper: full on-the-fly attention for a (Q, K) pair.
-pub fn on_the_fly_attention(q: &SpikeMap, k: &SpikeMap, mode: TokenMaskMode) -> (SpikeMap, QkfStats) {
+/// One-shot helper: full on-the-fly attention for a packed (Q, K) pair —
+/// the simulator's default hot path.
+pub fn on_the_fly_attention(
+    q: &PackedSpikeMap,
+    k: &PackedSpikeMap,
+    mode: TokenMaskMode,
+) -> (PackedSpikeMap, QkfStats) {
     let mut stats = QkfStats::default();
-    let mut reg = AttenReg::new(q.shape().dim(0), q.shape().dim(1), q.shape().dim(2), mode);
+    let (c, h, w) = q.dims();
+    let mut reg = AttenReg::new(c, h, w, mode);
     reg.absorb_q(q, &mut stats);
     let out = reg.mask_k(k, &mut stats);
+    (out, stats)
+}
+
+/// Byte-map validation mode: the original one-byte-per-bit register walk,
+/// kept verbatim so the packed path has an independent reference. The
+/// simulator's materializing mode runs this; outputs and [`QkfStats`] must
+/// be bit-identical to [`on_the_fly_attention`].
+pub fn on_the_fly_attention_bytes(
+    q: &SpikeMap,
+    k: &SpikeMap,
+    mode: TokenMaskMode,
+) -> (SpikeMap, QkfStats) {
+    let mut stats = QkfStats::default();
+    let (c, h, w) = (q.shape().dim(0), q.shape().dim(1), q.shape().dim(2));
+    let n = match mode {
+        TokenMaskMode::Token => h * w,
+        TokenMaskMode::Channel => c,
+    };
+    let mut bits = vec![0u8; n];
+    for ci in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if q.at3(ci, y, x) != 0 {
+                    let idx = match mode {
+                        TokenMaskMode::Token => y * w + x,
+                        TokenMaskMode::Channel => ci,
+                    };
+                    if bits[idx] == 0 {
+                        bits[idx] = 1;
+                        stats.reg_updates += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut out = k.clone();
+    for ci in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if k.at3(ci, y, x) == 0 {
+                    continue;
+                }
+                stats.mask_applies += 1;
+                let idx = match mode {
+                    TokenMaskMode::Token => y * w + x,
+                    TokenMaskMode::Channel => ci,
+                };
+                if bits[idx] == 0 {
+                    out.set3(ci, y, x, 0);
+                    stats.suppressed += 1;
+                } else {
+                    stats.passed += 1;
+                }
+            }
+        }
+    }
     (out, stats)
 }
 
@@ -109,19 +234,54 @@ mod tests {
     use crate::tensor::{Shape, Tensor};
     use crate::testing::forall;
 
+    fn packed_pair(
+        g: &mut crate::testing::Gen,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> (SpikeMap, SpikeMap, PackedSpikeMap, PackedSpikeMap) {
+        let qb = g.spikes(c * h * w, 0.3);
+        let kb = g.spikes(c * h * w, 0.5);
+        let q = Tensor::from_vec(Shape::d3(c, h, w), qb);
+        let k = Tensor::from_vec(Shape::d3(c, h, w), kb);
+        let qp = PackedSpikeMap::from_map(&q);
+        let kp = PackedSpikeMap::from_map(&k);
+        (q, k, qp, kp)
+    }
+
     #[test]
     fn matches_functional_token_mask() {
         forall("on-the-fly == functional", 50, |g| {
             let c = g.size(1, 4);
             let h = g.size(1, 6);
             let w = g.size(1, 6);
-            let qb = g.spikes(c * h * w, 0.3);
-            let kb = g.spikes(c * h * w, 0.5);
-            let q = Tensor::from_vec(Shape::d3(c, h, w), qb);
-            let k = Tensor::from_vec(Shape::d3(c, h, w), kb);
+            let (q, k, qp, kp) = packed_pair(g, c, h, w);
             for mode in [TokenMaskMode::Token, TokenMaskMode::Channel] {
-                let (out, _) = on_the_fly_attention(&q, &k, mode);
-                assert_eq!(out, token_mask(&q, &k, mode));
+                let (out, _) = on_the_fly_attention(&qp, &kp, mode);
+                assert_eq!(out.to_map(), token_mask(&q, &k, mode));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_packed_matches_byte_validation_mode() {
+        // The packed hot path must agree bit-for-bit with the byte-map
+        // validation walk — output AND all four counters — including maps
+        // wider than one 64-bit word and unaligned channel planes.
+        forall("packed QKF == byte QKF", 60, |g| {
+            let c = g.size(1, 5);
+            let h = g.size(1, 6);
+            let w = *g.pick(&[1usize, 3, 7, 16, 63, 64, 65, 80]);
+            let (q, k, qp, kp) = packed_pair(g, c, h, w);
+            for mode in [TokenMaskMode::Token, TokenMaskMode::Channel] {
+                let (out_p, st_p) = on_the_fly_attention(&qp, &kp, mode);
+                let (out_b, st_b) = on_the_fly_attention_bytes(&q, &k, mode);
+                let label = format!("c={c} h={h} w={w} mode={mode:?}");
+                assert_eq!(out_p.to_map(), out_b, "{label}");
+                assert_eq!(st_p.reg_updates, st_b.reg_updates, "{label}");
+                assert_eq!(st_p.mask_applies, st_b.mask_applies, "{label}");
+                assert_eq!(st_p.suppressed, st_b.suppressed, "{label}");
+                assert_eq!(st_p.passed, st_b.passed, "{label}");
             }
         });
     }
@@ -136,9 +296,13 @@ mod tests {
                 k.set3(ci, y, y, 1);
             }
         }
-        let (out, st) = on_the_fly_attention(&q, &k, TokenMaskMode::Token);
+        let (out, st) = on_the_fly_attention(
+            &PackedSpikeMap::from_map(&q),
+            &PackedSpikeMap::from_map(&k),
+            TokenMaskMode::Token,
+        );
         assert_eq!(st.passed + st.suppressed, st.mask_applies);
-        assert_eq!(out.count_nonzero() as u64, st.passed);
+        assert_eq!(out.count_ones() as u64, st.passed);
         // only token (0,0) is active in Q
         assert_eq!(st.passed, 2);
     }
@@ -152,7 +316,7 @@ mod tests {
         }
         let mut st = QkfStats::default();
         let mut reg = AttenReg::new(4, 2, 2, TokenMaskMode::Token);
-        reg.absorb_q(&q, &mut st);
+        reg.absorb_q(&PackedSpikeMap::from_map(&q), &mut st);
         assert_eq!(st.reg_updates, 1, "OR-reduction: first set wins, rest are free");
     }
 }

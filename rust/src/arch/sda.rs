@@ -8,8 +8,9 @@
 //!
 //! Stages and their timing model (all rate-decoupled by elastic FIFOs):
 //! * **IG** — scans the dense map `scan_width` pixels/cycle and emits spike
-//!   indexes: `cycles = C·H·W / scan_width` (the scan) overlapping the
-//!   downstream stages.
+//!   indexes: `cycles = ceil(C·H·W / scan_width)` (the scan; a partial
+//!   final beat still costs a full cycle) overlapping the downstream
+//!   stages.
 //! * **CP gen** — 1 event/cycle: computes up to `k²` CPs per event
 //!   (unrolled in HW, so still 1 cycle/event).
 //! * **CP map + diffusion** — 1 event/cycle: broadcast to the ≤`k²`
@@ -244,7 +245,8 @@ impl PipeSda {
             }
         }
         // Timing: IG scan overlaps CP/map stages through elastic FIFOs.
-        let scan = (geom.in_dims.0 * h * w) as u64 / self.scan_width.max(1) as u64;
+        // A partial final scan beat still costs a full cycle.
+        let scan = ((geom.in_dims.0 * h * w) as u64).div_ceil(self.scan_width.max(1) as u64);
         let ev = (events_in.len() as u64).div_ceil(self.events_per_cycle.max(1) as u64);
         let fill = self.stages as u64;
         out.cycles = fill + scan.max(ev);
@@ -370,8 +372,9 @@ impl PipeSda {
                 }
             }
         }
-        // Timing: identical elastic composition to the materializing path.
-        let scan = (geom.in_dims.0 * h * w) as u64 / self.scan_width.max(1) as u64;
+        // Timing: identical elastic composition to the materializing path
+        // (including the ceil on the final partial scan beat).
+        let scan = ((geom.in_dims.0 * h * w) as u64).div_ceil(self.scan_width.max(1) as u64);
         let ev = stats.input_spikes.div_ceil(self.events_per_cycle.max(1) as u64);
         let fill = self.stages as u64;
         stats.cycles = fill + scan.max(ev);
@@ -432,6 +435,24 @@ mod tests {
         assert_eq!(out.events.len(), 1);
         // k=1: widx = ic·1 + 0 = 2
         assert_eq!(out.events[0].widx, 2);
+    }
+
+    #[test]
+    fn ig_scan_partial_beat_costs_full_cycle() {
+        // Regression (cycle undercount, same class as the WTFC filter-scan
+        // fix): 33 pixels over the 32-wide IG scan must charge ceil(33/32)
+        // = 2 scan cycles, not the floor's 1 — in both SDA paths.
+        let m = one_spike_map(1, 3, 11, (0, 1, 5));
+        let geom = ConvGeom::new(1, 1, 0, (1, 3, 11));
+        let sda = PipeSda::default();
+        let out = sda.process(&m, &geom);
+        // fill (3 stages) + max(scan = 2, ev = ceil(1/8) = 1)
+        assert_eq!(out.cycles, 3 + 2);
+        assert_eq!(out.cycles_rigid, 3 + 2 + 1);
+        let packed = crate::snn::PackedSpikeMap::from_map(&m);
+        let mut sink = MaterializeSink::for_geom(&geom);
+        let stats = sda.stream(&packed, &geom, &mut sink);
+        assert_eq!(stats, out.stats());
     }
 
     #[test]

@@ -10,14 +10,18 @@
 //! Hot-path layout (see DESIGN.md §Hot path): activations travel between
 //! layers as word-packed bit maps ([`PackedSpikeMap`]); conv layers run the
 //! fused zero-materialization SDA→EPA stream by default
-//! ([`crate::arch::epa::Epa::run_conv_fused`]); pooling and residual OR are
+//! ([`crate::arch::epa::Epa::run_conv_fused_cached`], fed by a per-node
+//! [`WeightCache`] of transposed weights that persists across the images of
+//! a batch); the QKFormer attention register and the WTFC TTFS filter
+//! operate on the packed words directly; pooling and residual OR are
 //! word-wise; spike counting is popcount. [`Accelerator::materializing`]
 //! builds the validation-mode instance that routes convs through the
-//! event-vector path instead — both must produce bit-identical reports.
+//! event-vector path and the attention/WTFC through the byte-map walks —
+//! both must produce bit-identical reports.
 
 use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
-use crate::arch::epa::{ConvParams, ConvScratch, Epa};
-use crate::arch::qkformer::on_the_fly_attention;
+use crate::arch::epa::{ConvParams, ConvScratch, Epa, WeightCache};
+use crate::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use crate::arch::sda::{ConvGeom, PipeSda};
 use crate::arch::wmu::Wmu;
 use crate::arch::wtfc::Wtfc;
@@ -57,6 +61,9 @@ pub struct Report {
     pub modules: ModuleCycles,
     /// Activity counters (drives the energy model).
     pub activity: Activity,
+    /// Weight-stream DRAM bytes charged to this image (conv + FC weights,
+    /// after batch amortization; included in `activity.dram_bytes`).
+    pub weight_dram_bytes: u64,
     /// Total spikes across all non-terminal nodes (Table II "TS").
     pub total_spikes: u64,
     /// QKFormer: K spikes suppressed by the token mask.
@@ -77,6 +84,18 @@ pub struct Report {
     pub gsops_w: f64,
 }
 
+/// Reusable per-engine simulation state: the conv scratch buffers and the
+/// per-node transposed-weight cache. One instance per engine replica; it
+/// persists across the images of a batch so weight transposes amortize
+/// (the weight-stationary story behind the batcher's DRAM credit).
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Conv scratch (membrane lanes, per-pixel counts, fallback transpose).
+    pub conv: ConvScratch,
+    /// Transposed `[tap][oc]` weights keyed by node id.
+    pub weights: WeightCache,
+}
+
 /// The simulated accelerator instance.
 #[derive(Debug, Clone)]
 pub struct Accelerator {
@@ -84,8 +103,10 @@ pub struct Accelerator {
     pub cfg: ArchConfig,
     /// Elastic FIFO decoupling enabled (ablation switch; paper = true).
     pub elastic: bool,
-    /// Fused zero-materialization conv path (default). `false` routes convs
-    /// through the materializing event-vector path for validation.
+    /// Fused packed execution (default): zero-materialization convs, packed
+    /// attention register, packed TTFS filter. `false` routes convs through
+    /// the materializing event-vector path and the attention/WTFC through
+    /// the byte-map walks for validation.
     pub fused: bool,
     sda: PipeSda,
     epa: Epa,
@@ -114,9 +135,9 @@ impl Accelerator {
         a
     }
 
-    /// Validation-mode constructor: materializing (event-vector) conv path.
-    /// Reports must be bit-identical to the fused default; only host-side
-    /// speed differs.
+    /// Validation-mode constructor: materializing (event-vector) conv path
+    /// plus byte-map attention and WTFC. Reports must be bit-identical to
+    /// the fused default; only host-side speed differs.
     pub fn materializing(cfg: ArchConfig) -> Self {
         let mut a = Self::new(cfg);
         a.fused = false;
@@ -125,20 +146,41 @@ impl Accelerator {
 
     /// Simulate one image (input spike map) through the model.
     pub fn run(&self, model: &Model, input: &SpikeMap) -> Result<Report> {
+        self.run_cached(model, input, &mut SimScratch::default(), 1.0)
+    }
+
+    /// Simulate one image with reusable per-engine `scratch` (transposed
+    /// weights cached across calls) and a weight-stream amortization
+    /// factor: the fraction of the conv/FC weight DRAM traffic this image
+    /// is charged. Standalone inference passes `1.0`; the coordinator's
+    /// batch path passes [`crate::coordinator::Batcher::dram_amortization`]
+    /// of the batch size — the batch pays one weight stream instead of `n`
+    /// (the per-worker [`WeightCache`] is what makes that physically
+    /// honest). Timing is unaffected: the W-FIFO replay still paces the
+    /// array identically; only off-chip traffic (and therefore DRAM
+    /// energy) is credited.
+    pub fn run_cached(
+        &self,
+        model: &Model,
+        input: &SpikeMap,
+        scratch: &mut SimScratch,
+        weight_amort: f64,
+    ) -> Result<Report> {
         let (ic, ih, iw) = model.input_dims;
         if input.shape().dims() != [ic, ih, iw] {
             bail!("input shape {} != model input ({ic},{ih},{iw})", input.shape());
         }
+        let SimScratch { conv: conv_scratch, weights: weight_cache } = scratch;
         let mut report = Report::default();
         let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
         let mut acts: Vec<PackedSpikeMap> = Vec::with_capacity(model.nodes.len());
-        let mut scratch = ConvScratch::default();
+        let mut fc_weight_bytes = 0u64;
         let mut util_sum = 0.0;
         let mut util_n = 0usize;
         // Input image fetch: C·H·W bits from off-chip, byte-packed.
         report.activity.dram_bytes += ((ic * ih * iw) as u64).div_ceil(8);
 
-        for node in &model.nodes {
+        for (nid, node) in model.nodes.iter().enumerate() {
             match &node.op {
                 Op::Input => {
                     let packed = PackedSpikeMap::from_map(input);
@@ -158,11 +200,21 @@ impl Accelerator {
                         weights,
                     };
                     // Fused default: packed scan → sink scatter, no event
-                    // vector. Validation mode materializes the events and
+                    // vector, transposed weights served from the per-node
+                    // cache. Validation mode materializes the events and
                     // replays them; both yield bit-identical reports.
                     let (out, st, sda_c, sda_cr) = if self.fused {
-                        let (out, st, sda_st) =
-                            self.epa.run_conv_fused(&self.sda, x, &geom, &params, &mut wmu, &mut scratch);
+                        let taps = *cin * *k * *k;
+                        let wt = weight_cache.transposed(nid, weights, *cout, taps);
+                        let (out, st, sda_st) = self.epa.run_conv_fused_cached(
+                            &self.sda,
+                            x,
+                            &geom,
+                            &params,
+                            wt,
+                            &mut wmu,
+                            conv_scratch,
+                        );
                         (out, st, sda_st.cycles, sda_st.cycles_rigid)
                     } else {
                         let dense = x.to_map();
@@ -225,33 +277,53 @@ impl Accelerator {
                     acts.push(out);
                 }
                 Op::TokenMask { mode } => {
-                    let q = acts[node.inputs[0]].to_map();
-                    let k = acts[node.inputs[1]].to_map();
-                    let (out, st) = on_the_fly_attention(&q, &k, *mode);
                     // On-the-fly: rides the write-back beats, zero cycles
                     // (the paper's central claim for Fig 5); register energy
-                    // is charged as buffer traffic.
+                    // is charged as buffer traffic. Default path stays on
+                    // the packed words; validation mode runs the byte-map
+                    // walk — same output bits, same QkfStats.
+                    let (out, st) = if self.fused {
+                        on_the_fly_attention(
+                            &acts[node.inputs[0]],
+                            &acts[node.inputs[1]],
+                            *mode,
+                        )
+                    } else {
+                        let q = acts[node.inputs[0]].to_map();
+                        let k = acts[node.inputs[1]].to_map();
+                        let (out, st) = on_the_fly_attention_bytes(&q, &k, *mode);
+                        (PackedSpikeMap::from_map(&out), st)
+                    };
                     report.activity.buf_bytes += (st.reg_updates + st.mask_applies).div_ceil(8);
                     report.qkf_suppressed += st.suppressed;
-                    report.total_spikes += out.count_nonzero() as u64;
-                    acts.push(PackedSpikeMap::from_map(&out));
+                    report.total_spikes += out.count_ones() as u64;
+                    acts.push(out);
                 }
                 Op::W2ttfsFc { classes, cin, ho, wo, window, weights, .. } => {
-                    let x = acts[node.inputs[0]].to_map();
-                    let out = self.wtfc.run(&x, *classes, *cin, *ho, *wo, *window, weights);
+                    let x = &acts[node.inputs[0]];
+                    // Default path: popcount TTFS filter over the packed
+                    // rows; validation mode walks the byte map.
+                    let out = if self.fused {
+                        self.wtfc.run_packed(x, *classes, *cin, *ho, *wo, *window, weights)
+                    } else {
+                        self.wtfc.run(&x.to_map(), *classes, *cin, *ho, *wo, *window, weights)
+                    };
                     let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
                     report.cycles += cyc;
                     report.cycles_rigid += out.cycles_rigid;
                     report.modules.wtfc += cyc;
                     report.activity.sops += out.sops;
-                    // FC weights stream from off-chip once.
-                    report.activity.dram_bytes += weights.len() as u64;
+                    // FC weights stream from off-chip (amortized below).
+                    fc_weight_bytes += weights.len() as u64;
                     report.logits = out.logits;
                     acts.push(PackedSpikeMap::zeros((*classes, 1, 1)));
                 }
             }
         }
-        report.activity.dram_bytes += wmu.dram_bytes;
+        // Weight-stream DRAM: conv weights (WMU) + FC weights, scaled by
+        // the batch amortization factor (1.0 = standalone image).
+        report.weight_dram_bytes = amortize_bytes(wmu.dram_bytes + fc_weight_bytes, weight_amort);
+        report.activity.dram_bytes += report.weight_dram_bytes;
         report.activity.cycles = report.cycles;
         report.predicted = crate::model::exec::argmax_first(&report.logits);
         report.epa_utilization = if util_n == 0 { 0.0 } else { util_sum / util_n as f64 };
@@ -273,9 +345,22 @@ impl Accelerator {
     }
 }
 
+/// Apply the weight-stream amortization factor to a byte count. A factor at
+/// or above 1.0 charges the bytes exactly (no float round-trip on the
+/// standalone path); fractions round to the nearest byte.
+fn amortize_bytes(bytes: u64, factor: f64) -> u64 {
+    if !factor.is_finite() || factor >= 1.0 {
+        bytes
+    } else {
+        (bytes as f64 * factor.max(0.0)).round() as u64
+    }
+}
+
 /// Spike max-pool (window OR) in the spiking-buffer datapath, word-packed:
-/// each output row is built by OR-ing `k` packed input rows and collapsing
-/// the horizontal window with shifted ORs — no per-pixel byte walk.
+/// each output row is built by OR-ing `k` packed input rows into a
+/// multi-word row accumulator and collapsing the horizontal window with
+/// shifted ORs across word boundaries — no per-pixel byte or bit walk for
+/// any map width (the former `w > 64` per-bit probe path is gone).
 ///
 /// Errors (instead of the former `usize`-underflow panic) when the window
 /// does not fit the input.
@@ -290,45 +375,53 @@ pub fn pool_or(x: &PackedSpikeMap, k: usize, stride: usize) -> Result<PackedSpik
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
     let mut out = PackedSpikeMap::zeros((c, ho, wo));
-    if w <= 64 {
-        // Fast path: one input row fits a single word. OR the k window rows
-        // into `acc`, then `horiz` bit i = OR of acc bits [i, i+k).
-        for ci in 0..c {
-            for oy in 0..ho {
-                let mut acc = 0u64;
-                for ky in 0..k {
-                    acc |= x.bits_at((ci * h + oy * stride + ky) * w, w);
-                }
-                let mut horiz = acc;
-                for sh in 1..k {
-                    horiz |= acc >> sh;
-                }
-                for ox in 0..wo {
-                    if (horiz >> (ox * stride)) & 1 != 0 {
-                        out.set((ci * ho + oy) * wo + ox);
-                    }
+    // Row buffers sized for one full input row, word-aligned at bit 0.
+    let row_words = w.div_ceil(64);
+    let mut acc = vec![0u64; row_words];
+    let mut horiz = vec![0u64; row_words];
+    for ci in 0..c {
+        for oy in 0..ho {
+            // acc = OR of the k window rows.
+            acc.fill(0);
+            for ky in 0..k {
+                let start = (ci * h + oy * stride + ky) * w;
+                let mut off = 0usize;
+                for aw in acc.iter_mut() {
+                    let len = (w - off).min(64);
+                    *aw |= x.bits_at(start + off, len);
+                    off += len;
                 }
             }
-        }
-    } else {
-        // General path for wide maps: per-window bit probe.
-        for ci in 0..c {
-            for oy in 0..ho {
-                'pix: for ox in 0..wo {
-                    for ky in 0..k {
-                        let row = (ci * h + oy * stride + ky) * w + ox * stride;
-                        for kx in 0..k {
-                            if x.get(row + kx) {
-                                out.set((ci * ho + oy) * wo + ox);
-                                continue 'pix;
-                            }
-                        }
-                    }
+            // horiz bit i = OR of acc bits [i, i+k).
+            horiz.copy_from_slice(&acc);
+            for sh in 1..k {
+                shr_or_into(&mut horiz, &acc, sh);
+            }
+            for ox in 0..wo {
+                let bit = ox * stride;
+                if (horiz[bit >> 6] >> (bit & 63)) & 1 != 0 {
+                    out.set((ci * ho + oy) * wo + ox);
                 }
             }
         }
     }
     Ok(out)
+}
+
+/// `dst |= src >> sh` over multi-word bit rows: bit `i` of `dst` ORs bit
+/// `i + sh` of `src`; bits shifted in from beyond `src` are zero.
+fn shr_or_into(dst: &mut [u64], src: &[u64], sh: usize) {
+    let ws = sh >> 6;
+    let bs = sh & 63;
+    for (j, d) in dst.iter_mut().enumerate() {
+        let lo = src.get(j + ws).copied().unwrap_or(0);
+        *d |= if bs == 0 {
+            lo
+        } else {
+            let hi = src.get(j + ws + 1).copied().unwrap_or(0);
+            (lo >> bs) | (hi << (64 - bs))
+        };
+    }
 }
 
 #[cfg(test)]
@@ -358,31 +451,84 @@ mod tests {
 
     #[test]
     fn fused_and_materializing_reports_bit_identical() {
-        // The fused zero-materialization path is the default; the
-        // materializing path is the validation mode. Everything the report
-        // carries must match exactly.
+        // The fused packed path (convs, attention register, TTFS filter) is
+        // the default; the materializing byte-map path is the validation
+        // mode. Everything the report carries must match exactly, across
+        // models with and without attention and across several inputs.
         for model in [zoo::tiny(10, 3), zoo::resnet11(10, 3), zoo::qkfresnet11(10, 3)] {
-            let x = input(13);
-            let fused = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
-            let mat = Accelerator::materializing(ArchConfig::default()).run(&model, &x).unwrap();
-            assert_eq!(fused.logits, mat.logits, "{}", model.name);
-            assert_eq!(fused.cycles, mat.cycles, "{}", model.name);
-            assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{}", model.name);
-            assert_eq!(fused.modules.sda, mat.modules.sda, "{}", model.name);
-            assert_eq!(fused.modules.epa, mat.modules.epa, "{}", model.name);
-            assert_eq!(fused.modules.wtfc, mat.modules.wtfc, "{}", model.name);
-            assert_eq!(fused.modules.other, mat.modules.other, "{}", model.name);
-            assert_eq!(fused.total_spikes, mat.total_spikes, "{}", model.name);
-            assert_eq!(fused.qkf_suppressed, mat.qkf_suppressed, "{}", model.name);
-            assert_eq!(fused.activity.sops, mat.activity.sops, "{}", model.name);
-            assert_eq!(fused.activity.buf_bytes, mat.activity.buf_bytes, "{}", model.name);
-            assert_eq!(fused.activity.dram_bytes, mat.activity.dram_bytes, "{}", model.name);
-            assert!(
-                (fused.energy.total_j() - mat.energy.total_j()).abs() < 1e-18,
-                "{}",
-                model.name
-            );
+            for seed in [13u64, 99, 2024] {
+                let x = input(seed);
+                let fused = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
+                let mat =
+                    Accelerator::materializing(ArchConfig::default()).run(&model, &x).unwrap();
+                let label = format!("{} seed={seed}", model.name);
+                assert_eq!(fused.logits, mat.logits, "{label}");
+                assert_eq!(fused.cycles, mat.cycles, "{label}");
+                assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{label}");
+                assert_eq!(fused.modules.sda, mat.modules.sda, "{label}");
+                assert_eq!(fused.modules.epa, mat.modules.epa, "{label}");
+                assert_eq!(fused.modules.wtfc, mat.modules.wtfc, "{label}");
+                assert_eq!(fused.modules.other, mat.modules.other, "{label}");
+                assert_eq!(fused.total_spikes, mat.total_spikes, "{label}");
+                assert_eq!(fused.qkf_suppressed, mat.qkf_suppressed, "{label}");
+                assert_eq!(fused.activity.sops, mat.activity.sops, "{label}");
+                assert_eq!(fused.activity.buf_bytes, mat.activity.buf_bytes, "{label}");
+                assert_eq!(fused.activity.dram_bytes, mat.activity.dram_bytes, "{label}");
+                assert_eq!(fused.weight_dram_bytes, mat.weight_dram_bytes, "{label}");
+                assert!(
+                    (fused.energy.total_j() - mat.energy.total_j()).abs() < 1e-18,
+                    "{label}"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn cached_run_bit_identical_and_reuses_transposes() {
+        // Reusing SimScratch across images must not change any report field
+        // (cache correctness), and the second image must be all cache hits.
+        let m = zoo::qkfresnet11(10, 3);
+        let acc = Accelerator::new(ArchConfig::default());
+        let mut scratch = SimScratch::default();
+        for seed in [1u64, 2, 3] {
+            let x = input(seed);
+            let fresh = acc.run(&m, &x).unwrap();
+            let cached = acc.run_cached(&m, &x, &mut scratch, 1.0).unwrap();
+            assert_eq!(fresh.logits, cached.logits, "seed={seed}");
+            assert_eq!(fresh.cycles, cached.cycles, "seed={seed}");
+            assert_eq!(fresh.activity.dram_bytes, cached.activity.dram_bytes, "seed={seed}");
+            assert_eq!(fresh.total_spikes, cached.total_spikes, "seed={seed}");
+        }
+        let convs = m.num_convs() as u64;
+        assert_eq!(scratch.weights.misses, convs, "one transpose per conv layer");
+        assert_eq!(scratch.weights.hits, 2 * convs, "images 2 and 3 reuse every layer");
+    }
+
+    #[test]
+    fn batch_weight_amortization_scales_weight_dram() {
+        // A 4-image batch pays one weight stream: each image is charged
+        // ~1/4 of the standalone conv+FC weight DRAM, while the per-image
+        // input fetch is unchanged and function/timing are untouched.
+        let m = zoo::resnet11(10, 3);
+        let x = input(5);
+        let acc = Accelerator::new(ArchConfig::default());
+        let mut scratch = SimScratch::default();
+        let single = acc.run_cached(&m, &x, &mut scratch, 1.0).unwrap();
+        let batched = acc.run_cached(&m, &x, &mut scratch, 0.25).unwrap();
+        assert!(single.weight_dram_bytes > 0);
+        assert_eq!(
+            batched.weight_dram_bytes,
+            ((single.weight_dram_bytes as f64) * 0.25).round() as u64
+        );
+        assert!(batched.weight_dram_bytes < single.weight_dram_bytes);
+        assert_eq!(
+            single.activity.dram_bytes - single.weight_dram_bytes,
+            batched.activity.dram_bytes - batched.weight_dram_bytes,
+            "non-weight DRAM (input fetch) must be unaffected"
+        );
+        assert_eq!(single.logits, batched.logits);
+        assert_eq!(single.cycles, batched.cycles);
+        assert!(batched.energy.total_j() < single.energy.total_j());
     }
 
     #[test]
@@ -401,7 +547,9 @@ mod tests {
         forall("packed pool == dense pool", 60, |g| {
             let c = g.size(1, 3);
             let h = g.size(2, 12);
-            let w = g.size(2, 12);
+            // Include widths beyond one 64-bit word: the multi-word
+            // shifted-OR must behave exactly like the dense window walk.
+            let w = *g.pick(&[2usize, 5, 12, 63, 64, 65, 70, 130]);
             let k = g.size(1, h.min(w).min(4));
             let stride = g.size(1, 3);
             let bits = g.spikes(c * h * w, 0.3);
@@ -504,6 +652,7 @@ mod tests {
             assert!((0.0..=1.0).contains(&rep.epa_utilization));
             assert_eq!(rep.logits.len(), 10);
             assert!(rep.predicted < 10);
+            assert!(rep.weight_dram_bytes <= rep.activity.dram_bytes);
         });
     }
 

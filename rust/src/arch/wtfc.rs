@@ -9,11 +9,19 @@
 //!   strategy): scaling by `vld_cnt/window²` without any multiplier or
 //!   divider — the common `1/window²` is a constant shift.
 //!
-//! Timing: filter scans `C·H·W / lanes` cycles; the FCU spends
+//! Timing: filter scans `ceil(C·H·W / lanes)` cycles (a partial final lane
+//! beat still costs a full cycle); the FCU spends
 //! `Σ vld_cnt · ceil(classes/lanes)` cycles; elastic FIFO between them
 //! composes with `max()`.
+//!
+//! Hot-path layout: [`Wtfc::run_packed`] computes each window's `vld_cnt`
+//! as popcounts over the packed rows ([`PackedSpikeMap::bits_at`] segments,
+//! chunked so windows wider than one `u64` word still take the packed
+//! path). The original per-pixel byte walk is kept as [`Wtfc::run`], the
+//! validation mode; both funnel through one shared accumulator so the
+//! outputs cannot silently diverge.
 
-use crate::snn::SpikeMap;
+use crate::snn::{PackedSpikeMap, SpikeMap};
 
 /// Result of a WTFC pass.
 #[derive(Debug, Clone, Default)]
@@ -45,7 +53,7 @@ impl Wtfc {
         Wtfc { lanes: cfg.fcu_lanes }
     }
 
-    /// Run W2TTFS + FC over the final spike map.
+    /// Run W2TTFS + FC over the final spike map (byte-map validation mode).
     ///
     /// `weights[k][c·ho·wo + p]`, identical layout to
     /// [`crate::model::exec::w2ttfs_fc`], with which the result must agree
@@ -61,19 +69,72 @@ impl Wtfc {
         window: usize,
         weights: &[i8],
     ) -> WtfcOutput {
+        self.run_inner(classes, cin, ho, wo, window, weights, |c, oy, ox| {
+            let mut vld = 0u32;
+            for ky in 0..window {
+                for kx in 0..window {
+                    vld += x.at3(c, oy * window + ky, ox * window + kx) as u32;
+                }
+            }
+            vld
+        })
+    }
+
+    /// Run W2TTFS + FC over a word-packed final spike map (the default hot
+    /// path): per-window `vld_cnt` is a popcount over packed row segments,
+    /// chunked ≤ 64 bits so any window/map width stays on the packed path.
+    /// Must produce the same [`WtfcOutput`] as [`Wtfc::run`] bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_packed(
+        &self,
+        x: &PackedSpikeMap,
+        classes: usize,
+        cin: usize,
+        ho: usize,
+        wo: usize,
+        window: usize,
+        weights: &[i8],
+    ) -> WtfcOutput {
+        let (cdim, h, w) = x.dims();
+        debug_assert_eq!(cdim, cin, "packed input channels must match cin");
+        debug_assert_eq!((h, w), (ho * window, wo * window), "packed input must tile the windows");
+        self.run_inner(classes, cin, ho, wo, window, weights, |c, oy, ox| {
+            let mut vld = 0u32;
+            for ky in 0..window {
+                let row = (c * h + oy * window + ky) * w + ox * window;
+                let mut off = 0usize;
+                while off < window {
+                    let len = (window - off).min(64);
+                    vld += x.bits_at(row + off, len).count_ones();
+                    off += len;
+                }
+            }
+            vld
+        })
+    }
+
+    /// Shared filter + FCU accumulator: `vld_of(c, oy, ox)` is the only
+    /// thing the byte and packed paths implement differently.
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner(
+        &self,
+        classes: usize,
+        cin: usize,
+        ho: usize,
+        wo: usize,
+        window: usize,
+        weights: &[i8],
+        vld_of: impl Fn(usize, usize, usize) -> u32,
+    ) -> WtfcOutput {
         let mut out = WtfcOutput { logits: vec![0i64; classes], ..Default::default() };
-        let class_beats = classes.div_ceil(self.lanes.max(1)) as u64;
+        let lanes = self.lanes.max(1) as u64;
+        let class_beats = (classes as u64).div_ceil(lanes);
         let mut fcu_cycles = 0u64;
         for c in 0..cin {
             for oy in 0..ho {
                 for ox in 0..wo {
                     // TTFS filter: count valid spikes in the window.
-                    let mut vld = 0u32;
-                    for ky in 0..window {
-                        for kx in 0..window {
-                            vld += x.at3(c, oy * window + ky, ox * window + kx) as u32;
-                        }
-                    }
+                    let vld = vld_of(c, oy, ox);
                     if vld == 0 {
                         out.skipped_windows += 1;
                         continue;
@@ -89,7 +150,8 @@ impl Wtfc {
                 }
             }
         }
-        let scan_cycles = (cin * ho * wo * window * window) as u64 / self.lanes.max(1) as u64;
+        // A partial final lane beat still occupies a full scan cycle.
+        let scan_cycles = ((cin * ho * wo * window * window) as u64).div_ceil(lanes);
         out.cycles = 4 + scan_cycles.max(fcu_cycles); // 4 = filter+FCU fill
         out.cycles_rigid = 4 + scan_cycles + fcu_cycles;
         out
@@ -174,6 +236,57 @@ mod tests {
             assert_eq!(got.logits, want);
             assert_eq!(got.sops, want_sops);
         });
+    }
+
+    #[test]
+    fn prop_packed_matches_byte_validation_mode() {
+        // The packed popcount filter must reproduce the byte-map walk's
+        // WtfcOutput exactly — logits, cycles, tokens, SOPs — including
+        // maps wider than one 64-bit word (wo·window > 64).
+        forall("packed WTFC == byte WTFC", 50, |g| {
+            let cin = g.size(1, 4);
+            let window = *g.pick(&[1usize, 2, 3, 4]);
+            let wo = *g.pick(&[1usize, 2, 3, 17, 20, 33]);
+            let ho = g.size(1, 3);
+            let classes = g.size(2, 8);
+            let lanes = *g.pick(&[1usize, 3, 8, 16]);
+            let bits = g.spikes(cin * ho * window * wo * window, 0.35);
+            let x = Tensor::from_vec(Shape::d3(cin, ho * window, wo * window), bits);
+            let weights: Vec<i8> =
+                (0..classes * cin * ho * wo).map(|_| g.int(-9, 9) as i8).collect();
+            let wtfc = Wtfc { lanes };
+            let byte = wtfc.run(&x, classes, cin, ho, wo, window, &weights);
+            let packed = wtfc.run_packed(
+                &crate::snn::PackedSpikeMap::from_map(&x),
+                classes,
+                cin,
+                ho,
+                wo,
+                window,
+                &weights,
+            );
+            let label = format!("cin={cin} ho={ho} wo={wo} window={window} lanes={lanes}");
+            assert_eq!(packed.logits, byte.logits, "{label}");
+            assert_eq!(packed.cycles, byte.cycles, "{label}");
+            assert_eq!(packed.cycles_rigid, byte.cycles_rigid, "{label}");
+            assert_eq!(packed.sops, byte.sops, "{label}");
+            assert_eq!(packed.tokens, byte.tokens, "{label}");
+            assert_eq!(packed.skipped_windows, byte.skipped_windows, "{label}");
+        });
+    }
+
+    #[test]
+    fn filter_scan_partial_lane_beat_costs_full_cycle() {
+        // Regression (cycle undercount): 9 window positions over 8 lanes
+        // must cost ceil(9/8) = 2 scan cycles, not the floor's 1.
+        let x: SpikeMap = Tensor::zeros(Shape::d3(1, 3, 3));
+        let w = Wtfc { lanes: 8 };
+        let out = w.run(&x, 2, 1, 1, 1, 3, &[1i8; 2]);
+        assert_eq!(out.cycles, 4 + 2, "partial lane beat must cost a full cycle");
+        assert_eq!(out.cycles_rigid, 4 + 2);
+        let packed = w.run_packed(&PackedSpikeMap::from_map(&x), 2, 1, 1, 1, 3, &[1i8; 2]);
+        assert_eq!(packed.cycles, out.cycles);
+        assert_eq!(packed.cycles_rigid, out.cycles_rigid);
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! The accelerator streams weights per layer; consecutive images of the
 //! same model can reuse the streamed weights if they run back-to-back
 //! (weight-stationary across a batch). The batcher groups up to
-//! `batch_size` queued requests; the device model credits the batch with
-//! the weight-stream DRAM traffic of a single image (the WMU holds the
-//! layer tile while the batch replays).
+//! `batch_size` queued requests; [`Batcher::dram_amortization`] is the
+//! credit the engine pool applies to every image of a dispatched batch —
+//! the batch pays one weight stream instead of `n` (the WMU holds the
+//! layer tile while the batch replays, and each pool worker's
+//! transposed-weight cache holds the host-side mirror of that tile).
 
 use crate::coordinator::request::InferRequest;
 
@@ -48,7 +50,9 @@ impl Batcher {
     }
 
     /// Weight-stream amortization factor for a batch of `n` images: the
-    /// batch pays one stream instead of `n`.
+    /// batch pays one stream instead of `n`. Applied by
+    /// [`crate::coordinator::EnginePool::run_batch`] to the conv/FC weight
+    /// DRAM bytes of every image it dispatches.
     pub fn dram_amortization(n: usize) -> f64 {
         if n == 0 {
             1.0

@@ -5,12 +5,13 @@
 //! * `Golden` — the dense integer executor (fast functional path).
 //! * `Baseline` — one of the comparison architectures.
 
-use crate::arch::{Accelerator, Report};
+use crate::arch::{Accelerator, Report, SimScratch};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::config::ArchConfig;
 use crate::model::{exec, Model};
 use crate::snn::SpikeMap;
 use anyhow::Result;
+use std::sync::Mutex;
 
 /// One inference outcome in engine-neutral units.
 #[derive(Debug, Clone, Default)]
@@ -31,7 +32,8 @@ pub struct Outcome {
 
 /// The engine: a model plus an execution backend. `Clone` builds an
 /// independent replica for the [`crate::coordinator::EnginePool`] — one
-/// engine per worker thread, no shared mutable state.
+/// engine per worker thread, no shared mutable state (each replica gets a
+/// fresh [`SimScratch`], so transposed-weight caches are per worker).
 #[derive(Clone)]
 pub struct Engine {
     /// The loaded model graph.
@@ -39,28 +41,49 @@ pub struct Engine {
     backend: Backend,
 }
 
-#[derive(Clone)]
 enum Backend {
-    Sim(Accelerator),
+    /// The simulator plus its per-replica scratch (conv buffers + per-node
+    /// transposed-weight cache). The mutex is never contended — each pool
+    /// worker owns exactly one replica — it only exists so `Engine` stays
+    /// `Sync` for the scoped-thread fan-out.
+    Sim(Accelerator, Mutex<SimScratch>),
     Golden,
     Baseline(Box<Baseline>),
+}
+
+impl Backend {
+    fn sim_with(acc: Accelerator) -> Self {
+        Backend::Sim(acc, Mutex::new(SimScratch::default()))
+    }
+}
+
+impl Clone for Backend {
+    fn clone(&self) -> Self {
+        match self {
+            // A replica starts with a cold cache: caches are per worker,
+            // never shared (sharing would re-introduce cross-thread state).
+            Backend::Sim(acc, _) => Backend::Sim(acc.clone(), Mutex::new(SimScratch::default())),
+            Backend::Golden => Backend::Golden,
+            Backend::Baseline(b) => Backend::Baseline(b.clone()),
+        }
+    }
 }
 
 impl Engine {
     /// NEURAL simulator engine.
     pub fn sim(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::Sim(Accelerator::new(cfg)) }
+        Engine { model, backend: Backend::sim_with(Accelerator::new(cfg)) }
     }
 
     /// NEURAL simulator engine without elastic decoupling (ablation).
     pub fn sim_rigid(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::Sim(Accelerator::rigid(cfg)) }
+        Engine { model, backend: Backend::sim_with(Accelerator::rigid(cfg)) }
     }
 
     /// NEURAL simulator engine on the materializing (event-vector) conv
     /// path — the validation mode; reports are bit-identical to `sim`.
     pub fn sim_materializing(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::Sim(Accelerator::materializing(cfg)) }
+        Engine { model, backend: Backend::sim_with(Accelerator::materializing(cfg)) }
     }
 
     /// Golden functional engine.
@@ -76,7 +99,7 @@ impl Engine {
     /// Engine name for reports.
     pub fn name(&self) -> String {
         match &self.backend {
-            Backend::Sim(a) => match (a.elastic, a.fused) {
+            Backend::Sim(a, _) => match (a.elastic, a.fused) {
                 (true, true) => "neural-sim".into(),
                 (true, false) => "neural-sim-materializing".into(),
                 (false, _) => "neural-sim-rigid".into(),
@@ -86,10 +109,29 @@ impl Engine {
         }
     }
 
-    /// Run one image.
+    /// Run one image standalone (full weight-stream charge).
     pub fn infer(&self, spikes: &SpikeMap) -> Result<Outcome> {
+        self.infer_batched(spikes, 1.0)
+    }
+
+    /// Run one image as part of a device batch: `weight_amort` is the
+    /// fraction of the weight-stream DRAM traffic this image is charged
+    /// ([`crate::coordinator::Batcher::dram_amortization`] of the batch
+    /// size — the batch pays one stream instead of `n`). The sim backend
+    /// also reuses its per-replica scratch, so transposed weights are
+    /// cached across the images of the batch. Golden and baseline backends
+    /// ignore the factor.
+    pub fn infer_batched(&self, spikes: &SpikeMap, weight_amort: f64) -> Result<Outcome> {
         match &self.backend {
-            Backend::Sim(acc) => Ok(report_to_outcome(acc.run(&self.model, spikes)?)),
+            Backend::Sim(acc, scratch) => {
+                let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
+                Ok(report_to_outcome(acc.run_cached(
+                    &self.model,
+                    spikes,
+                    &mut scratch,
+                    weight_amort,
+                )?))
+            }
             Backend::Baseline(b) => Ok(report_to_outcome(b.run(&self.model, spikes)?)),
             Backend::Golden => {
                 let t = exec::execute(&self.model, spikes)?;
@@ -108,7 +150,10 @@ impl Engine {
     /// Full report access for sim/baseline engines (None for golden).
     pub fn infer_report(&self, spikes: &SpikeMap) -> Result<Option<Report>> {
         match &self.backend {
-            Backend::Sim(acc) => Ok(Some(acc.run(&self.model, spikes)?)),
+            Backend::Sim(acc, scratch) => {
+                let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
+                Ok(Some(acc.run_cached(&self.model, spikes, &mut scratch, 1.0)?))
+            }
             Backend::Baseline(b) => Ok(Some(b.run(&self.model, spikes)?)),
             Backend::Golden => Ok(None),
         }
@@ -182,6 +227,24 @@ mod tests {
         assert_eq!(a.energy_mj, b.energy_mj);
         assert_eq!(a.total_spikes, b.total_spikes);
         assert_eq!(a.sops, b.sops);
+    }
+
+    #[test]
+    fn batched_inference_credits_weight_dram_energy_only() {
+        // Amortized weight streaming lowers energy but must not change
+        // function or timing.
+        let x = spikes();
+        let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let single = engine.infer(&x).unwrap();
+        let batched = engine.infer_batched(&x, 0.25).unwrap();
+        assert_eq!(single.logits, batched.logits);
+        assert_eq!(single.predicted, batched.predicted);
+        assert_eq!(single.sops, batched.sops);
+        assert_eq!(single.device_ms, batched.device_ms);
+        assert!(batched.energy_mj < single.energy_mj, "weight DRAM credit missing");
+        // Golden backend has no device model: factor is ignored.
+        let gold = Engine::golden(zoo::tiny(10, 5));
+        assert_eq!(gold.infer_batched(&x, 0.25).unwrap().logits, gold.infer(&x).unwrap().logits);
     }
 
     #[test]

@@ -90,12 +90,18 @@ impl Metrics {
         percentile(&mut self.host_samples, 99.0)
     }
 
-    /// One-line report.
+    /// One-line report. Unlabelled runs print `acc=n/a` rather than the
+    /// former `acc=NaN%`.
     pub fn summary_line(&self) -> String {
+        let acc = if self.labelled == 0 {
+            "n/a".to_string()
+        } else {
+            format!("{:.2}%", self.accuracy() * 100.0)
+        };
         format!(
-            "n={} acc={:.2}% device={:.3}ms ({:.1} FPS) energy={:.3}mJ spikes={:.0} batches={} (mean {:.1}/max {})",
+            "n={} acc={} device={:.3}ms ({:.1} FPS) energy={:.3}mJ spikes={:.0} batches={} (mean {:.1}/max {})",
             self.completed,
-            self.accuracy() * 100.0,
+            acc,
             self.device_ms.mean(),
             self.device_fps(),
             self.energy_mj.mean(),
@@ -149,6 +155,18 @@ mod tests {
         assert!(m.accuracy().is_nan());
         assert_eq!(m.device_fps(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn summary_line_prints_na_for_unlabelled_runs() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, None, 1.0));
+        let line = m.summary_line();
+        assert!(line.contains("acc=n/a"), "unlabelled run must not print NaN: {line}");
+        assert!(!line.contains("NaN"), "{line}");
+        m.record(&resp(1, 1, Some(1), 1.0));
+        let line = m.summary_line();
+        assert!(line.contains("acc=100.00%"), "{line}");
     }
 
     #[test]

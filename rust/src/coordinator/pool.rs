@@ -8,6 +8,7 @@
 //! is in submission order and bit-deterministic regardless of thread
 //! interleaving.
 
+use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::{Engine, Outcome};
 use crate::coordinator::request::InferRequest;
 use anyhow::Result;
@@ -55,7 +56,33 @@ impl EnginePool {
     /// Deterministic merge: result `i` always belongs to `batch[i]`; with a
     /// deterministic engine every functional field of the result vector is
     /// identical for any worker count (only the measured `host_ms` varies).
+    ///
+    /// Device-batch accounting: the batch runs back-to-back on the
+    /// simulated device, so every request is charged
+    /// [`Batcher::dram_amortization`]`(batch.len())` of the weight-stream
+    /// DRAM traffic — the batch pays one stream instead of `n`. The factor
+    /// depends only on the batch size, never on the worker count, so
+    /// results stay bit-deterministic across pool sizes. Callers that
+    /// combine several batcher batches into one dispatch must use
+    /// [`EnginePool::run_batch_amortized`] with each request's own
+    /// per-batch factor instead.
     pub fn run_batch(&self, batch: &[InferRequest]) -> Vec<BatchResult> {
+        let amort = vec![Batcher::dram_amortization(batch.len()); batch.len()];
+        self.run_batch_amortized(batch, &amort)
+    }
+
+    /// [`EnginePool::run_batch`] with an explicit per-request weight-stream
+    /// amortization factor (`weight_amort[i]` applies to `batch[i]`): the
+    /// coordinator merges independently-released batcher batches into one
+    /// dispatch, and each request keeps the credit of the device batch it
+    /// was released in — never a factor derived from the combined dispatch
+    /// size (which would vary with the worker count).
+    pub fn run_batch_amortized(
+        &self,
+        batch: &[InferRequest],
+        weight_amort: &[f64],
+    ) -> Vec<BatchResult> {
+        assert_eq!(batch.len(), weight_amort.len(), "one amortization factor per request");
         if batch.is_empty() {
             return Vec::new();
         }
@@ -67,19 +94,24 @@ impl EnginePool {
         std::thread::scope(|scope| {
             let mut slots: &mut [Option<BatchResult>] = &mut results;
             let mut reqs: &[InferRequest] = batch;
+            let mut amorts: &[f64] = weight_amort;
             for engine in &self.engines {
                 if reqs.is_empty() {
                     break;
                 }
                 let take = chunk.min(reqs.len());
                 let (chunk_reqs, rest_reqs) = reqs.split_at(take);
+                let (chunk_amorts, rest_amorts) = amorts.split_at(take);
                 let taken = std::mem::take(&mut slots);
                 let (chunk_slots, rest_slots) = taken.split_at_mut(take);
                 reqs = rest_reqs;
+                amorts = rest_amorts;
                 slots = rest_slots;
                 scope.spawn(move || {
-                    for (req, slot) in chunk_reqs.iter().zip(chunk_slots.iter_mut()) {
-                        let outcome = engine.infer(&req.spikes);
+                    for ((req, &amort), slot) in
+                        chunk_reqs.iter().zip(chunk_amorts).zip(chunk_slots.iter_mut())
+                    {
+                        let outcome = engine.infer_batched(&req.spikes, amort);
                         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
                         *slot = Some(BatchResult { outcome, host_ms });
                     }
@@ -133,6 +165,33 @@ mod tests {
                 assert_eq!(g.sops, r.sops, "workers={workers}");
                 assert_eq!(g.total_spikes, r.total_spikes, "workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn four_image_batch_amortizes_weight_stream() {
+        // The device batch pays one weight stream instead of four: each
+        // image of a 4-batch must report strictly less energy than the
+        // same image dispatched alone (the only delta is the weight DRAM
+        // term — function and device timing are unchanged).
+        let reqs = batch(4);
+        let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        let batched: Vec<Outcome> =
+            pool.run_batch(&reqs).into_iter().map(|r| r.outcome.unwrap()).collect();
+        for (i, req) in reqs.iter().enumerate() {
+            let single = pool
+                .run_batch(std::slice::from_ref(req))
+                .remove(0)
+                .outcome
+                .unwrap();
+            assert_eq!(single.logits, batched[i].logits, "req {i}");
+            assert_eq!(single.device_ms, batched[i].device_ms, "req {i}");
+            assert!(
+                batched[i].energy_mj < single.energy_mj,
+                "req {i}: batched {} !< single {}",
+                batched[i].energy_mj,
+                single.energy_mj
+            );
         }
     }
 

@@ -106,20 +106,26 @@ impl Coordinator {
     /// Fan the pending batches across the pool in one combined run and
     /// record every outcome in submission order. `host_ms` covers the full
     /// host latency: batch release (queueing in `pending`) → inference
-    /// finished.
+    /// finished. Each request keeps the weight-stream amortization of the
+    /// batcher batch it was released in (the device batch that shares one
+    /// weight stream), so energy accounting follows `--batch` and is
+    /// independent of how many batches this dispatch happens to combine
+    /// (which varies with `--workers`).
     fn dispatch(&self, pending: &mut Vec<(Vec<InferRequest>, Instant)>, metrics: &mut Metrics) {
         if pending.is_empty() {
             return;
         }
         let mut all: Vec<InferRequest> = Vec::new();
         let mut queued_ms: Vec<f64> = Vec::new();
+        let mut amorts: Vec<f64> = Vec::new();
         for (batch, released) in pending.drain(..) {
             metrics.record_batch(batch.len());
             let waited = released.elapsed().as_secs_f64() * 1e3;
             queued_ms.resize(queued_ms.len() + batch.len(), waited);
+            amorts.resize(amorts.len() + batch.len(), Batcher::dram_amortization(batch.len()));
             all.extend(batch);
         }
-        let results = self.pool.run_batch(&all);
+        let results = self.pool.run_batch_amortized(&all, &amorts);
         for ((req, result), queued) in all.iter().zip(results).zip(queued_ms) {
             match result.outcome {
                 Ok(out) => {
@@ -179,6 +185,23 @@ mod tests {
         let mut coord = Coordinator::new(engine, RunConfig { batch_size: 8, workers: 1, ..Default::default() });
         let m = coord.serve_dataset(&dataset(5), 5).unwrap();
         assert_eq!(m.completed, 5);
+    }
+
+    #[test]
+    fn energy_accounting_independent_of_worker_count() {
+        // The weight-stream credit follows the batcher's batch size, so the
+        // served energy metrics must not change when only --workers does
+        // (dispatch combines a worker-count-dependent number of batches).
+        let mut means = Vec::new();
+        for workers in [1usize, 3] {
+            let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+            let cfg = RunConfig { batch_size: 2, workers, ..Default::default() };
+            let mut coord = Coordinator::new(engine, cfg);
+            let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+            assert_eq!(m.completed, 10);
+            means.push(m.energy_mj.mean());
+        }
+        assert_eq!(means[0], means[1], "energy must depend on --batch, not --workers");
     }
 
     #[test]

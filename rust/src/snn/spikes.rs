@@ -182,6 +182,38 @@ impl PackedSpikeMap {
             lo & ((1u64 << len) - 1)
         }
     }
+
+    /// OR `len` (≤ 64) bits into the map starting at flat bit `start` — the
+    /// write-side dual of [`PackedSpikeMap::bits_at`], used by the packed
+    /// attention register to emit masked K words at arbitrary (unaligned)
+    /// channel-plane offsets. Bits of `bits` at or beyond `len` must be
+    /// zero, which preserves the pad-bit invariant.
+    #[inline]
+    pub fn or_bits_at(&mut self, start: usize, len: usize, bits: u64) {
+        debug_assert!(len >= 1 && len <= 64);
+        debug_assert!(start + len <= self.numel());
+        debug_assert!(len == 64 || bits >> len == 0, "bits beyond len must be clear");
+        let wi = start >> 6;
+        let off = start & 63;
+        self.words[wi] |= bits << off;
+        if off != 0 && off + len > 64 {
+            self.words[wi + 1] |= bits >> (64 - off);
+        }
+    }
+
+    /// Popcount of the `len` bits starting at flat bit `start` (e.g. one
+    /// channel plane), word-wise via [`PackedSpikeMap::bits_at`] chunks.
+    pub fn count_ones_range(&self, start: usize, len: usize) -> u64 {
+        debug_assert!(start + len <= self.numel());
+        let mut total = 0u64;
+        let mut off = 0usize;
+        while off < len {
+            let chunk = (len - off).min(64);
+            total += self.bits_at(start + off, chunk).count_ones() as u64;
+            off += chunk;
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -287,6 +319,43 @@ mod tests {
             if len < 64 {
                 assert_eq!(got >> len, 0, "bits beyond len must be clear");
             }
+        });
+    }
+
+    #[test]
+    fn prop_or_bits_at_roundtrips_with_bits_at() {
+        forall("or_bits_at", 60, |g| {
+            let n = g.size(1, 300);
+            let bits = g.spikes(n, 0.4);
+            let map = Tensor::from_vec(Shape::d3(1, 1, n), bits.clone());
+            let packed = PackedSpikeMap::from_map(&map);
+            let len = g.size(1, 64.min(n));
+            let start = g.size(0, n - len);
+            // Copy a random window into an empty map through or_bits_at;
+            // it must land bit-exact and leave everything else clear.
+            let window = packed.bits_at(start, len);
+            let mut out = PackedSpikeMap::zeros((1, 1, n));
+            out.or_bits_at(start, len, window);
+            assert_eq!(out.bits_at(start, len), window, "start={start} len={len}");
+            assert_eq!(out.count_ones() as u64, window.count_ones() as u64);
+            for (i, &b) in bits.iter().enumerate() {
+                let want = if i >= start && i < start + len { b != 0 } else { false };
+                assert_eq!(out.get(i), want, "bit {i} start={start} len={len}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_count_ones_range_matches_byte_count() {
+        forall("count_ones_range", 60, |g| {
+            let n = g.size(1, 400);
+            let bits = g.spikes(n, 0.35);
+            let map = Tensor::from_vec(Shape::d3(1, 1, n), bits.clone());
+            let packed = PackedSpikeMap::from_map(&map);
+            let len = g.size(0, n);
+            let start = g.size(0, n - len);
+            let want: u64 = bits[start..start + len].iter().map(|&b| b as u64).sum();
+            assert_eq!(packed.count_ones_range(start, len), want, "start={start} len={len}");
         });
     }
 

@@ -9,7 +9,10 @@
 use neural::arch::epa::{ConvParams, ConvScratch, Epa};
 use neural::arch::sda::{ConvGeom, MaterializeSink, PipeSda};
 use neural::arch::wmu::Wmu;
+use neural::arch::Accelerator;
 use neural::config::ArchConfig;
+use neural::data::{encode_threshold, SynthCifar};
+use neural::model::zoo;
 use neural::snn::{PackedSpikeMap, SpikeMap};
 use neural::tensor::{Shape, Tensor};
 use neural::testing::forall;
@@ -85,6 +88,35 @@ fn prop_fused_epa_matches_materializing_epa() {
         assert_eq!(st_fused.cycles_rigid, st_mat.cycles_rigid, "{label}");
         assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes, "{label}");
         assert_eq!(wmu_a.stream_cycles, wmu_b.stream_cycles, "{label}");
+    });
+}
+
+#[test]
+fn prop_packed_qkf_and_wtfc_full_reports_match_byte_mode() {
+    // End-to-end: on the attention model, the packed default (fused convs,
+    // packed attention register, packed TTFS filter) and the byte-map
+    // materializing validation mode must produce bit-identical reports —
+    // logits, cycles, QKF suppression, buffer and DRAM traffic — across
+    // random inputs and encodings.
+    let model = zoo::qkfresnet11(10, 3);
+    let fused = Accelerator::new(ArchConfig::default());
+    let byte = Accelerator::materializing(ArchConfig::default());
+    forall("packed full report == byte full report", 4, |g| {
+        let ds = SynthCifar::new(10, g.size(0, 1000) as u64);
+        let (img, _) = ds.sample(g.size(0, 30));
+        let thresh = g.size(60, 230) as u8;
+        let x = encode_threshold(&img, thresh);
+        let a = fused.run(&model, &x).unwrap();
+        let b = byte.run(&model, &x).unwrap();
+        assert_eq!(a.logits, b.logits, "thresh={thresh}");
+        assert_eq!(a.cycles, b.cycles, "thresh={thresh}");
+        assert_eq!(a.cycles_rigid, b.cycles_rigid, "thresh={thresh}");
+        assert_eq!(a.total_spikes, b.total_spikes, "thresh={thresh}");
+        assert_eq!(a.qkf_suppressed, b.qkf_suppressed, "thresh={thresh}");
+        assert_eq!(a.activity.sops, b.activity.sops, "thresh={thresh}");
+        assert_eq!(a.activity.buf_bytes, b.activity.buf_bytes, "thresh={thresh}");
+        assert_eq!(a.activity.dram_bytes, b.activity.dram_bytes, "thresh={thresh}");
+        assert_eq!(a.weight_dram_bytes, b.weight_dram_bytes, "thresh={thresh}");
     });
 }
 
