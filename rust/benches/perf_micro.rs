@@ -10,23 +10,28 @@
 //! the same run. The packed QKFormer attention register and the packed
 //! WTFC TTFS filter are each timed against their byte-map validation
 //! walks, and a full qkfresnet11 image pits the packed default against the
-//! materializing mode end to end. The batch section measures how a
+//! materializing mode end to end. The host-parallel section times the
+//! fused conv scatter fanned out over output-channel blocks. The pipeline
+//! section records simulated device cycles for the cross-layer weight
+//! prefetch against the serial elastic composition (with the W-FIFO
+//! hidden/stall/occupancy counters). The batch section measures how a
 //! 16-image batch scales across the coordinator's engine pool from 1 to 4
 //! workers, and the weight-DRAM section records the per-image weight
-//! stream bytes for a standalone image vs an image inside a 4-batch (the
-//! batcher's amortization credit backed by the per-worker transposed
-//! weight cache).
+//! stream bytes for a standalone image vs an image inside a 4-image
+//! broadcast batch (one modeled fetch per node shared through the
+//! `WmuBroadcast` ledger, backed by the per-worker transposed weight
+//! cache) alongside the retired scalar credit's 0.25 reference ratio.
 
 use neural::arch::epa::{ConvParams, ConvScratch, Epa};
 use neural::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use neural::arch::sda::{ConvGeom, PipeSda};
 use neural::arch::wmu::Wmu;
 use neural::arch::wtfc::Wtfc;
-use neural::arch::{Accelerator, ElasticFifo, SimScratch};
+use neural::arch::{Accelerator, ElasticFifo, SimScratch, WeightFlow, WmuBroadcast};
 use neural::bench::artifacts;
 use neural::bench::BenchRunner;
 use neural::config::ArchConfig;
-use neural::coordinator::{Batcher, Engine, EnginePool, InferRequest};
+use neural::coordinator::{Engine, EnginePool, InferRequest};
 use neural::data::encode_threshold;
 use neural::model::exec;
 use neural::model::ir::TokenMaskMode;
@@ -172,23 +177,95 @@ fn main() {
         acc_mat.run(&qkf_model, &spikes).unwrap().activity.sops
     });
     let qkf_fused = runner.run("full image qkfresnet11 fused (packed)", || {
-        acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, 1.0).unwrap().activity.sops
+        let flow = WeightFlow::Exclusive;
+        acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, flow).unwrap().activity.sops
     });
     let qkf_full_speedup = qkf_mat.time.mean() / qkf_fused.time.mean();
     println!("  -> qkfresnet11 packed-path speedup {qkf_full_speedup:.2}x over byte validation");
 
-    // Batch weight-stream accounting: per-image weight DRAM bytes for a
-    // standalone image vs an image inside a 4-batch (the batcher's credit,
-    // made physically honest by the per-worker transposed-weight cache).
-    let single_rep = acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, 1.0).unwrap();
-    let batch4_rep = acc
-        .run_cached(&qkf_model, &spikes, &mut sim_scratch, Batcher::dram_amortization(4))
-        .unwrap();
+    // Host-parallel fused scatter: the same full image with the membrane
+    // scatter fanned out over output-channel blocks (wall-clock only; the
+    // simulated device is bit-identical). Both sides run with a warm
+    // per-engine scratch so the speedup isolates the threading, not the
+    // weight-cache reuse.
+    let host_threads = std::thread::available_parallelism().map_or(4, |n| n.get()).min(8);
+    let mut warm_scratch = SimScratch::default();
+    let full_warm = runner.run("full image resnet11, 1 host thread (warm)", || {
+        let flow = WeightFlow::Exclusive;
+        let r = acc.run_cached(&model, &spikes, &mut warm_scratch, flow).unwrap();
+        r.activity.sops
+    });
+    let mut acc_host_par = Accelerator::new(ArchConfig::default());
+    acc_host_par.host_threads = host_threads;
+    let mut hp_scratch = SimScratch::default();
+    let host_par = runner.run(&format!("full image resnet11, {host_threads} host threads"), || {
+        let flow = WeightFlow::Exclusive;
+        let r = acc_host_par.run_cached(&model, &spikes, &mut hp_scratch, flow).unwrap();
+        r.activity.sops
+    });
+    let host_par_speedup = full_warm.time.mean() / host_par.time.mean();
+    println!("  -> host-parallel scatter speedup {host_par_speedup:.2}x over 1 warm thread");
+
+    // Cross-layer pipelined weight prefetch vs the serial elastic
+    // composition (simulated device cycles, not wall-clock): the W-FIFO
+    // hides stream-bound layers' weight loads behind earlier compute.
+    let mut acc_serial = Accelerator::new(ArchConfig::default());
+    acc_serial.pipeline = false;
+    let mut pipeline_sections = Vec::new();
+    for m in [&model, &qkf_model] {
+        let piped = acc.run(m, &spikes).unwrap();
+        let serial = acc_serial.run(m, &spikes).unwrap();
+        // The strict-improvement invariant itself is enforced by the
+        // sim.rs unit tests; here we only record and flag, so a future
+        // config rebalance still produces a BENCH_perf.json to diff.
+        if piped.cycles >= serial.cycles {
+            eprintln!("  !! {}: pipelined schedule did not beat serial", m.name);
+        }
+        let cycle_speedup = serial.cycles as f64 / piped.cycles as f64;
+        println!(
+            "  -> {} pipelined {} cycles vs serial {} ({cycle_speedup:.4}x, {} hidden, {} stalled)",
+            m.name,
+            piped.cycles,
+            serial.cycles,
+            piped.wfifo.hidden_cycles,
+            piped.wfifo.stall_cycles
+        );
+        pipeline_sections.push((
+            m.name.clone(),
+            Json::obj(vec![
+                ("serial_cycles", Json::Num(serial.cycles as f64)),
+                ("pipelined_cycles", Json::Num(piped.cycles as f64)),
+                ("cycle_speedup", Json::Num(cycle_speedup)),
+                ("hidden_cycles", Json::Num(piped.wfifo.hidden_cycles as f64)),
+                ("stall_cycles", Json::Num(piped.wfifo.stall_cycles as f64)),
+                ("wfifo_high_water_bytes", Json::Num(piped.wfifo.high_water_bytes as f64)),
+                ("wfifo_capacity_bytes", Json::Num(piped.wfifo.capacity_bytes as f64)),
+            ]),
+        ));
+    }
+
+    // Broadcast-WMU weight-stream sharing vs the retired scalar credit:
+    // per-image weight DRAM bytes for a standalone image vs an image inside
+    // a 4-image broadcast batch (one modeled fetch per node, fanned out).
+    let single_rep =
+        acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, WeightFlow::Exclusive).unwrap();
+    let shared = WmuBroadcast::new(4);
+    let mut batch4_rep = None;
+    for _ in 0..4 {
+        let flow = WeightFlow::Broadcast(&shared);
+        batch4_rep = Some(acc.run_cached(&qkf_model, &spikes, &mut sim_scratch, flow).unwrap());
+    }
+    let batch4_rep = batch4_rep.unwrap();
     let weight_dram_ratio =
         batch4_rep.weight_dram_bytes as f64 / single_rep.weight_dram_bytes as f64;
+    let credit_ratio = 0.25; // what the retired scalar 1/n credit would claim
     println!(
-        "  -> weight DRAM/image: {} B single, {} B in 4-batch ({weight_dram_ratio:.3}x)",
-        single_rep.weight_dram_bytes, batch4_rep.weight_dram_bytes
+        "  -> weight DRAM/image: {} B single, {} B in 4-broadcast ({weight_dram_ratio:.3}x, \
+         scalar credit would say {credit_ratio:.2}x; ledger: {} B, {} fetches)",
+        single_rep.weight_dram_bytes,
+        batch4_rep.weight_dram_bytes,
+        shared.dram_bytes(),
+        shared.transactions()
     );
 
     // coordinator batch path: 16-image batch across the engine pool
@@ -259,12 +336,25 @@ fn main() {
                 ("packed_speedup", Json::Num(qkf_full_speedup)),
             ]),
         ),
+        ("pipeline", Json::Obj(pipeline_sections.into_iter().collect())),
+        (
+            "host_parallel",
+            Json::obj(vec![
+                ("threads", Json::Num(host_threads as f64)),
+                ("serial_ms", Json::Num(full_warm.time.mean() * 1e3)),
+                ("parallel_ms", Json::Num(host_par.time.mean() * 1e3)),
+                ("speedup", Json::Num(host_par_speedup)),
+            ]),
+        ),
         (
             "weight_dram",
             Json::obj(vec![
                 ("per_image_bytes_single", Json::Num(single_rep.weight_dram_bytes as f64)),
                 ("per_image_bytes_batch4", Json::Num(batch4_rep.weight_dram_bytes as f64)),
                 ("batch4_ratio", Json::Num(weight_dram_ratio)),
+                ("scalar_credit_ratio", Json::Num(credit_ratio)),
+                ("broadcast_ledger_bytes", Json::Num(shared.dram_bytes() as f64)),
+                ("broadcast_ledger_fetches", Json::Num(shared.transactions() as f64)),
             ]),
         ),
         (

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Perf regression gate: compare a fresh BENCH_perf.json against the
+committed baseline and fail on a >20% drop of the fused events/s headline.
+
+Usage: bench_diff.py BASELINE.json FRESH.json
+
+Exit 0 when the baseline is missing (bootstrap: the first baseline must be
+committed from a CI artifact or a toolchain-equipped session) or when the
+fresh number is within the threshold; exit 1 on a regression or a fresh
+file that lacks the headline metric.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.20
+METRIC = ("sda_epa", "fused_events_per_s")
+
+
+def headline(path):
+    with open(path) as f:
+        doc = json.load(f)
+    node = doc
+    for key in METRIC:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return float(node)
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip())
+        return 2
+    baseline_path, fresh_path = argv[1], argv[2]
+    try:
+        base = headline(baseline_path)
+    except OSError:
+        print(f"bench_diff: no baseline at {baseline_path} — skipping "
+              "(commit the CI artifact to start the trajectory)")
+        return 0
+    fresh = headline(fresh_path)
+    if fresh is None:
+        print(f"bench_diff: {fresh_path} lacks {'.'.join(METRIC)}")
+        return 1
+    if base is None or base <= 0:
+        print(f"bench_diff: baseline has no usable {'.'.join(METRIC)} — skipping")
+        return 0
+    ratio = fresh / base
+    print(f"bench_diff: fused events/s {fresh:.3e} vs baseline {base:.3e} "
+          f"({ratio:.2f}x)")
+    if ratio < 1.0 - THRESHOLD:
+        print(f"bench_diff: REGRESSION — more than {THRESHOLD:.0%} below baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -19,6 +19,10 @@ pub struct Activity {
     pub buf_bytes: u64,
     /// Off-chip bytes (WMU weight streams, input image fetch).
     pub dram_bytes: u64,
+    /// The subset of `dram_bytes` that is conv/FC weight streaming, after
+    /// any broadcast-WMU sharing — lets reports split weight-stream vs
+    /// activation/input DRAM energy.
+    pub weight_dram_bytes: u64,
     /// Total cycles (for static energy).
     pub cycles: u64,
 }
@@ -29,6 +33,7 @@ impl Activity {
         self.sops += other.sops;
         self.buf_bytes += other.buf_bytes;
         self.dram_bytes += other.dram_bytes;
+        self.weight_dram_bytes += other.weight_dram_bytes;
         self.cycles += other.cycles;
     }
 }
@@ -42,6 +47,9 @@ pub struct EnergyBreakdown {
     pub e_buf_j: f64,
     /// Off-chip memory energy.
     pub e_dram_j: f64,
+    /// The weight-stream share of `e_dram_j` (informational sub-component,
+    /// already included in `e_dram_j` — not added to the total again).
+    pub e_dram_weight_j: f64,
     /// Static (leakage + clock tree) energy over the run time.
     pub e_static_j: f64,
 }
@@ -75,6 +83,7 @@ impl EnergyModel {
             e_sop_j: a.sops as f64 * self.k.e_sop_pj * 1e-12,
             e_buf_j: a.buf_bytes as f64 * self.k.e_buf_pj * 1e-12,
             e_dram_j: a.dram_bytes as f64 * self.k.e_dram_pj * 1e-12,
+            e_dram_weight_j: a.weight_dram_bytes as f64 * self.k.e_dram_pj * 1e-12,
             e_static_j: self.k.p_static_w * t_s,
         }
     }
@@ -111,10 +120,20 @@ mod tests {
     #[test]
     fn breakdown_sums() {
         let m = model();
-        let a = Activity { sops: 1_000_000, buf_bytes: 10_000, dram_bytes: 5_000, cycles: 200_000 };
+        let a = Activity {
+            sops: 1_000_000,
+            buf_bytes: 10_000,
+            dram_bytes: 5_000,
+            weight_dram_bytes: 2_000,
+            cycles: 200_000,
+        };
         let b = m.evaluate(&a);
         assert!((b.total_j() - (b.e_sop_j + b.e_buf_j + b.e_dram_j + b.e_static_j)).abs() < 1e-18);
         assert!(b.e_sop_j > 0.0 && b.e_static_j > 0.0);
+        // The weight share is informational: part of e_dram_j, not a fifth
+        // term of the total.
+        assert!(b.e_dram_weight_j > 0.0 && b.e_dram_weight_j < b.e_dram_j);
+        assert!((b.e_dram_weight_j / b.e_dram_j - 2.0 / 5.0).abs() < 1e-12);
     }
 
     #[test]
@@ -150,9 +169,17 @@ mod tests {
 
     #[test]
     fn activity_add() {
-        let mut a = Activity { sops: 1, buf_bytes: 2, dram_bytes: 3, cycles: 4 };
-        a.add(&Activity { sops: 10, buf_bytes: 20, dram_bytes: 30, cycles: 40 });
+        let mut a =
+            Activity { sops: 1, buf_bytes: 2, dram_bytes: 3, weight_dram_bytes: 1, cycles: 4 };
+        a.add(&Activity {
+            sops: 10,
+            buf_bytes: 20,
+            dram_bytes: 30,
+            weight_dram_bytes: 10,
+            cycles: 40,
+        });
         assert_eq!(a.sops, 11);
+        assert_eq!(a.weight_dram_bytes, 11);
         assert_eq!(a.cycles, 44);
     }
 }

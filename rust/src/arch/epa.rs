@@ -72,6 +72,10 @@ pub struct ConvScratch {
     wt: Vec<i32>,
     mp: Vec<i32>,
     per_pixel: Vec<u32>,
+    /// Per-thread membrane-lane blocks for the host-parallel scatter
+    /// ([`Epa::run_conv_fused_cached_par`]); block `b` holds
+    /// `[pix][oc - lo_b]` lanes for its contiguous output-channel range.
+    mp_blocks: Vec<Vec<i32>>,
 }
 
 /// The fused consumer: scatters each diffused event into all `cout`
@@ -92,6 +96,37 @@ impl EventSink for ScatterSink<'_> {
         let widx = widx as usize;
         let wrow = &self.wt[widx * self.cout..(widx + 1) * self.cout];
         let lanes = &mut self.mp[pix * self.cout..(pix + 1) * self.cout];
+        for (m, &w) in lanes.iter_mut().zip(wrow) {
+            *m += w;
+        }
+    }
+}
+
+/// The host-parallel variant of [`ScatterSink`]: scatters only the
+/// contiguous output-channel block `[lo, lo + width)` into its own lane
+/// buffer, so each worker thread owns a disjoint slice of the membrane
+/// state. Exactly one block (the first) also counts `per_pixel`; the
+/// others see the identical event stream, so counting it once is enough.
+struct BlockScatterSink<'a> {
+    wt: &'a [i32],
+    mp: &'a mut [i32],
+    per_pixel: Option<&'a mut [u32]>,
+    cout: usize,
+    lo: usize,
+    width: usize,
+    wo: usize,
+}
+
+impl EventSink for BlockScatterSink<'_> {
+    #[inline]
+    fn event(&mut self, oy: u16, ox: u16, widx: u32) {
+        let pix = oy as usize * self.wo + ox as usize;
+        if let Some(pp) = &mut self.per_pixel {
+            pp[pix] += 1;
+        }
+        let w0 = widx as usize * self.cout + self.lo;
+        let wrow = &self.wt[w0..w0 + self.width];
+        let lanes = &mut self.mp[pix * self.width..(pix + 1) * self.width];
         for (m, &w) in lanes.iter_mut().zip(wrow) {
             *m += w;
         }
@@ -422,6 +457,105 @@ impl Epa {
         (out, stats, sda_stats)
     }
 
+    /// [`Epa::run_conv_fused_cached`] with the membrane scatter fanned out
+    /// over `threads` contiguous output-channel blocks (scoped host
+    /// threads). Each worker replays the packed SDA scan into its own lane
+    /// block — the scan is O(events), the scatter O(events·cout/threads),
+    /// so for wide layers the rescan is cheap against the lane work and the
+    /// wall-clock scatter scales with cores.
+    ///
+    /// Bit-identical to the serial path: every membrane lane is accumulated
+    /// by exactly one thread in the same event order, and the fire + pack
+    /// pass reads the blocks back in channel order. `threads <= 1` (the
+    /// default) falls through to the serial implementation, so the engine
+    /// pool's already-parallel batch path pays nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_conv_fused_cached_par(
+        &self,
+        sda: &PipeSda,
+        input: &PackedSpikeMap,
+        geom: &ConvGeom,
+        p: &ConvParams,
+        wt: &[i32],
+        wmu: &mut Wmu,
+        scratch: &mut ConvScratch,
+        threads: usize,
+    ) -> (PackedSpikeMap, EpaStats, SdaStats) {
+        let (ho, wo) = geom.out_dims;
+        let npix = ho * wo;
+        let threads = threads.max(1).min(p.cout);
+        if threads <= 1 || npix == 0 {
+            return self.run_conv_fused_cached(sda, input, geom, p, wt, wmu, scratch);
+        }
+        debug_assert_eq!(wt.len(), p.cin * p.k * p.k * p.cout, "transposed weight shape");
+        // Balanced contiguous channel blocks: the first `rem` blocks take
+        // one extra channel.
+        let base = p.cout / threads;
+        let rem = p.cout % threads;
+        let widths: Vec<usize> = (0..threads).map(|b| base + usize::from(b < rem)).collect();
+        if scratch.mp_blocks.len() != threads {
+            scratch.mp_blocks.resize_with(threads, Vec::new);
+        }
+        for (mp, &width) in scratch.mp_blocks.iter_mut().zip(&widths) {
+            mp.clear();
+            mp.resize(npix * width, 0);
+        }
+        scratch.per_pixel.clear();
+        scratch.per_pixel.resize(npix, 0);
+        let cout = p.cout;
+        let sda_stats = std::thread::scope(|s| {
+            let mut per_pixel = Some(&mut scratch.per_pixel[..]);
+            let mut handles = Vec::with_capacity(threads);
+            let mut lo = 0usize;
+            for (mp, &width) in scratch.mp_blocks.iter_mut().zip(&widths) {
+                let pp = per_pixel.take();
+                let block_lo = lo;
+                lo += width;
+                handles.push(s.spawn(move || {
+                    let mut sink = BlockScatterSink {
+                        wt,
+                        mp: &mut mp[..],
+                        per_pixel: pp,
+                        cout,
+                        lo: block_lo,
+                        width,
+                        wo,
+                    };
+                    sda.stream(input, geom, &mut sink)
+                }));
+            }
+            let mut first = SdaStats::default();
+            for (i, h) in handles.into_iter().enumerate() {
+                let st = h.join().expect("scatter worker panicked");
+                if i == 0 {
+                    first = st;
+                } else {
+                    debug_assert_eq!(st, first, "replayed scans must agree");
+                }
+            }
+            first
+        });
+        // Fire and pack serially in channel order — O(npix·cout) compares
+        // against the scatter's O(events·cout) accumulates.
+        let mut out = PackedSpikeMap::zeros((p.cout, ho, wo));
+        let mut fires = 0u64;
+        let mut lo = 0usize;
+        for (mp, &width) in scratch.mp_blocks.iter().zip(&widths) {
+            for oc_rel in 0..width {
+                let oc = lo + oc_rel;
+                for pix in 0..npix {
+                    if lif_fire_scalar(mp[pix * width + oc_rel], p.thresholds[oc], p.tau_half) {
+                        out.set(oc * npix + pix);
+                        fires += 1;
+                    }
+                }
+            }
+            lo += width;
+        }
+        let stats = self.conv_stats(&scratch.per_pixel, sda_stats.events, fires, p, wmu);
+        (out, stats, sda_stats)
+    }
+
     /// Detailed path: drive real [`Pe`] objects tile by tile. O(pes) object
     /// traffic per tile — use on small layers only.
     pub fn run_conv_detailed(&self, sda: &SdaOutput, p: &ConvParams, cfg: &ArchConfig, ho: usize, wo: usize) -> (SpikeMap, EpaStats) {
@@ -642,6 +776,51 @@ mod tests {
         assert_eq!(st_a.cycles_rigid, st_b.cycles_rigid);
         assert_eq!(sda_a, sda_b);
         assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes);
+    }
+
+    #[test]
+    fn parallel_scatter_bit_identical_to_serial() {
+        // The host-parallel channel-block scatter must agree with the
+        // serial fused path on every output bit and every stat, for thread
+        // counts below, at and above the channel count (clamped).
+        let sda = PipeSda::default();
+        for (seed, stride, cout) in [(11u64, 1usize, 8usize), (9, 2, 5), (23, 1, 1)] {
+            let (map, weights, geom) = random_case(seed, 3, cout, 10, 10, 3, stride, 0.3);
+            let thresholds = vec![5i32; cout];
+            let p = ConvParams {
+                cout,
+                cin: 3,
+                k: 3,
+                thresholds: &thresholds,
+                tau_half: false,
+                weights: &weights,
+            };
+            let epa = Epa { rows: 4, cols: 4, tile_fill: 2 };
+            let packed = PackedSpikeMap::from_map(&map);
+            let taps = 3 * 3 * 3;
+            let mut cache = WeightCache::default();
+            let wt = cache.transposed(0, &weights, cout, taps).to_vec();
+            let mut scratch_a = ConvScratch::default();
+            let mut wmu_a = Wmu::new(8);
+            let (out_a, st_a, sda_a) =
+                epa.run_conv_fused_cached(&sda, &packed, &geom, &p, &wt, &mut wmu_a, &mut scratch_a);
+            for threads in [2usize, 3, 16] {
+                let mut scratch_b = ConvScratch::default();
+                let mut wmu_b = Wmu::new(8);
+                let (out_b, st_b, sda_b) = epa.run_conv_fused_cached_par(
+                    &sda, &packed, &geom, &p, &wt, &mut wmu_b, &mut scratch_b, threads,
+                );
+                let label = format!("seed={seed} cout={cout} threads={threads}");
+                assert_eq!(out_a, out_b, "{label}");
+                assert_eq!(st_a.sops, st_b.sops, "{label}");
+                assert_eq!(st_a.fires, st_b.fires, "{label}");
+                assert_eq!(st_a.compute_cycles, st_b.compute_cycles, "{label}");
+                assert_eq!(st_a.cycles, st_b.cycles, "{label}");
+                assert_eq!(st_a.cycles_rigid, st_b.cycles_rigid, "{label}");
+                assert_eq!(sda_a, sda_b, "{label}");
+                assert_eq!(wmu_a.dram_bytes, wmu_b.dram_bytes, "{label}");
+            }
+        }
     }
 
     #[test]

@@ -114,6 +114,121 @@ impl<T> ElasticFifo<T> {
     }
 }
 
+/// Occupancy/stall accounting of the analytic W-FIFO prefetch model, in
+/// bytes and cycles (surfaced per image through
+/// [`crate::arch::Report::wfifo`] so the elastic ablation can verify buffer
+/// sizing instead of only comparing end-to-end cycle totals).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WfifoStats {
+    /// Configured W-FIFO capacity in bytes
+    /// ([`crate::config::ArchConfig::wfifo_bytes`]).
+    pub capacity_bytes: u64,
+    /// Peak prefetched-ahead occupancy observed, in bytes (weights sitting
+    /// in the W-FIFO for a layer whose compute has not started yet).
+    pub high_water_bytes: u64,
+    /// Cycles the array sat waiting on the weight stream (layer was
+    /// stream-bound even after prefetch).
+    pub stall_cycles: u64,
+    /// Weight-stream cycles hidden behind earlier layers' compute by the
+    /// cross-layer prefetch (0 when the pipeline is disabled or capacity
+    /// is 0).
+    pub hidden_cycles: u64,
+}
+
+/// Analytic counterpart of the W-FIFO for the cross-layer weight-prefetch
+/// pipeline (paper Fig 3: the WMU fills the W-FIFO "based on the
+/// computation status").
+///
+/// The simulator composes per-layer `(work, stream)` stage costs through
+/// this window: while layer L's array work runs, the WMU's idle port time
+/// prefetches layer L+1's weight tiles into the elastic W-FIFO, bounded by
+/// the FIFO's byte capacity (expressed here in port cycles). A stream cycle
+/// can be hidden only when (a) an earlier stage left the WMU idle long
+/// enough to fetch it ahead of time and (b) the W-FIFO had space to hold
+/// the prefetched bytes until the consuming layer starts — the `budget`
+/// tracks the min of both, so an undersized FIFO honestly degrades to
+/// partial overlap and a zero-capacity FIFO reproduces the serial
+/// (non-pipelined) elastic composition exactly.
+#[derive(Debug, Clone)]
+pub struct PrefetchWindow {
+    /// W-FIFO capacity in port cycles (bytes / WMU port width).
+    capacity_cycles: u64,
+    /// Prefetch budget available to the next stream: banked WMU idle time,
+    /// clamped to the FIFO capacity.
+    budget: u64,
+    /// Per-stage (budget at stage entry, cycles hidden) log — the
+    /// occupancy reconstruction in [`PrefetchWindow::high_water_cycles`]
+    /// needs the whole schedule, not a running max.
+    log: Vec<(u64, u64)>,
+    /// Total stream cycles hidden behind earlier stages.
+    pub hidden_cycles: u64,
+    /// Total cycles stages stalled on an exposed (non-hidden) stream.
+    pub stall_cycles: u64,
+}
+
+impl PrefetchWindow {
+    /// New window over a W-FIFO holding `capacity_cycles` port cycles worth
+    /// of weights (0 disables cross-layer prefetch entirely).
+    pub fn new(capacity_cycles: u64) -> Self {
+        PrefetchWindow {
+            capacity_cycles,
+            budget: 0,
+            log: Vec::new(),
+            hidden_cycles: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Account one pipeline stage costing `work` array cycles with a
+    /// `stream` -cycle weight load, and return the stage's realized
+    /// duration.
+    ///
+    /// The part of `stream` covered by the current prefetch budget is
+    /// hidden (it was fetched into the W-FIFO while earlier stages
+    /// computed); the exposed remainder composes with `work` through the
+    /// intra-layer elastic `max`. The WMU's idle time during this stage
+    /// (its duration minus the exposed stream it had to serve) refills the
+    /// budget for downstream stages, clamped to the FIFO capacity.
+    pub fn stage(&mut self, work: u64, stream: u64) -> u64 {
+        let hidden = stream.min(self.budget);
+        self.log.push((self.budget, hidden));
+        self.hidden_cycles += hidden;
+        let exposed = stream - hidden;
+        let duration = work.max(exposed);
+        self.stall_cycles += exposed.saturating_sub(work);
+        self.budget = (self.budget - hidden + (duration - exposed)).min(self.capacity_cycles);
+        duration
+    }
+
+    /// Peak prefetched-ahead W-FIFO occupancy in port cycles, under the
+    /// greedy in-order prefetcher the hiding assumes: at each stage entry
+    /// the WMU has fetched ahead as much of the *eventually hidden* stream
+    /// as its banked budget allowed, so the occupancy there is
+    /// `min(budget, hidden cycles still to be consumed)` — one long idle
+    /// period that pre-loads several later layers' tiles peaks at their
+    /// sum, not at any single stage's hide (which a per-stage running max
+    /// would under-report).
+    pub fn high_water_cycles(&self) -> u64 {
+        let mut suffix_hidden = 0u64;
+        let mut peak = 0u64;
+        for &(budget, hidden) in self.log.iter().rev() {
+            suffix_hidden += hidden;
+            peak = peak.max(budget.min(suffix_hidden));
+        }
+        peak
+    }
+
+    /// Snapshot the stats in bytes at the given WMU port width.
+    pub fn stats(&self, bytes_per_cycle: usize, capacity_bytes: u64) -> WfifoStats {
+        WfifoStats {
+            capacity_bytes,
+            high_water_bytes: self.high_water_cycles() * bytes_per_cycle as u64,
+            stall_cycles: self.stall_cycles,
+            hidden_cycles: self.hidden_cycles,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +303,91 @@ mod tests {
             assert_eq!(pushed, popped + f.len() as u64);
             assert_eq!(f.pushes, pushed);
             assert_eq!(f.pops, popped);
+        });
+    }
+
+    #[test]
+    fn prefetch_window_hides_stream_behind_prior_compute() {
+        // Stage 1 is compute-bound (work 5, stream 3): the WMU idles 2
+        // cycles, banking 2 cycles of prefetch budget. Stage 2's 6-cycle
+        // stream hides 2 of them, exposing 4 against 4 cycles of work.
+        let mut w = PrefetchWindow::new(10);
+        assert_eq!(w.stage(5, 3), 5);
+        assert_eq!(w.stage(4, 6), 4);
+        assert_eq!(w.hidden_cycles, 2);
+        assert_eq!(w.stall_cycles, 0);
+        // Stage 3 is stream-bound with an empty budget: fully exposed.
+        assert_eq!(w.stage(1, 5), 5);
+        assert_eq!(w.stall_cycles, 4);
+        assert_eq!(w.high_water_cycles(), 2);
+    }
+
+    #[test]
+    fn prefetch_budget_clamped_to_capacity() {
+        // A long compute-only stage banks far more idle time than the
+        // W-FIFO can hold; the next stream hides at most `capacity`.
+        let mut w = PrefetchWindow::new(4);
+        assert_eq!(w.stage(100, 0), 100);
+        assert_eq!(w.stage(0, 20), 16, "only 4 cycles fit the FIFO");
+        assert_eq!(w.hidden_cycles, 4);
+        assert_eq!(w.high_water_cycles(), 4);
+    }
+
+    #[test]
+    fn high_water_counts_multi_layer_occupancy() {
+        // One long idle period pre-loads three later layers' streams: all
+        // nine hidden cycles sit in the FIFO together at the end of stage
+        // 1, so the peak is their sum — not any single stage's hide.
+        let mut w = PrefetchWindow::new(10);
+        w.stage(100, 0);
+        w.stage(0, 3);
+        w.stage(0, 3);
+        w.stage(0, 3);
+        assert_eq!(w.hidden_cycles, 9);
+        assert_eq!(w.high_water_cycles(), 9, "occupancy peaks at the pre-loaded sum");
+    }
+
+    #[test]
+    fn zero_capacity_prefetch_is_exactly_serial() {
+        let mut w = PrefetchWindow::new(0);
+        let stages = [(5u64, 3u64), (4, 6), (0, 7), (9, 0)];
+        let mut total = 0;
+        for (work, stream) in stages {
+            total += w.stage(work, stream);
+        }
+        let serial: u64 = stages.iter().map(|&(w, s)| w.max(s)).sum();
+        assert_eq!(total, serial);
+        assert_eq!(w.hidden_cycles, 0);
+        assert_eq!(w.stats(8, 0).high_water_bytes, 0);
+    }
+
+    #[test]
+    fn prop_prefetch_bounded_by_serial_and_busy_totals() {
+        // For any stage sequence and capacity: pipelined total is never
+        // above the serial elastic composition and never below either
+        // serialized resource (total work, total stream) — the WMU is one
+        // port and the array is one array.
+        forall("prefetch pipeline bounds", 120, |g| {
+            let cap = g.size(0, 64) as u64;
+            let mut w = PrefetchWindow::new(cap);
+            let n = g.size(1, 20);
+            let mut total = 0u64;
+            let mut serial = 0u64;
+            let mut work_sum = 0u64;
+            let mut stream_sum = 0u64;
+            for _ in 0..n {
+                let work = g.size(0, 50) as u64;
+                let stream = g.size(0, 50) as u64;
+                total += w.stage(work, stream);
+                serial += work.max(stream);
+                work_sum += work;
+                stream_sum += stream;
+            }
+            assert!(total <= serial, "pipelined {total} > serial {serial}");
+            assert!(total >= work_sum, "pipelined {total} < total work {work_sum}");
+            assert!(total >= stream_sum, "pipelined {total} < total stream {stream_sum}");
+            assert!(w.hidden_cycles >= serial - total, "hidden must cover the gap");
+            assert!(w.high_water_cycles() <= cap, "occupancy can never exceed the FIFO");
         });
     }
 

@@ -18,12 +18,21 @@
 //! builds the validation-mode instance that routes convs through the
 //! event-vector path and the attention/WTFC through the byte-map walks —
 //! both must produce bit-identical reports.
+//!
+//! Latency composition (see DESIGN.md §Cross-layer weight prefetch): each
+//! timed node contributes an (array work, weight stream) stage; the
+//! elastic default threads the stages through a capacity-bounded
+//! [`PrefetchWindow`] so a layer's weight stream hides behind earlier
+//! layers' compute (the WMU filling the W-FIFO "based on the computation
+//! status", paper Fig 3), while `pipeline = false` keeps the per-layer
+//! serial `max` and the rigid ablation keeps the `+`.
 
 use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
 use crate::arch::epa::{ConvParams, ConvScratch, Epa, WeightCache};
+use crate::arch::fifo::{PrefetchWindow, WfifoStats};
 use crate::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use crate::arch::sda::{ConvGeom, PipeSda};
-use crate::arch::wmu::Wmu;
+use crate::arch::wmu::{Wmu, WmuBroadcast};
 use crate::arch::wtfc::Wtfc;
 use crate::config::ArchConfig;
 use crate::model::ir::{Model, Op};
@@ -50,15 +59,38 @@ impl ModuleCycles {
     }
 }
 
+/// How an image's conv/FC weight streams are charged to its report.
+#[derive(Debug, Clone, Copy)]
+pub enum WeightFlow<'a> {
+    /// Standalone inference: the image pays its full weight-stream DRAM
+    /// traffic.
+    Exclusive,
+    /// The image runs inside a device batch whose engine-pool workers share
+    /// one [`WmuBroadcast`]: each node's weight tile is fetched once per
+    /// batch and this image is attributed its even split. Timing is
+    /// unchanged (the W-FIFO replay paces the array identically); only the
+    /// off-chip side of the ledger changes.
+    Broadcast(&'a WmuBroadcast),
+}
+
 /// Result of simulating one image.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
-    /// End-to-end latency in cycles (elastic composition per layer).
+    /// End-to-end latency in cycles (elastic composition per layer, with
+    /// cross-layer weight prefetch when [`Accelerator::pipeline`] is on).
     pub cycles: u64,
     /// What a rigid (non-elastic) design would pay.
     pub cycles_rigid: u64,
+    /// What the elastic design pays *without* cross-layer weight prefetch
+    /// (the serial per-layer `max` composition; equals `cycles` when the
+    /// pipeline is disabled or the W-FIFO capacity is 0).
+    pub cycles_serial: u64,
     /// Per-module busy cycles.
     pub modules: ModuleCycles,
+    /// W-FIFO prefetch-model occupancy/stall stats (buffer-sizing view).
+    pub wfifo: WfifoStats,
+    /// Total WMU port-busy cycles across the image's weight streams.
+    pub weight_stream_cycles: u64,
     /// Activity counters (drives the energy model).
     pub activity: Activity,
     /// Weight-stream DRAM bytes charged to this image (conv + FC weights,
@@ -108,6 +140,17 @@ pub struct Accelerator {
     /// the materializing event-vector path and the attention/WTFC through
     /// the byte-map walks for validation.
     pub fused: bool,
+    /// Cross-layer weight-prefetch pipeline (default on): while layer L
+    /// computes, the WMU prefetches layer L+1's weight tiles into the
+    /// elastic W-FIFO, bounded by its capacity
+    /// ([`crate::config::ArchConfig::wfifo_bytes`]). `false` keeps the
+    /// serial per-layer composition; the rigid ablation is unaffected
+    /// either way (it has no elastic FIFOs to prefetch into).
+    pub pipeline: bool,
+    /// Host threads for the fused conv scatter (output-channel blocks).
+    /// Default 1 — the engine pool already parallelizes across images;
+    /// single-image callers (CLI `--host-threads`, benches) opt in.
+    pub host_threads: usize,
     sda: PipeSda,
     epa: Epa,
     wtfc: Wtfc,
@@ -124,6 +167,8 @@ impl Accelerator {
             energy: EnergyModel::from_cfg(&cfg),
             elastic: true,
             fused: true,
+            pipeline: true,
+            host_threads: 1,
             cfg,
         }
     }
@@ -146,25 +191,27 @@ impl Accelerator {
 
     /// Simulate one image (input spike map) through the model.
     pub fn run(&self, model: &Model, input: &SpikeMap) -> Result<Report> {
-        self.run_cached(model, input, &mut SimScratch::default(), 1.0)
+        self.run_cached(model, input, &mut SimScratch::default(), WeightFlow::Exclusive)
     }
 
     /// Simulate one image with reusable per-engine `scratch` (transposed
-    /// weights cached across calls) and a weight-stream amortization
-    /// factor: the fraction of the conv/FC weight DRAM traffic this image
-    /// is charged. Standalone inference passes `1.0`; the coordinator's
-    /// batch path passes [`crate::coordinator::Batcher::dram_amortization`]
-    /// of the batch size — the batch pays one weight stream instead of `n`
-    /// (the per-worker [`WeightCache`] is what makes that physically
-    /// honest). Timing is unaffected: the W-FIFO replay still paces the
-    /// array identically; only off-chip traffic (and therefore DRAM
-    /// energy) is credited.
+    /// weights cached across calls) and an explicit weight-stream flow:
+    /// [`WeightFlow::Exclusive`] for standalone inference (full charge), or
+    /// [`WeightFlow::Broadcast`] when the image runs inside a device batch
+    /// whose workers share one [`WmuBroadcast`] — each node's tile is
+    /// fetched from DRAM once per batch and broadcast, so this image's
+    /// report carries its even split of the fetch, derived from the per-
+    /// node transaction ledger instead of the retired scalar amortization
+    /// credit (the per-worker [`WeightCache`] is the host-side mirror that
+    /// makes the sharing physically honest). Timing is unaffected by the
+    /// flow: the W-FIFO replay still paces the array identically; only
+    /// off-chip traffic (and therefore DRAM energy) is shared.
     pub fn run_cached(
         &self,
         model: &Model,
         input: &SpikeMap,
         scratch: &mut SimScratch,
-        weight_amort: f64,
+        weights_flow: WeightFlow,
     ) -> Result<Report> {
         let (ic, ih, iw) = model.input_dims;
         if input.shape().dims() != [ic, ih, iw] {
@@ -174,7 +221,10 @@ impl Accelerator {
         let mut report = Report::default();
         let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
         let mut acts: Vec<PackedSpikeMap> = Vec::with_capacity(model.nodes.len());
-        let mut fc_weight_bytes = 0u64;
+        // Per-node (array work, weight stream) stage costs in walk order,
+        // composed into the end-to-end latency after the walk.
+        let mut stages: Vec<(u64, u64)> = Vec::with_capacity(model.nodes.len());
+        let mut fc_weight_nodes: Vec<(usize, u64)> = Vec::new();
         let mut util_sum = 0.0;
         let mut util_n = 0usize;
         // Input image fetch: C·H·W bits from off-chip, byte-packed.
@@ -203,10 +253,11 @@ impl Accelerator {
                     // vector, transposed weights served from the per-node
                     // cache. Validation mode materializes the events and
                     // replays them; both yield bit-identical reports.
+                    wmu.begin_node(nid);
                     let (out, st, sda_c, sda_cr) = if self.fused {
                         let taps = *cin * *k * *k;
                         let wt = weight_cache.transposed(nid, weights, *cout, taps);
-                        let (out, st, sda_st) = self.epa.run_conv_fused_cached(
+                        let (out, st, sda_st) = self.epa.run_conv_fused_cached_par(
                             &self.sda,
                             x,
                             &geom,
@@ -214,6 +265,7 @@ impl Accelerator {
                             wt,
                             &mut wmu,
                             conv_scratch,
+                            self.host_threads,
                         );
                         (out, st, sda_st.cycles, sda_st.cycles_rigid)
                     } else {
@@ -235,8 +287,17 @@ impl Accelerator {
                     } else {
                         (sda_cr, st.cycles_rigid)
                     };
-                    let layer = if self.elastic { sda_c.max(epa_c) } else { sda_c + epa_c };
-                    report.cycles += layer;
+                    // Stage decomposition for the cross-layer pipeline:
+                    // an elastic layer splits into (array work, weight
+                    // stream) so the prefetch window can hide the stream
+                    // behind earlier layers; a rigid layer stays one serial
+                    // lump (its stream is already summed into
+                    // `st.cycles_rigid`), keeping the ablation's `+`.
+                    if self.elastic {
+                        stages.push((sda_c.max(st.compute_cycles), st.weight_cycles));
+                    } else {
+                        stages.push((sda_c + epa_c, 0));
+                    }
                     report.cycles_rigid += sda_cr + st.cycles_rigid;
                     report.modules.sda += sda_c;
                     report.modules.epa += epa_c;
@@ -255,7 +316,7 @@ impl Accelerator {
                     let out = pool_or(x, *k, *stride)?;
                     // Pool runs in the spiking-buffer datapath: one scan.
                     let cyc = (x.numel() as u64).div_ceil(32);
-                    report.cycles += cyc;
+                    stages.push((cyc, 0));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
@@ -269,7 +330,7 @@ impl Accelerator {
                     let mut out = a.clone();
                     out.or_assign(b);
                     let cyc = (a.numel() as u64).div_ceil(32);
-                    report.cycles += cyc;
+                    stages.push((cyc, 0));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (a.numel() as u64).div_ceil(8) * 2;
@@ -309,20 +370,57 @@ impl Accelerator {
                         self.wtfc.run(&x.to_map(), *classes, *cin, *ho, *wo, *window, weights)
                     };
                     let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
-                    report.cycles += cyc;
+                    stages.push((cyc, 0));
                     report.cycles_rigid += out.cycles_rigid;
                     report.modules.wtfc += cyc;
                     report.activity.sops += out.sops;
-                    // FC weights stream from off-chip (amortized below).
-                    fc_weight_bytes += weights.len() as u64;
+                    // FC weights stream from off-chip (charged per node so
+                    // the broadcast ledger can share the fetch).
+                    fc_weight_nodes.push((nid, weights.len() as u64));
                     report.logits = out.logits;
                     acts.push(PackedSpikeMap::zeros((*classes, 1, 1)));
                 }
             }
         }
-        // Weight-stream DRAM: conv weights (WMU) + FC weights, scaled by
-        // the batch amortization factor (1.0 = standalone image).
-        report.weight_dram_bytes = amortize_bytes(wmu.dram_bytes + fc_weight_bytes, weight_amort);
+        // Compose the end-to-end latency from the stage walk.
+        // `cycles_serial` is the per-layer elastic `max` composition (the
+        // pre-pipeline model); `cycles` additionally hides each layer's
+        // weight stream behind earlier layers' compute through the W-FIFO
+        // prefetch window — capacity-bounded, so an undersized FIFO only
+        // partially overlaps and capacity 0 reproduces the serial numbers
+        // exactly. The rigid ablation's stages are serial lumps, so both
+        // compositions degenerate to the rigid `+` there.
+        let cap_cycles = if self.elastic && self.pipeline {
+            self.cfg.wfifo_bytes() / self.cfg.wmu_bytes_per_cycle.max(1) as u64
+        } else {
+            0
+        };
+        let mut window = PrefetchWindow::new(cap_cycles);
+        for &(work, stream) in &stages {
+            report.cycles_serial += work.max(stream);
+            report.cycles += window.stage(work, stream);
+        }
+        let cap_bytes = if cap_cycles > 0 { self.cfg.wfifo_bytes() } else { 0 };
+        report.wfifo = window.stats(self.cfg.wmu_bytes_per_cycle, cap_bytes);
+        report.weight_stream_cycles = wmu.stream_cycles;
+        // Weight-stream DRAM: conv weights (per-node WMU transactions) + FC
+        // weights — full charge standalone, or the even split of the single
+        // per-batch fetch under the broadcast WMU.
+        let fc_weight_bytes: u64 = fc_weight_nodes.iter().map(|&(_, b)| b).sum();
+        report.weight_dram_bytes = match weights_flow {
+            WeightFlow::Exclusive => wmu.dram_bytes + fc_weight_bytes,
+            WeightFlow::Broadcast(shared) => {
+                let mut bytes = 0u64;
+                for tx in &wmu.node_log {
+                    bytes += shared.charge(tx.node, tx.bytes);
+                }
+                for &(node, b) in &fc_weight_nodes {
+                    bytes += shared.charge(node, b);
+                }
+                bytes
+            }
+        };
+        report.activity.weight_dram_bytes = report.weight_dram_bytes;
         report.activity.dram_bytes += report.weight_dram_bytes;
         report.activity.cycles = report.cycles;
         report.predicted = crate::model::exec::argmax_first(&report.logits);
@@ -342,17 +440,6 @@ impl Accelerator {
         } else {
             1000.0 / report.latency_ms
         }
-    }
-}
-
-/// Apply the weight-stream amortization factor to a byte count. A factor at
-/// or above 1.0 charges the bytes exactly (no float round-trip on the
-/// standalone path); fractions round to the nearest byte.
-fn amortize_bytes(bytes: u64, factor: f64) -> u64 {
-    if !factor.is_finite() || factor >= 1.0 {
-        bytes
-    } else {
-        (bytes as f64 * factor.max(0.0)).round() as u64
     }
 }
 
@@ -464,7 +551,10 @@ mod tests {
                 let label = format!("{} seed={seed}", model.name);
                 assert_eq!(fused.logits, mat.logits, "{label}");
                 assert_eq!(fused.cycles, mat.cycles, "{label}");
+                assert_eq!(fused.cycles_serial, mat.cycles_serial, "{label}");
                 assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{label}");
+                assert_eq!(fused.wfifo, mat.wfifo, "{label}");
+                assert_eq!(fused.weight_stream_cycles, mat.weight_stream_cycles, "{label}");
                 assert_eq!(fused.modules.sda, mat.modules.sda, "{label}");
                 assert_eq!(fused.modules.epa, mat.modules.epa, "{label}");
                 assert_eq!(fused.modules.wtfc, mat.modules.wtfc, "{label}");
@@ -493,7 +583,7 @@ mod tests {
         for seed in [1u64, 2, 3] {
             let x = input(seed);
             let fresh = acc.run(&m, &x).unwrap();
-            let cached = acc.run_cached(&m, &x, &mut scratch, 1.0).unwrap();
+            let cached = acc.run_cached(&m, &x, &mut scratch, WeightFlow::Exclusive).unwrap();
             assert_eq!(fresh.logits, cached.logits, "seed={seed}");
             assert_eq!(fresh.cycles, cached.cycles, "seed={seed}");
             assert_eq!(fresh.activity.dram_bytes, cached.activity.dram_bytes, "seed={seed}");
@@ -505,30 +595,125 @@ mod tests {
     }
 
     #[test]
-    fn batch_weight_amortization_scales_weight_dram() {
-        // A 4-image batch pays one weight stream: each image is charged
-        // ~1/4 of the standalone conv+FC weight DRAM, while the per-image
-        // input fetch is unchanged and function/timing are untouched.
+    fn broadcast_wmu_shares_one_fetch_across_the_batch() {
+        // A 4-image device batch pays one weight stream: every node's tile
+        // is fetched from DRAM once (the broadcast ledger records exactly
+        // one transaction per weight node) and each image carries its even
+        // split — while the per-image input fetch, function and timing are
+        // untouched.
         let m = zoo::resnet11(10, 3);
         let x = input(5);
         let acc = Accelerator::new(ArchConfig::default());
         let mut scratch = SimScratch::default();
-        let single = acc.run_cached(&m, &x, &mut scratch, 1.0).unwrap();
-        let batched = acc.run_cached(&m, &x, &mut scratch, 0.25).unwrap();
+        let single = acc.run_cached(&m, &x, &mut scratch, WeightFlow::Exclusive).unwrap();
         assert!(single.weight_dram_bytes > 0);
-        assert_eq!(
-            batched.weight_dram_bytes,
-            ((single.weight_dram_bytes as f64) * 0.25).round() as u64
+        let shared = WmuBroadcast::new(4);
+        let mut batched = Vec::new();
+        for _ in 0..4 {
+            batched.push(
+                acc.run_cached(&m, &x, &mut scratch, WeightFlow::Broadcast(&shared)).unwrap(),
+            );
+        }
+        // One fetch per weight node, totalling the standalone stream.
+        let weight_nodes = (m.num_convs() + 1) as u64; // convs + the FC
+        assert_eq!(shared.transactions(), weight_nodes);
+        assert_eq!(shared.dram_bytes(), single.weight_dram_bytes);
+        // Per-image share ≈ 1/4: each node's split floors independently, so
+        // the batch total never exceeds one stream and undershoots it by at
+        // most 3 remainder bytes per node.
+        let per_image = batched[0].weight_dram_bytes;
+        assert!(per_image < single.weight_dram_bytes / 3);
+        assert!(4 * per_image <= single.weight_dram_bytes, "floor split conserves bytes");
+        let floor_slack = 3 * weight_nodes;
+        assert!(
+            4 * per_image + floor_slack >= single.weight_dram_bytes,
+            "4 x {per_image} vs {} (slack {floor_slack})",
+            single.weight_dram_bytes
         );
-        assert!(batched.weight_dram_bytes < single.weight_dram_bytes);
-        assert_eq!(
-            single.activity.dram_bytes - single.weight_dram_bytes,
-            batched.activity.dram_bytes - batched.weight_dram_bytes,
-            "non-weight DRAM (input fetch) must be unaffected"
-        );
-        assert_eq!(single.logits, batched.logits);
-        assert_eq!(single.cycles, batched.cycles);
-        assert!(batched.energy.total_j() < single.energy.total_j());
+        for b in &batched {
+            assert_eq!(b.weight_dram_bytes, per_image, "shares are image-order independent");
+            assert_eq!(b.logits, single.logits);
+            assert_eq!(b.cycles, single.cycles, "broadcast must not change timing");
+            assert_eq!(
+                single.activity.dram_bytes - single.weight_dram_bytes,
+                b.activity.dram_bytes - b.weight_dram_bytes,
+                "non-weight DRAM (input fetch) must be unaffected"
+            );
+            assert!(b.energy.total_j() < single.energy.total_j());
+        }
+    }
+
+    #[test]
+    fn pipelined_prefetch_bounded_and_strictly_helps_stream_bound_models() {
+        // Invariants of the cross-layer weight-prefetch schedule, on real
+        // models: pipelined latency never exceeds the serial composition,
+        // never undercuts either serialized resource (total array work per
+        // stage is bounded below by the module counters; the WMU port by
+        // `weight_stream_cycles`), and on the zoo CNNs — whose late layers
+        // are stream-bound — it is strictly faster.
+        for model in [zoo::resnet11(10, 3), zoo::qkfresnet11(10, 3)] {
+            let x = input(7);
+            let piped = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
+            let mut serial_acc = Accelerator::new(ArchConfig::default());
+            serial_acc.pipeline = false;
+            let serial = serial_acc.run(&model, &x).unwrap();
+            let label = &model.name;
+            assert_eq!(serial.cycles, serial.cycles_serial, "{label}: pipeline off == serial");
+            assert_eq!(serial.wfifo.hidden_cycles, 0, "{label}");
+            assert_eq!(piped.cycles_serial, serial.cycles, "{label}: same serial reference");
+            assert!(piped.cycles <= piped.cycles_serial, "{label}");
+            assert!(piped.cycles < serial.cycles, "{label}: prefetch must strictly help");
+            assert!(piped.cycles >= piped.weight_stream_cycles, "{label}: WMU is one port");
+            assert!(
+                piped.cycles_serial - piped.cycles <= piped.wfifo.hidden_cycles,
+                "{label}: the gap must be covered by hidden stream cycles"
+            );
+            assert!(piped.wfifo.high_water_bytes <= piped.wfifo.capacity_bytes, "{label}");
+            // Function is untouched by the schedule.
+            assert_eq!(piped.logits, serial.logits, "{label}");
+            assert_eq!(piped.total_spikes, serial.total_spikes, "{label}");
+            assert_eq!(piped.weight_dram_bytes, serial.weight_dram_bytes, "{label}");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_wfifo_degenerates_to_serial() {
+        // wfifo_depth = 0 means nothing can be prefetched ahead: the
+        // pipelined schedule must reproduce the serial composition exactly.
+        let m = zoo::resnet11(10, 3);
+        let x = input(3);
+        let cfg = ArchConfig { wfifo_depth: 0, ..Default::default() };
+        let piped = Accelerator::new(cfg.clone()).run(&m, &x).unwrap();
+        let mut serial_acc = Accelerator::new(cfg);
+        serial_acc.pipeline = false;
+        let serial = serial_acc.run(&m, &x).unwrap();
+        assert_eq!(piped.cycles, serial.cycles);
+        assert_eq!(piped.cycles, piped.cycles_serial);
+        assert_eq!(piped.wfifo.hidden_cycles, 0);
+        assert_eq!(piped.wfifo.capacity_bytes, 0);
+        assert!(piped.wfifo.stall_cycles > 0, "stream-bound layers stall in the open");
+    }
+
+    #[test]
+    fn host_parallel_scatter_report_bit_identical() {
+        // host_threads only changes wall-clock, never the simulated device:
+        // every report field must match the single-threaded walk.
+        for model in [zoo::resnet11(10, 3), zoo::qkfresnet11(10, 3)] {
+            let x = input(11);
+            let serial = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
+            let mut par_acc = Accelerator::new(ArchConfig::default());
+            par_acc.host_threads = 4;
+            let par = par_acc.run(&model, &x).unwrap();
+            let label = &model.name;
+            assert_eq!(par.logits, serial.logits, "{label}");
+            assert_eq!(par.cycles, serial.cycles, "{label}");
+            assert_eq!(par.cycles_rigid, serial.cycles_rigid, "{label}");
+            assert_eq!(par.total_spikes, serial.total_spikes, "{label}");
+            assert_eq!(par.activity.sops, serial.activity.sops, "{label}");
+            assert_eq!(par.activity.dram_bytes, serial.activity.dram_bytes, "{label}");
+            assert_eq!(par.weight_dram_bytes, serial.weight_dram_bytes, "{label}");
+            assert_eq!(par.epa_utilization, serial.epa_utilization, "{label}");
+        }
     }
 
     #[test]

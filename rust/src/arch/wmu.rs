@@ -4,7 +4,33 @@
 //! based on the computation status. The simulator models it as a
 //! bandwidth-limited stream with double-buffered prefetch: the EPA composes
 //! its compute time with the stream time via `max()` when elastic
-//! (decoupled) and `+` when rigid.
+//! (decoupled) and `+` when rigid, and [`crate::arch::Accelerator`]
+//! additionally overlaps one layer's compute with the *next* layer's
+//! stream through the cross-layer prefetch pipeline
+//! ([`crate::arch::fifo::PrefetchWindow`]).
+//!
+//! Every stream is logged per node ([`WmuTransaction`]), which is what the
+//! batch path's [`WmuBroadcast`] consumes: the engine-pool workers running
+//! the images of one device batch execute the same node walk, so each
+//! node's weight tile is fetched from DRAM **once** and broadcast to every
+//! consumer over the port — n images, one fetch — instead of the retired
+//! scalar `1/n` amortization credit.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// One logged weight stream: which node, how many bytes, how long the port
+/// was busy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WmuTransaction {
+    /// Model node id the stream served.
+    pub node: usize,
+    /// Bytes moved.
+    pub bytes: u64,
+    /// Port-busy cycles (ceil-divided by the port width).
+    pub cycles: u64,
+}
 
 /// Streaming statistics for one accelerator run.
 #[derive(Debug, Clone, Default)]
@@ -17,12 +43,20 @@ pub struct Wmu {
     pub stream_cycles: u64,
     /// Number of stream transactions (tile weight loads).
     pub transactions: u64,
+    /// Per-node transaction log (drives the broadcast sharing ledger).
+    pub node_log: Vec<WmuTransaction>,
+    cur_node: usize,
 }
 
 impl Wmu {
     /// New WMU with the configured port width.
     pub fn new(bytes_per_cycle: usize) -> Self {
         Wmu { bytes_per_cycle: bytes_per_cycle.max(1), ..Default::default() }
+    }
+
+    /// Tag subsequent streams with the model node they serve.
+    pub fn begin_node(&mut self, node: usize) {
+        self.cur_node = node;
     }
 
     /// Account one weight-tile stream of `bytes`; returns the cycles the
@@ -32,14 +66,123 @@ impl Wmu {
         self.dram_bytes += bytes;
         self.stream_cycles += cycles;
         self.transactions += 1;
+        self.node_log.push(WmuTransaction { node: self.cur_node, bytes, cycles });
         cycles
     }
 
-    /// Reset counters (per-image accounting).
+    /// Reset counters (per-image accounting). Clears the per-node
+    /// transaction log too — a stale log would double-charge the broadcast
+    /// ledger with the previous image's fetches.
     pub fn reset(&mut self) {
         self.dram_bytes = 0;
         self.stream_cycles = 0;
         self.transactions = 0;
+        self.node_log.clear();
+        self.cur_node = 0;
+    }
+}
+
+/// An image's share of a `bytes`-byte fetch broadcast to `n` consumers:
+/// the full charge standalone, the floored even split in a batch. Floor
+/// keeps the attribution conservative and order-independent: the summed
+/// per-image shares never exceed the bytes the ledger actually fetched
+/// (the ≤ n−1 remainder bytes per node stay on the ledger only).
+fn split_share(bytes: u64, n: usize) -> u64 {
+    if n <= 1 {
+        bytes
+    } else {
+        bytes / n as u64
+    }
+}
+
+#[derive(Debug)]
+struct NodeFetch {
+    bytes: u64,
+    consumers: usize,
+}
+
+#[derive(Debug, Default)]
+struct Ledger {
+    nodes: HashMap<usize, NodeFetch>,
+    dram_bytes: u64,
+    transactions: u64,
+}
+
+/// The shared broadcast WMU of one device batch: `images` inferences of the
+/// same model run back-to-back across the engine pool, and each node's
+/// weight tile is fetched from off-chip memory **once** and fanned out to
+/// every consumer over the (port-width-limited) stream port.
+///
+/// Per-consumer pacing is unchanged — every image's W-FIFO replay still
+/// takes `bytes / port_width` cycles, exactly as a standalone run, so
+/// device timing is independent of the batch — but the DRAM side of the
+/// ledger records one fetch per node per batch. [`WmuBroadcast::charge`]
+/// attributes each consumer the floored even split of the fetched bytes,
+/// which depends only on the batch size, never on worker count or
+/// completion order: per-image reports are bit-deterministic for any pool
+/// size (the regression the retired scalar credit was approximating).
+#[derive(Debug)]
+pub struct WmuBroadcast {
+    images: usize,
+    inner: Mutex<Ledger>,
+}
+
+impl WmuBroadcast {
+    /// Broadcast domain for a device batch of `images` inferences (clamped
+    /// to at least one; a 1-image "batch" degenerates to the standalone
+    /// full charge).
+    pub fn new(images: usize) -> Self {
+        WmuBroadcast { images: images.max(1), inner: Mutex::new(Ledger::default()) }
+    }
+
+    /// Number of images sharing each fetch.
+    pub fn images(&self) -> usize {
+        self.images
+    }
+
+    /// Record this image's consumption of `node`'s `bytes`-byte weight
+    /// stream and return the bytes attributed to it. The first consumer
+    /// triggers the (single) DRAM fetch; later consumers only join the
+    /// broadcast fan-out.
+    pub fn charge(&self, node: usize, bytes: u64) -> u64 {
+        let mut guard = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let ledger = &mut *guard;
+        match ledger.nodes.entry(node) {
+            Entry::Vacant(v) => {
+                v.insert(NodeFetch { bytes, consumers: 1 });
+                ledger.dram_bytes += bytes;
+                ledger.transactions += 1;
+            }
+            Entry::Occupied(mut o) => {
+                let fetch = o.get_mut();
+                debug_assert_eq!(
+                    fetch.bytes, bytes,
+                    "node {node}: consumers of one broadcast fetch must agree on its size"
+                );
+                fetch.consumers += 1;
+                debug_assert!(
+                    fetch.consumers <= self.images,
+                    "node {node}: more consumers than images in the batch"
+                );
+            }
+        }
+        split_share(bytes, self.images)
+    }
+
+    /// Total bytes actually fetched from DRAM (one fetch per node).
+    pub fn dram_bytes(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).dram_bytes
+    }
+
+    /// Number of distinct fetch transactions performed.
+    pub fn transactions(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).transactions
+    }
+
+    /// How many images consumed `node`'s fetch so far.
+    pub fn consumers(&self, node: usize) -> usize {
+        let ledger = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        ledger.nodes.get(&node).map_or(0, |f| f.consumers)
     }
 }
 
@@ -63,11 +206,78 @@ mod tests {
     }
 
     #[test]
-    fn reset_clears_counters() {
+    fn node_log_tags_streams_with_their_node() {
+        let mut w = Wmu::new(8);
+        w.begin_node(3);
+        w.stream(64);
+        w.begin_node(7);
+        w.stream(16);
+        assert_eq!(
+            w.node_log,
+            vec![
+                WmuTransaction { node: 3, bytes: 64, cycles: 8 },
+                WmuTransaction { node: 7, bytes: 16, cycles: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn reset_clears_counters_and_node_log() {
+        // Regression: a reset that kept the node log would double-charge
+        // the broadcast ledger with the previous image's fetches.
         let mut w = Wmu::new(4);
+        w.begin_node(5);
         w.stream(100);
         w.reset();
         assert_eq!(w.dram_bytes, 0);
         assert_eq!(w.stream_cycles, 0);
+        assert_eq!(w.transactions, 0);
+        assert!(w.node_log.is_empty());
+        w.stream(8);
+        assert_eq!(w.node_log[0].node, 0, "node tag must not leak across reset");
+    }
+
+    #[test]
+    fn broadcast_fetches_once_and_splits_evenly() {
+        let b = WmuBroadcast::new(4);
+        // Four images consume the same two nodes.
+        let mut attributed = 0u64;
+        for _ in 0..4 {
+            assert_eq!(b.charge(0, 1000), 250);
+            assert_eq!(b.charge(1, 10), 2, "floored even split");
+            attributed += 250 + 2;
+        }
+        assert_eq!(b.dram_bytes(), 1010, "each node fetched exactly once");
+        assert_eq!(b.transactions(), 2);
+        assert_eq!(b.consumers(0), 4);
+        assert_eq!(b.consumers(9), 0);
+        // Conservation: summed per-image attributions never exceed the
+        // bytes the ledger fetched (the floor remainder stays unattributed).
+        assert!(attributed <= b.dram_bytes());
+        assert_eq!(b.dram_bytes() - attributed, 2, "10 % 4 remainder stays on the ledger");
+    }
+
+    #[test]
+    fn broadcast_of_one_is_the_standalone_full_charge() {
+        let b = WmuBroadcast::new(1);
+        assert_eq!(b.charge(0, 777), 777);
+        assert_eq!(b.dram_bytes(), 777);
+        let clamped = WmuBroadcast::new(0);
+        assert_eq!(clamped.images(), 1);
+        assert_eq!(clamped.charge(0, 5), 5);
+    }
+
+    #[test]
+    fn broadcast_share_is_order_independent() {
+        // The share depends only on (bytes, images): every consumer gets
+        // the same attribution no matter which worker thread charged first
+        // — per-image reports stay deterministic across pool sizes.
+        let a = WmuBroadcast::new(3);
+        let first = a.charge(2, 100);
+        let second = a.charge(2, 100);
+        let third = a.charge(2, 100);
+        assert_eq!(first, second);
+        assert_eq!(second, third);
+        assert_eq!(first, 33);
     }
 }

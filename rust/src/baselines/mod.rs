@@ -197,6 +197,7 @@ impl Baseline {
             sops,
             buf_bytes: trace.total_spikes * t / 8 * 2,
             dram_bytes: weight_bytes + ((input.numel() as u64) * t).div_ceil(8),
+            weight_dram_bytes: weight_bytes,
             cycles,
         };
         // time-parallel arrays burn T× the static power
@@ -210,6 +211,7 @@ impl Baseline {
             logits: trace.logits.clone(),
             predicted: trace.predicted(),
             latency_ms: self.cfg.cycles_to_ms(cycles),
+            weight_dram_bytes: weight_bytes,
             activity,
             ..Default::default()
         };

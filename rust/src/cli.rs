@@ -69,6 +69,17 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Default-on/off toggle: `--key` or `--key on|true|1` enables,
+    /// `--key off|false|0` disables, absent takes `default`.
+    pub fn get_on_off(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some("on") | Some("true") | Some("1") => Ok(true),
+            Some("off") | Some("false") | Some("0") => Ok(false),
+            Some(other) => bail!("--{key} {other:?} is not on/off"),
+            None => Ok(self.flag(key) || default),
+        }
+    }
 }
 
 /// Top-level usage text.
@@ -79,9 +90,15 @@ USAGE:
                     [--engine sim|golden|rigid|materializing|sibrain|scpu|stisnn|cerebron]
                     [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
                     [--arch PATH.ini] [--classes N] [--seed N]
+                    [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N]
                     (--workers N sizes the engine pool: one simulator replica
                      per worker thread, batches fan out across them;
-                     `materializing` runs the event-vector validation path)
+                     `materializing` runs the event-vector validation path;
+                     --pipeline, default on, overlaps each layer's weight
+                     stream with earlier layers' compute through the W-FIFO;
+                     --broadcast-wmu, default on, shares one weight fetch per
+                     node across each device batch; --host-threads N spreads
+                     the fused conv scatter over N host threads per image)
   neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
   neural resources  [--arch PATH.ini]                          Table-I style report
   neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep
@@ -131,5 +148,19 @@ mod tests {
     fn bad_int_reported() {
         let a = parse("run --images lots");
         assert!(a.get_usize("images", 0).is_err());
+    }
+
+    #[test]
+    fn on_off_toggles() {
+        let a = parse("run --pipeline off --broadcast-wmu on");
+        assert!(!a.get_on_off("pipeline", true).unwrap());
+        assert!(a.get_on_off("broadcast-wmu", false).unwrap());
+        // Absent: the default; bare flag: on.
+        assert!(a.get_on_off("missing", true).unwrap());
+        assert!(!a.get_on_off("missing", false).unwrap());
+        let b = parse("run --pipeline");
+        assert!(b.get_on_off("pipeline", false).unwrap());
+        let c = parse("run --pipeline maybe");
+        assert!(c.get_on_off("pipeline", true).is_err());
     }
 }

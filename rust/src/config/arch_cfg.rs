@@ -140,6 +140,17 @@ impl ArchConfig {
         self.epa_rows * self.epa_cols
     }
 
+    /// Elastic W-FIFO capacity in bytes: `wfifo_depth` entries per column,
+    /// each entry one `epa_rows`-weight beat, across `epa_cols` columns at
+    /// the configured weight width. This bounds how far ahead the WMU's
+    /// cross-layer prefetch can run (paper Fig 3: the WMU fills the W-FIFO
+    /// "based on the computation status"); a depth of 0 disables prefetch
+    /// and degenerates the pipelined schedule to the serial composition.
+    pub fn wfifo_bytes(&self) -> u64 {
+        let weight_bytes = (self.weight_bits as usize).div_ceil(8);
+        (self.wfifo_depth * self.epa_cols * self.epa_rows * weight_bytes) as u64
+    }
+
     /// Cycle time in seconds.
     pub fn cycle_s(&self) -> f64 {
         1.0e-6 / self.freq_mhz
@@ -161,6 +172,16 @@ mod tests {
         assert_eq!(c.freq_mhz, 200.0);
         assert_eq!(c.num_pes(), 256);
         assert_eq!(c.weight_bits, 8);
+    }
+
+    #[test]
+    fn wfifo_bytes_from_geometry() {
+        // Default: 32 entries × 16 cols × 16-weight beats × 1 B = 8 KiB.
+        assert_eq!(ArchConfig::default().wfifo_bytes(), 8192);
+        let none = ArchConfig { wfifo_depth: 0, ..Default::default() };
+        assert_eq!(none.wfifo_bytes(), 0);
+        let wide = ArchConfig { weight_bits: 16, ..Default::default() };
+        assert_eq!(wide.wfifo_bytes(), 16384);
     }
 
     #[test]

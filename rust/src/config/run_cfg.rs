@@ -21,6 +21,10 @@ pub struct RunConfig {
     pub batch_size: usize,
     /// Worker threads in the coordinator pool.
     pub workers: usize,
+    /// Share weight fetches across each device batch through the broadcast
+    /// WMU (default on; `false` charges every image its full stream — the
+    /// unshared reference mode).
+    pub broadcast_wmu: bool,
     /// Cross-check every Nth image against the PJRT golden model (0 = off).
     pub crosscheck_every: usize,
 }
@@ -35,6 +39,7 @@ impl Default for RunConfig {
             seed: 1234,
             batch_size: 4,
             workers: 1,
+            broadcast_wmu: true,
             crosscheck_every: 0,
         }
     }
@@ -52,6 +57,7 @@ impl RunConfig {
             seed: ini.get_usize("run", "seed", d.seed as usize)? as u64,
             batch_size: ini.get_usize("run", "batch_size", d.batch_size)?,
             workers: ini.get_usize("run", "workers", d.workers)?,
+            broadcast_wmu: ini.get_bool("run", "broadcast_wmu", d.broadcast_wmu)?,
             crosscheck_every: ini.get_usize("run", "crosscheck_every", d.crosscheck_every)?,
         })
     }
@@ -77,10 +83,14 @@ mod tests {
 
     #[test]
     fn from_ini_overrides() {
-        let ini = Ini::parse("[run]\nimages = 7\ndataset = synthcifar100\n").unwrap();
+        let ini =
+            Ini::parse("[run]\nimages = 7\ndataset = synthcifar100\nbroadcast_wmu = false\n")
+                .unwrap();
         let c = RunConfig::from_ini(&ini).unwrap();
         assert_eq!(c.images, 7);
         assert_eq!(c.num_classes(), 100);
         assert_eq!(c.batch_size, 4); // default preserved
+        assert!(!c.broadcast_wmu);
+        assert!(RunConfig::default().broadcast_wmu, "sharing is the default");
     }
 }

@@ -1,13 +1,16 @@
 //! Dynamic batcher.
 //!
 //! The accelerator streams weights per layer; consecutive images of the
-//! same model can reuse the streamed weights if they run back-to-back
+//! same model reuse the streamed weights when they run back-to-back
 //! (weight-stationary across a batch). The batcher groups up to
-//! `batch_size` queued requests; [`Batcher::dram_amortization`] is the
-//! credit the engine pool applies to every image of a dispatched batch —
-//! the batch pays one weight stream instead of `n` (the WMU holds the
-//! layer tile while the batch replays, and each pool worker's
-//! transposed-weight cache holds the host-side mirror of that tile).
+//! `batch_size` queued requests into device batches; each released batch
+//! becomes one broadcast domain in the engine pool
+//! ([`crate::arch::WmuBroadcast`]): every node's weight tile is fetched
+//! from off-chip memory once per batch and fanned out to all of the
+//! batch's images, with each pool worker's transposed-weight cache holding
+//! the host-side mirror of the tile. The former scalar `1/n`
+//! "amortization" credit is retired — the sharing now falls out of the
+//! modeled per-node fetch ledger instead of a formula.
 
 use crate::coordinator::request::InferRequest;
 
@@ -48,18 +51,6 @@ impl Batcher {
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
-
-    /// Weight-stream amortization factor for a batch of `n` images: the
-    /// batch pays one stream instead of `n`. Applied by
-    /// [`crate::coordinator::EnginePool::run_batch`] to the conv/FC weight
-    /// DRAM bytes of every image it dispatches.
-    pub fn dram_amortization(n: usize) -> f64 {
-        if n == 0 {
-            1.0
-        } else {
-            1.0 / n as f64
-        }
-    }
 }
 
 #[cfg(test)]
@@ -89,12 +80,6 @@ mod tests {
         let batch = b.flush().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(b.flush().is_none());
-    }
-
-    #[test]
-    fn amortization_is_one_over_n() {
-        assert_eq!(Batcher::dram_amortization(4), 0.25);
-        assert_eq!(Batcher::dram_amortization(0), 1.0);
     }
 
     #[test]

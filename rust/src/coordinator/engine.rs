@@ -5,7 +5,7 @@
 //! * `Golden` — the dense integer executor (fast functional path).
 //! * `Baseline` — one of the comparison architectures.
 
-use crate::arch::{Accelerator, Report, SimScratch};
+use crate::arch::{Accelerator, Report, SimScratch, WeightFlow, WmuBroadcast};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::config::ArchConfig;
 use crate::model::{exec, Model};
@@ -26,6 +26,9 @@ pub struct Outcome {
     pub total_spikes: u64,
     /// Synaptic ops.
     pub sops: u64,
+    /// Conv/FC weight-stream DRAM bytes charged to this image (after any
+    /// broadcast-WMU sharing; 0 for golden).
+    pub weight_dram_bytes: u64,
     /// Raw logits (integer domain).
     pub logits: Vec<i64>,
 }
@@ -96,6 +99,13 @@ impl Engine {
         Engine { model, backend: Backend::Baseline(Box::new(Baseline::new(kind, cfg))) }
     }
 
+    /// Simulator engine around a pre-configured [`Accelerator`] (the CLI
+    /// uses this to apply `--pipeline` / `--host-threads` before the pool
+    /// clones its replicas).
+    pub fn from_accelerator(model: Model, acc: Accelerator) -> Self {
+        Engine { model, backend: Backend::sim_with(acc) }
+    }
+
     /// Engine name for reports.
     pub fn name(&self) -> String {
         match &self.backend {
@@ -111,26 +121,29 @@ impl Engine {
 
     /// Run one image standalone (full weight-stream charge).
     pub fn infer(&self, spikes: &SpikeMap) -> Result<Outcome> {
-        self.infer_batched(spikes, 1.0)
+        self.infer_batched(spikes, None)
     }
 
-    /// Run one image as part of a device batch: `weight_amort` is the
-    /// fraction of the weight-stream DRAM traffic this image is charged
-    /// ([`crate::coordinator::Batcher::dram_amortization`] of the batch
-    /// size — the batch pays one stream instead of `n`). The sim backend
-    /// also reuses its per-replica scratch, so transposed weights are
-    /// cached across the images of the batch. Golden and baseline backends
-    /// ignore the factor.
-    pub fn infer_batched(&self, spikes: &SpikeMap, weight_amort: f64) -> Result<Outcome> {
+    /// Run one image as part of a device batch: `shared` is the batch's
+    /// broadcast WMU — every node's weight tile is fetched from DRAM once
+    /// per batch and fanned out, so this image's report carries its even
+    /// split of the modeled fetch (`None` = standalone full charge). The
+    /// sim backend also reuses its per-replica scratch, so transposed
+    /// weights are cached across the images of the batch. Golden and
+    /// baseline backends ignore the broadcast.
+    pub fn infer_batched(
+        &self,
+        spikes: &SpikeMap,
+        shared: Option<&WmuBroadcast>,
+    ) -> Result<Outcome> {
         match &self.backend {
             Backend::Sim(acc, scratch) => {
+                let flow = match shared {
+                    Some(b) => WeightFlow::Broadcast(b),
+                    None => WeightFlow::Exclusive,
+                };
                 let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
-                Ok(report_to_outcome(acc.run_cached(
-                    &self.model,
-                    spikes,
-                    &mut scratch,
-                    weight_amort,
-                )?))
+                Ok(report_to_outcome(acc.run_cached(&self.model, spikes, &mut scratch, flow)?))
             }
             Backend::Baseline(b) => Ok(report_to_outcome(b.run(&self.model, spikes)?)),
             Backend::Golden => {
@@ -141,6 +154,7 @@ impl Engine {
                     energy_mj: 0.0,
                     total_spikes: t.total_spikes,
                     sops: t.total_sops,
+                    weight_dram_bytes: 0,
                     logits: t.logits,
                 })
             }
@@ -152,7 +166,8 @@ impl Engine {
         match &self.backend {
             Backend::Sim(acc, scratch) => {
                 let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
-                Ok(Some(acc.run_cached(&self.model, spikes, &mut scratch, 1.0)?))
+                let flow = WeightFlow::Exclusive;
+                Ok(Some(acc.run_cached(&self.model, spikes, &mut scratch, flow)?))
             }
             Backend::Baseline(b) => Ok(Some(b.run(&self.model, spikes)?)),
             Backend::Golden => Ok(None),
@@ -167,6 +182,7 @@ fn report_to_outcome(r: Report) -> Outcome {
         energy_mj: r.energy.total_j() * 1e3,
         total_spikes: r.total_spikes,
         sops: r.activity.sops,
+        weight_dram_bytes: r.weight_dram_bytes,
         logits: r.logits,
     }
 }
@@ -230,21 +246,42 @@ mod tests {
     }
 
     #[test]
-    fn batched_inference_credits_weight_dram_energy_only() {
-        // Amortized weight streaming lowers energy but must not change
-        // function or timing.
+    fn batched_inference_shares_weight_dram_energy_only() {
+        // The broadcast WMU lowers per-image weight DRAM (and therefore
+        // energy) but must not change function or timing.
         let x = spikes();
         let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
         let single = engine.infer(&x).unwrap();
-        let batched = engine.infer_batched(&x, 0.25).unwrap();
+        let shared = WmuBroadcast::new(4);
+        let batched = engine.infer_batched(&x, Some(&shared)).unwrap();
         assert_eq!(single.logits, batched.logits);
         assert_eq!(single.predicted, batched.predicted);
         assert_eq!(single.sops, batched.sops);
         assert_eq!(single.device_ms, batched.device_ms);
-        assert!(batched.energy_mj < single.energy_mj, "weight DRAM credit missing");
-        // Golden backend has no device model: factor is ignored.
+        assert!(batched.energy_mj < single.energy_mj, "weight DRAM sharing missing");
+        assert!(batched.weight_dram_bytes < single.weight_dram_bytes);
+        assert_eq!(shared.dram_bytes(), single.weight_dram_bytes, "one modeled fetch");
+        // Golden backend has no device model: the broadcast is ignored.
         let gold = Engine::golden(zoo::tiny(10, 5));
-        assert_eq!(gold.infer_batched(&x, 0.25).unwrap().logits, gold.infer(&x).unwrap().logits);
+        let gold_shared = WmuBroadcast::new(4);
+        let via_batch = gold.infer_batched(&x, Some(&gold_shared)).unwrap();
+        assert_eq!(via_batch.logits, gold.infer(&x).unwrap().logits);
+        assert_eq!(gold_shared.dram_bytes(), 0);
+    }
+
+    #[test]
+    fn from_accelerator_applies_custom_schedule() {
+        // A pipeline-off accelerator wrapped via from_accelerator must keep
+        // function and report the serial (slower-or-equal) device latency.
+        let x = spikes();
+        let piped = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let mut acc = crate::arch::Accelerator::new(ArchConfig::default());
+        acc.pipeline = false;
+        let serial = Engine::from_accelerator(zoo::tiny(10, 5), acc);
+        let a = piped.infer(&x).unwrap();
+        let b = serial.infer(&x).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert!(a.device_ms <= b.device_ms);
     }
 
     #[test]

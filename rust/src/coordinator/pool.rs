@@ -7,8 +7,14 @@
 //! result is written to its request's slot — so the merged outcome vector
 //! is in submission order and bit-deterministic regardless of thread
 //! interleaving.
+//!
+//! Weight-stream accounting is a shared [`WmuBroadcast`] per device batch:
+//! workers executing the same node fetch its weight tile from DRAM once and
+//! broadcast it, so per-image reports carry the even split of a *modeled*
+//! fetch ledger (the retired scalar `1/n` credit fell out of a formula;
+//! this falls out of the transactions).
 
-use crate::coordinator::batcher::Batcher;
+use crate::arch::WmuBroadcast;
 use crate::coordinator::engine::{Engine, Outcome};
 use crate::coordinator::request::InferRequest;
 use anyhow::Result;
@@ -57,34 +63,39 @@ impl EnginePool {
     /// deterministic engine every functional field of the result vector is
     /// identical for any worker count (only the measured `host_ms` varies).
     ///
-    /// Device-batch accounting: the batch runs back-to-back on the
-    /// simulated device, so every request is charged
-    /// [`Batcher::dram_amortization`]`(batch.len())` of the weight-stream
-    /// DRAM traffic — the batch pays one stream instead of `n`. The factor
-    /// depends only on the batch size, never on the worker count, so
-    /// results stay bit-deterministic across pool sizes. Callers that
-    /// combine several batcher batches into one dispatch must use
-    /// [`EnginePool::run_batch_amortized`] with each request's own
-    /// per-batch factor instead.
+    /// Device-batch accounting: the whole batch is one broadcast domain —
+    /// it runs back-to-back on the simulated device and its workers share
+    /// one [`WmuBroadcast`], so each node's weight tile is fetched from
+    /// DRAM once and every image carries the even split. The share depends
+    /// only on the batch size, never on the worker count or completion
+    /// order, so results stay bit-deterministic across pool sizes. Callers
+    /// that combine several batcher batches into one dispatch must use
+    /// [`EnginePool::run_batch_grouped`] so each request shares with its
+    /// own device batch only.
     pub fn run_batch(&self, batch: &[InferRequest]) -> Vec<BatchResult> {
-        let amort = vec![Batcher::dram_amortization(batch.len()); batch.len()];
-        self.run_batch_amortized(batch, &amort)
+        self.run_batch_grouped(batch, &[batch.len()])
     }
 
-    /// [`EnginePool::run_batch`] with an explicit per-request weight-stream
-    /// amortization factor (`weight_amort[i]` applies to `batch[i]`): the
+    /// [`EnginePool::run_batch`] over several device batches in one
+    /// dispatch: `groups` are consecutive batch lengths summing to
+    /// `batch.len()`, and each group gets its own [`WmuBroadcast`] — the
     /// coordinator merges independently-released batcher batches into one
-    /// dispatch, and each request keeps the credit of the device batch it
-    /// was released in — never a factor derived from the combined dispatch
-    /// size (which would vary with the worker count).
-    pub fn run_batch_amortized(
-        &self,
-        batch: &[InferRequest],
-        weight_amort: &[f64],
-    ) -> Vec<BatchResult> {
-        assert_eq!(batch.len(), weight_amort.len(), "one amortization factor per request");
+    /// fan-out, and every request shares weight fetches with the device
+    /// batch it was released in, never with the combined dispatch (whose
+    /// size varies with the worker count).
+    pub fn run_batch_grouped(&self, batch: &[InferRequest], groups: &[usize]) -> Vec<BatchResult> {
+        assert_eq!(
+            groups.iter().sum::<usize>(),
+            batch.len(),
+            "group sizes must cover the batch exactly"
+        );
         if batch.is_empty() {
             return Vec::new();
+        }
+        let broadcasts: Vec<WmuBroadcast> = groups.iter().map(|&n| WmuBroadcast::new(n)).collect();
+        let mut req_group: Vec<usize> = Vec::with_capacity(batch.len());
+        for (gi, &n) in groups.iter().enumerate() {
+            req_group.extend(std::iter::repeat_n(gi, n));
         }
         let workers = self.engines.len().min(batch.len());
         let chunk = batch.len().div_ceil(workers);
@@ -94,24 +105,25 @@ impl EnginePool {
         std::thread::scope(|scope| {
             let mut slots: &mut [Option<BatchResult>] = &mut results;
             let mut reqs: &[InferRequest] = batch;
-            let mut amorts: &[f64] = weight_amort;
+            let mut gids: &[usize] = &req_group;
+            let broadcasts = &broadcasts;
             for engine in &self.engines {
                 if reqs.is_empty() {
                     break;
                 }
                 let take = chunk.min(reqs.len());
                 let (chunk_reqs, rest_reqs) = reqs.split_at(take);
-                let (chunk_amorts, rest_amorts) = amorts.split_at(take);
+                let (chunk_gids, rest_gids) = gids.split_at(take);
                 let taken = std::mem::take(&mut slots);
                 let (chunk_slots, rest_slots) = taken.split_at_mut(take);
                 reqs = rest_reqs;
-                amorts = rest_amorts;
+                gids = rest_gids;
                 slots = rest_slots;
                 scope.spawn(move || {
-                    for ((req, &amort), slot) in
-                        chunk_reqs.iter().zip(chunk_amorts).zip(chunk_slots.iter_mut())
+                    for ((req, &gid), slot) in
+                        chunk_reqs.iter().zip(chunk_gids).zip(chunk_slots.iter_mut())
                     {
-                        let outcome = engine.infer_batched(&req.spikes, amort);
+                        let outcome = engine.infer_batched(&req.spikes, Some(&broadcasts[gid]));
                         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
                         *slot = Some(BatchResult { outcome, host_ms });
                     }
@@ -193,6 +205,74 @@ mod tests {
                 single.energy_mj
             );
         }
+    }
+
+    #[test]
+    fn broadcast_shares_do_not_double_count_across_worker_counts() {
+        // Regression for the shared-fetch accounting: the same 4-image
+        // batch on a 1-worker pool (all images sequential on one replica)
+        // and a 4-worker pool (fully concurrent) must attribute identical
+        // per-image weight DRAM and energy, and the batch total must equal
+        // ONE weight stream — not one per worker, not one per image.
+        let reqs = batch(4);
+        let make = || Engine::sim(zoo::tiny(10, 2), ArchConfig::default());
+        let single_image = make().infer(&reqs[0].spikes).unwrap().weight_dram_bytes;
+        assert!(single_image > 0);
+        let runs: Vec<Vec<Outcome>> = [1usize, 4]
+            .iter()
+            .map(|&w| {
+                EnginePool::new(make(), w)
+                    .run_batch(&reqs)
+                    .into_iter()
+                    .map(|r| r.outcome.unwrap())
+                    .collect()
+            })
+            .collect();
+        for (a, b) in runs[0].iter().zip(&runs[1]) {
+            assert_eq!(a.weight_dram_bytes, b.weight_dram_bytes);
+            assert_eq!(a.energy_mj, b.energy_mj);
+            assert_eq!(a.logits, b.logits);
+        }
+        for outcomes in &runs {
+            let total: u64 = outcomes.iter().map(|o| o.weight_dram_bytes).sum();
+            // Weights are image-independent, so every image's standalone
+            // stream is `single_image` bytes; the batch must pay ~one of
+            // them (per-node rounding of the even split allows a few bytes
+            // of slack), not four.
+            assert!(
+                total.abs_diff(single_image) <= 16,
+                "total {total} vs one stream {single_image}"
+            );
+            for o in outcomes {
+                assert!(o.weight_dram_bytes < single_image / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_dispatch_shares_within_groups_only() {
+        // Two device batches combined into one dispatch: a request shares
+        // fetches with its own group, so the 1-image group pays the full
+        // stream while the 3-image group splits one three ways.
+        let reqs = batch(4);
+        let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        let out: Vec<Outcome> = pool
+            .run_batch_grouped(&reqs, &[3, 1])
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        let full = pool.engine().infer(&reqs[3].spikes).unwrap().weight_dram_bytes;
+        assert_eq!(out[3].weight_dram_bytes, full, "singleton group pays in full");
+        for o in &out[..3] {
+            assert!(o.weight_dram_bytes < full / 2, "3-group shares one stream");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the batch exactly")]
+    fn mismatched_groups_rejected() {
+        let pool = EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 2);
+        pool.run_batch_grouped(&batch(3), &[2, 2]);
     }
 
     #[test]

@@ -106,26 +106,31 @@ impl Coordinator {
     /// Fan the pending batches across the pool in one combined run and
     /// record every outcome in submission order. `host_ms` covers the full
     /// host latency: batch release (queueing in `pending`) → inference
-    /// finished. Each request keeps the weight-stream amortization of the
-    /// batcher batch it was released in (the device batch that shares one
-    /// weight stream), so energy accounting follows `--batch` and is
-    /// independent of how many batches this dispatch happens to combine
-    /// (which varies with `--workers`).
+    /// finished. Each batcher batch stays its own broadcast-WMU group (the
+    /// device batch that shares one weight stream per node), so energy
+    /// accounting follows `--batch` and is independent of how many batches
+    /// this dispatch happens to combine (which varies with `--workers`);
+    /// `--broadcast-wmu off` degrades every request to a singleton group
+    /// (full per-image weight stream, the unshared reference mode).
     fn dispatch(&self, pending: &mut Vec<(Vec<InferRequest>, Instant)>, metrics: &mut Metrics) {
         if pending.is_empty() {
             return;
         }
         let mut all: Vec<InferRequest> = Vec::new();
         let mut queued_ms: Vec<f64> = Vec::new();
-        let mut amorts: Vec<f64> = Vec::new();
+        let mut groups: Vec<usize> = Vec::new();
         for (batch, released) in pending.drain(..) {
             metrics.record_batch(batch.len());
             let waited = released.elapsed().as_secs_f64() * 1e3;
             queued_ms.resize(queued_ms.len() + batch.len(), waited);
-            amorts.resize(amorts.len() + batch.len(), Batcher::dram_amortization(batch.len()));
+            if self.cfg.broadcast_wmu {
+                groups.push(batch.len());
+            } else {
+                groups.resize(groups.len() + batch.len(), 1);
+            }
             all.extend(batch);
         }
-        let results = self.pool.run_batch_amortized(&all, &amorts);
+        let results = self.pool.run_batch_grouped(&all, &groups);
         for ((req, result), queued) in all.iter().zip(results).zip(queued_ms) {
             match result.outcome {
                 Ok(out) => {
@@ -202,6 +207,28 @@ mod tests {
             means.push(m.energy_mj.mean());
         }
         assert_eq!(means[0], means[1], "energy must depend on --batch, not --workers");
+    }
+
+    #[test]
+    fn broadcast_off_charges_full_weight_stream_per_image() {
+        // --broadcast-wmu off makes every request a singleton group: no
+        // shared fetches, so the served energy mean must be strictly above
+        // the shared default on the same batched run.
+        let mut means = Vec::new();
+        for broadcast in [true, false] {
+            let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+            let cfg = RunConfig {
+                batch_size: 4,
+                workers: 2,
+                broadcast_wmu: broadcast,
+                ..Default::default()
+            };
+            let mut coord = Coordinator::new(engine, cfg);
+            let m = coord.serve_dataset(&dataset(8), 8).unwrap();
+            assert_eq!(m.completed, 8);
+            means.push(m.energy_mj.mean());
+        }
+        assert!(means[0] < means[1], "broadcast sharing must save energy vs unshared");
     }
 
     #[test]

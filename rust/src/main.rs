@@ -68,13 +68,31 @@ fn load_arch(args: &Args) -> Result<ArchConfig> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    use neural::arch::Accelerator;
     let model = load_model(args)?;
     let arch = load_arch(args)?;
     let engine_name = args.get_or("engine", "sim");
+    // Simulator schedule knobs (both default on; the broadcast WMU is a
+    // coordinator concern and lands in RunConfig below).
+    let pipeline = args.get_on_off("pipeline", true)?;
+    let host_threads = args.get_usize("host-threads", 1)?.max(1);
+    let workers = args.get_usize("workers", 1)?;
+    if workers > 1 && host_threads > 1 {
+        eprintln!(
+            "warning: --workers {workers} x --host-threads {host_threads} multiply (every \
+             in-flight image fans out its own scatter threads); prefer --host-threads 1 \
+             when running a worker pool"
+        );
+    }
+    let sim_engine = |mut acc: Accelerator, model| {
+        acc.pipeline = pipeline;
+        acc.host_threads = host_threads;
+        Engine::from_accelerator(model, acc)
+    };
     let engine = match engine_name.as_str() {
-        "sim" => Engine::sim(model, arch),
-        "rigid" => Engine::sim_rigid(model, arch),
-        "materializing" => Engine::sim_materializing(model, arch),
+        "sim" => sim_engine(Accelerator::new(arch), model),
+        "rigid" => sim_engine(Accelerator::rigid(arch), model),
+        "materializing" => sim_engine(Accelerator::materializing(arch), model),
         "golden" => Engine::golden(model),
         "sibrain" => Engine::baseline(model, BaselineKind::SiBrain, arch),
         "scpu" => Engine::baseline(model, BaselineKind::Scpu, arch),
@@ -86,8 +104,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         dataset: args.get_or("dataset", "synthcifar10"),
         images: args.get_usize("images", 16)?,
         batch_size: args.get_usize("batch", 4)?,
-        workers: args.get_usize("workers", 1)?,
+        workers,
         seed: args.get_usize("seed", 1234)? as u64,
+        broadcast_wmu: args.get_on_off("broadcast-wmu", true)?,
         crosscheck_every: args.get_usize("crosscheck-every", 0)?,
         hlo_path: args.get("hlo").map(|s| s.to_string()),
         ..Default::default()
