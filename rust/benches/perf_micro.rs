@@ -19,8 +19,12 @@
 //! workers, and the weight-DRAM section records the per-image weight
 //! stream bytes for a standalone image vs an image inside a 4-image
 //! broadcast batch (one modeled fetch per node shared through the
-//! `WmuBroadcast` ledger, backed by the per-worker transposed weight
+//! `WmuBroadcast` ledger, backed by the pool-shared transposed weight
 //! cache) alongside the retired scalar credit's 0.25 reference ratio.
+//! The multi-tenant section warms a 2-model, 4-worker pool twice — once
+//! with the pool-shared weight cache, once with detached per-worker
+//! caches — and records the transpose counts; the shared cache must show
+//! ≥ (workers−1)/workers fewer transposes.
 
 use neural::arch::epa::{ConvParams, ConvScratch, Epa};
 use neural::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
@@ -31,10 +35,11 @@ use neural::arch::{Accelerator, ElasticFifo, SimScratch, WeightFlow, WmuBroadcas
 use neural::bench::artifacts;
 use neural::bench::BenchRunner;
 use neural::config::ArchConfig;
-use neural::coordinator::{Engine, EnginePool, InferRequest};
+use neural::coordinator::{Engine, EnginePool, InferRequest, ModelId, ModelRegistry};
 use neural::data::encode_threshold;
 use neural::model::exec;
 use neural::model::ir::TokenMaskMode;
+use neural::model::zoo;
 use neural::snn::PackedSpikeMap;
 use neural::tensor::{Shape, Tensor};
 use neural::util::json::Json;
@@ -273,7 +278,12 @@ fn main() {
     let reqs: Vec<InferRequest> = (0..n)
         .map(|i| {
             let (img, label) = ds.get(i);
-            InferRequest { id: i as u64, spikes: encode_threshold(&img, 128), label: Some(label) }
+            InferRequest {
+                id: i as u64,
+                model: ModelId(0),
+                spikes: encode_threshold(&img, 128),
+                label: Some(label),
+            }
         })
         .collect();
     let mut batch_ms = Vec::new();
@@ -287,6 +297,63 @@ fn main() {
     }
     let batch_speedup = batch_ms[0] / batch_ms[1];
     println!("  -> batch speedup 1->4 workers: {batch_speedup:.2}x");
+
+    // Multi-tenant shared weight cache: a 2-model, 4-worker warmup batch.
+    // The pool-shared cache transposes each (model, conv) once per POOL;
+    // the per-worker reference re-transposes per worker that touches the
+    // model — the acceptance bound is >= (workers-1)/workers fewer
+    // transposes. Requests alternate models so every worker's chunk holds
+    // both tenants; singleton broadcast groups keep the mixed dispatch
+    // model-homogeneous per domain.
+    let cache_workers = 4usize;
+    let mt_registry = || {
+        let mut reg = ModelRegistry::new();
+        reg.register(zoo::resnet11(10, 3), 1);
+        reg.register(zoo::qkfresnet11(10, 3), 1);
+        reg
+    };
+    let mt_reqs: Vec<InferRequest> = (0..16)
+        .map(|i| {
+            let (img, label) = ds.get(i % ds.len());
+            InferRequest {
+                id: i as u64,
+                model: ModelId(i % 2),
+                spikes: encode_threshold(&img, 128),
+                label: Some(label),
+            }
+        })
+        .collect();
+    let mt_groups = vec![1usize; mt_reqs.len()];
+    let shared_pool =
+        EnginePool::new(Engine::sim_registry(mt_registry(), ArchConfig::default()), cache_workers);
+    let shared_warm = runner.run("2-model warmup, 4 workers, shared cache", || {
+        shared_pool.run_batch_grouped(&mt_reqs, &mt_groups).len()
+    });
+    let shared_stats = shared_pool.cache_stats().expect("sim pool has a cache");
+    let private_pool = EnginePool::new_private_caches(
+        Engine::sim_registry(mt_registry(), ArchConfig::default()),
+        cache_workers,
+    );
+    let private_warm = runner.run("2-model warmup, 4 workers, private caches", || {
+        private_pool.run_batch_grouped(&mt_reqs, &mt_groups).len()
+    });
+    let private_stats = private_pool.cache_stats().expect("sim pool has a cache");
+    let transpose_reduction = if private_stats.misses == 0 {
+        0.0
+    } else {
+        1.0 - shared_stats.misses as f64 / private_stats.misses as f64
+    };
+    let acceptance = (cache_workers as f64 - 1.0) / cache_workers as f64;
+    println!(
+        "  -> shared cache: {} transposes vs {} per-worker ({:.0}% fewer; bound {:.0}%)",
+        shared_stats.misses,
+        private_stats.misses,
+        transpose_reduction * 100.0,
+        acceptance * 100.0
+    );
+    if transpose_reduction + 1e-9 < acceptance {
+        eprintln!("  !! shared cache reduction below the (workers-1)/workers bound");
+    }
 
     // record the trajectory point
     let doc = Json::obj(vec![
@@ -367,6 +434,20 @@ fn main() {
                 ),
                 ("ms", Json::Arr(batch_ms.iter().map(|&m| Json::Num(m)).collect())),
                 ("speedup_1_to_4", Json::Num(batch_speedup)),
+            ]),
+        ),
+        (
+            "shared_weight_cache",
+            Json::obj(vec![
+                ("workers", Json::Num(cache_workers as f64)),
+                ("models", Json::Num(2.0)),
+                ("shared_transposes", Json::Num(shared_stats.misses as f64)),
+                ("private_transposes", Json::Num(private_stats.misses as f64)),
+                ("transpose_reduction", Json::Num(transpose_reduction)),
+                ("acceptance_bound", Json::Num(acceptance)),
+                ("shared_warmup_ms", Json::Num(shared_warm.time.mean() * 1e3)),
+                ("private_warmup_ms", Json::Num(private_warm.time.mean() * 1e3)),
+                ("resident_bytes", Json::Num(shared_stats.resident_bytes as f64)),
             ]),
         ),
     ]);

@@ -39,6 +39,10 @@ def main(argv):
         print(f"bench_diff: no baseline at {baseline_path} — skipping "
               "(commit the CI artifact to start the trajectory)")
         return 0
+    except ValueError as e:  # json.JSONDecodeError: corrupt/truncated baseline
+        print(f"bench_diff: baseline at {baseline_path} is not valid JSON "
+              f"({e}) — skipping; delete/recommit it to re-arm the gate")
+        return 0
     fresh = headline(fresh_path)
     if fresh is None:
         print(f"bench_diff: {fresh_path} lacks {'.'.join(METRIC)}")

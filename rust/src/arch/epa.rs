@@ -27,6 +27,8 @@ use crate::config::ArchConfig;
 use crate::snn::lif::lif_fire_scalar;
 use crate::snn::{PackedSpikeMap, SpikeMap};
 use crate::tensor::{Shape, Tensor};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 /// Conv parameters the EPA needs beyond the SDA geometry.
 #[derive(Debug, Clone, Copy)]
@@ -258,6 +260,235 @@ impl WeightCache {
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+}
+
+/// Aggregated counters of a [`SharedWeightCache`] (surfaced in the
+/// coordinator's `Metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WeightCacheStats {
+    /// Lookups served from a valid cached transpose.
+    pub hits: u64,
+    /// Transposes actually performed (cold, invalidated or evicted keys).
+    pub misses: u64,
+    /// Entries dropped by the byte-budget eviction.
+    pub evictions: u64,
+    /// Bytes of transposed weights currently resident.
+    pub resident_bytes: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl WeightCacheStats {
+    /// Accumulate another cache's counters (for pools whose replicas own
+    /// private caches).
+    pub fn merge(&mut self, other: &WeightCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.resident_bytes += other.resident_bytes;
+        self.entries += other.entries;
+    }
+}
+
+#[derive(Debug)]
+struct SharedEntry {
+    src_ptr: usize,
+    src_len: usize,
+    src_fp: u64,
+    cout: usize,
+    taps: usize,
+    /// Insertion sequence number (insertion-order eviction victim pick).
+    seq: u64,
+    wt: Arc<Vec<i32>>,
+}
+
+impl SharedEntry {
+    fn bytes(&self) -> u64 {
+        (self.wt.len() * std::mem::size_of::<i32>()) as u64
+    }
+
+    fn valid_for(&self, ptr: usize, len: usize, fp: u64, cout: usize, taps: usize) -> bool {
+        self.src_ptr == ptr
+            && self.src_len == len
+            && self.src_fp == fp
+            && self.cout == cout
+            && self.taps == taps
+    }
+}
+
+#[derive(Debug, Default)]
+struct SharedCacheInner {
+    map: std::collections::HashMap<(usize, usize), SharedEntry>,
+    bytes: u64,
+    next_seq: u64,
+}
+
+#[derive(Debug)]
+struct SharedCacheState {
+    inner: RwLock<SharedCacheInner>,
+    budget_bytes: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Cross-worker transposed-weight cache: the multi-tenant successor of the
+/// per-engine [`WeightCache`]. Entries are keyed by `(model, node)` — the
+/// model key namespaces node ids so several registered models never alias —
+/// and hold the `[tap][oc]` transpose behind an `Arc`, so a lookup clones a
+/// handle and drops the lock before the caller touches a single weight.
+///
+/// Lock discipline: the hot path takes the `RwLock` **read** lock only
+/// (validate, bump the hit counter, clone the `Arc`). A miss upgrades to
+/// the **write** lock and performs the transpose *inside* it: first-touch
+/// of a `(model, node)` key is serialized, so a pool-wide warmup pays each
+/// transpose exactly once no matter how many workers race (the losers
+/// re-check under the lock and leave with the winner's entry). Transposes
+/// are cheap (O(weights), microseconds) against the per-image simulation
+/// they amortize into, so holding the write lock through one is the right
+/// trade for a deterministic miss count.
+///
+/// Eviction: entries are dropped oldest-insertion-first whenever resident
+/// bytes exceed the byte budget ([`crate::config::ArchConfig`]'s
+/// `weight_cache_bytes`), never evicting the entry just inserted — a
+/// single oversized entry stays resident alone. Evicted transposes remain
+/// alive for callers still holding their `Arc`.
+///
+/// `Clone` clones the *handle*: engine-pool replicas cloned from one
+/// engine share the same cache (the cross-worker sharing), while
+/// [`SharedWeightCache::detached`] starts an empty cache with the same
+/// budget (the per-worker reference mode).
+#[derive(Debug, Clone)]
+pub struct SharedWeightCache {
+    state: Arc<SharedCacheState>,
+}
+
+/// Default transposed-weight budget when no [`crate::config::ArchConfig`]
+/// is in play (tests, ad-hoc scratches): 256 MiB holds the whole zoo.
+pub const DEFAULT_WEIGHT_CACHE_BYTES: u64 = 256 * 1024 * 1024;
+
+impl Default for SharedWeightCache {
+    fn default() -> Self {
+        Self::with_budget(DEFAULT_WEIGHT_CACHE_BYTES)
+    }
+}
+
+impl SharedWeightCache {
+    /// Empty cache bounded to `budget_bytes` of resident transposes.
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        SharedWeightCache {
+            state: Arc::new(SharedCacheState {
+                inner: RwLock::new(SharedCacheInner::default()),
+                budget_bytes,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A fresh empty cache with the same budget (private-cache reference
+    /// mode for pools that must not share).
+    pub fn detached(&self) -> Self {
+        Self::with_budget(self.state.budget_bytes)
+    }
+
+    /// Whether `other` is a handle to the same underlying cache.
+    pub fn same_cache(&self, other: &SharedWeightCache) -> bool {
+        Arc::ptr_eq(&self.state, &other.state)
+    }
+
+    /// Configured byte budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.state.budget_bytes
+    }
+
+    /// The transposed `[tap][oc]` weights for `(model, node)`, recomputed
+    /// only when the key is cold, evicted, or its source slice (address,
+    /// length, sampled fingerprint) or shape changed — same revalidation
+    /// contract as [`WeightCache::transposed`].
+    pub fn transposed(
+        &self,
+        model: usize,
+        node: usize,
+        weights: &[i8],
+        cout: usize,
+        taps: usize,
+    ) -> Arc<Vec<i32>> {
+        let key = (model, node);
+        let ptr = weights.as_ptr() as usize;
+        let len = weights.len();
+        let fp = weight_fingerprint(weights);
+        {
+            let inner = self.state.inner.read().unwrap_or_else(|p| p.into_inner());
+            if let Some(e) = inner.map.get(&key) {
+                if e.valid_for(ptr, len, fp, cout, taps) {
+                    self.state.hits.fetch_add(1, Ordering::Relaxed);
+                    return e.wt.clone();
+                }
+            }
+        }
+        let mut inner = self.state.inner.write().unwrap_or_else(|p| p.into_inner());
+        // Re-check: another worker may have transposed this key between our
+        // read unlock and write lock — its entry is ours too (a hit: no
+        // transpose was performed on this call).
+        if let Some(e) = inner.map.get(&key) {
+            if e.valid_for(ptr, len, fp, cout, taps) {
+                self.state.hits.fetch_add(1, Ordering::Relaxed);
+                return e.wt.clone();
+            }
+        }
+        let mut wt = vec![0i32; taps * cout];
+        transpose_weights(weights, cout, taps, &mut wt);
+        let wt = Arc::new(wt);
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let entry =
+            SharedEntry { src_ptr: ptr, src_len: len, src_fp: fp, cout, taps, seq, wt: wt.clone() };
+        inner.bytes += entry.bytes();
+        if let Some(old) = inner.map.insert(key, entry) {
+            inner.bytes -= old.bytes();
+        }
+        self.state.misses.fetch_add(1, Ordering::Relaxed);
+        // Evict oldest-inserted entries until within budget; the entry just
+        // inserted is never a victim, so one oversized layer stays alone.
+        while inner.bytes > self.state.budget_bytes && inner.map.len() > 1 {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.seq)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = inner.map.remove(&k).expect("victim key was just observed");
+                    inner.bytes -= e.bytes();
+                    self.state.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        wt
+    }
+
+    /// Drop every entry (counters are kept).
+    pub fn clear(&self) {
+        let mut inner = self.state.inner.write().unwrap_or_else(|p| p.into_inner());
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> WeightCacheStats {
+        let inner = self.state.inner.read().unwrap_or_else(|p| p.into_inner());
+        WeightCacheStats {
+            hits: self.state.hits.load(Ordering::Relaxed),
+            misses: self.state.misses.load(Ordering::Relaxed),
+            evictions: self.state.evictions.load(Ordering::Relaxed),
+            resident_bytes: inner.bytes,
+            entries: inner.map.len() as u64,
+        }
     }
 }
 
@@ -750,6 +981,95 @@ mod tests {
         assert_eq!(cache.misses, 5, "in-place weight change must invalidate");
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn shared_cache_hits_revalidates_and_namespaces_models() {
+        let weights_a: Vec<i8> = (0..4 * 6).map(|i| i as i8).collect();
+        let cache = SharedWeightCache::default();
+        let mut want = vec![0i32; 4 * 6];
+        transpose_weights(&weights_a, 4, 6, &mut want);
+        // Cold, then warm.
+        assert_eq!(*cache.transposed(0, 3, &weights_a, 4, 6), want);
+        assert_eq!(*cache.transposed(0, 3, &weights_a, 4, 6), want);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.resident_bytes, (4 * 6 * 4) as u64);
+        // Same node id under a different model key: its own entry, even for
+        // identical weights (per-model namespaces never alias).
+        cache.transposed(1, 3, &weights_a, 4, 6);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().entries, 2);
+        // Content change under the same key: revalidation recomputes.
+        let weights_b: Vec<i8> = (0..4 * 6).map(|i| -(i as i8)).collect();
+        transpose_weights(&weights_b, 4, 6, &mut want);
+        assert_eq!(*cache.transposed(0, 3, &weights_b, 4, 6), want);
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.stats().entries, 2, "revalidation replaces, not grows");
+        // Clone shares; detached does not.
+        let shared = cache.clone();
+        assert!(shared.same_cache(&cache));
+        shared.transposed(0, 3, &weights_b, 4, 6);
+        assert_eq!(cache.stats().hits, 2, "clone serves from the same cache");
+        let private = cache.detached();
+        assert!(!private.same_cache(&cache));
+        assert_eq!(private.budget_bytes(), cache.budget_bytes());
+        assert_eq!(private.stats().entries, 0);
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().resident_bytes, 0);
+        assert_eq!(cache.stats().misses, 3, "clear keeps the counters");
+    }
+
+    #[test]
+    fn shared_cache_evicts_oldest_within_budget() {
+        // Budget fits one 24-lane transpose (96 B) plus change: inserting a
+        // second entry evicts the first, insertion order first.
+        let w: Vec<i8> = (0..24).map(|i| i as i8).collect();
+        let cache = SharedWeightCache::with_budget(100);
+        cache.transposed(0, 0, &w, 4, 6);
+        cache.transposed(0, 1, &w, 4, 6);
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "second insert must evict the first");
+        assert_eq!(st.entries, 1);
+        assert!(st.resident_bytes <= 100);
+        // The evicted key re-misses; the resident key was the newer one.
+        cache.transposed(0, 1, &w, 4, 6);
+        assert_eq!(cache.stats().hits, 1);
+        cache.transposed(0, 0, &w, 4, 6);
+        assert_eq!(cache.stats().misses, 3);
+        // An entry larger than the whole budget still caches (alone).
+        let big: Vec<i8> = (0..64 * 6).map(|i| i as i8).collect();
+        let tiny_budget = SharedWeightCache::with_budget(8);
+        let wt = tiny_budget.transposed(0, 0, &big, 64, 6);
+        assert_eq!(wt.len(), 64 * 6);
+        assert_eq!(tiny_budget.stats().entries, 1, "oversized entry stays resident alone");
+    }
+
+    #[test]
+    fn shared_cache_serves_bit_identical_transposes_across_threads() {
+        // Hammer one key from several threads: every handle must see the
+        // same transpose, and the total transpose count stays 1.
+        let weights: Vec<i8> = (0..8 * 27).map(|i| (i % 13) as i8 - 6).collect();
+        let cache = SharedWeightCache::default();
+        let mut want = vec![0i32; 27 * 8];
+        transpose_weights(&weights, 8, 27, &mut want);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = cache.clone();
+                let weights = &weights;
+                let want = &want;
+                s.spawn(move || {
+                    for _ in 0..16 {
+                        assert_eq!(*cache.transposed(0, 7, weights, 8, 27), *want);
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.misses, 1, "first touch transposes exactly once pool-wide");
+        assert_eq!(st.hits, 63);
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod wmu;
 pub mod wtfc;
 
 pub use energy::EnergyModel;
+pub use epa::{SharedWeightCache, WeightCacheStats};
 pub use fifo::{ElasticFifo, PrefetchWindow, WfifoStats};
 pub use resource::{ResourceModel, ResourceReport};
 pub use sim::{Accelerator, Report, SimScratch, WeightFlow};

@@ -10,9 +10,10 @@
 //! Hot-path layout (see DESIGN.md §Hot path): activations travel between
 //! layers as word-packed bit maps ([`PackedSpikeMap`]); conv layers run the
 //! fused zero-materialization SDA→EPA stream by default
-//! ([`crate::arch::epa::Epa::run_conv_fused_cached`], fed by a per-node
-//! [`WeightCache`] of transposed weights that persists across the images of
-//! a batch); the QKFormer attention register and the WTFC TTFS filter
+//! ([`crate::arch::epa::Epa::run_conv_fused_cached`], fed by a
+//! [`SharedWeightCache`] of `(model, node)`-keyed transposed weights that
+//! persists across the images of a batch and is shared by every engine
+//! replica of a pool); the QKFormer attention register and the WTFC filter
 //! operate on the packed words directly; pooling and residual OR are
 //! word-wise; spike counting is popcount. [`Accelerator::materializing`]
 //! builds the validation-mode instance that routes convs through the
@@ -28,7 +29,7 @@
 //! serial `max` and the rigid ablation keeps the `+`.
 
 use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
-use crate::arch::epa::{ConvParams, ConvScratch, Epa, WeightCache};
+use crate::arch::epa::{ConvParams, ConvScratch, Epa, SharedWeightCache};
 use crate::arch::fifo::{PrefetchWindow, WfifoStats};
 use crate::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use crate::arch::sda::{ConvGeom, PipeSda};
@@ -116,16 +117,27 @@ pub struct Report {
     pub gsops_w: f64,
 }
 
-/// Reusable per-engine simulation state: the conv scratch buffers and the
-/// per-node transposed-weight cache. One instance per engine replica; it
-/// persists across the images of a batch so weight transposes amortize
-/// (the weight-stationary story behind the batcher's DRAM credit).
+/// Reusable per-engine simulation state: the conv scratch buffers plus a
+/// handle to the transposed-weight cache. The conv scratch is strictly per
+/// replica (mutable membrane lanes); the weight cache is a
+/// [`SharedWeightCache`] handle — engine replicas cloned from one engine
+/// share it, so batch warmup pays each `(model, node)` transpose once per
+/// *pool* instead of once per worker (the cross-worker successor of the
+/// per-replica [`crate::arch::epa::WeightCache`]).
 #[derive(Debug, Default)]
 pub struct SimScratch {
     /// Conv scratch (membrane lanes, per-pixel counts, fallback transpose).
     pub conv: ConvScratch,
-    /// Transposed `[tap][oc]` weights keyed by node id.
-    pub weights: WeightCache,
+    /// Transposed `[tap][oc]` weights keyed by `(model, node)`.
+    pub weights: SharedWeightCache,
+}
+
+impl SimScratch {
+    /// Scratch around an existing cache handle (share or detach is the
+    /// caller's choice).
+    pub fn with_cache(weights: SharedWeightCache) -> Self {
+        SimScratch { conv: ConvScratch::default(), weights }
+    }
 }
 
 /// The simulated accelerator instance.
@@ -202,12 +214,31 @@ impl Accelerator {
     /// fetched from DRAM once per batch and broadcast, so this image's
     /// report carries its even split of the fetch, derived from the per-
     /// node transaction ledger instead of the retired scalar amortization
-    /// credit (the per-worker [`WeightCache`] is the host-side mirror that
-    /// makes the sharing physically honest). Timing is unaffected by the
+    /// credit (the pool-shared [`SharedWeightCache`] is the host-side
+    /// mirror that makes the sharing physically honest). Timing is
+    /// unaffected by the
     /// flow: the W-FIFO replay still paces the array identically; only
     /// off-chip traffic (and therefore DRAM energy) is shared.
     pub fn run_cached(
         &self,
+        model: &Model,
+        input: &SpikeMap,
+        scratch: &mut SimScratch,
+        weights_flow: WeightFlow,
+    ) -> Result<Report> {
+        self.run_model_cached(0, model, input, scratch, weights_flow)
+    }
+
+    /// [`Accelerator::run_cached`] under an explicit weight-cache namespace:
+    /// `model_key` (the coordinator passes the registry's `ModelId`) keys
+    /// the scratch's [`SharedWeightCache`] entries as `(model_key, node)`,
+    /// so a multi-tenant pool serving several models through one shared
+    /// cache never aliases two models' transposes even though their graphs
+    /// reuse the same node ids. Single-model callers use `run_cached`
+    /// (namespace 0).
+    pub fn run_model_cached(
+        &self,
+        model_key: usize,
         model: &Model,
         input: &SpikeMap,
         scratch: &mut SimScratch,
@@ -256,13 +287,13 @@ impl Accelerator {
                     wmu.begin_node(nid);
                     let (out, st, sda_c, sda_cr) = if self.fused {
                         let taps = *cin * *k * *k;
-                        let wt = weight_cache.transposed(nid, weights, *cout, taps);
+                        let wt = weight_cache.transposed(model_key, nid, weights, *cout, taps);
                         let (out, st, sda_st) = self.epa.run_conv_fused_cached_par(
                             &self.sda,
                             x,
                             &geom,
                             &params,
-                            wt,
+                            wt.as_slice(),
                             &mut wmu,
                             conv_scratch,
                             self.host_threads,
@@ -590,8 +621,37 @@ mod tests {
             assert_eq!(fresh.total_spikes, cached.total_spikes, "seed={seed}");
         }
         let convs = m.num_convs() as u64;
-        assert_eq!(scratch.weights.misses, convs, "one transpose per conv layer");
-        assert_eq!(scratch.weights.hits, 2 * convs, "images 2 and 3 reuse every layer");
+        let st = scratch.weights.stats();
+        assert_eq!(st.misses, convs, "one transpose per conv layer");
+        assert_eq!(st.hits, 2 * convs, "images 2 and 3 reuse every layer");
+    }
+
+    #[test]
+    fn model_key_namespaces_the_shared_cache() {
+        // Two different models walked through ONE scratch under distinct
+        // model keys: reports match each model's fresh-cache run (no
+        // cross-model aliasing even though node ids coincide), and the
+        // cache holds both models' conv transposes side by side.
+        let ma = zoo::tiny(10, 3);
+        let mb = zoo::tiny(10, 9); // same topology, different weights
+        let x = input(4);
+        let acc = Accelerator::new(ArchConfig::default());
+        let fresh_a = acc.run(&ma, &x).unwrap();
+        let fresh_b = acc.run(&mb, &x).unwrap();
+        let mut scratch = SimScratch::default();
+        for round in 0..2 {
+            let a = acc.run_model_cached(0, &ma, &x, &mut scratch, WeightFlow::Exclusive).unwrap();
+            let b = acc.run_model_cached(1, &mb, &x, &mut scratch, WeightFlow::Exclusive).unwrap();
+            assert_eq!(a.logits, fresh_a.logits, "round {round}");
+            assert_eq!(b.logits, fresh_b.logits, "round {round}");
+            assert_eq!(a.cycles, fresh_a.cycles, "round {round}");
+            assert_eq!(b.cycles, fresh_b.cycles, "round {round}");
+        }
+        let st = scratch.weights.stats();
+        let convs = (ma.num_convs() + mb.num_convs()) as u64;
+        assert_eq!(st.misses, convs, "one transpose per (model, conv)");
+        assert_eq!(st.hits, convs, "round 2 reuses both models' entries");
+        assert_eq!(st.entries, convs);
     }
 
     #[test]

@@ -82,30 +82,80 @@ impl Args {
     }
 }
 
+/// Resolve `--host-threads` (the host-parallel conv-scatter pool): a
+/// number, or `auto` to use the detected `available` parallelism when the
+/// engine pool is a single worker. With `--workers > 1`, `auto` declines
+/// to stack the two thread pools (every in-flight image would fan out its
+/// own scatter threads) and resolves to 1 with a warning — the returned
+/// `Option<String>` — while an *explicit* number is honored with the same
+/// warning (the operator asked for it).
+pub fn resolve_host_threads(
+    value: Option<&str>,
+    workers: usize,
+    available: usize,
+) -> Result<(usize, Option<String>)> {
+    match value {
+        Some("auto") => {
+            if workers > 1 {
+                let warn = format!(
+                    "--host-threads auto with --workers {workers}: the engine pool already \
+                     parallelizes across images, so auto resolves to 1 host thread (pass an \
+                     explicit --host-threads N to stack both pools)"
+                );
+                Ok((1, Some(warn)))
+            } else {
+                Ok((available.max(1), None))
+            }
+        }
+        Some(v) => {
+            let Ok(n) = v.parse::<usize>() else {
+                bail!("--host-threads {v:?} is not an integer or `auto`");
+            };
+            let n = n.max(1);
+            let warn = (workers > 1 && n > 1).then(|| {
+                format!(
+                    "--workers {workers} x --host-threads {n} multiply (every in-flight image \
+                     fans out its own scatter threads); prefer --host-threads 1 when running a \
+                     worker pool"
+                )
+            });
+            Ok((n, warn))
+        }
+        None => Ok((1, None)),
+    }
+}
+
 /// Top-level usage text.
 pub const USAGE: &str = "neural — NEURAL elastic neuromorphic architecture (paper reproduction)
 
 USAGE:
-  neural run        [--model NAME|--neuw PATH] [--dataset synthcifar10] [--images N]
+  neural run        [--model NAME|--neuw PATH|--models A,B,..] [--model-mix W,W,..]
+                    [--dataset synthcifar10] [--images N]
                     [--engine sim|golden|rigid|materializing|sibrain|scpu|stisnn|cerebron]
                     [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
                     [--arch PATH.ini] [--classes N] [--seed N]
-                    [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N]
+                    [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N|auto]
                     (--workers N sizes the engine pool: one simulator replica
-                     per worker thread, batches fan out across them;
-                     `materializing` runs the event-vector validation path;
-                     --pipeline, default on, overlaps each layer's weight
-                     stream with earlier layers' compute through the W-FIFO;
-                     --broadcast-wmu, default on, shares one weight fetch per
-                     node across each device batch; --host-threads N spreads
-                     the fused conv scatter over N host threads per image)
+                     per worker thread, batches fan out across them and all
+                     replicas share one cross-worker transposed-weight cache;
+                     --models serves several zoo models from ONE pool — each
+                     request is assigned a model by the --model-mix weighted
+                     round-robin (default 1:1), batches stay model-homogeneous,
+                     weight broadcasts never cross models, and metrics are
+                     reported per model; `materializing` runs the event-vector
+                     validation path; --pipeline, default on, overlaps each
+                     layer's weight stream with earlier layers' compute through
+                     the W-FIFO; --broadcast-wmu, default on, shares one weight
+                     fetch per node across each device batch; --host-threads N
+                     spreads the fused conv scatter over N host threads per
+                     image, `auto` detects the core count when --workers is 1)
   neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
   neural resources  [--arch PATH.ini]                          Table-I style report
   neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep
   neural version
 
-Models: tiny, resnet11, vgg11, qkfresnet11 (zoo, random weights) or a
-trained .neuw artifact from `make artifacts`.";
+Models: tiny, resnet11, resnet19, vgg11, qkfresnet11 (zoo, random weights)
+or a trained .neuw artifact from `make artifacts`.";
 
 #[cfg(test)]
 mod tests {
@@ -148,6 +198,27 @@ mod tests {
     fn bad_int_reported() {
         let a = parse("run --images lots");
         assert!(a.get_usize("images", 0).is_err());
+    }
+
+    #[test]
+    fn host_threads_auto_resolution() {
+        // auto + single worker: the detected parallelism.
+        assert_eq!(resolve_host_threads(Some("auto"), 1, 8).unwrap(), (8, None));
+        // auto + worker pool: declines to stack pools, warns.
+        let (n, warn) = resolve_host_threads(Some("auto"), 4, 8).unwrap();
+        assert_eq!(n, 1);
+        assert!(warn.unwrap().contains("--workers 4"));
+        // Explicit number: honored, warned when both pools are active.
+        let (n, warn) = resolve_host_threads(Some("3"), 4, 8).unwrap();
+        assert_eq!(n, 3);
+        assert!(warn.unwrap().contains("multiply"));
+        assert_eq!(resolve_host_threads(Some("3"), 1, 8).unwrap(), (3, None));
+        // Absent: 1, silent. Zero clamps. Junk errors.
+        assert_eq!(resolve_host_threads(None, 4, 8).unwrap(), (1, None));
+        assert_eq!(resolve_host_threads(Some("0"), 1, 8).unwrap().0, 1);
+        assert!(resolve_host_threads(Some("many"), 1, 8).is_err());
+        // A zero-core detection still yields a usable pool.
+        assert_eq!(resolve_host_threads(Some("auto"), 1, 0).unwrap().0, 1);
     }
 
     #[test]

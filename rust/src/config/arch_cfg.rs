@@ -42,6 +42,10 @@ pub struct ArchConfig {
     pub mp_bits: u8,
     /// Off-chip weight-stream bandwidth in bytes/cycle (WMU port width).
     pub wmu_bytes_per_cycle: usize,
+    /// Host-side transposed-weight cache budget in MiB (the shared
+    /// cross-worker cache the engine pool's replicas serve transposes
+    /// from; eviction is oldest-insertion-first past this budget).
+    pub weight_cache_mib: usize,
     /// LIF threshold in raw fixed-point units (same scale as weights).
     pub lif_threshold: i32,
     /// LIF leak factor numerator over 2 (paper tau = 0.5 => mp/2 decay).
@@ -89,6 +93,7 @@ impl Default for ArchConfig {
             weight_frac: 4,
             mp_bits: 16,
             wmu_bytes_per_cycle: 32, // 64-bit DDR3-800 ≈ 6.4 GB/s @ 200 MHz
+            weight_cache_mib: 256,   // holds the whole zoo's transposes
             lif_threshold: 16, // 1.0 at frac=4
             lif_tau_half: true,
             energy: EnergyConstants::default(),
@@ -119,6 +124,7 @@ impl ArchConfig {
             mp_bits: ini.get_usize("precision", "mp_bits", d.mp_bits as usize)? as u8,
             wmu_bytes_per_cycle: ini
                 .get_usize("wmu", "bytes_per_cycle", d.wmu_bytes_per_cycle)?,
+            weight_cache_mib: ini.get_usize("wmu", "weight_cache_mib", d.weight_cache_mib)?,
             lif_threshold: ini.get_usize("lif", "threshold_raw", d.lif_threshold as usize)? as i32,
             lif_tau_half: ini.get_bool("lif", "tau_half", d.lif_tau_half)?,
             energy: EnergyConstants {
@@ -149,6 +155,12 @@ impl ArchConfig {
     pub fn wfifo_bytes(&self) -> u64 {
         let weight_bytes = (self.weight_bits as usize).div_ceil(8);
         (self.wfifo_depth * self.epa_cols * self.epa_rows * weight_bytes) as u64
+    }
+
+    /// Shared transposed-weight cache budget in bytes (see
+    /// [`crate::arch::SharedWeightCache`]).
+    pub fn weight_cache_bytes(&self) -> u64 {
+        (self.weight_cache_mib as u64) * 1024 * 1024
     }
 
     /// Cycle time in seconds.
@@ -199,5 +211,13 @@ mod tests {
         assert!((c.energy.e_sop_pj - 9.9).abs() < 1e-12);
         // untouched key keeps default
         assert_eq!(c.sfifo_depth, 32);
+    }
+
+    #[test]
+    fn weight_cache_budget_from_mib() {
+        assert_eq!(ArchConfig::default().weight_cache_bytes(), 256 * 1024 * 1024);
+        let ini = Ini::parse("[wmu]\nweight_cache_mib = 2\n").unwrap();
+        let c = ArchConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.weight_cache_bytes(), 2 * 1024 * 1024);
     }
 }

@@ -9,6 +9,11 @@ use anyhow::Result;
 pub struct RunConfig {
     /// Path to the NEUW quantized-weights artifact.
     pub model_path: String,
+    /// Multi-tenant registry: zoo model names to serve from one pool
+    /// (empty = single-model mode via `model_path`/`--model`).
+    pub models: Vec<String>,
+    /// Traffic-mix weights parallel to `models` (empty = all 1).
+    pub model_mix: Vec<usize>,
     /// Optional HLO golden-model artifact for on-line cross-checking.
     pub hlo_path: Option<String>,
     /// Dataset name (`synthcifar10` / `synthcifar100`).
@@ -33,6 +38,8 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             model_path: "artifacts/resnet11_c10.neuw".into(),
+            models: Vec::new(),
+            model_mix: Vec::new(),
             hlo_path: None,
             dataset: "synthcifar10".into(),
             images: 64,
@@ -45,12 +52,30 @@ impl Default for RunConfig {
     }
 }
 
+/// Parse a comma-separated list, trimming and dropping empty items.
+pub fn parse_list(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+}
+
+/// Parse a comma-separated list of usize weights (the `--model-mix` form).
+pub fn parse_mix(s: &str) -> Result<Vec<usize>> {
+    parse_list(s)
+        .iter()
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("model-mix weight {t:?} is not an integer"))
+        })
+        .collect()
+}
+
 impl RunConfig {
     /// Load from INI (section `[run]`).
     pub fn from_ini(ini: &Ini) -> Result<Self> {
         let d = RunConfig::default();
         Ok(RunConfig {
             model_path: ini.get("run", "model").unwrap_or(&d.model_path).to_string(),
+            models: ini.get("run", "models").map(parse_list).unwrap_or_default(),
+            model_mix: ini.get("run", "model_mix").map(parse_mix).transpose()?.unwrap_or_default(),
             hlo_path: ini.get("run", "hlo").map(|s| s.to_string()),
             dataset: ini.get("run", "dataset").unwrap_or(&d.dataset).to_string(),
             images: ini.get_usize("run", "images", d.images)?,
@@ -92,5 +117,25 @@ mod tests {
         assert_eq!(c.batch_size, 4); // default preserved
         assert!(!c.broadcast_wmu);
         assert!(RunConfig::default().broadcast_wmu, "sharing is the default");
+        assert!(c.models.is_empty(), "single-model mode is the default");
+        assert!(c.model_mix.is_empty());
+    }
+
+    #[test]
+    fn from_ini_multi_tenant_lists() {
+        let ini = Ini::parse("[run]\nmodels = resnet11, qkfresnet11\nmodel_mix = 2,1\n").unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.models, vec!["resnet11", "qkfresnet11"]);
+        assert_eq!(c.model_mix, vec![2, 1]);
+        let bad = Ini::parse("[run]\nmodel_mix = 2,lots\n").unwrap();
+        assert!(RunConfig::from_ini(&bad).is_err());
+    }
+
+    #[test]
+    fn list_and_mix_parsers() {
+        assert_eq!(parse_list(" a, b ,,c "), vec!["a", "b", "c"]);
+        assert!(parse_list(" , ").is_empty());
+        assert_eq!(parse_mix("3, 1").unwrap(), vec![3, 1]);
+        assert!(parse_mix("x").is_err());
     }
 }

@@ -1,55 +1,62 @@
-//! Dynamic batcher.
+//! Dynamic per-model batcher.
 //!
 //! The accelerator streams weights per layer; consecutive images of the
-//! same model reuse the streamed weights when they run back-to-back
-//! (weight-stationary across a batch). The batcher groups up to
-//! `batch_size` queued requests into device batches; each released batch
-//! becomes one broadcast domain in the engine pool
-//! ([`crate::arch::WmuBroadcast`]): every node's weight tile is fetched
-//! from off-chip memory once per batch and fanned out to all of the
-//! batch's images, with each pool worker's transposed-weight cache holding
-//! the host-side mirror of the tile. The former scalar `1/n`
-//! "amortization" credit is retired — the sharing now falls out of the
-//! modeled per-node fetch ledger instead of a formula.
+//! *same* model reuse the streamed weights when they run back-to-back
+//! (weight-stationary across a batch). The batcher therefore keeps one
+//! queue per [`ModelId`] and groups up to `batch_size` queued requests of
+//! one model into device batches — batches are always model-homogeneous,
+//! so each released batch can become one broadcast-WMU domain in the
+//! engine pool ([`crate::arch::WmuBroadcast`]): every node's weight tile
+//! is fetched from off-chip memory once per batch and fanned out to all of
+//! the batch's images, and weight broadcasts never cross models (two
+//! models' node ids would alias in the ledger, and physically there is no
+//! shared fetch to broadcast).
 
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferRequest;
+use std::collections::BTreeMap;
 
-/// Groups requests into device batches.
+/// Groups requests into model-homogeneous device batches.
 #[derive(Debug)]
 pub struct Batcher {
     /// Maximum images per batch.
     pub batch_size: usize,
-    pending: Vec<InferRequest>,
+    queues: BTreeMap<ModelId, Vec<InferRequest>>,
 }
 
 impl Batcher {
     /// New batcher.
     pub fn new(batch_size: usize) -> Self {
-        Batcher { batch_size: batch_size.max(1), pending: Vec::new() }
+        Batcher { batch_size: batch_size.max(1), queues: BTreeMap::new() }
     }
 
-    /// Queue one request; returns a full batch when ready.
+    /// Queue one request onto its model's queue; returns that model's
+    /// batch when it fills.
     pub fn push(&mut self, req: InferRequest) -> Option<Vec<InferRequest>> {
-        self.pending.push(req);
-        if self.pending.len() >= self.batch_size {
-            Some(std::mem::take(&mut self.pending))
+        let q = self.queues.entry(req.model).or_default();
+        q.push(req);
+        if q.len() >= self.batch_size {
+            Some(std::mem::take(q))
         } else {
             None
         }
     }
 
-    /// Flush whatever is queued (end of stream / timeout tick).
+    /// Flush one partial batch (end of stream / timeout tick): drains the
+    /// lowest-id model with pending requests; call until `None` to drain
+    /// every model.
     pub fn flush(&mut self) -> Option<Vec<InferRequest>> {
-        if self.pending.is_empty() {
-            None
-        } else {
-            Some(std::mem::take(&mut self.pending))
-        }
+        self.queues.values_mut().find(|q| !q.is_empty()).map(std::mem::take)
     }
 
-    /// Currently queued count.
+    /// Currently queued count across all models.
     pub fn pending(&self) -> usize {
-        self.pending.len()
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Models with at least one queued request.
+    pub fn pending_models(&self) -> usize {
+        self.queues.values().filter(|q| !q.is_empty()).count()
     }
 }
 
@@ -60,7 +67,11 @@ mod tests {
     use crate::testing::forall;
 
     fn req(id: u64) -> InferRequest {
-        InferRequest { id, spikes: Tensor::zeros(Shape::d3(1, 2, 2)), label: None }
+        req_for(id, ModelId(0))
+    }
+
+    fn req_for(id: u64, model: ModelId) -> InferRequest {
+        InferRequest { id, model, spikes: Tensor::zeros(Shape::d3(1, 2, 2)), label: None }
     }
 
     #[test]
@@ -83,24 +94,68 @@ mod tests {
     }
 
     #[test]
+    fn batches_are_model_homogeneous() {
+        // Interleaved two-model traffic: each model's queue fills on its
+        // own; a released batch never mixes models.
+        let mut b = Batcher::new(2);
+        assert!(b.push(req_for(0, ModelId(0))).is_none());
+        assert!(b.push(req_for(1, ModelId(1))).is_none());
+        assert_eq!(b.pending_models(), 2);
+        let m0 = b.push(req_for(2, ModelId(0))).expect("model 0 fills first");
+        assert!(m0.iter().all(|r| r.model == ModelId(0)));
+        assert_eq!(m0.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        let m1 = b.push(req_for(3, ModelId(1))).expect("model 1 fills second");
+        assert!(m1.iter().all(|r| r.model == ModelId(1)));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_drains_models_in_id_order() {
+        let mut b = Batcher::new(8);
+        b.push(req_for(0, ModelId(1)));
+        b.push(req_for(1, ModelId(0)));
+        b.push(req_for(2, ModelId(1)));
+        let first = b.flush().unwrap();
+        assert!(first.iter().all(|r| r.model == ModelId(0)), "lowest id drains first");
+        let second = b.flush().unwrap();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
     fn prop_no_request_lost_or_duplicated() {
-        // Batching invariant: every submitted id comes back exactly once,
-        // in submission order.
+        // Batching invariant over mixed-model traffic: every submitted id
+        // comes back exactly once, batches are model-homogeneous, and each
+        // model's ids arrive in submission order.
         forall("batcher conservation", 60, |g| {
             let bs = g.size(1, 8);
             let n = g.size(0, 50);
+            let models = g.size(1, 3);
             let mut b = Batcher::new(bs);
             let mut seen = Vec::new();
+            let drain = |batch: Vec<InferRequest>, seen: &mut Vec<u64>| {
+                assert!(batch.iter().all(|r| r.model == batch[0].model), "homogeneous");
+                seen.extend(batch.into_iter().map(|r| r.id));
+            };
             for id in 0..n as u64 {
-                if let Some(batch) = b.push(req(id)) {
-                    seen.extend(batch.into_iter().map(|r| r.id));
+                let m = ModelId(id as usize % models);
+                if let Some(batch) = b.push(req_for(id, m)) {
+                    drain(batch, &mut seen);
                 }
             }
-            if let Some(batch) = b.flush() {
-                seen.extend(batch.into_iter().map(|r| r.id));
+            while let Some(batch) = b.flush() {
+                drain(batch, &mut seen);
             }
+            let mut got = seen.clone();
+            got.sort_unstable();
             let want: Vec<u64> = (0..n as u64).collect();
-            assert_eq!(seen, want);
+            assert_eq!(got, want, "conservation");
+            // Per-model submission order: ids of one model stay ascending.
+            for m in 0..models {
+                let per: Vec<u64> =
+                    seen.iter().copied().filter(|id| *id as usize % models == m).collect();
+                assert!(per.windows(2).all(|w| w[0] < w[1]), "model {m} order: {per:?}");
+            }
         });
     }
 }

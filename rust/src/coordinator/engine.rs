@@ -1,17 +1,21 @@
 //! Inference engines the coordinator can drive.
 //!
-//! All three consume the same `.neuw` model graph:
+//! All three backends consume `.neuw` model graphs served from a
+//! [`ModelRegistry`] (multi-tenant: one engine serves every registered
+//! model, selected per request by [`ModelId`]):
 //! * `Sim` — the NEURAL cycle simulator (default; produces device timing).
 //! * `Golden` — the dense integer executor (fast functional path).
 //! * `Baseline` — one of the comparison architectures.
 
+use crate::arch::epa::SharedWeightCache;
 use crate::arch::{Accelerator, Report, SimScratch, WeightFlow, WmuBroadcast};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::config::ArchConfig;
+use crate::coordinator::registry::{ModelId, ModelRegistry};
 use crate::model::{exec, Model};
 use crate::snn::SpikeMap;
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// One inference outcome in engine-neutral units.
 #[derive(Debug, Clone, Default)]
@@ -33,22 +37,25 @@ pub struct Outcome {
     pub logits: Vec<i64>,
 }
 
-/// The engine: a model plus an execution backend. `Clone` builds an
-/// independent replica for the [`crate::coordinator::EnginePool`] — one
-/// engine per worker thread, no shared mutable state (each replica gets a
-/// fresh [`SimScratch`], so transposed-weight caches are per worker).
+/// The engine: a model registry plus an execution backend. `Clone` builds
+/// a replica for the [`crate::coordinator::EnginePool`] — one engine per
+/// worker thread. The registry is behind an `Arc`, so every replica serves
+/// the *same* model memory (which is what keeps the shared weight cache's
+/// pointer revalidation stable), and a cloned sim replica shares the
+/// original's [`SharedWeightCache`] handle: transposed weights are cached
+/// once per pool, not once per worker. Only the conv scratch (mutable
+/// membrane lanes) stays private per replica.
 #[derive(Clone)]
 pub struct Engine {
-    /// The loaded model graph.
-    pub model: Model,
+    models: Arc<ModelRegistry>,
     backend: Backend,
 }
 
 enum Backend {
-    /// The simulator plus its per-replica scratch (conv buffers + per-node
-    /// transposed-weight cache). The mutex is never contended — each pool
-    /// worker owns exactly one replica — it only exists so `Engine` stays
-    /// `Sync` for the scoped-thread fan-out.
+    /// The simulator plus its per-replica scratch (conv buffers + the
+    /// shared weight-cache handle). The mutex is never contended — each
+    /// pool worker owns exactly one replica — it only exists so `Engine`
+    /// stays `Sync` for the scoped-thread fan-out.
     Sim(Accelerator, Mutex<SimScratch>),
     Golden,
     Baseline(Box<Baseline>),
@@ -56,16 +63,21 @@ enum Backend {
 
 impl Backend {
     fn sim_with(acc: Accelerator) -> Self {
-        Backend::Sim(acc, Mutex::new(SimScratch::default()))
+        let cache = SharedWeightCache::with_budget(acc.cfg.weight_cache_bytes());
+        Backend::Sim(acc, Mutex::new(SimScratch::with_cache(cache)))
     }
 }
 
 impl Clone for Backend {
     fn clone(&self) -> Self {
         match self {
-            // A replica starts with a cold cache: caches are per worker,
-            // never shared (sharing would re-introduce cross-thread state).
-            Backend::Sim(acc, _) => Backend::Sim(acc.clone(), Mutex::new(SimScratch::default())),
+            // A replica gets a fresh conv scratch but *shares* the weight
+            // cache: the cross-worker cache is the point — each (model,
+            // node) transpose happens once per pool.
+            Backend::Sim(acc, scratch) => {
+                let cache = scratch.lock().unwrap_or_else(|p| p.into_inner()).weights.clone();
+                Backend::Sim(acc.clone(), Mutex::new(SimScratch::with_cache(cache)))
+            }
             Backend::Golden => Backend::Golden,
             Backend::Baseline(b) => Backend::Baseline(b.clone()),
         }
@@ -73,37 +85,97 @@ impl Clone for Backend {
 }
 
 impl Engine {
-    /// NEURAL simulator engine.
+    /// NEURAL simulator engine over a model registry.
+    pub fn sim_registry(models: ModelRegistry, cfg: ArchConfig) -> Self {
+        Engine { models: Arc::new(models), backend: Backend::sim_with(Accelerator::new(cfg)) }
+    }
+
+    /// NEURAL simulator engine (single tenant).
     pub fn sim(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::sim_with(Accelerator::new(cfg)) }
+        Self::sim_registry(ModelRegistry::single(model), cfg)
     }
 
     /// NEURAL simulator engine without elastic decoupling (ablation).
     pub fn sim_rigid(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::sim_with(Accelerator::rigid(cfg)) }
+        Engine {
+            models: Arc::new(ModelRegistry::single(model)),
+            backend: Backend::sim_with(Accelerator::rigid(cfg)),
+        }
     }
 
     /// NEURAL simulator engine on the materializing (event-vector) conv
     /// path — the validation mode; reports are bit-identical to `sim`.
     pub fn sim_materializing(model: Model, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::sim_with(Accelerator::materializing(cfg)) }
+        Engine {
+            models: Arc::new(ModelRegistry::single(model)),
+            backend: Backend::sim_with(Accelerator::materializing(cfg)),
+        }
     }
 
-    /// Golden functional engine.
+    /// Golden functional engine over a model registry.
+    pub fn golden_registry(models: ModelRegistry) -> Self {
+        Engine { models: Arc::new(models), backend: Backend::Golden }
+    }
+
+    /// Golden functional engine (single tenant).
     pub fn golden(model: Model) -> Self {
-        Engine { model, backend: Backend::Golden }
+        Self::golden_registry(ModelRegistry::single(model))
     }
 
-    /// Baseline-architecture engine.
+    /// Baseline-architecture engine over a model registry.
+    pub fn baseline_registry(models: ModelRegistry, kind: BaselineKind, cfg: ArchConfig) -> Self {
+        Engine {
+            models: Arc::new(models),
+            backend: Backend::Baseline(Box::new(Baseline::new(kind, cfg))),
+        }
+    }
+
+    /// Baseline-architecture engine (single tenant).
     pub fn baseline(model: Model, kind: BaselineKind, cfg: ArchConfig) -> Self {
-        Engine { model, backend: Backend::Baseline(Box::new(Baseline::new(kind, cfg))) }
+        Self::baseline_registry(ModelRegistry::single(model), kind, cfg)
     }
 
     /// Simulator engine around a pre-configured [`Accelerator`] (the CLI
     /// uses this to apply `--pipeline` / `--host-threads` before the pool
     /// clones its replicas).
     pub fn from_accelerator(model: Model, acc: Accelerator) -> Self {
-        Engine { model, backend: Backend::sim_with(acc) }
+        Self::from_accelerator_registry(ModelRegistry::single(model), acc)
+    }
+
+    /// [`Engine::from_accelerator`] over a model registry.
+    pub fn from_accelerator_registry(models: ModelRegistry, acc: Accelerator) -> Self {
+        Engine { models: Arc::new(models), backend: Backend::sim_with(acc) }
+    }
+
+    /// The model registry this engine serves.
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.models
+    }
+
+    /// The primary model (registry entry 0) — the single-tenant view.
+    pub fn model(&self) -> &Model {
+        self.models.model(ModelId(0)).expect("registry is never empty")
+    }
+
+    /// Handle to the sim backend's shared transposed-weight cache (None
+    /// for golden/baseline backends, which hold no weights host-side).
+    pub fn weight_cache(&self) -> Option<SharedWeightCache> {
+        match &self.backend {
+            Backend::Sim(_, scratch) => {
+                Some(scratch.lock().unwrap_or_else(|p| p.into_inner()).weights.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Replace this replica's weight cache with a fresh private one (same
+    /// budget). [`crate::coordinator::EnginePool::new_private_caches`]
+    /// uses this to build the per-worker-cache reference mode.
+    pub fn detach_weight_cache(&mut self) {
+        if let Backend::Sim(_, scratch) = &self.backend {
+            let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
+            scratch.weights = scratch.weights.detached();
+        }
     }
 
     /// Engine name for reports.
@@ -119,23 +191,37 @@ impl Engine {
         }
     }
 
-    /// Run one image standalone (full weight-stream charge).
+    /// Run one image standalone on the primary model (full weight-stream
+    /// charge).
     pub fn infer(&self, spikes: &SpikeMap) -> Result<Outcome> {
-        self.infer_batched(spikes, None)
+        self.infer_model(ModelId(0), spikes, None)
     }
 
-    /// Run one image as part of a device batch: `shared` is the batch's
-    /// broadcast WMU — every node's weight tile is fetched from DRAM once
-    /// per batch and fanned out, so this image's report carries its even
-    /// split of the modeled fetch (`None` = standalone full charge). The
-    /// sim backend also reuses its per-replica scratch, so transposed
-    /// weights are cached across the images of the batch. Golden and
-    /// baseline backends ignore the broadcast.
+    /// [`Engine::infer_model`] on the primary model.
     pub fn infer_batched(
         &self,
         spikes: &SpikeMap,
         shared: Option<&WmuBroadcast>,
     ) -> Result<Outcome> {
+        self.infer_model(ModelId(0), spikes, shared)
+    }
+
+    /// Run one image on registered model `model`, optionally inside a
+    /// device batch: `shared` is the batch's broadcast WMU — every node's
+    /// weight tile is fetched from DRAM once per batch and fanned out, so
+    /// this image's report carries its even split of the modeled fetch
+    /// (`None` = standalone full charge). Because batches are
+    /// model-homogeneous, a broadcast never spans two models. The sim
+    /// backend serves transposed weights from the pool-shared cache under
+    /// the `(model, node)` namespace. Golden and baseline backends ignore
+    /// the broadcast.
+    pub fn infer_model(
+        &self,
+        model: ModelId,
+        spikes: &SpikeMap,
+        shared: Option<&WmuBroadcast>,
+    ) -> Result<Outcome> {
+        let graph = self.models.model(model)?;
         match &self.backend {
             Backend::Sim(acc, scratch) => {
                 let flow = match shared {
@@ -143,11 +229,12 @@ impl Engine {
                     None => WeightFlow::Exclusive,
                 };
                 let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
-                Ok(report_to_outcome(acc.run_cached(&self.model, spikes, &mut scratch, flow)?))
+                let report = acc.run_model_cached(model.0, graph, spikes, &mut scratch, flow)?;
+                Ok(report_to_outcome(report))
             }
-            Backend::Baseline(b) => Ok(report_to_outcome(b.run(&self.model, spikes)?)),
+            Backend::Baseline(b) => Ok(report_to_outcome(b.run(graph, spikes)?)),
             Backend::Golden => {
-                let t = exec::execute(&self.model, spikes)?;
+                let t = exec::execute(graph, spikes)?;
                 Ok(Outcome {
                     predicted: t.predicted(),
                     device_ms: 0.0,
@@ -161,15 +248,17 @@ impl Engine {
         }
     }
 
-    /// Full report access for sim/baseline engines (None for golden).
+    /// Full report access for sim/baseline engines (None for golden), on
+    /// the primary model.
     pub fn infer_report(&self, spikes: &SpikeMap) -> Result<Option<Report>> {
+        let graph = self.models.model(ModelId(0))?;
         match &self.backend {
             Backend::Sim(acc, scratch) => {
                 let mut scratch = scratch.lock().unwrap_or_else(|p| p.into_inner());
                 let flow = WeightFlow::Exclusive;
-                Ok(Some(acc.run_cached(&self.model, spikes, &mut scratch, flow)?))
+                Ok(Some(acc.run_model_cached(0, graph, spikes, &mut scratch, flow)?))
             }
-            Backend::Baseline(b) => Ok(Some(b.run(&self.model, spikes)?)),
+            Backend::Baseline(b) => Ok(Some(b.run(graph, spikes)?)),
             Backend::Golden => Ok(None),
         }
     }
@@ -243,6 +332,57 @@ mod tests {
         assert_eq!(a.energy_mj, b.energy_mj);
         assert_eq!(a.total_spikes, b.total_spikes);
         assert_eq!(a.sops, b.sops);
+    }
+
+    #[test]
+    fn infer_model_routes_to_the_requested_tenant() {
+        // A two-tenant sim engine must produce, per tenant, exactly what a
+        // dedicated single-model engine produces — for every backend kind.
+        let x = spikes();
+        let mut reg = ModelRegistry::new();
+        reg.register(zoo::tiny(10, 5), 1);
+        reg.register(zoo::tiny(10, 9), 1);
+        let multi = Engine::sim_registry(reg.clone(), ArchConfig::default());
+        let solo_a = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let solo_b = Engine::sim(zoo::tiny(10, 9), ArchConfig::default());
+        let a = multi.infer_model(ModelId(0), &x, None).unwrap();
+        let b = multi.infer_model(ModelId(1), &x, None).unwrap();
+        assert_eq!(a.logits, solo_a.infer(&x).unwrap().logits);
+        assert_eq!(b.logits, solo_b.infer(&x).unwrap().logits);
+        assert_eq!(a.energy_mj, solo_a.infer(&x).unwrap().energy_mj);
+        assert!(multi.infer_model(ModelId(2), &x, None).is_err(), "unknown tenant errors");
+        let gold = Engine::golden_registry(reg.clone());
+        assert_eq!(
+            gold.infer_model(ModelId(1), &x, None).unwrap().logits,
+            Engine::golden(zoo::tiny(10, 9)).infer(&x).unwrap().logits
+        );
+        let base = Engine::baseline_registry(reg, BaselineKind::StiSnn, ArchConfig::default());
+        assert_eq!(base.infer_model(ModelId(1), &x, None).unwrap().logits, b.logits);
+    }
+
+    #[test]
+    fn cloned_replicas_share_the_weight_cache() {
+        let x = spikes();
+        let e = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let replica = e.clone();
+        let cache = e.weight_cache().unwrap();
+        assert!(cache.same_cache(&replica.weight_cache().unwrap()), "clone shares");
+        e.infer(&x).unwrap();
+        let after_first = cache.stats();
+        assert_eq!(after_first.misses, 2, "tiny has two conv layers");
+        replica.infer(&x).unwrap();
+        let after_replica = cache.stats();
+        assert_eq!(after_replica.misses, 2, "replica reuses the pool's transposes");
+        assert_eq!(after_replica.hits, 2);
+        // Detaching gives the replica its own empty cache again.
+        let mut private = e.clone();
+        private.detach_weight_cache();
+        assert!(!private.weight_cache().unwrap().same_cache(&cache));
+        private.infer(&x).unwrap();
+        assert_eq!(cache.stats().misses, 2, "detached replica no longer feeds the pool cache");
+        assert_eq!(private.weight_cache().unwrap().stats().misses, 2);
+        // Golden engines have no cache.
+        assert!(Engine::golden(zoo::tiny(10, 5)).weight_cache().is_none());
     }
 
     #[test]

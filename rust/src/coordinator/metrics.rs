@@ -1,7 +1,58 @@
-//! Serving metrics aggregation.
+//! Serving metrics aggregation, global and per model.
 
+use crate::arch::WeightCacheStats;
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferResponse;
 use crate::util::{stats::percentile, Summary};
+use std::collections::BTreeMap;
+
+/// Per-model slice of a serving run (the multi-tenant breakdown).
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    /// Completed requests of this model.
+    pub completed: u64,
+    /// Correct predictions among labelled requests.
+    pub correct: u64,
+    /// Labelled requests.
+    pub labelled: u64,
+    /// Device-latency summary (ms).
+    pub device_ms: Summary,
+    /// Energy per image (mJ).
+    pub energy_mj: Summary,
+    /// Total spikes summary.
+    pub spikes: Summary,
+    /// Total SOPs of this model's requests.
+    pub total_sops: u64,
+}
+
+impl ModelMetrics {
+    /// Accuracy over labelled requests (NaN if none).
+    pub fn accuracy(&self) -> f64 {
+        if self.labelled == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.labelled as f64
+        }
+    }
+
+    /// One-line per-model report.
+    pub fn summary_line(&self) -> String {
+        let acc = if self.labelled == 0 {
+            "n/a".to_string()
+        } else {
+            format!("{:.2}%", self.accuracy() * 100.0)
+        };
+        format!(
+            "n={} acc={} device={:.3}ms energy={:.3}mJ spikes={:.0} sops={}",
+            self.completed,
+            acc,
+            self.device_ms.mean(),
+            self.energy_mj.mean(),
+            self.spikes.mean(),
+            self.total_sops
+        )
+    }
+}
 
 /// Aggregated counters over a serving run.
 #[derive(Debug, Clone, Default)]
@@ -29,6 +80,11 @@ pub struct Metrics {
     pub dispatched: u64,
     /// Largest batch dispatched.
     pub max_batch: u64,
+    /// Shared transposed-weight-cache counters at the end of the run
+    /// (zeroed until the coordinator surfaces them; golden/baseline
+    /// engines have no cache and stay zero).
+    pub weight_cache: WeightCacheStats,
+    per_model: BTreeMap<ModelId, ModelMetrics>,
     host_samples: Vec<f64>,
 }
 
@@ -49,10 +105,11 @@ impl Metrics {
         }
     }
 
-    /// Record one response.
+    /// Record one response (global counters + its model's slice).
     pub fn record(&mut self, r: &InferResponse) {
         self.completed += 1;
-        if let Some(ok) = r.correct() {
+        let correct = r.correct();
+        if let Some(ok) = correct {
             self.labelled += 1;
             if ok {
                 self.correct += 1;
@@ -64,6 +121,23 @@ impl Metrics {
         self.spikes.add(r.total_spikes as f64);
         self.total_sops += r.sops;
         self.host_samples.push(r.host_ms);
+        let m = self.per_model.entry(r.model).or_default();
+        m.completed += 1;
+        if let Some(ok) = correct {
+            m.labelled += 1;
+            if ok {
+                m.correct += 1;
+            }
+        }
+        m.device_ms.add(r.device_ms);
+        m.energy_mj.add(r.energy_mj);
+        m.spikes.add(r.total_spikes as f64);
+        m.total_sops += r.sops;
+    }
+
+    /// Per-model breakdown in id order.
+    pub fn per_model(&self) -> &BTreeMap<ModelId, ModelMetrics> {
+        &self.per_model
     }
 
     /// Accuracy over labelled requests (NaN if none).
@@ -111,6 +185,22 @@ impl Metrics {
             self.max_batch
         )
     }
+
+    /// One-line weight-cache report (None when no cache saw traffic).
+    pub fn cache_line(&self) -> Option<String> {
+        let c = &self.weight_cache;
+        if c.hits + c.misses == 0 {
+            return None;
+        }
+        Some(format!(
+            "weight cache: {} hits / {} transposes ({} evicted, {} entries, {:.1} KiB resident)",
+            c.hits,
+            c.misses,
+            c.evictions,
+            c.entries,
+            c.resident_bytes as f64 / 1024.0
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -118,8 +208,19 @@ mod tests {
     use super::*;
 
     fn resp(id: u64, predicted: usize, label: Option<usize>, ms: f64) -> InferResponse {
+        resp_for(id, ModelId(0), predicted, label, ms)
+    }
+
+    fn resp_for(
+        id: u64,
+        model: ModelId,
+        predicted: usize,
+        label: Option<usize>,
+        ms: f64,
+    ) -> InferResponse {
         InferResponse {
             id,
+            model,
             predicted,
             label,
             device_ms: ms,
@@ -155,6 +256,8 @@ mod tests {
         assert!(m.accuracy().is_nan());
         assert_eq!(m.device_fps(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
+        assert!(m.per_model().is_empty());
+        assert!(m.cache_line().is_none());
     }
 
     #[test]
@@ -181,5 +284,44 @@ mod tests {
         assert_eq!(m.dispatched, 6);
         assert_eq!(m.max_batch, 4);
         assert!((m.mean_batch() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_model_slices_partition_the_run() {
+        let mut m = Metrics::default();
+        m.record(&resp_for(0, ModelId(0), 1, Some(1), 2.0));
+        m.record(&resp_for(1, ModelId(1), 1, Some(2), 4.0));
+        m.record(&resp_for(2, ModelId(0), 3, Some(3), 2.0));
+        m.record(&resp_for(3, ModelId(1), 0, None, 4.0));
+        assert_eq!(m.per_model().len(), 2);
+        let m0 = &m.per_model()[&ModelId(0)];
+        let m1 = &m.per_model()[&ModelId(1)];
+        assert_eq!(m0.completed, 2);
+        assert_eq!(m1.completed, 2);
+        assert!((m0.accuracy() - 1.0).abs() < 1e-12);
+        assert!((m1.accuracy() - 0.0).abs() < 1e-12);
+        assert_eq!(m0.device_ms.mean(), 2.0);
+        assert_eq!(m1.device_ms.mean(), 4.0);
+        assert_eq!(m0.total_sops + m1.total_sops, m.total_sops);
+        assert_eq!(m0.completed + m1.completed, m.completed);
+        let line = m0.summary_line();
+        assert!(line.contains("acc=100.00%"), "{line}");
+        assert!(ModelMetrics::default().summary_line().contains("acc=n/a"));
+    }
+
+    #[test]
+    fn cache_line_reports_counters() {
+        let mut m = Metrics::default();
+        m.weight_cache = WeightCacheStats {
+            hits: 10,
+            misses: 2,
+            evictions: 1,
+            resident_bytes: 2048,
+            entries: 2,
+        };
+        let line = m.cache_line().unwrap();
+        assert!(line.contains("10 hits"), "{line}");
+        assert!(line.contains("2 transposes"), "{line}");
+        assert!(line.contains("2.0 KiB"), "{line}");
     }
 }

@@ -1,24 +1,29 @@
 //! The serving coordinator (L3).
 //!
 //! NEURAL's contribution is the accelerator itself, so the coordinator is
-//! the thin-but-real serving layer around the simulated device: a request
-//! queue with backpressure, a batcher that amortizes weight streaming
-//! across images of the same model, an engine pool that fans each batch
-//! out across cores (scoped `std::thread` — no tokio in the offline vendor
-//! set — with one engine replica per worker and a deterministic in-order
-//! result merge), latency/throughput metrics, and an optional on-line
-//! cross-check of simulator logits against the PJRT golden model.
+//! the thin-but-real serving layer around the simulated device: a
+//! multi-tenant [`ModelRegistry`] naming the models one pool serves, a
+//! request queue with backpressure, a per-model batcher that amortizes
+//! weight streaming across images of the same model (batches are always
+//! model-homogeneous), an engine pool that fans each batch out across
+//! cores (scoped `std::thread` — no tokio in the offline vendor set — with
+//! one engine replica per worker, a shared cross-worker transposed-weight
+//! cache, and a deterministic in-order result merge), per-model
+//! latency/throughput metrics, and an optional on-line cross-check of
+//! simulator logits against the PJRT golden model.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pool;
+pub mod registry;
 pub mod request;
 pub mod server;
 
 pub use batcher::Batcher;
 pub use engine::Engine;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ModelMetrics};
 pub use pool::{BatchResult, EnginePool};
+pub use registry::{ModelEntry, ModelId, ModelRegistry};
 pub use request::{InferRequest, InferResponse};
 pub use server::Coordinator;

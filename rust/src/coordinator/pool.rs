@@ -12,10 +12,14 @@
 //! workers executing the same node fetch its weight tile from DRAM once and
 //! broadcast it, so per-image reports carry the even split of a *modeled*
 //! fetch ledger (the retired scalar `1/n` credit fell out of a formula;
-//! this falls out of the transactions).
+//! this falls out of the transactions). Batches are model-homogeneous
+//! (multi-tenant pools interleave per-model batches, each its own
+//! broadcast domain), and all replicas serve transposed weights from one
+//! pool-shared [`crate::arch::SharedWeightCache`].
 
-use crate::arch::WmuBroadcast;
+use crate::arch::{WeightCacheStats, WmuBroadcast};
 use crate::coordinator::engine::{Engine, Outcome};
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferRequest;
 use anyhow::Result;
 use std::time::Instant;
@@ -35,7 +39,11 @@ pub struct EnginePool {
 }
 
 impl EnginePool {
-    /// Build a pool of `workers` replicas of `engine` (at least one).
+    /// Build a pool of `workers` replicas of `engine` (at least one). Sim
+    /// replicas cloned here share one cross-worker transposed-weight cache
+    /// (the [`crate::arch::SharedWeightCache`] handle travels with the
+    /// clone), so batch warmup pays each `(model, node)` transpose once per
+    /// pool.
     pub fn new(engine: Engine, workers: usize) -> Self {
         let workers = workers.max(1);
         let mut engines = Vec::with_capacity(workers);
@@ -44,6 +52,18 @@ impl EnginePool {
         }
         engines.push(engine);
         EnginePool { engines }
+    }
+
+    /// [`EnginePool::new`] with every replica's weight cache detached —
+    /// the per-worker-cache reference mode (each worker re-transposes every
+    /// layer it touches). Kept for A/B measurement of the shared cache in
+    /// `perf_micro` and the regression tests; serving uses `new`.
+    pub fn new_private_caches(engine: Engine, workers: usize) -> Self {
+        let mut pool = Self::new(engine, workers);
+        for e in &mut pool.engines {
+            e.detach_weight_cache();
+        }
+        pool
     }
 
     /// Number of worker engines.
@@ -56,6 +76,28 @@ impl EnginePool {
         &self.engines[0]
     }
 
+    /// Aggregated transposed-weight-cache counters across the pool's
+    /// distinct caches (one shared cache counts once, private caches sum;
+    /// None for cache-less backends).
+    pub fn cache_stats(&self) -> Option<WeightCacheStats> {
+        let mut caches = Vec::new();
+        for e in &self.engines {
+            if let Some(c) = e.weight_cache() {
+                if !caches.iter().any(|x: &crate::arch::SharedWeightCache| x.same_cache(&c)) {
+                    caches.push(c);
+                }
+            }
+        }
+        if caches.is_empty() {
+            return None;
+        }
+        let mut total = WeightCacheStats::default();
+        for c in &caches {
+            total.merge(&c.stats());
+        }
+        Some(total)
+    }
+
     /// Run every request of a batch, one contiguous chunk per worker, and
     /// return the per-request results in submission order.
     ///
@@ -63,17 +105,30 @@ impl EnginePool {
     /// deterministic engine every functional field of the result vector is
     /// identical for any worker count (only the measured `host_ms` varies).
     ///
-    /// Device-batch accounting: the whole batch is one broadcast domain —
-    /// it runs back-to-back on the simulated device and its workers share
-    /// one [`WmuBroadcast`], so each node's weight tile is fetched from
-    /// DRAM once and every image carries the even split. The share depends
-    /// only on the batch size, never on the worker count or completion
-    /// order, so results stay bit-deterministic across pool sizes. Callers
-    /// that combine several batcher batches into one dispatch must use
-    /// [`EnginePool::run_batch_grouped`] so each request shares with its
-    /// own device batch only.
+    /// Device-batch accounting: each contiguous run of same-model requests
+    /// is one broadcast domain — it runs back-to-back on the simulated
+    /// device and its workers share one [`WmuBroadcast`], so each node's
+    /// weight tile is fetched from DRAM once and every image carries the
+    /// even split (a single-model batch is one domain, the common case; a
+    /// mixed batch splits at every model change, because two models have
+    /// no common fetch to share and their node ids would alias in one
+    /// ledger). The share depends only on the group size, never on the
+    /// worker count or completion order, so results stay bit-deterministic
+    /// across pool sizes. Callers that combine several batcher batches
+    /// into one dispatch must use [`EnginePool::run_batch_grouped`] so
+    /// each request shares with its own device batch only.
     pub fn run_batch(&self, batch: &[InferRequest]) -> Vec<BatchResult> {
-        self.run_batch_grouped(batch, &[batch.len()])
+        let mut groups: Vec<usize> = Vec::new();
+        let mut last: Option<ModelId> = None;
+        for r in batch {
+            if last == Some(r.model) {
+                *groups.last_mut().expect("last is Some only after a push") += 1;
+            } else {
+                groups.push(1);
+                last = Some(r.model);
+            }
+        }
+        self.run_batch_grouped(batch, &groups)
     }
 
     /// [`EnginePool::run_batch`] over several device batches in one
@@ -94,7 +149,19 @@ impl EnginePool {
         }
         let broadcasts: Vec<WmuBroadcast> = groups.iter().map(|&n| WmuBroadcast::new(n)).collect();
         let mut req_group: Vec<usize> = Vec::with_capacity(batch.len());
+        let mut start = 0usize;
         for (gi, &n) in groups.iter().enumerate() {
+            // Broadcast domains never cross models: a group's requests all
+            // target one model (the per-model batcher and `run_batch`'s
+            // splitter guarantee it). A hard assert, not a debug_assert —
+            // a mixed group would silently alias two models' node ids in
+            // one ledger and corrupt the weight-DRAM attribution, and the
+            // O(batch) scan is nothing against the per-image simulation.
+            assert!(
+                n == 0 || batch[start..start + n].iter().all(|r| r.model == batch[start].model),
+                "group {gi} mixes models — broadcast domains must be model-homogeneous"
+            );
+            start += n;
             req_group.extend(std::iter::repeat_n(gi, n));
         }
         let workers = self.engines.len().min(batch.len());
@@ -123,7 +190,8 @@ impl EnginePool {
                     for ((req, &gid), slot) in
                         chunk_reqs.iter().zip(chunk_gids).zip(chunk_slots.iter_mut())
                     {
-                        let outcome = engine.infer_batched(&req.spikes, Some(&broadcasts[gid]));
+                        let outcome =
+                            engine.infer_model(req.model, &req.spikes, Some(&broadcasts[gid]));
                         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
                         *slot = Some(BatchResult { outcome, host_ms });
                     }
@@ -141,6 +209,7 @@ impl EnginePool {
 mod tests {
     use super::*;
     use crate::config::ArchConfig;
+    use crate::coordinator::registry::{ModelId, ModelRegistry};
     use crate::data::SynthCifar;
     use crate::data::{encode_threshold, Dataset};
     use crate::model::zoo;
@@ -150,7 +219,37 @@ mod tests {
         (0..n)
             .map(|i| {
                 let (img, label) = ds.get(i);
-                InferRequest { id: i as u64, spikes: encode_threshold(&img, 128), label: Some(label) }
+                InferRequest {
+                    id: i as u64,
+                    model: ModelId(0),
+                    spikes: encode_threshold(&img, 128),
+                    label: Some(label),
+                }
+            })
+            .collect()
+    }
+
+    /// Two-tenant registry of structurally equal but differently-weighted
+    /// tiny models.
+    fn two_tiny() -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        reg.register(zoo::tiny(10, 2), 1);
+        reg.register(zoo::tiny(10, 9), 1);
+        reg
+    }
+
+    /// `n` requests alternating between the two registered models.
+    fn mixed_batch(n: usize) -> Vec<InferRequest> {
+        let ds = Dataset::from_synth(&SynthCifar::new(10, 5), n);
+        (0..n)
+            .map(|i| {
+                let (img, label) = ds.get(i);
+                InferRequest {
+                    id: i as u64,
+                    model: ModelId(i % 2),
+                    spikes: encode_threshold(&img, 128),
+                    label: Some(label),
+                }
             })
             .collect()
     }
@@ -266,6 +365,170 @@ mod tests {
         for o in &out[..3] {
             assert!(o.weight_dram_bytes < full / 2, "3-group shares one stream");
         }
+    }
+
+    #[test]
+    fn mixed_model_grouped_dispatch_heterogeneous_sizes() {
+        // Two models interleaved into one dispatch as four model-
+        // homogeneous groups of different sizes: every request must come
+        // back with its own model's outcome and its own group's broadcast
+        // share, for worker counts below, at and above the group count.
+        let reqs: Vec<InferRequest> = {
+            let ds = Dataset::from_synth(&SynthCifar::new(10, 5), 7);
+            // groups: [m0 x3], [m1 x2], [m0 x1], [m1 x1]
+            let models = [0usize, 0, 0, 1, 1, 0, 1];
+            models
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| {
+                    let (img, label) = ds.get(i);
+                    InferRequest {
+                        id: i as u64,
+                        model: ModelId(m),
+                        spikes: encode_threshold(&img, 128),
+                        label: Some(label),
+                    }
+                })
+                .collect()
+        };
+        let groups = [3usize, 2, 1, 1];
+        let make = || Engine::sim_registry(two_tiny(), ArchConfig::default());
+        // Per-model standalone references (full weight stream).
+        let full: Vec<u64> = (0..2)
+            .map(|m| {
+                make().infer_model(ModelId(m), &reqs[0].spikes, None).unwrap().weight_dram_bytes
+            })
+            .collect();
+        let reference: Vec<Outcome> = EnginePool::new(make(), 1)
+            .run_batch_grouped(&reqs, &groups)
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        for workers in [2usize, 4, 8] {
+            let pool = EnginePool::new(make(), workers);
+            let got: Vec<Outcome> = pool
+                .run_batch_grouped(&reqs, &groups)
+                .into_iter()
+                .map(|r| r.outcome.unwrap())
+                .collect();
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(g.logits, r.logits, "req {i} workers={workers}");
+                assert_eq!(g.energy_mj, r.energy_mj, "req {i} workers={workers}");
+                assert_eq!(g.weight_dram_bytes, r.weight_dram_bytes, "req {i}");
+            }
+        }
+        // Each model's requests match that model's dedicated engine.
+        for (i, req) in reqs.iter().enumerate() {
+            let solo = make().infer_model(req.model, &req.spikes, None).unwrap();
+            assert_eq!(reference[i].logits, solo.logits, "req {i} routed to its model");
+        }
+        // Singleton groups pay their model's full stream; the 3-group and
+        // 2-group share within themselves only.
+        assert_eq!(reference[5].weight_dram_bytes, full[0]);
+        assert_eq!(reference[6].weight_dram_bytes, full[1]);
+        for r in &reference[..3] {
+            assert!(r.weight_dram_bytes < full[0] / 2, "3-group shares one m0 stream");
+        }
+        for r in &reference[3..5] {
+            assert!(r.weight_dram_bytes < full[1], "2-group shares one m1 stream");
+        }
+    }
+
+    #[test]
+    fn shared_cache_transposes_once_per_pool() {
+        // The acceptance micro in unit form: a 2-model, 4-worker warmup
+        // batch. With the shared cache every (model, conv) transposes once
+        // per POOL; with detached per-worker caches every worker that
+        // touches a model re-transposes it — 8 requests alternating models
+        // over 4 workers chunk as [m0,m1] per worker, so exactly 4x.
+        let reqs = mixed_batch(8);
+        // Alternating models cannot form contiguous homogeneous device
+        // batches, so dispatch them as singleton broadcast groups (exactly
+        // what the coordinator does for `--broadcast-wmu off`).
+        let groups = [1usize; 8];
+        let workers = 4;
+        let convs: u64 = (0..2)
+            .map(|m| two_tiny().model(ModelId(m)).unwrap().num_convs() as u64)
+            .sum();
+        let shared_pool =
+            EnginePool::new(Engine::sim_registry(two_tiny(), ArchConfig::default()), workers);
+        let shared_out: Vec<Outcome> = shared_pool
+            .run_batch_grouped(&reqs, &groups)
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        let shared = shared_pool.cache_stats().unwrap();
+        assert_eq!(shared.misses, convs, "one transpose per (model, conv) per pool");
+        assert_eq!(shared.entries, convs);
+        let private_pool = EnginePool::new_private_caches(
+            Engine::sim_registry(two_tiny(), ArchConfig::default()),
+            workers,
+        );
+        let private_out: Vec<Outcome> = private_pool
+            .run_batch_grouped(&reqs, &groups)
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        let private = private_pool.cache_stats().unwrap();
+        assert_eq!(private.misses, workers as u64 * convs, "each worker re-transposes");
+        // ≥ (workers-1)/workers fewer transposes — the acceptance bound.
+        assert!(shared.misses * workers as u64 <= private.misses);
+        // Sharing the cache must not change a single outcome.
+        for (i, (s, p)) in shared_out.iter().zip(&private_out).enumerate() {
+            assert_eq!(s.logits, p.logits, "req {i}");
+            assert_eq!(s.energy_mj, p.energy_mj, "req {i}");
+            assert_eq!(s.device_ms, p.device_ms, "req {i}");
+        }
+    }
+
+    #[test]
+    fn run_batch_splits_mixed_batches_at_model_changes() {
+        // The public run_batch must never put two models in one broadcast
+        // domain: [m0, m0, m1, m1] becomes two 2-image domains (each pays
+        // half its model's stream), and fully alternating models degrade
+        // to singleton domains (full per-image stream) — in release builds
+        // too, where the grouped path's homogeneity assert still fires.
+        let engine = || Engine::sim_registry(two_tiny(), ArchConfig::default());
+        let ds = Dataset::from_synth(&SynthCifar::new(10, 5), 4);
+        let req = |i: usize, m: usize| {
+            let (img, label) = ds.get(i);
+            InferRequest {
+                id: i as u64,
+                model: ModelId(m),
+                spikes: encode_threshold(&img, 128),
+                label: Some(label),
+            }
+        };
+        let spikes0 = ds_spikes(&ds, 0);
+        let full: Vec<u64> = (0..2usize)
+            .map(|m| {
+                engine().infer_model(ModelId(m), &spikes0, None).unwrap().weight_dram_bytes
+            })
+            .collect();
+        let pool = EnginePool::new(engine(), 2);
+        let paired: Vec<Outcome> = pool
+            .run_batch(&[req(0, 0), req(1, 0), req(2, 1), req(3, 1)])
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        for (i, o) in paired.iter().enumerate() {
+            let m = i / 2;
+            assert!(o.weight_dram_bytes < full[m], "req {i} shares its 2-domain");
+        }
+        let alternating: Vec<Outcome> = pool
+            .run_batch(&[req(0, 0), req(1, 1), req(2, 0), req(3, 1)])
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        for (i, o) in alternating.iter().enumerate() {
+            assert_eq!(o.weight_dram_bytes, full[i % 2], "req {i} is its own domain");
+        }
+    }
+
+    /// Encoded spikes of dataset image `i` (test helper).
+    fn ds_spikes(ds: &Dataset, i: usize) -> crate::snn::SpikeMap {
+        let (img, _) = ds.get(i);
+        encode_threshold(&img, 128)
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Multi-tenant model registry: several named models served by one engine
+//! pool.
+//!
+//! NEURAL's elastic premise is that one baseline computing flow hosts many
+//! workloads without dedicated units; the serving layer mirrors that by
+//! hosting many *models* in one pool. The registry owns the loaded
+//! [`Model`] graphs, assigns each a dense [`ModelId`], carries a traffic
+//! weight per model (the `--model-mix` knob), and derives the deterministic
+//! request→model schedule `serve_dataset` drives a mixed trace with. The
+//! id is the namespace key everywhere downstream: the batcher keeps one
+//! queue per id (model-homogeneous batches), each batch stays its own
+//! broadcast-WMU domain (weight broadcasts never cross models), and the
+//! shared weight cache keys transposes by `(ModelId, node)`.
+
+use crate::model::{zoo, Model};
+use anyhow::{bail, Result};
+
+/// Dense handle of one registered model (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct ModelId(pub usize);
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// One registered model: the graph plus its serving identity.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// The registry handle.
+    pub id: ModelId,
+    /// Instance name, unique within the registry (duplicate zoo names get
+    /// a `#k` suffix).
+    pub name: String,
+    /// The loaded graph.
+    pub model: Model,
+    /// Traffic-mix weight (relative share of the synthetic trace).
+    pub weight: usize,
+}
+
+/// The registry: an ordered set of models one pool serves.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+    /// Round-robin expansion of the mix weights: `schedule[i % len]` is
+    /// request `i`'s model. Rebuilt on every registration.
+    schedule: Vec<ModelId>,
+}
+
+impl ModelRegistry {
+    /// Empty registry (register at least one model before serving).
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// Registry holding exactly one model (the single-tenant mode every
+    /// pre-registry entry point maps onto).
+    pub fn single(model: Model) -> Self {
+        let mut reg = ModelRegistry::new();
+        reg.register(model, 1);
+        reg
+    }
+
+    /// Register a model with a traffic weight; returns its id. Instance
+    /// names come from the model's own name, deduplicated with a `#k`
+    /// suffix so two tenants of the same zoo model stay distinguishable.
+    pub fn register(&mut self, model: Model, weight: usize) -> ModelId {
+        let id = ModelId(self.entries.len());
+        let dups = self.entries.iter().filter(|e| e.model.name == model.name).count();
+        let name = if dups == 0 {
+            model.name.clone()
+        } else {
+            format!("{}#{}", model.name, dups)
+        };
+        self.entries.push(ModelEntry { id, name, model, weight });
+        self.rebuild_schedule();
+        id
+    }
+
+    /// Load `names` from the zoo with weights `mix` (empty = all 1). Each
+    /// instance gets `seed + index`, so duplicate names serve *different*
+    /// weights — the interesting multi-tenant case.
+    pub fn from_zoo(names: &[&str], classes: usize, seed: u64, mix: &[usize]) -> Result<Self> {
+        if names.is_empty() {
+            bail!("registry needs at least one model name");
+        }
+        if !mix.is_empty() && mix.len() != names.len() {
+            bail!("--model-mix has {} weights for {} models", mix.len(), names.len());
+        }
+        let mut reg = ModelRegistry::new();
+        for (i, name) in names.iter().enumerate() {
+            let Some(model) = zoo::by_name(name, classes, seed + i as u64) else {
+                bail!("unknown zoo model {name:?} (one of {})", zoo::NAMES.join("|"));
+            };
+            reg.register(model, mix.get(i).copied().unwrap_or(1));
+        }
+        Ok(reg)
+    }
+
+    fn rebuild_schedule(&mut self) {
+        self.schedule.clear();
+        for e in &self.entries {
+            self.schedule.extend(std::iter::repeat_n(e.id, e.weight));
+        }
+        // All-zero weights (every tenant registered but muted): fall back
+        // to an even round-robin rather than an empty schedule.
+        if self.schedule.is_empty() {
+            self.schedule.extend(self.entries.iter().map(|e| e.id));
+        }
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry lookup (None when the id is out of range).
+    pub fn entry(&self, id: ModelId) -> Option<&ModelEntry> {
+        self.entries.get(id.0)
+    }
+
+    /// Model lookup, failing on unknown ids (requests carry ids across
+    /// threads, so a stale id must surface as an error, not a panic).
+    pub fn model(&self, id: ModelId) -> Result<&Model> {
+        match self.entries.get(id.0) {
+            Some(e) => Ok(&e.model),
+            None => bail!("unknown model id {id} ({} registered)", self.entries.len()),
+        }
+    }
+
+    /// Instance name for reports (`m<id>` when unknown).
+    pub fn name(&self, id: ModelId) -> String {
+        self.entries.get(id.0).map_or_else(|| id.to_string(), |e| e.name.clone())
+    }
+
+    /// Entry by instance name.
+    pub fn by_name(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries in id order.
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    /// Deterministic traffic assignment: which model serves request `i` of
+    /// a mixed trace. Weighted round-robin over the registration order —
+    /// depends only on `(i, weights)`, never on workers or batch size, so
+    /// per-model metrics are reproducible across pool shapes.
+    pub fn assign(&self, i: usize) -> ModelId {
+        if self.schedule.is_empty() {
+            return ModelId(0);
+        }
+        self.schedule[i % self.schedule.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_and_lookup() {
+        let reg = ModelRegistry::single(zoo::tiny(10, 1));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.name(ModelId(0)), "tiny");
+        assert!(reg.model(ModelId(0)).is_ok());
+        assert!(reg.model(ModelId(1)).is_err());
+        assert_eq!(reg.assign(0), ModelId(0));
+        assert_eq!(reg.assign(999), ModelId(0));
+    }
+
+    #[test]
+    fn duplicate_names_get_suffixes_and_distinct_weights() {
+        let reg = ModelRegistry::from_zoo(&["tiny", "tiny"], 10, 5, &[]).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.name(ModelId(0)), "tiny");
+        assert_eq!(reg.name(ModelId(1)), "tiny#1");
+        assert!(reg.by_name("tiny#1").is_some());
+        // Seed offset: the two tenants are different models.
+        let a = reg.model(ModelId(0)).unwrap();
+        let b = reg.model(ModelId(1)).unwrap();
+        let wa = match &a.nodes[1].op {
+            crate::model::ir::Op::Conv { weights, .. } => weights.clone(),
+            _ => panic!(),
+        };
+        let wb = match &b.nodes[1].op {
+            crate::model::ir::Op::Conv { weights, .. } => weights.clone(),
+            _ => panic!(),
+        };
+        assert_ne!(wa, wb);
+    }
+
+    #[test]
+    fn weighted_mix_drives_the_trace() {
+        let reg = ModelRegistry::from_zoo(&["tiny", "tiny"], 10, 1, &[2, 1]).unwrap();
+        let first_six: Vec<ModelId> = (0..6).map(|i| reg.assign(i)).collect();
+        assert_eq!(
+            first_six,
+            vec![ModelId(0), ModelId(0), ModelId(1), ModelId(0), ModelId(0), ModelId(1)]
+        );
+        let m0 = (0..300).filter(|&i| reg.assign(i) == ModelId(0)).count();
+        assert_eq!(m0, 200, "2:1 mix over any whole number of rounds");
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_round_robin() {
+        let reg = ModelRegistry::from_zoo(&["tiny", "tiny"], 10, 1, &[0, 0]).unwrap();
+        assert_eq!(reg.assign(0), ModelId(0));
+        assert_eq!(reg.assign(1), ModelId(1));
+        assert_eq!(reg.assign(2), ModelId(0));
+    }
+
+    #[test]
+    fn bad_zoo_inputs_error() {
+        assert!(ModelRegistry::from_zoo(&[], 10, 1, &[]).is_err());
+        assert!(ModelRegistry::from_zoo(&["tiny"], 10, 1, &[1, 2]).is_err());
+        assert!(ModelRegistry::from_zoo(&["alexnet"], 10, 1, &[]).is_err());
+    }
+}

@@ -1,12 +1,17 @@
 //! Request/response types of the serving loop.
 
+use crate::coordinator::registry::ModelId;
 use crate::snn::SpikeMap;
 
-/// One inference request: an already-encoded input spike map.
+/// One inference request: an already-encoded input spike map, addressed to
+/// one of the registry's models.
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     /// Monotonic id assigned by the submitter.
     pub id: u64,
+    /// Which registered model serves this request (the batcher keeps one
+    /// queue per model, so batches stay model-homogeneous).
+    pub model: ModelId,
     /// Encoded input spikes.
     pub spikes: SpikeMap,
     /// Ground-truth label when known (accuracy accounting).
@@ -18,6 +23,8 @@ pub struct InferRequest {
 pub struct InferResponse {
     /// Request id.
     pub id: u64,
+    /// The model that served the request (per-model metrics key).
+    pub model: ModelId,
     /// Predicted class.
     pub predicted: usize,
     /// Ground-truth label passed through.
@@ -50,6 +57,7 @@ mod tests {
     fn correctness_tracking() {
         let r = InferResponse {
             id: 1,
+            model: ModelId(0),
             predicted: 3,
             label: Some(3),
             device_ms: 1.0,
@@ -65,12 +73,15 @@ mod tests {
     }
 
     #[test]
-    fn request_carries_spikes() {
+    fn request_carries_spikes_and_model() {
         let req = InferRequest {
             id: 0,
+            model: ModelId(2),
             spikes: Tensor::zeros(Shape::d3(3, 32, 32)),
             label: Some(1),
         };
         assert_eq!(req.spikes.numel(), 3 * 32 * 32);
+        assert_eq!(req.model, ModelId(2));
+        assert_eq!(req.model.to_string(), "m2");
     }
 }

@@ -1,11 +1,13 @@
-//! The coordinator server: request queue → batcher → engine pool →
-//! metrics, with optional PJRT golden cross-check.
+//! The coordinator server: request queue → per-model batcher → engine pool
+//! → metrics, with optional PJRT golden cross-check.
 //!
 //! Threading model (std only — no tokio offline): the submitting side owns
-//! a `Coordinator`; `serve_dataset` pushes encoded requests through the
-//! batcher, and every released batch fans out across the
-//! [`EnginePool`] — one engine replica per worker, scoped threads, results
-//! merged back in submission order (deterministic metrics regardless of
+//! a `Coordinator`; `serve_dataset` assigns each encoded request a model
+//! from the registry's deterministic traffic schedule and pushes it
+//! through the per-model batcher; every released (model-homogeneous)
+//! batch fans out across the [`EnginePool`] — one engine replica per
+//! worker, scoped threads, results merged back in submission order
+//! (deterministic global *and* per-model metrics regardless of
 //! scheduling). The PJRT cross-checker stays on the submitting thread
 //! (xla handles are not `Send`).
 
@@ -14,6 +16,7 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::EnginePool;
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
@@ -59,14 +62,20 @@ impl Coordinator {
     }
 
     /// Serve `n` images from a dataset through the batched engine pool;
-    /// returns the final metrics (recorded in submission order).
+    /// returns the final metrics (recorded in submission order, with a
+    /// per-model breakdown).
     ///
-    /// Released batches are buffered until up to `workers` of them are
-    /// pending and dispatched together, so small batch sizes (down to
-    /// `--batch 1`) still keep every worker engine busy. Encoding and
-    /// inference do not overlap (each dispatch is a barrier) — a deliberate
-    /// trade for deterministic in-order metrics; `encode_threshold` is
-    /// microseconds against milliseconds of simulation per image.
+    /// Multi-tenant traffic: request `i` targets the model the registry's
+    /// weighted round-robin schedule assigns to `i` — a deterministic
+    /// synthetic trace that depends only on the `--model-mix` weights,
+    /// never on workers or batching, so per-model metrics reproduce across
+    /// pool shapes. Released batches are buffered until up to `workers` of
+    /// them are pending and dispatched together, so small batch sizes
+    /// (down to `--batch 1`) still keep every worker engine busy. Encoding
+    /// and inference do not overlap (each dispatch is a barrier) — a
+    /// deliberate trade for deterministic in-order metrics;
+    /// `encode_threshold` is microseconds against milliseconds of
+    /// simulation per image.
     pub fn serve_dataset(&mut self, ds: &Dataset, n: usize) -> Result<Metrics> {
         let n = n.min(ds.len());
         let mut batcher = Batcher::new(self.cfg.batch_size);
@@ -75,9 +84,21 @@ impl Coordinator {
         for i in 0..n {
             let (img, label) = ds.get(i);
             let spikes = encode_threshold(&img, 128);
+            let model = self.pool.engine().registry().assign(i);
             if let Some(hlo) = &self.crosscheck {
-                if self.cfg.crosscheck_every > 0 && i % self.cfg.crosscheck_every == 0 {
-                    let sim_pred = self.pool.engine().infer(&spikes)?.predicted;
+                // The HLO artifact is the golden twin of the primary model
+                // (registry entry 0), so only its requests are checked —
+                // and through the same cached engine entry point the batch
+                // path uses (`infer_model`), never a side door: cross-check
+                // inferences hit the shared weight cache and are counted in
+                // its hit/miss stats like any other, so cache counters and
+                // timing stay consistent with the serving path.
+                if self.cfg.crosscheck_every > 0
+                    && model == ModelId(0)
+                    && i % self.cfg.crosscheck_every == 0
+                {
+                    let sim_pred =
+                        self.pool.engine().infer_model(model, &spikes, None)?.predicted;
                     let hlo_pred = hlo.predict(&spikes).context("cross-check inference")?;
                     self.crosschecks += 1;
                     if sim_pred != hlo_pred {
@@ -88,7 +109,7 @@ impl Coordinator {
                     }
                 }
             }
-            let req = InferRequest { id: i as u64, spikes, label: Some(label) };
+            let req = InferRequest { id: i as u64, model, spikes, label: Some(label) };
             if let Some(batch) = batcher.push(req) {
                 pending.push((batch, Instant::now()));
                 if pending.len() >= self.pool.workers() {
@@ -96,10 +117,14 @@ impl Coordinator {
                 }
             }
         }
-        if let Some(batch) = batcher.flush() {
+        // End of stream: drain every model's partial batch.
+        while let Some(batch) = batcher.flush() {
             pending.push((batch, Instant::now()));
         }
         self.dispatch(&mut pending, &mut metrics);
+        if let Some(stats) = self.pool.cache_stats() {
+            metrics.weight_cache = stats;
+        }
         Ok(metrics)
     }
 
@@ -107,9 +132,11 @@ impl Coordinator {
     /// record every outcome in submission order. `host_ms` covers the full
     /// host latency: batch release (queueing in `pending`) → inference
     /// finished. Each batcher batch stays its own broadcast-WMU group (the
-    /// device batch that shares one weight stream per node), so energy
-    /// accounting follows `--batch` and is independent of how many batches
-    /// this dispatch happens to combine (which varies with `--workers`);
+    /// device batch that shares one weight stream per node) and is
+    /// model-homogeneous by construction (per-model batcher queues), so
+    /// energy accounting follows `--batch`, is independent of how many
+    /// batches this dispatch happens to combine (which varies with
+    /// `--workers`), and weight broadcasts never cross models;
     /// `--broadcast-wmu off` degrades every request to a singleton group
     /// (full per-image weight stream, the unshared reference mode).
     fn dispatch(&self, pending: &mut Vec<(Vec<InferRequest>, Instant)>, metrics: &mut Metrics) {
@@ -136,6 +163,7 @@ impl Coordinator {
                 Ok(out) => {
                     metrics.record(&InferResponse {
                         id: req.id,
+                        model: req.model,
                         predicted: out.predicted,
                         label: req.label,
                         device_ms: out.device_ms,
@@ -157,11 +185,19 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::config::{ArchConfig, RunConfig};
+    use crate::coordinator::registry::ModelRegistry;
     use crate::data::SynthCifar;
     use crate::model::zoo;
 
     fn dataset(n: usize) -> Dataset {
         Dataset::from_synth(&SynthCifar::new(10, 2), n)
+    }
+
+    fn two_tiny() -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        reg.register(zoo::tiny(10, 5), 1);
+        reg.register(zoo::tiny(10, 11), 1);
+        reg
     }
 
     #[test]
@@ -181,6 +217,11 @@ mod tests {
         assert!(m.device_ms.mean() > 0.0);
         assert!(m.energy_mj.mean() > 0.0);
         assert!(m.device_fps() > 0.0);
+        // The shared weight cache saw the run: 2 transposes (tiny's convs),
+        // the rest of the lookups hits.
+        assert_eq!(m.weight_cache.misses, 2);
+        assert_eq!(m.weight_cache.hits, 6);
+        assert!(m.cache_line().is_some());
     }
 
     #[test]
@@ -207,6 +248,55 @@ mod tests {
             means.push(m.energy_mj.mean());
         }
         assert_eq!(means[0], means[1], "energy must depend on --batch, not --workers");
+    }
+
+    #[test]
+    fn mixed_trace_interleaves_models_deterministically() {
+        // A 1:1 two-model mix over 12 images: 6 requests per model, every
+        // batch model-homogeneous, and each model's outcomes equal to what
+        // a dedicated single-model run produces.
+        let engine = Engine::sim_registry(two_tiny(), ArchConfig::default());
+        let cfg = RunConfig { batch_size: 2, workers: 2, ..Default::default() };
+        let mut coord = Coordinator::new(engine, cfg);
+        let m = coord.serve_dataset(&dataset(12), 12).unwrap();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.per_model().len(), 2);
+        for (_, mm) in m.per_model() {
+            assert_eq!(mm.completed, 6, "1:1 mix splits the trace evenly");
+            assert!(mm.energy_mj.mean() > 0.0);
+        }
+        assert_eq!(
+            m.per_model().values().map(|mm| mm.total_sops).sum::<u64>(),
+            m.total_sops,
+            "per-model slices partition the run"
+        );
+    }
+
+    #[test]
+    fn per_model_metrics_identical_across_worker_counts() {
+        // The multi-tenant determinism regression: a mixed two-model trace
+        // must report bit-identical per-model accuracy, energy, device
+        // latency and SOPs for 1 vs 4 workers (scheduling must never leak
+        // into the simulated device or the attribution).
+        let mut runs = Vec::new();
+        for workers in [1usize, 4] {
+            let engine = Engine::sim_registry(two_tiny(), ArchConfig::default());
+            let cfg = RunConfig { batch_size: 2, workers, ..Default::default() };
+            let mut coord = Coordinator::new(engine, cfg);
+            let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+            assert_eq!(m.completed, 10);
+            let snapshot: Vec<(u64, u64, f64, f64, u64)> = m
+                .per_model()
+                .values()
+                .map(|mm| {
+                    let energy = mm.energy_mj.mean();
+                    let device = mm.device_ms.mean();
+                    (mm.completed, mm.correct, energy, device, mm.total_sops)
+                })
+                .collect();
+            runs.push(snapshot);
+        }
+        assert_eq!(runs[0], runs[1], "per-model metrics must not depend on --workers");
     }
 
     #[test]

@@ -5,9 +5,10 @@
 use anyhow::{bail, Context, Result};
 use neural::arch::{ResourceModel, ResourceReport};
 use neural::baselines::BaselineKind;
-use neural::cli::{Args, USAGE};
+use neural::cli::{resolve_host_threads, Args, USAGE};
+use neural::config::run_cfg::{parse_list, parse_mix};
 use neural::config::{ArchConfig, RunConfig};
-use neural::coordinator::{Coordinator, Engine};
+use neural::coordinator::{Coordinator, Engine, ModelRegistry};
 use neural::data::{Dataset, SynthCifar};
 use neural::model::{neuw, zoo, Model};
 use neural::util::Table;
@@ -57,7 +58,7 @@ fn load_model(args: &Args) -> Result<Model> {
     }
     let name = args.get_or("model", "tiny");
     zoo::by_name(&name, classes, seed)
-        .with_context(|| format!("unknown zoo model {name:?} (tiny|resnet11|vgg11|qkfresnet11)"))
+        .with_context(|| format!("unknown zoo model {name:?} (one of {})", zoo::NAMES.join("|")))
 }
 
 fn load_arch(args: &Args) -> Result<ArchConfig> {
@@ -67,41 +68,48 @@ fn load_arch(args: &Args) -> Result<ArchConfig> {
     }
 }
 
+/// Build the model registry a run serves: `cfg.models`/`cfg.model_mix`
+/// (multi-tenant, zoo only) or the single `--model`/`--neuw` path.
+fn build_registry(args: &Args, cfg: &RunConfig) -> Result<ModelRegistry> {
+    if cfg.models.is_empty() {
+        if !cfg.model_mix.is_empty() {
+            bail!("--model-mix requires --models");
+        }
+        return Ok(ModelRegistry::single(load_model(args)?));
+    }
+    if args.get("neuw").is_some() {
+        bail!("--models (zoo registry) and --neuw (single artifact) are mutually exclusive");
+    }
+    if args.get("model").is_some() {
+        bail!("--models (zoo registry) and --model (single model) are mutually exclusive");
+    }
+    let classes = args.get_usize("classes", 10)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let names: Vec<&str> = cfg.models.iter().map(String::as_str).collect();
+    ModelRegistry::from_zoo(&names, classes, seed, &cfg.model_mix)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     use neural::arch::Accelerator;
-    let model = load_model(args)?;
     let arch = load_arch(args)?;
     let engine_name = args.get_or("engine", "sim");
-    // Simulator schedule knobs (both default on; the broadcast WMU is a
-    // coordinator concern and lands in RunConfig below).
+    // Simulator schedule knobs (pipeline/broadcast default on; the
+    // broadcast WMU is a coordinator concern and lands in RunConfig).
     let pipeline = args.get_on_off("pipeline", true)?;
-    let host_threads = args.get_usize("host-threads", 1)?.max(1);
     let workers = args.get_usize("workers", 1)?;
-    if workers > 1 && host_threads > 1 {
-        eprintln!(
-            "warning: --workers {workers} x --host-threads {host_threads} multiply (every \
-             in-flight image fans out its own scatter threads); prefer --host-threads 1 \
-             when running a worker pool"
-        );
+    let available = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let (host_threads, warning) =
+        resolve_host_threads(args.get("host-threads"), workers, available)?;
+    if let Some(w) = warning {
+        eprintln!("warning: {w}");
     }
-    let sim_engine = |mut acc: Accelerator, model| {
-        acc.pipeline = pipeline;
-        acc.host_threads = host_threads;
-        Engine::from_accelerator(model, acc)
-    };
-    let engine = match engine_name.as_str() {
-        "sim" => sim_engine(Accelerator::new(arch), model),
-        "rigid" => sim_engine(Accelerator::rigid(arch), model),
-        "materializing" => sim_engine(Accelerator::materializing(arch), model),
-        "golden" => Engine::golden(model),
-        "sibrain" => Engine::baseline(model, BaselineKind::SiBrain, arch),
-        "scpu" => Engine::baseline(model, BaselineKind::Scpu, arch),
-        "stisnn" => Engine::baseline(model, BaselineKind::StiSnn, arch),
-        "cerebron" => Engine::baseline(model, BaselineKind::Cerebron, arch),
-        other => bail!("unknown engine {other:?}"),
-    };
     let mut run_cfg = RunConfig {
         dataset: args.get_or("dataset", "synthcifar10"),
+        models: args.get("models").map(parse_list).unwrap_or_default(),
+        model_mix: match args.get("model-mix") {
+            Some(s) => parse_mix(s)?,
+            None => Vec::new(),
+        },
         images: args.get_usize("images", 16)?,
         batch_size: args.get_usize("batch", 4)?,
         workers,
@@ -110,6 +118,23 @@ fn cmd_run(args: &Args) -> Result<()> {
         crosscheck_every: args.get_usize("crosscheck-every", 0)?,
         hlo_path: args.get("hlo").map(|s| s.to_string()),
         ..Default::default()
+    };
+    let registry = build_registry(args, &run_cfg)?;
+    let sim_engine = |mut acc: Accelerator, models: ModelRegistry| {
+        acc.pipeline = pipeline;
+        acc.host_threads = host_threads;
+        Engine::from_accelerator_registry(models, acc)
+    };
+    let engine = match engine_name.as_str() {
+        "sim" => sim_engine(Accelerator::new(arch), registry),
+        "rigid" => sim_engine(Accelerator::rigid(arch), registry),
+        "materializing" => sim_engine(Accelerator::materializing(arch), registry),
+        "golden" => Engine::golden_registry(registry),
+        "sibrain" => Engine::baseline_registry(registry, BaselineKind::SiBrain, arch),
+        "scpu" => Engine::baseline_registry(registry, BaselineKind::Scpu, arch),
+        "stisnn" => Engine::baseline_registry(registry, BaselineKind::StiSnn, arch),
+        "cerebron" => Engine::baseline_registry(registry, BaselineKind::Cerebron, arch),
+        other => bail!("unknown engine {other:?}"),
     };
     // Dataset: prefer the python-exported eval split, fall back to the
     // Rust generator.
@@ -135,6 +160,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine_label, ds.num_classes, run_cfg.images
     );
     println!("{}", metrics.summary_line());
+    let registry = coord.pool.engine().registry();
+    if registry.len() > 1 {
+        for (id, mm) in metrics.per_model() {
+            println!("  {}: {}", registry.name(*id), mm.summary_line());
+        }
+    }
+    if let Some(line) = metrics.cache_line() {
+        println!("{line}");
+    }
     println!(
         "host: wall={:.2}s throughput={:.1} img/s p99={:.2}ms",
         wall,

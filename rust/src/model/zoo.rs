@@ -189,6 +189,10 @@ pub fn tiny(classes: usize, seed: u64) -> Model {
     b.finish("tiny", classes)
 }
 
+/// Every zoo model name [`by_name`] accepts, in lookup order (the
+/// multi-tenant registry and CLI error messages print this list).
+pub const NAMES: [&str; 5] = ["tiny", "resnet11", "resnet19", "vgg11", "qkfresnet11"];
+
 /// Look up a zoo model by name.
 pub fn by_name(name: &str, classes: usize, seed: u64) -> Option<Model> {
     match name {
@@ -248,6 +252,14 @@ mod tests {
         assert!(by_name("vgg11", 10, 1).is_some());
         assert!(by_name("resnet19", 10, 1).is_some());
         assert!(by_name("alexnet", 10, 1).is_none());
+    }
+
+    #[test]
+    fn names_list_matches_by_name() {
+        for name in NAMES {
+            assert!(by_name(name, 10, 1).is_some(), "{name} listed but not buildable");
+        }
+        assert_eq!(NAMES.len(), 5);
     }
 
     #[test]

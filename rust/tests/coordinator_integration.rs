@@ -3,12 +3,19 @@
 
 use neural::baselines::BaselineKind;
 use neural::config::{ArchConfig, RunConfig};
-use neural::coordinator::{Coordinator, Engine};
+use neural::coordinator::{Coordinator, Engine, ModelId, ModelRegistry};
 use neural::data::{Dataset, SynthCifar};
 use neural::model::zoo;
 
 fn ds(n: usize) -> Dataset {
     Dataset::from_synth(&SynthCifar::new(10, 77), n)
+}
+
+fn two_model_registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 2), 1);
+    reg.register(zoo::tiny(10, 31), 1);
+    reg
 }
 
 #[test]
@@ -56,6 +63,67 @@ fn accuracy_identical_across_engines() {
     }
     assert_eq!(accs[0], accs[1]);
     assert_eq!(accs[0], accs[2]);
+}
+
+#[test]
+fn multi_tenant_serving_end_to_end() {
+    // Two tenants in one pool: per-model metrics partition the run, each
+    // tenant's accuracy equals its dedicated single-model run, and the
+    // shared weight cache transposed each (model, conv) exactly once.
+    let data = ds(16);
+    let engine = Engine::sim_registry(two_model_registry(), ArchConfig::default());
+    let cfg = RunConfig { batch_size: 2, workers: 2, ..Default::default() };
+    let mut coord = Coordinator::new(engine, cfg);
+    let m = coord.serve_dataset(&data, 16).unwrap();
+    assert_eq!(m.completed, 16);
+    assert_eq!(m.per_model().len(), 2);
+    let per: Vec<_> = m.per_model().iter().collect();
+    assert_eq!(per[0].1.completed, 8, "1:1 mix");
+    assert_eq!(per[1].1.completed, 8);
+    // Each (model, conv) transposed once pool-wide: 2 tiny models x 2
+    // convs; everything else served from the shared cache.
+    assert_eq!(m.weight_cache.misses, 4);
+    assert_eq!(m.weight_cache.hits, 16 * 2 - 4);
+    // Tenant 0's accuracy must match a dedicated single-model serve over
+    // its own slice of the trace (images 0, 2, 4, ... — same encoder, same
+    // model): run the solo engine on the even images by hand.
+    let solo = Engine::sim(zoo::tiny(10, 2), ArchConfig::default());
+    let mut correct = 0u64;
+    for i in (0..16).step_by(2) {
+        let (img, label) = data.get(i);
+        let out = solo.infer(&neural::data::encode_threshold(&img, 128)).unwrap();
+        if out.predicted == label {
+            correct += 1;
+        }
+    }
+    let t0 = &m.per_model()[&ModelId(0)];
+    assert_eq!(t0.correct, correct, "tenant 0 == dedicated engine on its slice");
+}
+
+#[test]
+fn per_model_metrics_independent_of_workers_integration() {
+    // The multi-tenant determinism contract from outside the crate: mixed
+    // two-model trace, per-model energy/accuracy identical for 1 vs 4
+    // workers.
+    let data = ds(12);
+    let mut snaps = Vec::new();
+    for workers in [1usize, 4] {
+        let engine = Engine::sim_registry(two_model_registry(), ArchConfig::default());
+        let cfg = RunConfig { batch_size: 3, workers, ..Default::default() };
+        let mut coord = Coordinator::new(engine, cfg);
+        let m = coord.serve_dataset(&data, 12).unwrap();
+        let snap: Vec<(u64, u64, u64, u64)> = m
+            .per_model()
+            .values()
+            .map(|mm| {
+                let energy_bits = mm.energy_mj.mean().to_bits();
+                let device_bits = mm.device_ms.mean().to_bits();
+                (mm.completed, mm.correct, energy_bits, device_bits)
+            })
+            .collect();
+        snaps.push(snap);
+    }
+    assert_eq!(snaps[0], snaps[1], "per-model metrics must be bit-identical across pool sizes");
 }
 
 #[test]
