@@ -24,7 +24,10 @@
 //! The multi-tenant section warms a 2-model, 4-worker pool twice — once
 //! with the pool-shared weight cache, once with detached per-worker
 //! caches — and records the transpose counts; the shared cache must show
-//! ≥ (workers−1)/workers fewer transposes.
+//! ≥ (workers−1)/workers fewer transposes. The sched section drains a
+//! backlogged 4-model trace through each `--sched` policy with zero-byte
+//! payloads and records the per-request dispatch cost (wfair vs fifo is
+//! the fairness-overhead headline).
 
 use neural::arch::epa::{ConvParams, ConvScratch, Epa};
 use neural::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
@@ -35,7 +38,9 @@ use neural::arch::{Accelerator, ElasticFifo, SimScratch, WeightFlow, WmuBroadcas
 use neural::bench::artifacts;
 use neural::bench::BenchRunner;
 use neural::config::ArchConfig;
-use neural::coordinator::{Engine, EnginePool, InferRequest, ModelId, ModelRegistry};
+use neural::coordinator::{
+    Batcher, Engine, EnginePool, InferRequest, ModelId, ModelRegistry, SchedPolicy,
+};
 use neural::data::encode_threshold;
 use neural::model::exec;
 use neural::model::ir::TokenMaskMode;
@@ -283,6 +288,7 @@ fn main() {
                 model: ModelId(0),
                 spikes: encode_threshold(&img, 128),
                 label: Some(label),
+                arrival_tick: 0,
             }
         })
         .collect();
@@ -320,6 +326,7 @@ fn main() {
                 model: ModelId(i % 2),
                 spikes: encode_threshold(&img, 128),
                 label: Some(label),
+                arrival_tick: 0,
             }
         })
         .collect();
@@ -354,6 +361,54 @@ fn main() {
     if transpose_reduction + 1e-9 < acceptance {
         eprintln!("  !! shared cache reduction below the (workers-1)/workers bound");
     }
+
+    // Scheduler dispatch overhead: a 4-model trace pushed through the
+    // batcher's full push → pop_ready → flush cycle under each policy
+    // (zero-byte payloads, so the numbers isolate the scheduling decision
+    // cost, not simulation). The headline is the wfair-vs-fifo dispatch
+    // cost ratio — the price of fairness per scheduled request.
+    let sched_models = 4usize;
+    let sched_bs = 8usize;
+    let sched_n = 2048usize;
+    let sched_trace: Vec<InferRequest> = (0..sched_n)
+        .map(|i| InferRequest {
+            id: i as u64,
+            model: ModelId(i % sched_models),
+            spikes: Tensor::zeros(Shape::d3(1, 1, 1)),
+            label: None,
+            arrival_tick: 0,
+        })
+        .collect();
+    let sched_policies: Vec<(&str, SchedPolicy)> = vec![
+        ("fifo", SchedPolicy::FifoById),
+        ("wfair", SchedPolicy::WeightedFair { weights: vec![4, 2, 1, 1] }),
+        ("deadline", SchedPolicy::DeadlineAging { deadline: 16 }),
+    ];
+    let mut sched_ns_per_req = Vec::new();
+    for (name, policy) in &sched_policies {
+        let r = runner.run(&format!("sched drain {sched_n} reqs ({name})"), || {
+            let mut b = Batcher::with_policy(sched_bs, policy.clone());
+            let mut out = 0usize;
+            for req in sched_trace.iter().cloned() {
+                b.push(req);
+                while let Some(batch) = b.pop_ready() {
+                    out += batch.len();
+                }
+            }
+            while let Some(batch) = b.flush() {
+                out += batch.len();
+            }
+            assert_eq!(out, sched_n);
+            out
+        });
+        sched_ns_per_req.push(r.time.mean() * 1e9 / sched_n as f64);
+    }
+    let sched_wfair_vs_fifo = sched_ns_per_req[1] / sched_ns_per_req[0].max(1e-12);
+    println!(
+        "  -> sched dispatch ns/req: fifo {:.0}, wfair {:.0} ({sched_wfair_vs_fifo:.2}x), \
+         deadline {:.0}",
+        sched_ns_per_req[0], sched_ns_per_req[1], sched_ns_per_req[2]
+    );
 
     // record the trajectory point
     let doc = Json::obj(vec![
@@ -448,6 +503,18 @@ fn main() {
                 ("shared_warmup_ms", Json::Num(shared_warm.time.mean() * 1e3)),
                 ("private_warmup_ms", Json::Num(private_warm.time.mean() * 1e3)),
                 ("resident_bytes", Json::Num(shared_stats.resident_bytes as f64)),
+            ]),
+        ),
+        (
+            "sched",
+            Json::obj(vec![
+                ("models", Json::Num(sched_models as f64)),
+                ("batch", Json::Num(sched_bs as f64)),
+                ("requests", Json::Num(sched_n as f64)),
+                ("fifo_ns_per_req", Json::Num(sched_ns_per_req[0])),
+                ("wfair_ns_per_req", Json::Num(sched_ns_per_req[1])),
+                ("deadline_ns_per_req", Json::Num(sched_ns_per_req[2])),
+                ("wfair_vs_fifo", Json::Num(sched_wfair_vs_fifo)),
             ]),
         ),
     ]);

@@ -1073,6 +1073,120 @@ mod tests {
     }
 
     #[test]
+    fn shared_cache_threaded_multi_model_warmup_stress() {
+        // The pool-shaped stress: N worker threads x 2 models x several
+        // nodes, every thread hammering the same warmup lookups
+        // concurrently. Total transposes must equal the number of unique
+        // (model, node) pairs — first-touch is serialized under the write
+        // lock — every lookup must return the bit-exact transpose, and
+        // the run must terminate (no read/write-lock deadlock).
+        let models = 2usize;
+        let nodes = 3usize;
+        let (cout, taps) = (8usize, 27usize);
+        let weights: Vec<Vec<Vec<i8>>> = (0..models)
+            .map(|m| {
+                (0..nodes)
+                    .map(|n| {
+                        (0..cout * taps)
+                            .map(|i| ((i + 7 * m + 13 * n) % 17) as i8 - 8)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut want = vec![vec![vec![0i32; taps * cout]; nodes]; models];
+        for m in 0..models {
+            for n in 0..nodes {
+                transpose_weights(&weights[m][n], cout, taps, &mut want[m][n]);
+            }
+        }
+        let cache = SharedWeightCache::default();
+        let workers = 8usize;
+        let iters = 50usize;
+        std::thread::scope(|s| {
+            for t in 0..workers {
+                let cache = cache.clone();
+                let weights = &weights;
+                let want = &want;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        // Rotate the visit order per thread so lock
+                        // acquisition interleaves differently everywhere.
+                        for j in 0..models * nodes {
+                            let pair = (j + t + i) % (models * nodes);
+                            let (m, n) = (pair / nodes, pair % nodes);
+                            let wt = cache.transposed(m, n, &weights[m][n], cout, taps);
+                            assert_eq!(*wt, want[m][n], "model {m} node {n}");
+                        }
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        let unique = (models * nodes) as u64;
+        let lookups = (workers * iters * models * nodes) as u64;
+        assert_eq!(st.misses, unique, "one transpose per unique (model, node) pair");
+        assert_eq!(st.hits, lookups - unique, "every other lookup is a hit");
+        assert_eq!(st.entries, unique);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(
+            st.resident_bytes,
+            unique * (taps * cout * std::mem::size_of::<i32>()) as u64
+        );
+    }
+
+    #[test]
+    fn shared_cache_threaded_eviction_counters_stay_consistent() {
+        // Same hammering under a budget that holds only 2 of the 6
+        // uniform entries: entries thrash, but the counters must stay
+        // consistent at every quiescent point — bookkeeping identities
+        // that hold no matter how the threads interleaved.
+        let models = 2usize;
+        let nodes = 3usize;
+        let (cout, taps) = (4usize, 6usize);
+        let entry_bytes = (taps * cout * std::mem::size_of::<i32>()) as u64; // 96
+        let weights: Vec<Vec<Vec<i8>>> = (0..models)
+            .map(|m| {
+                (0..nodes)
+                    .map(|n| (0..cout * taps).map(|i| (i + m + 2 * n) as i8).collect())
+                    .collect()
+            })
+            .collect();
+        let cache = SharedWeightCache::with_budget(2 * entry_bytes);
+        let workers = 8usize;
+        let iters = 40usize;
+        std::thread::scope(|s| {
+            for t in 0..workers {
+                let cache = cache.clone();
+                let weights = &weights;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        for j in 0..models * nodes {
+                            let pair = (j + t + i) % (models * nodes);
+                            let (m, n) = (pair / nodes, pair % nodes);
+                            let wt = cache.transposed(m, n, &weights[m][n], cout, taps);
+                            assert_eq!(wt.len(), taps * cout);
+                        }
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        let lookups = (workers * iters * models * nodes) as u64;
+        assert_eq!(st.hits + st.misses, lookups, "every lookup hit or transposed");
+        assert!(st.misses >= (models * nodes) as u64, "each pair was cold at least once");
+        assert_eq!(
+            st.evictions,
+            st.misses - st.entries,
+            "every transpose is either resident or was evicted"
+        );
+        assert!(st.entries <= 2, "budget holds at most two entries");
+        assert!(st.entries >= 1);
+        assert_eq!(st.resident_bytes, st.entries * entry_bytes, "uniform-entry residency");
+        assert!(st.resident_bytes <= cache.budget_bytes());
+    }
+
+    #[test]
     fn fused_cached_matches_fused_transposing() {
         let sda = PipeSda::default();
         let (map, weights, geom) = random_case(17, 3, 8, 10, 10, 3, 1, 0.3);

@@ -134,6 +134,8 @@ USAGE:
                     [--engine sim|golden|rigid|materializing|sibrain|scpu|stisnn|cerebron]
                     [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
                     [--arch PATH.ini] [--classes N] [--seed N]
+                    [--sched fifo|wfair|deadline] [--sla-deadline TICKS]
+                    [--sla-weights W,W,..]
                     [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N|auto]
                     (--workers N sizes the engine pool: one simulator replica
                      per worker thread, batches fan out across them and all
@@ -142,7 +144,16 @@ USAGE:
                      request is assigned a model by the --model-mix weighted
                      round-robin (default 1:1), batches stay model-homogeneous,
                      weight broadcasts never cross models, and metrics are
-                     reported per model; `materializing` runs the event-vector
+                     reported per model; --sched picks the batch-release
+                     policy on the batcher's deterministic virtual clock:
+                     fifo releases each model's queue as it fills (the
+                     reference order), wfair dequeues by per-model weights
+                     (--sla-weights, default --model-mix), deadline ages
+                     queued requests and force-releases a partial batch once
+                     a queue head has waited --sla-deadline ticks (one tick
+                     per submitted request or drained batch, never wall
+                     time, so waits and percentiles replay exactly);
+                     `materializing` runs the event-vector
                      validation path; --pipeline, default on, overlaps each
                      layer's weight stream with earlier layers' compute through
                      the W-FIFO; --broadcast-wmu, default on, shares one weight

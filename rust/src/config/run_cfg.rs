@@ -30,6 +30,15 @@ pub struct RunConfig {
     /// WMU (default on; `false` charges every image its full stream — the
     /// unshared reference mode).
     pub broadcast_wmu: bool,
+    /// Batch-release scheduling policy: `fifo` (release-on-fill reference,
+    /// the default), `wfair` (weighted-fair dequeue) or `deadline`
+    /// (aging + forced partial release at the SLA deadline).
+    pub sched: String,
+    /// `deadline` policy: per-model SLA deadline in virtual-clock ticks.
+    pub sla_deadline: usize,
+    /// `wfair` policy: explicit per-model dequeue weights (empty = fall
+    /// back to the `--model-mix` traffic weights, then to 1).
+    pub sla_weights: Vec<usize>,
     /// Cross-check every Nth image against the PJRT golden model (0 = off).
     pub crosscheck_every: usize,
 }
@@ -47,6 +56,9 @@ impl Default for RunConfig {
             batch_size: 4,
             workers: 1,
             broadcast_wmu: true,
+            sched: "fifo".into(),
+            sla_deadline: 32,
+            sla_weights: Vec::new(),
             crosscheck_every: 0,
         }
     }
@@ -83,6 +95,13 @@ impl RunConfig {
             batch_size: ini.get_usize("run", "batch_size", d.batch_size)?,
             workers: ini.get_usize("run", "workers", d.workers)?,
             broadcast_wmu: ini.get_bool("run", "broadcast_wmu", d.broadcast_wmu)?,
+            sched: ini.get("run", "sched").unwrap_or(&d.sched).to_string(),
+            sla_deadline: ini.get_usize("run", "sla_deadline", d.sla_deadline)?,
+            sla_weights: ini
+                .get("run", "sla_weights")
+                .map(parse_mix)
+                .transpose()?
+                .unwrap_or_default(),
             crosscheck_every: ini.get_usize("run", "crosscheck_every", d.crosscheck_every)?,
         })
     }
@@ -119,6 +138,21 @@ mod tests {
         assert!(RunConfig::default().broadcast_wmu, "sharing is the default");
         assert!(c.models.is_empty(), "single-model mode is the default");
         assert!(c.model_mix.is_empty());
+        assert_eq!(c.sched, "fifo", "the reference policy is the default");
+        assert_eq!(c.sla_deadline, 32);
+        assert!(c.sla_weights.is_empty());
+    }
+
+    #[test]
+    fn from_ini_scheduler_knobs() {
+        let ini =
+            Ini::parse("[run]\nsched = deadline\nsla_deadline = 8\nsla_weights = 3,1\n").unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.sched, "deadline");
+        assert_eq!(c.sla_deadline, 8);
+        assert_eq!(c.sla_weights, vec![3, 1]);
+        let bad = Ini::parse("[run]\nsla_weights = 3,heavy\n").unwrap();
+        assert!(RunConfig::from_ini(&bad).is_err());
     }
 
     #[test]

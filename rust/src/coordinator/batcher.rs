@@ -1,52 +1,171 @@
-//! Dynamic per-model batcher.
+//! Dynamic per-model batcher behind a pluggable scheduling policy.
 //!
 //! The accelerator streams weights per layer; consecutive images of the
 //! *same* model reuse the streamed weights when they run back-to-back
 //! (weight-stationary across a batch). The batcher therefore keeps one
-//! queue per [`ModelId`] and groups up to `batch_size` queued requests of
-//! one model into device batches — batches are always model-homogeneous,
-//! so each released batch can become one broadcast-WMU domain in the
-//! engine pool ([`crate::arch::WmuBroadcast`]): every node's weight tile
-//! is fetched from off-chip memory once per batch and fanned out to all of
-//! the batch's images, and weight broadcasts never cross models (two
-//! models' node ids would alias in the ledger, and physically there is no
-//! shared fetch to broadcast).
+//! queue per [`ModelId`] and groups queued requests of one model into
+//! model-homogeneous device batches — each released batch can become one
+//! broadcast-WMU domain in the engine pool
+//! ([`crate::arch::WmuBroadcast`]), and weight broadcasts never cross
+//! models.
+//!
+//! *Which* queue releases *when* is the [`SchedPolicy`]'s decision, timed
+//! by the deterministic [`VirtualClock`] (one tick per submitted request,
+//! one per drained batch — never wall time): [`Batcher::push`] enqueues
+//! and stamps the arrival tick, [`Batcher::pop_ready`] releases the next
+//! batch the policy considers due (call until `None` after every push),
+//! and [`Batcher::flush`] drains the end-of-stream remainder in policy
+//! order. `FifoById` reproduces the pre-scheduler batcher bit-exactly
+//! (pinned below against an inlined copy of the old drain loop);
+//! `WeightedFair` and `DeadlineAging` trade that order for fairness and
+//! an aging no-starvation guarantee. Queue waits, end-to-end tick
+//! latencies, depth highs and starvation counts are recorded per model in
+//! [`ModelSched`] at release time.
 
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferRequest;
-use std::collections::BTreeMap;
+use crate::coordinator::sched::{ModelSched, SchedPolicy, VirtualClock};
+use std::collections::{BTreeMap, VecDeque};
 
-/// Groups requests into model-homogeneous device batches.
+/// Groups requests into model-homogeneous device batches under a
+/// scheduling policy.
 #[derive(Debug)]
 pub struct Batcher {
     /// Maximum images per batch.
     pub batch_size: usize,
-    queues: BTreeMap<ModelId, Vec<InferRequest>>,
+    policy: SchedPolicy,
+    clock: VirtualClock,
+    queues: BTreeMap<ModelId, VecDeque<InferRequest>>,
+    /// Fill-order release tokens (`FifoById` only): one entry per full
+    /// batch a queue has accumulated, in the order the batches filled.
+    ready: VecDeque<ModelId>,
+    /// Batches dequeued per model — the `WeightedFair` deficit state and
+    /// the fairness counter the property tests read.
+    served: BTreeMap<ModelId, u64>,
+    sched: BTreeMap<ModelId, ModelSched>,
 }
 
 impl Batcher {
-    /// New batcher.
+    /// New batcher under the reference [`SchedPolicy::FifoById`] policy.
     pub fn new(batch_size: usize) -> Self {
-        Batcher { batch_size: batch_size.max(1), queues: BTreeMap::new() }
+        Batcher::with_policy(batch_size, SchedPolicy::FifoById)
     }
 
-    /// Queue one request onto its model's queue; returns that model's
-    /// batch when it fills.
-    pub fn push(&mut self, req: InferRequest) -> Option<Vec<InferRequest>> {
-        let q = self.queues.entry(req.model).or_default();
-        q.push(req);
-        if q.len() >= self.batch_size {
-            Some(std::mem::take(q))
-        } else {
-            None
+    /// New batcher under an explicit policy.
+    pub fn with_policy(batch_size: usize, policy: SchedPolicy) -> Self {
+        Batcher {
+            batch_size: batch_size.max(1),
+            policy,
+            clock: VirtualClock::new(),
+            queues: BTreeMap::new(),
+            ready: VecDeque::new(),
+            served: BTreeMap::new(),
+            sched: BTreeMap::new(),
         }
     }
 
-    /// Flush one partial batch (end of stream / timeout tick): drains the
-    /// lowest-id model with pending requests; call until `None` to drain
-    /// every model.
+    /// The active policy.
+    pub fn policy(&self) -> &SchedPolicy {
+        &self.policy
+    }
+
+    /// Current virtual time in ticks.
+    pub fn now(&self) -> u64 {
+        self.clock.now()
+    }
+
+    /// Queue one request onto its model's queue, stamping its arrival
+    /// tick (one clock tick per submission). Release is a separate
+    /// concern: call [`Batcher::pop_ready`] until `None` after each push.
+    pub fn push(&mut self, mut req: InferRequest) {
+        req.arrival_tick = self.clock.stamp_submit();
+        let model = req.model;
+        let depth = {
+            let q = self.queues.entry(model).or_default();
+            q.push_back(req);
+            q.len()
+        };
+        if self.policy == SchedPolicy::FifoById && depth % self.batch_size == 0 {
+            self.ready.push_back(model);
+        }
+        let s = self.sched.entry(model).or_default();
+        s.max_depth = s.max_depth.max(depth as u64);
+    }
+
+    /// Release the next batch the policy considers due at the current
+    /// virtual time, or `None` when nothing is due. Each release drains
+    /// one clock tick, which can age another queue past its deadline —
+    /// call in a loop until `None`.
+    pub fn pop_ready(&mut self) -> Option<Vec<InferRequest>> {
+        match &self.policy {
+            SchedPolicy::FifoById => {
+                // Full queues in fill order; a token whose queue was since
+                // drained below a full batch by `flush` is stale and
+                // skipped — fifo releases on fill only, never partials.
+                while let Some(m) = self.ready.pop_front() {
+                    if self.queues.get(&m).is_some_and(|q| q.len() >= self.batch_size) {
+                        return Some(self.release(m, self.batch_size, false));
+                    }
+                }
+                None
+            }
+            SchedPolicy::WeightedFair { .. } => {
+                let m = self.pick_weighted(self.batch_size)?;
+                Some(self.release(m, self.batch_size, false))
+            }
+            SchedPolicy::DeadlineAging { deadline } => {
+                let deadline = *deadline;
+                let now = self.clock.now();
+                // A queue whose head has waited past the deadline releases
+                // even when partial (oldest head first; arrival ticks are
+                // unique, so the pick is deterministic).
+                if let Some(m) = self
+                    .queues
+                    .iter()
+                    .filter(|(_, q)| q.front().is_some_and(|r| r.arrival_tick + deadline <= now))
+                    .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |r| r.arrival_tick))
+                    .map(|(m, _)| *m)
+                {
+                    let forced = self.queues.get(&m).is_some_and(|q| q.len() < self.batch_size);
+                    return Some(self.release(m, self.batch_size, forced));
+                }
+                // Otherwise full queues release by age priority.
+                let m = self
+                    .queues
+                    .iter()
+                    .filter(|(_, q)| q.len() >= self.batch_size)
+                    .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |r| r.arrival_tick))
+                    .map(|(m, _)| *m)?;
+                Some(self.release(m, self.batch_size, false))
+            }
+        }
+    }
+
+    /// Drain one end-of-stream batch in policy order (call until `None`
+    /// to empty every queue): fifo takes the lowest-id model's whole
+    /// queue (the pre-scheduler flush), wfair dequeues by deficit,
+    /// deadline by oldest head — the latter two capped at `batch_size`
+    /// per call.
     pub fn flush(&mut self) -> Option<Vec<InferRequest>> {
-        self.queues.values_mut().find(|q| !q.is_empty()).map(std::mem::take)
+        match &self.policy {
+            SchedPolicy::FifoById => {
+                let m = self.queues.iter().find(|(_, q)| !q.is_empty()).map(|(m, _)| *m)?;
+                Some(self.release(m, usize::MAX, false))
+            }
+            SchedPolicy::WeightedFair { .. } => {
+                let m = self.pick_weighted(1)?;
+                Some(self.release(m, self.batch_size, false))
+            }
+            SchedPolicy::DeadlineAging { .. } => {
+                let m = self
+                    .queues
+                    .iter()
+                    .filter(|(_, q)| !q.is_empty())
+                    .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |r| r.arrival_tick))
+                    .map(|(m, _)| *m)?;
+                Some(self.release(m, self.batch_size, false))
+            }
+        }
     }
 
     /// Currently queued count across all models.
@@ -57,6 +176,70 @@ impl Batcher {
     /// Models with at least one queued request.
     pub fn pending_models(&self) -> usize {
         self.queues.values().filter(|q| !q.is_empty()).count()
+    }
+
+    /// Batches dequeued so far for `model` (the fairness counter).
+    pub fn served_batches(&self, model: ModelId) -> u64 {
+        self.served.get(&model).copied().unwrap_or(0)
+    }
+
+    /// Per-model scheduling telemetry recorded so far.
+    pub fn sched_stats(&self) -> &BTreeMap<ModelId, ModelSched> {
+        &self.sched
+    }
+
+    /// The model minimizing the weighted-fair virtual finish time
+    /// `(served + 1) / weight` among queues holding at least `min_len`
+    /// requests (ties resolve to the lowest id via the strict compare
+    /// over the id-ordered map). Integer cross-multiplication — no float
+    /// ordering in a scheduling decision.
+    fn pick_weighted(&self, min_len: usize) -> Option<ModelId> {
+        let mut best: Option<(u128, u128, ModelId)> = None;
+        for (m, q) in &self.queues {
+            if q.len() < min_len.max(1) {
+                continue;
+            }
+            let w = self.policy.weight_of(*m) as u128;
+            let cost = (self.served.get(m).copied().unwrap_or(0) + 1) as u128;
+            let better = match best {
+                None => true,
+                Some((bc, bw, _)) => cost * bw < bc * w,
+            };
+            if better {
+                best = Some((cost, w, *m));
+            }
+        }
+        best.map(|(_, _, m)| m)
+    }
+
+    /// Drain up to `max_n` requests from the front of `model`'s queue,
+    /// record their waits against the current tick, and charge the
+    /// batch's drain tick.
+    fn release(&mut self, model: ModelId, max_n: usize, forced: bool) -> Vec<InferRequest> {
+        let deadline = match &self.policy {
+            SchedPolicy::DeadlineAging { deadline } => Some(*deadline),
+            _ => None,
+        };
+        let now = self.clock.now();
+        let q = self.queues.get_mut(&model).expect("release targets an existing queue");
+        let n = max_n.min(q.len());
+        let batch: Vec<InferRequest> = q.drain(..n).collect();
+        let completion = self.clock.stamp_drain();
+        let s = self.sched.entry(model).or_default();
+        s.batches += 1;
+        if forced {
+            s.forced += 1;
+        }
+        for r in &batch {
+            let wait = now.saturating_sub(r.arrival_tick);
+            s.queue_wait.add(wait);
+            s.e2e.add(completion - r.arrival_tick);
+            if deadline.is_some_and(|d| wait > d) {
+                s.starved += 1;
+            }
+        }
+        *self.served.entry(model).or_default() += 1;
+        batch
     }
 }
 
@@ -71,26 +254,57 @@ mod tests {
     }
 
     fn req_for(id: u64, model: ModelId) -> InferRequest {
-        InferRequest { id, model, spikes: Tensor::zeros(Shape::d3(1, 2, 2)), label: None }
+        InferRequest {
+            id,
+            model,
+            spikes: Tensor::zeros(Shape::d3(1, 2, 2)),
+            label: None,
+            arrival_tick: 0,
+        }
+    }
+
+    /// Push + drain-ready, the per-submit serving pattern.
+    fn push_pop(b: &mut Batcher, r: InferRequest, out: &mut Vec<Vec<InferRequest>>) {
+        b.push(r);
+        while let Some(batch) = b.pop_ready() {
+            out.push(batch);
+        }
     }
 
     #[test]
     fn releases_full_batches() {
         let mut b = Batcher::new(3);
-        assert!(b.push(req(0)).is_none());
-        assert!(b.push(req(1)).is_none());
-        let batch = b.push(req(2)).expect("third request completes the batch");
-        assert_eq!(batch.len(), 3);
+        let mut out = Vec::new();
+        for id in 0..3 {
+            push_pop(&mut b, req(id), &mut out);
+        }
+        assert_eq!(out.len(), 1, "third request completes the batch");
+        assert_eq!(out[0].len(), 3);
         assert_eq!(b.pending(), 0);
+        assert_eq!(b.served_batches(ModelId(0)), 1);
     }
 
     #[test]
     fn flush_returns_partial() {
         let mut b = Batcher::new(4);
         b.push(req(0));
+        assert!(b.pop_ready().is_none(), "partial queue is not due");
         let batch = b.flush().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn arrival_ticks_stamp_the_submission_order() {
+        let mut b = Batcher::new(8);
+        for id in 0..3 {
+            b.push(req(id));
+        }
+        assert_eq!(b.now(), 3, "one tick per submission");
+        let batch = b.flush().unwrap();
+        let ticks: Vec<u64> = batch.iter().map(|r| r.arrival_tick).collect();
+        assert_eq!(ticks, vec![1, 2, 3]);
+        assert_eq!(b.now(), 4, "the drain charged its own tick");
     }
 
     #[test]
@@ -98,14 +312,18 @@ mod tests {
         // Interleaved two-model traffic: each model's queue fills on its
         // own; a released batch never mixes models.
         let mut b = Batcher::new(2);
-        assert!(b.push(req_for(0, ModelId(0))).is_none());
-        assert!(b.push(req_for(1, ModelId(1))).is_none());
+        let mut out = Vec::new();
+        push_pop(&mut b, req_for(0, ModelId(0)), &mut out);
+        push_pop(&mut b, req_for(1, ModelId(1)), &mut out);
+        assert!(out.is_empty());
         assert_eq!(b.pending_models(), 2);
-        let m0 = b.push(req_for(2, ModelId(0))).expect("model 0 fills first");
-        assert!(m0.iter().all(|r| r.model == ModelId(0)));
-        assert_eq!(m0.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
-        let m1 = b.push(req_for(3, ModelId(1))).expect("model 1 fills second");
-        assert!(m1.iter().all(|r| r.model == ModelId(1)));
+        push_pop(&mut b, req_for(2, ModelId(0)), &mut out);
+        assert_eq!(out.len(), 1, "model 0 fills first");
+        assert!(out[0].iter().all(|r| r.model == ModelId(0)));
+        assert_eq!(out[0].iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        push_pop(&mut b, req_for(3, ModelId(1)), &mut out);
+        assert_eq!(out.len(), 2, "model 1 fills second");
+        assert!(out[1].iter().all(|r| r.model == ModelId(1)));
         assert_eq!(b.pending(), 0);
     }
 
@@ -122,30 +340,122 @@ mod tests {
         assert!(b.flush().is_none());
     }
 
+    /// The pre-scheduler batcher, inlined verbatim as the reference the
+    /// `FifoById` policy is pinned against: push released a model's whole
+    /// queue the moment it reached `batch_size`; flush drained the
+    /// lowest-id non-empty queue.
+    struct OldBatcher {
+        batch_size: usize,
+        queues: BTreeMap<ModelId, Vec<u64>>,
+    }
+
+    impl OldBatcher {
+        fn push(&mut self, id: u64, model: ModelId) -> Option<Vec<u64>> {
+            let q = self.queues.entry(model).or_default();
+            q.push(id);
+            if q.len() >= self.batch_size {
+                Some(std::mem::take(q))
+            } else {
+                None
+            }
+        }
+
+        fn flush(&mut self) -> Option<Vec<u64>> {
+            self.queues.values_mut().find(|q| !q.is_empty()).map(std::mem::take)
+        }
+    }
+
     #[test]
-    fn prop_no_request_lost_or_duplicated() {
-        // Batching invariant over mixed-model traffic: every submitted id
-        // comes back exactly once, batches are model-homogeneous, and each
-        // model's ids arrive in submission order.
+    fn fifo_is_bit_identical_to_the_pre_scheduler_drain_order() {
+        // A recorded 3-model trace (deterministic weighted pattern with a
+        // burst) through both drain loops: the full release sequence —
+        // batch boundaries, batch order AND ids within each batch — must
+        // match the old batcher exactly, for several batch sizes.
+        let trace: Vec<ModelId> = (0..97u64)
+            .map(|i| match i % 7 {
+                0 | 3 | 5 => ModelId(0),
+                1 | 4 => ModelId(1),
+                _ => ModelId(2),
+            })
+            .collect();
+        for bs in [1usize, 2, 3, 5, 8] {
+            let mut old = OldBatcher { batch_size: bs, queues: BTreeMap::new() };
+            let mut old_out: Vec<Vec<u64>> = Vec::new();
+            for (i, m) in trace.iter().enumerate() {
+                if let Some(batch) = old.push(i as u64, *m) {
+                    old_out.push(batch);
+                }
+            }
+            while let Some(batch) = old.flush() {
+                old_out.push(batch);
+            }
+            let mut new = Batcher::new(bs);
+            let mut new_out = Vec::new();
+            for (i, m) in trace.iter().enumerate() {
+                push_pop(&mut new, req_for(i as u64, *m), &mut new_out);
+            }
+            while let Some(batch) = new.flush() {
+                new_out.push(batch);
+            }
+            let new_ids: Vec<Vec<u64>> =
+                new_out.iter().map(|b| b.iter().map(|r| r.id).collect()).collect();
+            assert_eq!(new_ids, old_out, "batch_size {bs}");
+        }
+    }
+
+    #[test]
+    fn fifo_token_staled_by_flush_never_releases_a_partial() {
+        // A flush between fill and pop leaves a stale ready token; a
+        // later push must not let that token release a sub-batch queue —
+        // fifo releases on fill only, exactly like the old batcher.
+        let mut b = Batcher::new(2);
+        b.push(req(0));
+        b.push(req(1)); // queue full: token queued, not yet popped
+        assert_eq!(b.flush().unwrap().len(), 2, "flush drains the full queue first");
+        b.push(req(2));
+        assert!(b.pop_ready().is_none(), "stale token must not release a partial");
+        assert_eq!(b.pending(), 1);
+        b.push(req(3));
+        let batch = b.pop_ready().expect("refilled queue releases on fill");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated_under_any_policy() {
+        // Batching invariant over mixed-model traffic, for every policy:
+        // every submitted id comes back exactly once, batches are
+        // model-homogeneous and never exceed the batch size (fifo's
+        // whole-queue flush can only see sub-batch queues in this loop),
+        // and each model's ids arrive in submission order.
         forall("batcher conservation", 60, |g| {
             let bs = g.size(1, 8);
             let n = g.size(0, 50);
             let models = g.size(1, 3);
-            let mut b = Batcher::new(bs);
+            let policy = match g.size(0, 2) {
+                0 => SchedPolicy::FifoById,
+                1 => SchedPolicy::WeightedFair {
+                    weights: (0..models).map(|_| g.size(1, 4) as u64).collect(),
+                },
+                _ => SchedPolicy::DeadlineAging { deadline: g.size(1, 12) as u64 },
+            };
+            let mut b = Batcher::with_policy(bs, policy);
             let mut seen = Vec::new();
             let drain = |batch: Vec<InferRequest>, seen: &mut Vec<u64>| {
                 assert!(batch.iter().all(|r| r.model == batch[0].model), "homogeneous");
+                assert!(batch.len() <= bs, "batch within size");
                 seen.extend(batch.into_iter().map(|r| r.id));
             };
             for id in 0..n as u64 {
                 let m = ModelId(id as usize % models);
-                if let Some(batch) = b.push(req_for(id, m)) {
+                b.push(req_for(id, m));
+                while let Some(batch) = b.pop_ready() {
                     drain(batch, &mut seen);
                 }
             }
             while let Some(batch) = b.flush() {
                 drain(batch, &mut seen);
             }
+            assert_eq!(b.pending(), 0, "flush drains everything");
             let mut got = seen.clone();
             got.sort_unstable();
             let want: Vec<u64> = (0..n as u64).collect();
@@ -157,5 +467,148 @@ mod tests {
                 assert!(per.windows(2).all(|w| w[0] < w[1]), "model {m} order: {per:?}");
             }
         });
+    }
+
+    #[test]
+    fn prop_sched_wfair_converges_to_weight_ratios() {
+        // Under backlog (every queue pre-loaded in proportion to its
+        // weight, releases deferred to the dequeue loop), the per-model
+        // dequeue counts converge to the weight ratios within ±1 batch at
+        // every full weight cycle (`sum(weights)` dequeues), and between
+        // boundaries never leave the one-cycle envelope — for any
+        // 2–4-model mix.
+        forall("wfair convergence", 40, |g| {
+            let models = g.size(2, 4);
+            let bs = g.size(1, 4);
+            let weights: Vec<u64> = (0..models).map(|_| g.size(1, 5) as u64).collect();
+            let rounds = g.size(4, 10) as u64;
+            let mut b =
+                Batcher::with_policy(bs, SchedPolicy::WeightedFair { weights: weights.clone() });
+            // Pre-load `rounds * weight` full batches per model, no pops
+            // between: every model keeps releasable work through the whole
+            // drain, so the scheduler is never availability-constrained.
+            let mut id = 0u64;
+            for (m, &w) in weights.iter().enumerate() {
+                for _ in 0..rounds * w * bs as u64 {
+                    b.push(req_for(id, ModelId(m)));
+                    id += 1;
+                }
+            }
+            let total_weight: u64 = weights.iter().sum();
+            let mut dequeues = 0u64;
+            while let Some(batch) = b.pop_ready() {
+                assert_eq!(batch.len(), bs, "backlogged dequeues are full batches");
+                dequeues += 1;
+                let cycles = dequeues / total_weight;
+                for (m, &w) in weights.iter().enumerate() {
+                    let got = b.served_batches(ModelId(m));
+                    if dequeues % total_weight == 0 {
+                        assert!(
+                            got.abs_diff(cycles * w) <= 1,
+                            "model {m}: served {got} vs {cycles} cycles x weight {w} \
+                             (weights {weights:?})"
+                        );
+                    }
+                    // One-cycle envelope everywhere in between.
+                    assert!(
+                        got + 1 >= cycles * w && got <= (cycles + 1) * w + 1,
+                        "model {m}: served {got} outside cycle envelope [{}, {}] after \
+                         {dequeues} dequeues (weights {weights:?})",
+                        cycles * w,
+                        (cycles + 1) * w
+                    );
+                }
+            }
+            assert_eq!(dequeues, rounds * total_weight, "all full batches dequeued");
+            for (m, &w) in weights.iter().enumerate() {
+                assert_eq!(b.served_batches(ModelId(m)), rounds * w, "exact final shares");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sched_deadline_never_starves_past_deadline_plus_flush() {
+        // The no-starvation invariant: under any mixed trace served with
+        // the per-submit pop loop, no request's recorded queue wait
+        // exceeds `deadline + models` ticks — the deadline plus one flush
+        // interval (a release burst serializes at most one drain tick per
+        // model before the aged head gets its turn).
+        forall("deadline no-starvation", 40, |g| {
+            let models = g.size(1, 4);
+            let bs = g.size(2, 6);
+            let deadline = g.size(1, 10) as u64;
+            let n = g.size(1, 80) as u64;
+            let mut b = Batcher::with_policy(bs, SchedPolicy::DeadlineAging { deadline });
+            for id in 0..n {
+                // Skewed pick keeps some models cold (the starvation bait).
+                let m = (g.size(0, models * models - 1) as f64).sqrt() as usize;
+                b.push(req_for(id, ModelId(m.min(models - 1))));
+                while b.pop_ready().is_some() {}
+            }
+            while b.flush().is_some() {}
+            let bound = deadline + models as u64;
+            for (m, s) in b.sched_stats() {
+                assert!(
+                    s.queue_wait.max() <= bound,
+                    "model {m}: wait {} > deadline {deadline} + flush {models}",
+                    s.queue_wait.max()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn deadline_forces_partial_release_for_a_cold_model() {
+        // One cold request stuck behind a hot model: at deadline 4 the
+        // cold singleton must be force-released as a partial batch even
+        // though its queue never fills.
+        let mut b = Batcher::with_policy(4, SchedPolicy::DeadlineAging { deadline: 4 });
+        let mut out = Vec::new();
+        push_pop(&mut b, req_for(0, ModelId(1)), &mut out); // cold, arrival tick 1
+        for id in 1..6 {
+            push_pop(&mut b, req_for(id, ModelId(0)), &mut out);
+        }
+        let cold: Vec<&Vec<InferRequest>> =
+            out.iter().filter(|b| b[0].model == ModelId(1)).collect();
+        assert_eq!(cold.len(), 1, "cold model released in-stream: {out:?}");
+        assert_eq!(cold[0].len(), 1, "a forced release is partial");
+        let s = &b.sched_stats()[&ModelId(1)];
+        assert_eq!(s.forced, 1);
+        assert!(s.queue_wait.max() >= 4, "it waited to its deadline");
+        // The hot model's full batch released on fill as usual.
+        assert!(out.iter().any(|b| b[0].model == ModelId(0) && b.len() == 4));
+    }
+
+    #[test]
+    fn wfair_flush_order_follows_weights_not_ids() {
+        // Three partial queues at end of stream, weights 1:1:4 — the
+        // heavy model 2 drains first even though fifo would drain model 0.
+        let mut b = Batcher::with_policy(8, SchedPolicy::WeightedFair { weights: vec![1, 1, 4] });
+        for (id, m) in [(0u64, 0usize), (1, 1), (2, 2)] {
+            b.push(req_for(id, ModelId(m)));
+        }
+        let first = b.flush().unwrap();
+        assert_eq!(first[0].model, ModelId(2), "heaviest weight drains first");
+        let second = b.flush().unwrap();
+        assert_eq!(second[0].model, ModelId(0), "then deficit ties break by id");
+        assert_eq!(b.flush().unwrap()[0].model, ModelId(1));
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn sched_stats_record_waits_depths_and_batches() {
+        let mut b = Batcher::new(2);
+        let mut out = Vec::new();
+        push_pop(&mut b, req_for(0, ModelId(0)), &mut out); // arrival 1
+        push_pop(&mut b, req_for(1, ModelId(0)), &mut out); // arrival 2, releases at 2
+        assert_eq!(out.len(), 1);
+        let s = &b.sched_stats()[&ModelId(0)];
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.max_depth, 2);
+        assert_eq!(s.queue_wait.max(), 1, "first request waited one submit tick");
+        assert_eq!(s.queue_wait.percentile(1.0), 0, "second released on arrival");
+        assert_eq!(s.e2e.max(), 2, "e2e adds the drain tick");
+        assert_eq!(s.starved, 0);
+        assert_eq!(s.forced, 0);
     }
 }

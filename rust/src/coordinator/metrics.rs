@@ -3,6 +3,7 @@
 use crate::arch::WeightCacheStats;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferResponse;
+use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
 use crate::util::{stats::percentile, Summary};
 use std::collections::BTreeMap;
 
@@ -23,6 +24,15 @@ pub struct ModelMetrics {
     pub spikes: Summary,
     /// Total SOPs of this model's requests.
     pub total_sops: u64,
+    /// Queue-wait distribution in virtual-clock ticks (arrival → release
+    /// from the model's batcher queue).
+    pub queue_wait_ticks: TickStats,
+    /// End-to-end tick distribution (arrival → batch drain completion).
+    pub e2e_ticks: TickStats,
+    /// Largest batcher queue depth this model reached.
+    pub max_queue_depth: u64,
+    /// Requests released only after waiting past the SLA deadline.
+    pub starved: u64,
 }
 
 impl ModelMetrics {
@@ -42,14 +52,25 @@ impl ModelMetrics {
         } else {
             format!("{:.2}%", self.accuracy() * 100.0)
         };
+        let sched = if self.queue_wait_ticks.count() == 0 {
+            String::new()
+        } else {
+            format!(
+                " wait p99={}t depth={}{}",
+                self.queue_wait_ticks.p99(),
+                self.max_queue_depth,
+                if self.starved > 0 { format!(" starved={}", self.starved) } else { String::new() }
+            )
+        };
         format!(
-            "n={} acc={} device={:.3}ms energy={:.3}mJ spikes={:.0} sops={}",
+            "n={} acc={} device={:.3}ms energy={:.3}mJ spikes={:.0} sops={}{}",
             self.completed,
             acc,
             self.device_ms.mean(),
             self.energy_mj.mean(),
             self.spikes.mean(),
-            self.total_sops
+            self.total_sops,
+            sched
         )
     }
 }
@@ -84,6 +105,22 @@ pub struct Metrics {
     /// (zeroed until the coordinator surfaces them; golden/baseline
     /// engines have no cache and stay zero).
     pub weight_cache: WeightCacheStats,
+    /// Scheduling policy that drove the run (`""` until the coordinator
+    /// absorbs the batcher's telemetry).
+    pub sched_policy: String,
+    /// Global queue-wait distribution in virtual-clock ticks.
+    pub queue_wait_ticks: TickStats,
+    /// Global end-to-end tick distribution.
+    pub e2e_ticks: TickStats,
+    /// Largest batcher queue depth any model reached.
+    pub max_queue_depth: u64,
+    /// Requests released only after waiting past the SLA deadline.
+    pub starved: u64,
+    /// Deadline-forced partial batch releases.
+    pub forced_releases: u64,
+    /// Request ids in completion-record order (deterministic for any
+    /// worker count: dispatch preserves the scheduler's release order).
+    pub response_order: Vec<u64>,
     per_model: BTreeMap<ModelId, ModelMetrics>,
     host_samples: Vec<f64>,
 }
@@ -121,6 +158,7 @@ impl Metrics {
         self.spikes.add(r.total_spikes as f64);
         self.total_sops += r.sops;
         self.host_samples.push(r.host_ms);
+        self.response_order.push(r.id);
         let m = self.per_model.entry(r.model).or_default();
         m.completed += 1;
         if let Some(ok) = correct {
@@ -184,6 +222,46 @@ impl Metrics {
             self.mean_batch(),
             self.max_batch
         )
+    }
+
+    /// Absorb the batcher's per-model scheduling telemetry (queue waits,
+    /// end-to-end ticks, depth highs, starvation counters) into the
+    /// global and per-model slices. Call once, at the end of a run.
+    pub fn absorb_sched(&mut self, policy: &SchedPolicy, stats: &BTreeMap<ModelId, ModelSched>) {
+        self.sched_policy = policy.name().to_string();
+        for (m, s) in stats {
+            let mm = self.per_model.entry(*m).or_default();
+            mm.queue_wait_ticks.merge(&s.queue_wait);
+            mm.e2e_ticks.merge(&s.e2e);
+            mm.max_queue_depth = mm.max_queue_depth.max(s.max_depth);
+            mm.starved += s.starved;
+            self.queue_wait_ticks.merge(&s.queue_wait);
+            self.e2e_ticks.merge(&s.e2e);
+            self.max_queue_depth = self.max_queue_depth.max(s.max_depth);
+            self.starved += s.starved;
+            self.forced_releases += s.forced;
+        }
+    }
+
+    /// One-line scheduler report (None until sched telemetry is
+    /// absorbed). Latencies are virtual-clock ticks — scheduling order
+    /// words, not milliseconds (the wall/device view stays in
+    /// `summary_line`).
+    pub fn sched_line(&self) -> Option<String> {
+        if self.queue_wait_ticks.count() == 0 {
+            return None;
+        }
+        Some(format!(
+            "sched: policy={} wait p50/p95/p99={}/{}/{} ticks e2e p99={} depth max={} starved={} forced={}",
+            if self.sched_policy.is_empty() { "?" } else { self.sched_policy.as_str() },
+            self.queue_wait_ticks.p50(),
+            self.queue_wait_ticks.p95(),
+            self.queue_wait_ticks.p99(),
+            self.e2e_ticks.p99(),
+            self.max_queue_depth,
+            self.starved,
+            self.forced_releases
+        ))
     }
 
     /// One-line weight-cache report (None when no cache saw traffic).
@@ -307,6 +385,54 @@ mod tests {
         let line = m0.summary_line();
         assert!(line.contains("acc=100.00%"), "{line}");
         assert!(ModelMetrics::default().summary_line().contains("acc=n/a"));
+    }
+
+    #[test]
+    fn absorb_sched_partitions_into_model_slices() {
+        let mut m = Metrics::default();
+        m.record(&resp_for(0, ModelId(0), 1, Some(1), 1.0));
+        m.record(&resp_for(1, ModelId(1), 1, Some(1), 1.0));
+        assert!(m.sched_line().is_none(), "no telemetry before absorb");
+        let mut stats: BTreeMap<ModelId, ModelSched> = BTreeMap::new();
+        let s0 = stats.entry(ModelId(0)).or_default();
+        s0.queue_wait.add(2);
+        s0.queue_wait.add(4);
+        s0.e2e.add(5);
+        s0.max_depth = 3;
+        let s1 = stats.entry(ModelId(1)).or_default();
+        s1.queue_wait.add(10);
+        s1.e2e.add(11);
+        s1.max_depth = 1;
+        s1.starved = 1;
+        s1.forced = 2;
+        m.absorb_sched(&SchedPolicy::DeadlineAging { deadline: 8 }, &stats);
+        assert_eq!(m.sched_policy, "deadline");
+        assert_eq!(m.queue_wait_ticks.count(), 3, "global merges every slice");
+        assert_eq!(m.queue_wait_ticks.max(), 10);
+        assert_eq!(m.max_queue_depth, 3);
+        assert_eq!(m.starved, 1);
+        assert_eq!(m.forced_releases, 2);
+        assert_eq!(m.per_model()[&ModelId(0)].queue_wait_ticks.count(), 2);
+        assert_eq!(m.per_model()[&ModelId(1)].starved, 1);
+        let line = m.sched_line().unwrap();
+        assert!(line.contains("policy=deadline"), "{line}");
+        assert!(line.contains("starved=1"), "{line}");
+        let per = m.per_model()[&ModelId(1)].summary_line();
+        assert!(per.contains("wait p99=10t"), "{per}");
+        assert!(per.contains("starved=1"), "{per}");
+        assert!(
+            !ModelMetrics::default().summary_line().contains("wait"),
+            "no sched clause before telemetry"
+        );
+    }
+
+    #[test]
+    fn response_order_records_completion_sequence() {
+        let mut m = Metrics::default();
+        for id in [3u64, 0, 7] {
+            m.record(&resp(id, 0, None, 1.0));
+        }
+        assert_eq!(m.response_order, vec![3, 0, 7]);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! multi-tenant [`ModelRegistry`] naming the models one pool serves, a
 //! request queue with backpressure, a per-model batcher that amortizes
 //! weight streaming across images of the same model (batches are always
-//! model-homogeneous), an engine pool that fans each batch out across
+//! model-homogeneous) behind a pluggable SLA-aware [`SchedPolicy`] timed
+//! by a deterministic [`VirtualClock`], an engine pool that fans each batch out across
 //! cores (scoped `std::thread` — no tokio in the offline vendor set — with
 //! one engine replica per worker, a shared cross-worker transposed-weight
 //! cache, and a deterministic in-order result merge), per-model
@@ -18,6 +19,7 @@ pub mod metrics;
 pub mod pool;
 pub mod registry;
 pub mod request;
+pub mod sched;
 pub mod server;
 
 pub use batcher::Batcher;
@@ -26,4 +28,5 @@ pub use metrics::{Metrics, ModelMetrics};
 pub use pool::{BatchResult, EnginePool};
 pub use registry::{ModelEntry, ModelId, ModelRegistry};
 pub use request::{InferRequest, InferResponse};
+pub use sched::{ModelSched, SchedPolicy, TickStats, VirtualClock};
 pub use server::Coordinator;

@@ -131,6 +131,36 @@ impl EnginePool {
         self.run_batch_grouped(batch, &groups)
     }
 
+    /// Dispatch several independently-released batcher batches in one
+    /// combined fan-out, preserving the scheduler's release order: batch
+    /// `k`'s requests precede batch `k+1`'s in the flattened submission
+    /// order (and therefore in the merged results), and each batch stays
+    /// its own broadcast-WMU domain when `broadcast` is on (`false`
+    /// degrades every request to a singleton domain — the unshared
+    /// reference mode). Returns the flattened requests alongside their
+    /// results so the caller can zip request context back onto outcomes.
+    pub fn run_batches(
+        &self,
+        batches: Vec<Vec<InferRequest>>,
+        broadcast: bool,
+    ) -> (Vec<InferRequest>, Vec<BatchResult>) {
+        let mut all: Vec<InferRequest> = Vec::with_capacity(batches.iter().map(Vec::len).sum());
+        let mut groups: Vec<usize> = Vec::new();
+        for batch in batches {
+            if batch.is_empty() {
+                continue;
+            }
+            if broadcast {
+                groups.push(batch.len());
+            } else {
+                groups.resize(groups.len() + batch.len(), 1);
+            }
+            all.extend(batch);
+        }
+        let results = self.run_batch_grouped(&all, &groups);
+        (all, results)
+    }
+
     /// [`EnginePool::run_batch`] over several device batches in one
     /// dispatch: `groups` are consecutive batch lengths summing to
     /// `batch.len()`, and each group gets its own [`WmuBroadcast`] — the
@@ -224,6 +254,7 @@ mod tests {
                     model: ModelId(0),
                     spikes: encode_threshold(&img, 128),
                     label: Some(label),
+                    arrival_tick: 0,
                 }
             })
             .collect()
@@ -249,6 +280,7 @@ mod tests {
                     model: ModelId(i % 2),
                     spikes: encode_threshold(&img, 128),
                     label: Some(label),
+                    arrival_tick: 0,
                 }
             })
             .collect()
@@ -368,6 +400,49 @@ mod tests {
     }
 
     #[test]
+    fn run_batches_preserves_release_order_and_domains() {
+        // The scheduler-facing dispatch entry point: released batches fan
+        // out in release order (flattened requests = batches in order),
+        // each batch its own broadcast domain; broadcast off degrades to
+        // singleton domains — equal to run_batch_grouped on the same
+        // layout either way.
+        let reqs = batch(5);
+        let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        let released = vec![
+            vec![reqs[0].clone(), reqs[1].clone(), reqs[2].clone()],
+            Vec::new(), // an empty release must be skipped, not a 0-group
+            vec![reqs[3].clone()],
+            vec![reqs[4].clone()],
+        ];
+        let (all, results) = pool.run_batches(released.clone(), true);
+        assert_eq!(all.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        let got: Vec<Outcome> = results.into_iter().map(|r| r.outcome.unwrap()).collect();
+        let want: Vec<Outcome> = pool
+            .run_batch_grouped(&reqs, &[3, 1, 1])
+            .into_iter()
+            .map(|r| r.outcome.unwrap())
+            .collect();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.logits, w.logits);
+            assert_eq!(g.energy_mj, w.energy_mj);
+            assert_eq!(g.weight_dram_bytes, w.weight_dram_bytes);
+        }
+        // The 3-batch shares one stream; singletons pay in full.
+        let full = pool.engine().infer(&reqs[3].spikes).unwrap().weight_dram_bytes;
+        assert_eq!(got[3].weight_dram_bytes, full);
+        assert!(got[0].weight_dram_bytes < full / 2);
+        // broadcast off: every request is its own domain.
+        let (_, unshared) = pool.run_batches(released, false);
+        for r in unshared {
+            assert_eq!(r.outcome.unwrap().weight_dram_bytes, full);
+        }
+        // Empty dispatch is fine.
+        let (none, empty) = pool.run_batches(Vec::new(), true);
+        assert!(none.is_empty());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
     fn mixed_model_grouped_dispatch_heterogeneous_sizes() {
         // Two models interleaved into one dispatch as four model-
         // homogeneous groups of different sizes: every request must come
@@ -387,6 +462,7 @@ mod tests {
                         model: ModelId(m),
                         spikes: encode_threshold(&img, 128),
                         label: Some(label),
+                        arrival_tick: 0,
                     }
                 })
                 .collect()
@@ -497,6 +573,7 @@ mod tests {
                 model: ModelId(m),
                 spikes: encode_threshold(&img, 128),
                 label: Some(label),
+                arrival_tick: 0,
             }
         };
         let spikes0 = ds_spikes(&ds, 0);

@@ -149,6 +149,14 @@ impl ModelRegistry {
         &self.entries
     }
 
+    /// Traffic-mix weights in id order — the `WeightedFair` scheduler's
+    /// default dequeue weights when no explicit `--sla-weights` is given
+    /// (a model expected to carry twice the traffic gets twice the
+    /// dequeue share).
+    pub fn mix_weights(&self) -> Vec<usize> {
+        self.entries.iter().map(|e| e.weight).collect()
+    }
+
     /// Deterministic traffic assignment: which model serves request `i` of
     /// a mixed trace. Weighted round-robin over the registration order —
     /// depends only on `(i, weights)`, never on workers or batch size, so
@@ -195,6 +203,13 @@ mod tests {
             _ => panic!(),
         };
         assert_ne!(wa, wb);
+    }
+
+    #[test]
+    fn mix_weights_surface_in_id_order() {
+        let reg = ModelRegistry::from_zoo(&["tiny", "tiny", "tiny"], 10, 1, &[2, 1, 5]).unwrap();
+        assert_eq!(reg.mix_weights(), vec![2, 1, 5]);
+        assert_eq!(ModelRegistry::single(zoo::tiny(10, 1)).mix_weights(), vec![1]);
     }
 
     #[test]

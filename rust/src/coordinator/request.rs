@@ -16,6 +16,10 @@ pub struct InferRequest {
     pub spikes: SpikeMap,
     /// Ground-truth label when known (accuracy accounting).
     pub label: Option<usize>,
+    /// Arrival tick stamped by the batcher's deterministic
+    /// [`crate::coordinator::sched::VirtualClock`] at submission (0 until
+    /// then) — the timebase for queue-wait and SLA-deadline accounting.
+    pub arrival_tick: u64,
 }
 
 /// One inference response.
@@ -79,9 +83,11 @@ mod tests {
             model: ModelId(2),
             spikes: Tensor::zeros(Shape::d3(3, 32, 32)),
             label: Some(1),
+            arrival_tick: 0,
         };
         assert_eq!(req.spikes.numel(), 3 * 32 * 32);
         assert_eq!(req.model, ModelId(2));
         assert_eq!(req.model.to_string(), "m2");
+        assert_eq!(req.arrival_tick, 0, "unsubmitted requests carry tick 0");
     }
 }

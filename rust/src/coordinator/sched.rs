@@ -1,0 +1,331 @@
+//! SLA-aware scheduling for the coordinator: a deterministic virtual
+//! clock, the pluggable batch-release policies, and the per-model
+//! scheduling telemetry.
+//!
+//! NEURAL's elasticity argument is that the array stays busy under
+//! irregular, sparse demand; the serving-side analogue is the *queue*: a
+//! hot model must not starve a cold one just because its queue fills
+//! first. The batcher therefore delegates every release decision to a
+//! [`SchedPolicy`]:
+//!
+//! * [`SchedPolicy::FifoById`] — the reference policy: a model's queue is
+//!   released the moment it fills, in fill order; end-of-stream flush
+//!   drains models in id order. Bit-identical to the pre-scheduler
+//!   batcher (regression-pinned against an inlined copy of the old drain
+//!   loop in `batcher.rs`).
+//! * [`SchedPolicy::WeightedFair`] — smooth weighted round-robin: among
+//!   releasable queues, pick the model minimizing the virtual finish time
+//!   `(served + 1) / weight`. Under backlog, per-model dequeue counts
+//!   converge to the weight ratios within one batch (property-tested).
+//!   Weights come from `--sla-weights`, falling back to the registry's
+//!   `--model-mix` traffic weights, then to 1.
+//! * [`SchedPolicy::DeadlineAging`] — queued requests accrue priority
+//!   with age (oldest head first) and a per-model deadline in ticks
+//!   forces a *partial* batch release once a queue's head has waited
+//!   `deadline` ticks — the no-starvation policy.
+//!
+//! Time is the [`VirtualClock`]: one tick per submitted request, one tick
+//! per drained batch, never wall time — every scheduling decision (and
+//! every recorded wait) is a pure function of the trace and the policy,
+//! so tests replay it exactly and latency percentiles are bit-identical
+//! across worker counts.
+
+use crate::config::RunConfig;
+use crate::coordinator::registry::{ModelId, ModelRegistry};
+use anyhow::{bail, Result};
+
+/// Deterministic scheduling time: ticks advance per submitted request and
+/// per drained batch — never from a wall clock — so every scheduling
+/// decision is replayable. Tick 0 is "before the first submission".
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: u64,
+}
+
+impl VirtualClock {
+    /// A clock at tick 0.
+    pub fn new() -> Self {
+        VirtualClock::default()
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Advance one tick for a submitted request and return its arrival
+    /// tick (the post-advance time: a request released at its own
+    /// submission tick has waited 0 ticks).
+    pub fn stamp_submit(&mut self) -> u64 {
+        self.now += 1;
+        self.now
+    }
+
+    /// Advance one tick for a drained batch and return the completion
+    /// tick its requests share.
+    pub fn stamp_drain(&mut self) -> u64 {
+        self.now += 1;
+        self.now
+    }
+}
+
+/// Pluggable batch-release policy (see the module docs for semantics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Reference policy: release on fill, in fill order; flush by model
+    /// id. Reproduces the pre-scheduler batcher exactly.
+    FifoById,
+    /// Smooth weighted round-robin over per-model weights (index =
+    /// `ModelId.0`; missing or zero weights count as 1).
+    WeightedFair {
+        /// Per-model dequeue weights in id order.
+        weights: Vec<u64>,
+    },
+    /// Oldest-head-first with a deadline: a queue whose head has waited
+    /// `deadline` ticks is released even when partial.
+    DeadlineAging {
+        /// Per-model deadline in virtual-clock ticks (≥ 1).
+        deadline: u64,
+    },
+}
+
+impl SchedPolicy {
+    /// Policy name as spelled on the CLI (`--sched fifo|wfair|deadline`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::FifoById => "fifo",
+            SchedPolicy::WeightedFair { .. } => "wfair",
+            SchedPolicy::DeadlineAging { .. } => "deadline",
+        }
+    }
+
+    /// The dequeue weight of `model` (1 when unlisted or zero).
+    pub fn weight_of(&self, model: ModelId) -> u64 {
+        match self {
+            SchedPolicy::WeightedFair { weights } => {
+                weights.get(model.0).copied().unwrap_or(1).max(1)
+            }
+            _ => 1,
+        }
+    }
+
+    /// Build the run's policy from `--sched` / `--sla-weights` /
+    /// `--sla-deadline`: `wfair` weights fall back to the registry's
+    /// `--model-mix` traffic weights when `--sla-weights` is absent, and a
+    /// non-empty `--sla-weights` must name every registered model.
+    pub fn from_run_cfg(cfg: &RunConfig, registry: &ModelRegistry) -> Result<SchedPolicy> {
+        match cfg.sched.as_str() {
+            "fifo" => Ok(SchedPolicy::FifoById),
+            "wfair" => {
+                let weights: Vec<u64> = if cfg.sla_weights.is_empty() {
+                    registry.mix_weights().iter().map(|&w| w.max(1) as u64).collect()
+                } else {
+                    if cfg.sla_weights.len() != registry.len() {
+                        bail!(
+                            "--sla-weights has {} weights for {} models",
+                            cfg.sla_weights.len(),
+                            registry.len()
+                        );
+                    }
+                    cfg.sla_weights.iter().map(|&w| w.max(1) as u64).collect()
+                };
+                Ok(SchedPolicy::WeightedFair { weights })
+            }
+            "deadline" => {
+                Ok(SchedPolicy::DeadlineAging { deadline: (cfg.sla_deadline as u64).max(1) })
+            }
+            other => bail!("unknown --sched {other:?} (one of fifo|wfair|deadline)"),
+        }
+    }
+}
+
+/// A tick-valued sample distribution: queue waits and end-to-end
+/// latencies in virtual-clock ticks, reported as nearest-rank
+/// percentiles. Samples are whole ticks, so percentiles are exact (no
+/// float ordering involved).
+#[derive(Debug, Clone, Default)]
+pub struct TickStats {
+    samples: Vec<u64>,
+}
+
+impl TickStats {
+    /// Record one sample.
+    pub fn add(&mut self, t: u64) {
+        self.samples.push(t);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Nearest-rank percentile (0 when empty): the smallest sample with at
+    /// least `p`% of the distribution at or below it.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_unstable();
+        let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+        xs[rank.saturating_sub(1).min(xs.len() - 1)]
+    }
+
+    /// Median / tail percentiles used by the serving report.
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Absorb another distribution's samples.
+    pub fn merge(&mut self, other: &TickStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Per-model scheduling telemetry recorded by the batcher at release
+/// time (merged into `Metrics`/`ModelMetrics` at the end of a run).
+#[derive(Debug, Clone, Default)]
+pub struct ModelSched {
+    /// Ticks from arrival to release from the model's queue.
+    pub queue_wait: TickStats,
+    /// Ticks from arrival to the completion of the batch's drain (queue
+    /// wait plus the unit drain cost — see DESIGN.md's tick caveats).
+    pub e2e: TickStats,
+    /// Largest queue depth observed at submission.
+    pub max_depth: u64,
+    /// Requests released only after waiting past the deadline
+    /// (deadline policy; 0 for fifo/wfair, which have no deadline).
+    pub starved: u64,
+    /// Batches released for this model.
+    pub batches: u64,
+    /// Deadline-forced partial releases.
+    pub forced: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn clock_ticks_per_submit_and_drain() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.stamp_submit(), 1);
+        assert_eq!(c.stamp_submit(), 2);
+        assert_eq!(c.stamp_drain(), 3);
+        assert_eq!(c.now(), 3);
+    }
+
+    #[test]
+    fn tick_stats_percentiles_nearest_rank() {
+        let mut t = TickStats::default();
+        for x in 1..=100u64 {
+            t.add(x);
+        }
+        assert_eq!(t.p50(), 50);
+        assert_eq!(t.p95(), 95);
+        assert_eq!(t.p99(), 99);
+        assert_eq!(t.percentile(100.0), 100);
+        assert_eq!(t.max(), 100);
+        assert_eq!(t.count(), 100);
+        let empty = TickStats::default();
+        assert_eq!(empty.p99(), 0);
+        assert_eq!(empty.max(), 0);
+        let mut merged = TickStats::default();
+        merged.merge(&t);
+        merged.merge(&empty);
+        assert_eq!(merged.count(), 100);
+        assert_eq!(merged.p50(), 50);
+    }
+
+    #[test]
+    fn percentile_insensitive_to_insertion_order() {
+        let mut a = TickStats::default();
+        let mut b = TickStats::default();
+        for x in [7u64, 1, 9, 3, 3, 12] {
+            a.add(x);
+        }
+        for x in [12u64, 3, 3, 9, 1, 7] {
+            b.add(x);
+        }
+        for p in [1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(p), b.percentile(p), "p{p}");
+        }
+    }
+
+    fn reg(n: usize, mix: &[usize]) -> ModelRegistry {
+        let names: Vec<&str> = std::iter::repeat_n("tiny", n).collect();
+        ModelRegistry::from_zoo(&names, 10, 1, mix).unwrap()
+    }
+
+    #[test]
+    fn policy_from_run_cfg() {
+        let registry = reg(2, &[3, 1]);
+        let mut cfg = RunConfig::default();
+        assert_eq!(SchedPolicy::from_run_cfg(&cfg, &registry).unwrap(), SchedPolicy::FifoById);
+        // wfair falls back to the model-mix weights.
+        cfg.sched = "wfair".into();
+        assert_eq!(
+            SchedPolicy::from_run_cfg(&cfg, &registry).unwrap(),
+            SchedPolicy::WeightedFair { weights: vec![3, 1] }
+        );
+        // Explicit --sla-weights win and must cover every model.
+        cfg.sla_weights = vec![1, 4];
+        assert_eq!(
+            SchedPolicy::from_run_cfg(&cfg, &registry).unwrap(),
+            SchedPolicy::WeightedFair { weights: vec![1, 4] }
+        );
+        cfg.sla_weights = vec![1];
+        assert!(SchedPolicy::from_run_cfg(&cfg, &registry).is_err());
+        // Deadline clamps to >= 1 tick.
+        cfg.sched = "deadline".into();
+        cfg.sla_deadline = 0;
+        assert_eq!(
+            SchedPolicy::from_run_cfg(&cfg, &registry).unwrap(),
+            SchedPolicy::DeadlineAging { deadline: 1 }
+        );
+        cfg.sched = "lifo".into();
+        assert!(SchedPolicy::from_run_cfg(&cfg, &registry).is_err());
+    }
+
+    #[test]
+    fn weight_lookup_defaults_to_one() {
+        let p = SchedPolicy::WeightedFair { weights: vec![2, 0] };
+        assert_eq!(p.weight_of(ModelId(0)), 2);
+        assert_eq!(p.weight_of(ModelId(1)), 1, "zero weight clamps to 1");
+        assert_eq!(p.weight_of(ModelId(5)), 1, "unlisted model defaults to 1");
+        assert_eq!(SchedPolicy::FifoById.weight_of(ModelId(0)), 1);
+    }
+
+    #[test]
+    fn policy_names_match_cli_spelling() {
+        assert_eq!(SchedPolicy::FifoById.name(), "fifo");
+        assert_eq!(SchedPolicy::WeightedFair { weights: vec![] }.name(), "wfair");
+        assert_eq!(SchedPolicy::DeadlineAging { deadline: 8 }.name(), "deadline");
+    }
+
+    #[test]
+    fn single_model_registry_builds_every_policy() {
+        let registry = ModelRegistry::single(zoo::tiny(10, 1));
+        for sched in ["fifo", "wfair", "deadline"] {
+            let cfg = RunConfig { sched: sched.into(), ..Default::default() };
+            assert_eq!(SchedPolicy::from_run_cfg(&cfg, &registry).unwrap().name(), sched);
+        }
+    }
+}

@@ -18,6 +18,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::EnginePool;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::sched::SchedPolicy;
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
 use anyhow::{Context, Result};
@@ -69,16 +70,23 @@ impl Coordinator {
     /// weighted round-robin schedule assigns to `i` — a deterministic
     /// synthetic trace that depends only on the `--model-mix` weights,
     /// never on workers or batching, so per-model metrics reproduce across
-    /// pool shapes. Released batches are buffered until up to `workers` of
-    /// them are pending and dispatched together, so small batch sizes
-    /// (down to `--batch 1`) still keep every worker engine busy. Encoding
-    /// and inference do not overlap (each dispatch is a barrier) — a
-    /// deliberate trade for deterministic in-order metrics;
+    /// pool shapes. Batch release is the `--sched` policy's decision
+    /// ([`SchedPolicy`] on the batcher's deterministic virtual clock):
+    /// after every submission the batcher is drained of whatever the
+    /// policy considers due — full queues for `fifo`/`wfair`,
+    /// plus deadline-aged partials for `deadline` — so release order,
+    /// queue waits and tick percentiles depend only on the trace and the
+    /// policy, never on workers. Released batches are buffered until up to
+    /// `workers` of them are pending and dispatched together, so small
+    /// batch sizes (down to `--batch 1`) still keep every worker engine
+    /// busy. Encoding and inference do not overlap (each dispatch is a
+    /// barrier) — a deliberate trade for deterministic in-order metrics;
     /// `encode_threshold` is microseconds against milliseconds of
     /// simulation per image.
     pub fn serve_dataset(&mut self, ds: &Dataset, n: usize) -> Result<Metrics> {
         let n = n.min(ds.len());
-        let mut batcher = Batcher::new(self.cfg.batch_size);
+        let policy = SchedPolicy::from_run_cfg(&self.cfg, self.pool.engine().registry())?;
+        let mut batcher = Batcher::with_policy(self.cfg.batch_size, policy);
         let mut metrics = Metrics::default();
         let mut pending: Vec<(Vec<InferRequest>, Instant)> = Vec::new();
         for i in 0..n {
@@ -109,15 +117,17 @@ impl Coordinator {
                     }
                 }
             }
-            let req = InferRequest { id: i as u64, model, spikes, label: Some(label) };
-            if let Some(batch) = batcher.push(req) {
+            let req =
+                InferRequest { id: i as u64, model, spikes, label: Some(label), arrival_tick: 0 };
+            batcher.push(req);
+            while let Some(batch) = batcher.pop_ready() {
                 pending.push((batch, Instant::now()));
-                if pending.len() >= self.pool.workers() {
-                    self.dispatch(&mut pending, &mut metrics);
-                }
+            }
+            if pending.len() >= self.pool.workers() {
+                self.dispatch(&mut pending, &mut metrics);
             }
         }
-        // End of stream: drain every model's partial batch.
+        // End of stream: drain every model's remainder in policy order.
         while let Some(batch) = batcher.flush() {
             pending.push((batch, Instant::now()));
         }
@@ -125,6 +135,7 @@ impl Coordinator {
         if let Some(stats) = self.pool.cache_stats() {
             metrics.weight_cache = stats;
         }
+        metrics.absorb_sched(batcher.policy(), batcher.sched_stats());
         Ok(metrics)
     }
 
@@ -143,21 +154,15 @@ impl Coordinator {
         if pending.is_empty() {
             return;
         }
-        let mut all: Vec<InferRequest> = Vec::new();
+        let mut batches: Vec<Vec<InferRequest>> = Vec::with_capacity(pending.len());
         let mut queued_ms: Vec<f64> = Vec::new();
-        let mut groups: Vec<usize> = Vec::new();
         for (batch, released) in pending.drain(..) {
             metrics.record_batch(batch.len());
             let waited = released.elapsed().as_secs_f64() * 1e3;
             queued_ms.resize(queued_ms.len() + batch.len(), waited);
-            if self.cfg.broadcast_wmu {
-                groups.push(batch.len());
-            } else {
-                groups.resize(groups.len() + batch.len(), 1);
-            }
-            all.extend(batch);
+            batches.push(batch);
         }
-        let results = self.pool.run_batch_grouped(&all, &groups);
+        let (all, results) = self.pool.run_batches(batches, self.cfg.broadcast_wmu);
         for ((req, result), queued) in all.iter().zip(results).zip(queued_ms) {
             match result.outcome {
                 Ok(out) => {
@@ -319,6 +324,74 @@ mod tests {
             means.push(m.energy_mj.mean());
         }
         assert!(means[0] < means[1], "broadcast sharing must save energy vs unshared");
+    }
+
+    #[test]
+    fn sched_metrics_surface_through_serving() {
+        let engine = Engine::golden(zoo::tiny(10, 5));
+        let mut coord = Coordinator::new(
+            engine,
+            RunConfig { batch_size: 3, workers: 2, ..Default::default() },
+        );
+        let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+        assert_eq!(m.sched_policy, "fifo", "the default policy");
+        assert_eq!(m.queue_wait_ticks.count(), 10, "every request records a wait");
+        assert_eq!(m.e2e_ticks.count(), 10);
+        assert!(m.max_queue_depth >= 1);
+        assert_eq!(m.starved, 0);
+        assert_eq!(m.forced_releases, 0);
+        assert!(m.sched_line().unwrap().contains("policy=fifo"));
+        assert_eq!(m.response_order.len(), 10);
+    }
+
+    #[test]
+    fn policies_preserve_function_deadline_forces_partials() {
+        // Accuracy and totals are policy-independent; on this 1:1 trace
+        // fifo and wfair release identical batch sequences (so energy
+        // matches bit-exactly), while a tight deadline forces partial
+        // releases — smaller broadcast domains can only raise per-image
+        // energy — and bounds every queue wait.
+        let data = dataset(12);
+        let run = |sched: &str, deadline: usize| {
+            let engine = Engine::sim_registry(two_tiny(), ArchConfig::default());
+            let cfg = RunConfig {
+                batch_size: 4,
+                workers: 2,
+                sched: sched.into(),
+                sla_deadline: deadline,
+                ..Default::default()
+            };
+            let mut coord = Coordinator::new(engine, cfg);
+            coord.serve_dataset(&data, 12).unwrap()
+        };
+        let fifo = run("fifo", 32);
+        let wfair = run("wfair", 32);
+        let deadline = run("deadline", 3);
+        for m in [&fifo, &wfair, &deadline] {
+            assert_eq!(m.completed, 12);
+        }
+        assert_eq!(fifo.correct, wfair.correct, "function is policy-independent");
+        assert_eq!(fifo.correct, deadline.correct);
+        assert_eq!(fifo.energy_mj.mean(), wfair.energy_mj.mean(), "same batch sequence");
+        assert!(
+            deadline.energy_mj.mean() >= fifo.energy_mj.mean(),
+            "forced partials shrink broadcast domains"
+        );
+        assert!(deadline.forced_releases > 0, "a 3-tick deadline must force partials");
+        assert_eq!(deadline.sched_policy, "deadline");
+        assert!(
+            deadline.queue_wait_ticks.max() <= 3 + 2,
+            "wait {} exceeds deadline + flush slack",
+            deadline.queue_wait_ticks.max()
+        );
+    }
+
+    #[test]
+    fn unknown_policy_errors() {
+        let engine = Engine::golden(zoo::tiny(10, 5));
+        let mut coord =
+            Coordinator::new(engine, RunConfig { sched: "lifo".into(), ..Default::default() });
+        assert!(coord.serve_dataset(&dataset(2), 2).is_err());
     }
 
     #[test]

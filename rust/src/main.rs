@@ -115,6 +115,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         workers,
         seed: args.get_usize("seed", 1234)? as u64,
         broadcast_wmu: args.get_on_off("broadcast-wmu", true)?,
+        sched: args.get_or("sched", "fifo"),
+        sla_deadline: args.get_usize("sla-deadline", 32)?,
+        sla_weights: match args.get("sla-weights") {
+            Some(s) => parse_mix(s)?,
+            None => Vec::new(),
+        },
         crosscheck_every: args.get_usize("crosscheck-every", 0)?,
         hlo_path: args.get("hlo").map(|s| s.to_string()),
         ..Default::default()
@@ -165,6 +171,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         for (id, mm) in metrics.per_model() {
             println!("  {}: {}", registry.name(*id), mm.summary_line());
         }
+    }
+    if let Some(line) = metrics.sched_line() {
+        println!("{line}");
     }
     if let Some(line) = metrics.cache_line() {
         println!("{line}");
