@@ -277,6 +277,10 @@ pub struct WeightCacheStats {
     pub resident_bytes: u64,
     /// Entries currently resident.
     pub entries: u64,
+    /// Entries poisoned by detected-corruption events
+    /// ([`SharedWeightCache::corrupt_model`]); each is re-transposed on
+    /// its next lookup.
+    pub corruptions: u64,
 }
 
 impl WeightCacheStats {
@@ -288,6 +292,7 @@ impl WeightCacheStats {
         self.evictions += other.evictions;
         self.resident_bytes += other.resident_bytes;
         self.entries += other.entries;
+        self.corruptions += other.corruptions;
     }
 }
 
@@ -331,6 +336,7 @@ struct SharedCacheState {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    corruptions: AtomicU64,
 }
 
 /// Cross-worker transposed-weight cache: the multi-tenant successor of the
@@ -384,6 +390,7 @@ impl SharedWeightCache {
                 hits: AtomicU64::new(0),
                 misses: AtomicU64::new(0),
                 evictions: AtomicU64::new(0),
+                corruptions: AtomicU64::new(0),
             }),
         }
     }
@@ -479,6 +486,52 @@ impl SharedWeightCache {
         inner.bytes = 0;
     }
 
+    /// Model a detected weight-corruption event (an ECC hit on the
+    /// transposed store) against every resident entry of `model`: the
+    /// entries keep their bytes but their validation fingerprint is
+    /// poisoned, so the next lookup fails revalidation and transparently
+    /// re-transposes from the source weights — invalidate-and-refetch.
+    /// Returns the number of entries poisoned. Functional outputs never
+    /// change (the refetch recomputes the identical transpose); only the
+    /// miss/corruption counters move.
+    pub fn corrupt_model(&self, model: usize) -> u64 {
+        let mut inner = self.state.inner.write().unwrap_or_else(|p| p.into_inner());
+        let mut poisoned = 0u64;
+        for (&(m, _), e) in inner.map.iter_mut() {
+            if m == model {
+                // Adding an odd constant is a bijection that never maps a
+                // fingerprint to itself, so repeated corruption of an
+                // untouched entry can never accidentally restore validity.
+                e.src_fp = e.src_fp.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                poisoned += 1;
+            }
+        }
+        self.state.corruptions.fetch_add(poisoned, Ordering::Relaxed);
+        poisoned
+    }
+
+    /// Probe one resident entry's validity against its source weights
+    /// without touching the hit/miss counters: `None` when `(model,
+    /// node)` is not resident, `Some(false)` when resident but failing
+    /// revalidation (corrupted or stale), `Some(true)` when a lookup
+    /// would hit.
+    pub fn probe(
+        &self,
+        model: usize,
+        node: usize,
+        weights: &[i8],
+        cout: usize,
+        taps: usize,
+    ) -> Option<bool> {
+        let ptr = weights.as_ptr() as usize;
+        let fp = weight_fingerprint(weights);
+        let inner = self.state.inner.read().unwrap_or_else(|p| p.into_inner());
+        inner
+            .map
+            .get(&(model, node))
+            .map(|e| e.valid_for(ptr, weights.len(), fp, cout, taps))
+    }
+
     /// Snapshot of the counters.
     pub fn stats(&self) -> WeightCacheStats {
         let inner = self.state.inner.read().unwrap_or_else(|p| p.into_inner());
@@ -488,6 +541,7 @@ impl SharedWeightCache {
             evictions: self.state.evictions.load(Ordering::Relaxed),
             resident_bytes: inner.bytes,
             entries: inner.map.len() as u64,
+            corruptions: self.state.corruptions.load(Ordering::Relaxed),
         }
     }
 }
@@ -1020,6 +1074,45 @@ mod tests {
         assert_eq!(cache.stats().entries, 0);
         assert_eq!(cache.stats().resident_bytes, 0);
         assert_eq!(cache.stats().misses, 3, "clear keeps the counters");
+    }
+
+    #[test]
+    fn fault_corruption_poisons_then_refetches_identically() {
+        // A corruption event poisons only the targeted model's resident
+        // entries; the probe sees them fail revalidation, the next lookup
+        // re-transposes (a miss, not a hit) and returns bit-identical
+        // weights, and the refreshed entry probes valid again.
+        let weights: Vec<i8> = (0..4 * 6).map(|i| (i as i8) - 11).collect();
+        let cache = SharedWeightCache::default();
+        let mut want = vec![0i32; 4 * 6];
+        transpose_weights(&weights, 4, 6, &mut want);
+        cache.transposed(0, 3, &weights, 4, 6);
+        cache.transposed(1, 3, &weights, 4, 6);
+        assert_eq!(cache.probe(0, 3, &weights, 4, 6), Some(true));
+        assert_eq!(cache.probe(0, 9, &weights, 4, 6), None, "not resident");
+        assert_eq!(cache.corrupt_model(0), 1, "one resident entry of model 0");
+        assert_eq!(cache.stats().corruptions, 1);
+        assert_eq!(cache.probe(0, 3, &weights, 4, 6), Some(false), "poisoned");
+        assert_eq!(cache.probe(1, 3, &weights, 4, 6), Some(true), "other model untouched");
+        let before = cache.stats();
+        assert_eq!(*cache.transposed(0, 3, &weights, 4, 6), want, "refetch is bit-identical");
+        let after = cache.stats();
+        assert_eq!(after.misses, before.misses + 1, "the refetch re-transposes");
+        assert_eq!(after.hits, before.hits);
+        assert_eq!(after.entries, before.entries, "replaced in place");
+        assert_eq!(cache.probe(0, 3, &weights, 4, 6), Some(true), "valid again");
+        // Corrupting a model with nothing resident is a no-op.
+        assert_eq!(cache.corrupt_model(7), 0);
+        assert_eq!(cache.stats().corruptions, 1);
+        // Double corruption never accidentally restores validity.
+        cache.corrupt_model(0);
+        cache.corrupt_model(0);
+        assert_eq!(cache.probe(0, 3, &weights, 4, 6), Some(false));
+        assert_eq!(cache.stats().corruptions, 3);
+        // merge() carries the corruption counter.
+        let mut total = WeightCacheStats::default();
+        total.merge(&cache.stats());
+        assert_eq!(total.corruptions, 3);
     }
 
     #[test]

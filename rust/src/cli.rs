@@ -136,6 +136,8 @@ USAGE:
                     [--arch PATH.ini] [--classes N] [--seed N]
                     [--sched fifo|wfair|deadline] [--sla-deadline TICKS]
                     [--sla-weights W,W,..]
+                    [--max-queue-depth N|sla] [--max-retries N]
+                    [--fault-plan PATH.ini] [--fault-seed N]
                     [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N|auto]
                     (--workers N sizes the engine pool: one simulator replica
                      per worker thread, batches fan out across them and all
@@ -159,7 +161,18 @@ USAGE:
                      the W-FIFO; --broadcast-wmu, default on, shares one weight
                      fetch per node across each device batch; --host-threads N
                      spreads the fused conv scatter over N host threads per
-                     image, `auto` detects the core count when --workers is 1)
+                     image, `auto` detects the core count when --workers is 1;
+                     --max-queue-depth bounds each model's admission queue —
+                     excess requests are shed, counted, and excluded from the
+                     accuracy/energy summaries; `sla` derives the bound from
+                     --sla-deadline (requires --sched deadline); --fault-plan
+                     loads a deterministic fault-injection plan ([fault]
+                     section: seed, panic/error/stall/corrupt rates or
+                     explicit request-id lists) keyed to request ids and the
+                     virtual clock so failures replay identically at any
+                     --workers count; --fault-seed overrides the plan's seed;
+                     --max-retries, default 2, bounds per-request retries
+                     before a request surfaces as failed)
   neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
   neural resources  [--arch PATH.ini]                          Table-I style report
   neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep

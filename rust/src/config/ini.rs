@@ -95,6 +95,11 @@ impl Ini {
         }
     }
 
+    /// Whether a section header was present (even if empty).
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.contains_key(name)
+    }
+
     /// Section names.
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(|s| s.as_str())
@@ -151,6 +156,14 @@ e_sop_pj = 3.4
         let ini = Ini::parse(SAMPLE).unwrap();
         let err = ini.req("epa", "nope").unwrap_err().to_string();
         assert!(err.contains("[epa] nope"), "{err}");
+    }
+
+    #[test]
+    fn has_section_sees_empty_headers() {
+        let ini = Ini::parse("[fault]\n[epa]\nrows = 1\n").unwrap();
+        assert!(ini.has_section("fault"));
+        assert!(ini.has_section("epa"));
+        assert!(!ini.has_section("energy"));
     }
 
     #[test]

@@ -4,6 +4,11 @@
 use crate::config::Ini;
 use anyhow::Result;
 
+/// Sentinel for `--max-queue-depth sla`: derive each model's admission
+/// depth limit from the scheduler's SLA deadline instead of a fixed
+/// number (see `SchedPolicy::sla_queue_limit`).
+pub const QUEUE_DEPTH_SLA: usize = usize::MAX;
+
 /// Coordinator run settings.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -41,6 +46,16 @@ pub struct RunConfig {
     pub sla_weights: Vec<usize>,
     /// Cross-check every Nth image against the PJRT golden model (0 = off).
     pub crosscheck_every: usize,
+    /// Per-model admission depth limit: 0 = unbounded (the default, the
+    /// pre-reliability behavior), [`QUEUE_DEPTH_SLA`] = derive from the
+    /// SLA deadline, anything else = a fixed depth.
+    pub max_queue_depth: usize,
+    /// Retries per request before it surfaces as failed (`--max-retries`).
+    pub max_retries: usize,
+    /// Fault-injection plan INI path (`--fault-plan`; None = no faults).
+    pub fault_plan: Option<String>,
+    /// Seed override for the fault plan's rate draws (`--fault-seed`).
+    pub fault_seed: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -60,6 +75,10 @@ impl Default for RunConfig {
             sla_deadline: 32,
             sla_weights: Vec::new(),
             crosscheck_every: 0,
+            max_queue_depth: 0,
+            max_retries: 2,
+            fault_plan: None,
+            fault_seed: None,
         }
     }
 }
@@ -67,6 +86,17 @@ impl Default for RunConfig {
 /// Parse a comma-separated list, trimming and dropping empty items.
 pub fn parse_list(s: &str) -> Vec<String> {
     s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+}
+
+/// Parse a `--max-queue-depth` value: `sla` maps to [`QUEUE_DEPTH_SLA`],
+/// anything else must be a plain depth (0 = unbounded).
+pub fn parse_queue_depth(s: &str) -> Result<usize> {
+    let t = s.trim();
+    if t.eq_ignore_ascii_case("sla") {
+        return Ok(QUEUE_DEPTH_SLA);
+    }
+    t.parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("max-queue-depth {t:?} is neither an integer nor \"sla\""))
 }
 
 /// Parse a comma-separated list of usize weights (the `--model-mix` form).
@@ -103,6 +133,21 @@ impl RunConfig {
                 .transpose()?
                 .unwrap_or_default(),
             crosscheck_every: ini.get_usize("run", "crosscheck_every", d.crosscheck_every)?,
+            max_queue_depth: ini
+                .get("run", "max_queue_depth")
+                .map(parse_queue_depth)
+                .transpose()?
+                .unwrap_or(d.max_queue_depth),
+            max_retries: ini.get_usize("run", "max_retries", d.max_retries)?,
+            fault_plan: ini.get("run", "fault_plan").map(|s| s.to_string()),
+            fault_seed: ini
+                .get("run", "fault_seed")
+                .map(|s| {
+                    s.trim()
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault_seed {s:?} is not an integer"))
+                })
+                .transpose()?,
         })
     }
 
@@ -163,6 +208,40 @@ mod tests {
         assert_eq!(c.model_mix, vec![2, 1]);
         let bad = Ini::parse("[run]\nmodel_mix = 2,lots\n").unwrap();
         assert!(RunConfig::from_ini(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_reliability_knobs_default_off() {
+        let d = RunConfig::default();
+        assert_eq!(d.max_queue_depth, 0, "admission control is off by default");
+        assert_eq!(d.max_retries, 2);
+        assert!(d.fault_plan.is_none());
+        assert!(d.fault_seed.is_none());
+    }
+
+    #[test]
+    fn fault_reliability_knobs_from_ini() {
+        let ini = Ini::parse(
+            "[run]\nmax_queue_depth = sla\nmax_retries = 5\n\
+             fault_plan = plans/chaos.ini\nfault_seed = 77\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.max_queue_depth, QUEUE_DEPTH_SLA);
+        assert_eq!(c.max_retries, 5);
+        assert_eq!(c.fault_plan.as_deref(), Some("plans/chaos.ini"));
+        assert_eq!(c.fault_seed, Some(77));
+        let bad = Ini::parse("[run]\nfault_seed = soon\n").unwrap();
+        assert!(RunConfig::from_ini(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_parse_queue_depth_forms() {
+        assert_eq!(parse_queue_depth("0").unwrap(), 0);
+        assert_eq!(parse_queue_depth(" 12 ").unwrap(), 12);
+        assert_eq!(parse_queue_depth("sla").unwrap(), QUEUE_DEPTH_SLA);
+        assert_eq!(parse_queue_depth("SLA").unwrap(), QUEUE_DEPTH_SLA);
+        assert!(parse_queue_depth("deep").is_err());
     }
 
     #[test]

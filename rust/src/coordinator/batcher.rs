@@ -27,6 +27,24 @@ use crate::coordinator::request::InferRequest;
 use crate::coordinator::sched::{ModelSched, SchedPolicy, VirtualClock};
 use std::collections::{BTreeMap, VecDeque};
 
+/// Admission decision returned by [`Batcher::push`]: either the request
+/// was enqueued, or its model's queue was at the configured depth limit
+/// and the request was shed. Shedding happens *before* the arrival tick
+/// is stamped, so a shed request leaves the virtual clock — and therefore
+/// every downstream scheduling decision — untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued onto its model's queue.
+    Accepted,
+    /// Rejected: the queue already held `depth` requests at limit `limit`.
+    Shed {
+        /// Queue depth at rejection.
+        depth: u64,
+        /// The per-model depth limit in force.
+        limit: u64,
+    },
+}
+
 /// Groups requests into model-homogeneous device batches under a
 /// scheduling policy.
 #[derive(Debug)]
@@ -43,6 +61,8 @@ pub struct Batcher {
     /// the fairness counter the property tests read.
     served: BTreeMap<ModelId, u64>,
     sched: BTreeMap<ModelId, ModelSched>,
+    /// Per-model admission limit (`None` = unbounded, the default).
+    depth_limit: Option<usize>,
 }
 
 impl Batcher {
@@ -51,8 +71,15 @@ impl Batcher {
         Batcher::with_policy(batch_size, SchedPolicy::FifoById)
     }
 
-    /// New batcher under an explicit policy.
+    /// New batcher under an explicit policy, unbounded queues.
     pub fn with_policy(batch_size: usize, policy: SchedPolicy) -> Self {
+        Batcher::with_limits(batch_size, policy, None)
+    }
+
+    /// New batcher under an explicit policy and an optional per-model
+    /// admission depth limit (clamped to at least one queued request;
+    /// `Some(0)` would admit nothing and is treated as unbounded).
+    pub fn with_limits(batch_size: usize, policy: SchedPolicy, limit: Option<usize>) -> Self {
         Batcher {
             batch_size: batch_size.max(1),
             policy,
@@ -61,6 +88,7 @@ impl Batcher {
             ready: VecDeque::new(),
             served: BTreeMap::new(),
             sched: BTreeMap::new(),
+            depth_limit: limit.filter(|l| *l > 0),
         }
     }
 
@@ -75,11 +103,20 @@ impl Batcher {
     }
 
     /// Queue one request onto its model's queue, stamping its arrival
-    /// tick (one clock tick per submission). Release is a separate
+    /// tick (one clock tick per submission) — unless the queue is at the
+    /// admission depth limit, in which case the request is shed: no tick
+    /// is consumed, no state changes, and [`Admission::Shed`] reports the
+    /// rejection for the caller to account. Release is a separate
     /// concern: call [`Batcher::pop_ready`] until `None` after each push.
-    pub fn push(&mut self, mut req: InferRequest) {
-        req.arrival_tick = self.clock.stamp_submit();
+    pub fn push(&mut self, mut req: InferRequest) -> Admission {
         let model = req.model;
+        if let Some(limit) = self.depth_limit {
+            let depth = self.queues.get(&model).map_or(0, |q| q.len());
+            if depth >= limit {
+                return Admission::Shed { depth: depth as u64, limit: limit as u64 };
+            }
+        }
+        req.arrival_tick = self.clock.stamp_submit();
         let depth = {
             let q = self.queues.entry(model).or_default();
             q.push_back(req);
@@ -90,6 +127,7 @@ impl Batcher {
         }
         let s = self.sched.entry(model).or_default();
         s.max_depth = s.max_depth.max(depth as u64);
+        Admission::Accepted
     }
 
     /// Release the next batch the policy considers due at the current
@@ -593,6 +631,58 @@ mod tests {
         assert_eq!(second[0].model, ModelId(0), "then deficit ties break by id");
         assert_eq!(b.flush().unwrap()[0].model, ModelId(1));
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn fault_bounded_push_sheds_at_the_limit_without_ticking() {
+        let mut b = Batcher::with_limits(4, SchedPolicy::FifoById, Some(2));
+        assert_eq!(b.push(req(0)), Admission::Accepted);
+        assert_eq!(b.push(req(1)), Admission::Accepted);
+        let before = b.now();
+        assert_eq!(b.push(req(2)), Admission::Shed { depth: 2, limit: 2 });
+        assert_eq!(b.now(), before, "a shed push never consumes a clock tick");
+        assert_eq!(b.pending(), 2, "the shed request was never queued");
+        // Limits are per model: a second model's queue admits freely.
+        assert_eq!(b.push(req_for(3, ModelId(1))), Admission::Accepted);
+        // Draining reopens the shedding queue.
+        assert_eq!(b.flush().unwrap().len(), 2);
+        assert_eq!(b.push(req(4)), Admission::Accepted);
+    }
+
+    #[test]
+    fn fault_unbounded_batcher_never_sheds() {
+        // `None` and `Some(0)` both mean unbounded (0 would admit nothing).
+        for limit in [None, Some(0)] {
+            let mut b = Batcher::with_limits(2, SchedPolicy::FifoById, limit);
+            for id in 0..64 {
+                assert_eq!(b.push(req(id)), Admission::Accepted, "limit {limit:?}");
+                // Never drained: depth grows far past any accidental bound.
+            }
+            assert_eq!(b.pending(), 64);
+        }
+    }
+
+    #[test]
+    fn fault_shed_decisions_are_deterministic_for_a_trace() {
+        // The same trace through the same bounded batcher sheds the same
+        // request ids — admission is pure queue state, no randomness.
+        let run = || {
+            let mut b =
+                Batcher::with_limits(2, SchedPolicy::DeadlineAging { deadline: 3 }, Some(3));
+            let mut shed = Vec::new();
+            let mut out = Vec::new();
+            for id in 0..40u64 {
+                let m = ModelId(id as usize % 2);
+                if b.push(req_for(id, m)) != Admission::Accepted {
+                    shed.push(id);
+                }
+                while let Some(batch) = b.pop_ready() {
+                    out.push(batch.len());
+                }
+            }
+            (shed, out)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -178,6 +178,14 @@ impl Engine {
         }
     }
 
+    /// Poison every resident transposed-weight cache entry of `model`
+    /// (detected-corruption fault injection: the entries fail their next
+    /// revalidation and are transparently re-transposed). Returns how many
+    /// entries were poisoned; 0 for cache-less backends.
+    pub fn corrupt_weight_cache(&self, model: ModelId) -> u64 {
+        self.weight_cache().map_or(0, |cache| cache.corrupt_model(model.0))
+    }
+
     /// Engine name for reports.
     pub fn name(&self) -> String {
         match &self.backend {

@@ -1,0 +1,430 @@
+//! Deterministic fault injection for the serving pool.
+//!
+//! A [`FaultPlan`] decides, as a *pure function* of `(request id, arrival
+//! tick, attempt)`, whether a fault fires while a worker executes that
+//! attempt — a worker panic, a per-request engine error, a slow-worker
+//! stall (modeled in virtual-clock ticks, never wall time) or a
+//! weight-cache corruption event. Because the decision never reads worker
+//! ids, thread interleavings or wall clocks, the same plan replays the
+//! same failure scenario at `--workers 1` and `--workers 64`: shed /
+//! failed / respawn counters and the full response set are bit-identical
+//! across pool shapes, exactly like the rest of the repo's determinism
+//! story (see DESIGN.md "Fault model & graceful degradation").
+//!
+//! Two injection mechanisms compose:
+//! * **explicit request lists** (`panic_requests = 3,9`) pin a fault to a
+//!   request id — the replayable regression form. By default an explicit
+//!   fault fires on the first attempt only (the retry recovers);
+//!   `persistent = true` makes it fire on every attempt (the
+//!   retry-exhaustion form).
+//! * **seeded rates** (`panic_rate = 0.05`) draw per `(request, attempt)`
+//!   from a [`Pcg32`] stream keyed on the plan seed — the soak-test form.
+//!   Draws are independent across attempts, so a rate-injected fault
+//!   usually recovers on retry.
+//!
+//! An optional `[from_tick, until_tick]` window on the request's arrival
+//! tick scopes the plan to a phase of the trace (for example, a mid-run
+//! outage).
+
+use crate::config::Ini;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+/// PCG stream base for fault draws (attempt number is added so retries
+/// draw from distinct, deterministic streams).
+const FAULT_STREAM: u64 = 0x5EED;
+
+/// Per-request id mixing constant (splitmix64's golden-ratio increment) so
+/// consecutive request ids land on unrelated PCG seeds.
+const ID_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// What the plan injects into one `(request, attempt)` execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault: run the inference normally.
+    None,
+    /// The worker executing this request panics (its remaining chunk is
+    /// requeued on survivors and the worker is respawned).
+    Panic,
+    /// The engine fails this request with an error (retried with backoff
+    /// up to the pool's retry budget).
+    Error,
+    /// The worker stalls for the given number of virtual-clock ticks
+    /// (modeled: accounted in [`ReliabilityStats`], never slept).
+    Stall(u64),
+    /// A weight-cache corruption event hits this request's model: resident
+    /// transposes are poisoned and transparently re-transposed on the next
+    /// lookup (detected corruption — functional outputs never change).
+    Corrupt,
+}
+
+/// A seeded, virtual-clock-keyed fault-injection plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the rate draws (`--fault-seed` overrides the INI).
+    pub seed: u64,
+    /// Per-attempt probability of a worker panic.
+    pub panic_rate: f32,
+    /// Per-attempt probability of an engine error.
+    pub error_rate: f32,
+    /// Per-attempt probability of a modeled stall.
+    pub stall_rate: f32,
+    /// Ticks one injected stall costs (≥ 1 when a stall fires).
+    pub stall_ticks: u64,
+    /// Per-attempt probability of a weight-cache corruption event.
+    pub corrupt_rate: f32,
+    /// Request ids that panic their worker.
+    pub panic_requests: Vec<u64>,
+    /// Request ids that fail with an engine error.
+    pub error_requests: Vec<u64>,
+    /// Request ids that stall their worker.
+    pub stall_requests: Vec<u64>,
+    /// Request ids that corrupt their model's cached weights.
+    pub corrupt_requests: Vec<u64>,
+    /// Explicit-list faults fire on every attempt (retry exhaustion)
+    /// instead of only the first (retry recovery, the default).
+    pub persistent: bool,
+    /// Faults only fire for requests arriving at or after this tick.
+    pub from_tick: u64,
+    /// Faults only fire for requests arriving at or before this tick
+    /// (use [`FaultPlan::seeded`]/`from_ini` so this defaults to `MAX`,
+    /// not the `derive(Default)` zero).
+    pub until_tick: u64,
+}
+
+impl FaultPlan {
+    /// An all-quiet plan with the given seed and a fully open tick window
+    /// (rates zero, lists empty) — the builder base for tests.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan { seed, stall_ticks: 1, until_tick: u64::MAX, ..FaultPlan::default() }
+    }
+
+    /// Whether any fault can ever fire (a quiet plan is equivalent to no
+    /// plan at all — the pool skips the decision entirely).
+    pub fn is_active(&self) -> bool {
+        self.panic_rate > 0.0
+            || self.error_rate > 0.0
+            || self.stall_rate > 0.0
+            || self.corrupt_rate > 0.0
+            || !self.panic_requests.is_empty()
+            || !self.error_requests.is_empty()
+            || !self.stall_requests.is_empty()
+            || !self.corrupt_requests.is_empty()
+    }
+
+    /// The fault (if any) that fires while executing attempt `attempt` of
+    /// the request with id `req_id` and batcher arrival tick
+    /// `arrival_tick`.
+    ///
+    /// Pure and total: no worker identity, thread state or wall clock is
+    /// consulted, so every `(request, attempt)` pair resolves to the same
+    /// action on every pool shape — the determinism the acceptance
+    /// criteria pin. Explicit lists take precedence over rate draws, in
+    /// fixed panic → error → stall → corrupt order.
+    pub fn decide(&self, req_id: u64, arrival_tick: u64, attempt: u32) -> FaultAction {
+        if arrival_tick < self.from_tick || arrival_tick > self.until_tick {
+            return FaultAction::None;
+        }
+        if attempt == 0 || self.persistent {
+            if self.panic_requests.contains(&req_id) {
+                return FaultAction::Panic;
+            }
+            if self.error_requests.contains(&req_id) {
+                return FaultAction::Error;
+            }
+            if self.stall_requests.contains(&req_id) {
+                return FaultAction::Stall(self.stall_ticks.max(1));
+            }
+            if self.corrupt_requests.contains(&req_id) {
+                return FaultAction::Corrupt;
+            }
+        }
+        if self.panic_rate <= 0.0
+            && self.error_rate <= 0.0
+            && self.stall_rate <= 0.0
+            && self.corrupt_rate <= 0.0
+        {
+            return FaultAction::None;
+        }
+        // One PCG stream per (request, attempt): the seed mixes the
+        // request id, the stream id carries the attempt, and the four
+        // kinds draw in fixed order so adding a rate never perturbs the
+        // draws of the kinds before it.
+        let mut rng =
+            Pcg32::new(self.seed ^ req_id.wrapping_mul(ID_MIX), FAULT_STREAM + attempt as u64);
+        if rng.bernoulli(self.panic_rate) {
+            return FaultAction::Panic;
+        }
+        if rng.bernoulli(self.error_rate) {
+            return FaultAction::Error;
+        }
+        if rng.bernoulli(self.stall_rate) {
+            return FaultAction::Stall(self.stall_ticks.max(1));
+        }
+        if rng.bernoulli(self.corrupt_rate) {
+            return FaultAction::Corrupt;
+        }
+        FaultAction::None
+    }
+
+    /// Parse a plan from an INI document's `[fault]` section:
+    ///
+    /// ```ini
+    /// [fault]
+    /// seed = 7
+    /// panic_rate = 0.05      # per-attempt probabilities in [0, 1]
+    /// error_rate = 0
+    /// stall_rate = 0
+    /// stall_ticks = 3
+    /// corrupt_rate = 0
+    /// panic_requests = 3,9   # explicit request-id lists
+    /// error_requests = 5
+    /// persistent = true      # explicit faults fire on every attempt
+    /// from_tick = 0
+    /// until_tick = 100
+    /// ```
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        if !ini.has_section("fault") {
+            bail!("fault plan has no [fault] section");
+        }
+        let d = FaultPlan::seeded(0);
+        let rate = |key: &str| -> Result<f32> {
+            let v = ini.get_f64("fault", key, 0.0)?;
+            if !(0.0..=1.0).contains(&v) {
+                bail!("[fault] {key} = {v} is not a probability in [0, 1]");
+            }
+            Ok(v as f32)
+        };
+        let ids = |key: &str| -> Result<Vec<u64>> {
+            match ini.get("fault", key) {
+                None => Ok(Vec::new()),
+                Some(s) => crate::config::run_cfg::parse_list(s)
+                    .iter()
+                    .map(|t| {
+                        t.parse::<u64>()
+                            .with_context(|| format!("[fault] {key} id {t:?} as u64"))
+                    })
+                    .collect(),
+            }
+        };
+        Ok(FaultPlan {
+            seed: ini.get_usize("fault", "seed", 0)? as u64,
+            panic_rate: rate("panic_rate")?,
+            error_rate: rate("error_rate")?,
+            stall_rate: rate("stall_rate")?,
+            corrupt_rate: rate("corrupt_rate")?,
+            stall_ticks: ini.get_usize("fault", "stall_ticks", d.stall_ticks as usize)? as u64,
+            panic_requests: ids("panic_requests")?,
+            error_requests: ids("error_requests")?,
+            stall_requests: ids("stall_requests")?,
+            corrupt_requests: ids("corrupt_requests")?,
+            persistent: ini.get_bool("fault", "persistent", false)?,
+            from_tick: ini.get_usize("fault", "from_tick", 0)? as u64,
+            until_tick: ini.get_usize("fault", "until_tick", usize::MAX)? as u64,
+        })
+    }
+
+    /// Load the run's plan from `cfg.fault_plan` (`--fault-plan PATH`),
+    /// applying the `--fault-seed` override; `Ok(None)` when no plan is
+    /// configured.
+    pub fn from_run_cfg(cfg: &crate::config::RunConfig) -> Result<Option<Self>> {
+        let mut plan = match &cfg.fault_plan {
+            Some(path) => Some(Self::from_ini(&Ini::load(path)?)?),
+            None => None,
+        };
+        match (&mut plan, cfg.fault_seed) {
+            (Some(p), Some(seed)) => p.seed = seed,
+            (None, Some(_)) => bail!("--fault-seed requires --fault-plan"),
+            _ => {}
+        }
+        Ok(plan)
+    }
+}
+
+/// Reliability counters accumulated by the pool's supervision loop.
+///
+/// Every field except `worker_panics` is a pure function of the plan and
+/// the trace (worker-count independent); `worker_panics` additionally
+/// counts *real* caught panics, which a deterministic engine never
+/// produces.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReliabilityStats {
+    /// Dead workers replaced with a fresh engine replica.
+    pub respawns: u64,
+    /// Failed attempts requeued for another try.
+    pub retries: u64,
+    /// Requests that exhausted their retry budget (surfaced as
+    /// [`crate::coordinator::request::RequestOutcome::Failed`]).
+    pub failed: u64,
+    /// Modeled backoff charged to requeued attempts, in virtual-clock
+    /// ticks (linear: attempt `k` waits `k` ticks).
+    pub backoff_ticks: u64,
+    /// Worker panics caught by the supervision loop (injected + real).
+    pub worker_panics: u64,
+    /// Injected panics that fired.
+    pub injected_panics: u64,
+    /// Injected engine errors that fired.
+    pub injected_errors: u64,
+    /// Injected stalls that fired.
+    pub injected_stalls: u64,
+    /// Modeled stall ticks charged by injected stalls.
+    pub stall_ticks: u64,
+    /// Injected weight-cache corruption events that fired.
+    pub injected_corruptions: u64,
+}
+
+impl ReliabilityStats {
+    /// Accumulate another batch's counters.
+    pub fn merge(&mut self, other: &ReliabilityStats) {
+        self.respawns += other.respawns;
+        self.retries += other.retries;
+        self.failed += other.failed;
+        self.backoff_ticks += other.backoff_ticks;
+        self.worker_panics += other.worker_panics;
+        self.injected_panics += other.injected_panics;
+        self.injected_errors += other.injected_errors;
+        self.injected_stalls += other.injected_stalls;
+        self.stall_ticks += other.stall_ticks;
+        self.injected_corruptions += other.injected_corruptions;
+    }
+
+    /// True when nothing fault-related happened (the fault-free run).
+    pub fn is_quiet(&self) -> bool {
+        *self == ReliabilityStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_quiet_plan_never_fires() {
+        let p = FaultPlan::seeded(42);
+        assert!(!p.is_active());
+        for id in 0..200 {
+            assert_eq!(p.decide(id, id + 1, 0), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn fault_decide_is_deterministic_and_attempt_keyed() {
+        let mut p = FaultPlan::seeded(7);
+        p.panic_rate = 0.3;
+        p.error_rate = 0.3;
+        let a: Vec<FaultAction> = (0..100).map(|id| p.decide(id, id + 1, 0)).collect();
+        let b: Vec<FaultAction> = (0..100).map(|id| p.decide(id, id + 1, 0)).collect();
+        assert_eq!(a, b, "same plan, same draws");
+        assert!(a.iter().any(|x| *x == FaultAction::Panic));
+        assert!(a.iter().any(|x| *x == FaultAction::Error));
+        assert!(a.iter().any(|x| *x == FaultAction::None));
+        // Retries draw an independent stream: some faulted first attempts
+        // recover on attempt 1.
+        let recovered = (0..100u64).any(|id| {
+            p.decide(id, id + 1, 0) != FaultAction::None
+                && p.decide(id, id + 1, 1) == FaultAction::None
+        });
+        assert!(recovered, "rate faults must be able to recover on retry");
+        // A different seed reshuffles the draws.
+        let mut q = p.clone();
+        q.seed = 8;
+        let c: Vec<FaultAction> = (0..100).map(|id| q.decide(id, id + 1, 0)).collect();
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn fault_explicit_lists_take_precedence_and_respect_persistence() {
+        let mut p = FaultPlan::seeded(1);
+        p.panic_requests = vec![3];
+        p.error_requests = vec![3, 5]; // 3 also panics: panic wins
+        p.stall_requests = vec![6];
+        p.stall_ticks = 4;
+        p.corrupt_requests = vec![7];
+        assert_eq!(p.decide(3, 10, 0), FaultAction::Panic);
+        assert_eq!(p.decide(5, 10, 0), FaultAction::Error);
+        assert_eq!(p.decide(6, 10, 0), FaultAction::Stall(4));
+        assert_eq!(p.decide(7, 10, 0), FaultAction::Corrupt);
+        assert_eq!(p.decide(4, 10, 0), FaultAction::None);
+        // Transient (default): the retry recovers.
+        assert_eq!(p.decide(3, 10, 1), FaultAction::None);
+        // Persistent: every attempt faults.
+        p.persistent = true;
+        assert_eq!(p.decide(3, 10, 1), FaultAction::Panic);
+        assert_eq!(p.decide(5, 10, 3), FaultAction::Error);
+    }
+
+    #[test]
+    fn fault_tick_window_scopes_the_outage() {
+        let mut p = FaultPlan::seeded(1);
+        p.error_requests = vec![1, 2, 3];
+        p.from_tick = 5;
+        p.until_tick = 10;
+        assert_eq!(p.decide(1, 4, 0), FaultAction::None, "before the window");
+        assert_eq!(p.decide(2, 5, 0), FaultAction::Error, "window start");
+        assert_eq!(p.decide(3, 10, 0), FaultAction::Error, "window end");
+        assert_eq!(p.decide(3, 11, 0), FaultAction::None, "after the window");
+    }
+
+    #[test]
+    fn fault_plan_from_ini_parses_and_validates() {
+        let ini = Ini::parse(
+            "[fault]\nseed = 9\npanic_rate = 0.25\nstall_ticks = 3\n\
+             panic_requests = 2, 4\nerror_requests = 5\npersistent = yes\nuntil_tick = 50\n",
+        )
+        .unwrap();
+        let p = FaultPlan::from_ini(&ini).unwrap();
+        assert_eq!(p.seed, 9);
+        assert!((p.panic_rate - 0.25).abs() < 1e-6);
+        assert_eq!(p.stall_ticks, 3);
+        assert_eq!(p.panic_requests, vec![2, 4]);
+        assert_eq!(p.error_requests, vec![5]);
+        assert!(p.persistent);
+        assert_eq!(p.from_tick, 0);
+        assert_eq!(p.until_tick, 50);
+        assert!(p.is_active());
+        // Missing section, bad rate, bad id list all error.
+        assert!(FaultPlan::from_ini(&Ini::parse("[run]\nimages = 2\n").unwrap()).is_err());
+        let bad_rate = Ini::parse("[fault]\npanic_rate = 1.5\n").unwrap();
+        assert!(FaultPlan::from_ini(&bad_rate).is_err());
+        let bad_ids = Ini::parse("[fault]\npanic_requests = 1,x\n").unwrap();
+        assert!(FaultPlan::from_ini(&bad_ids).is_err());
+    }
+
+    #[test]
+    fn fault_from_run_cfg_wires_seed_override() {
+        use crate::config::RunConfig;
+        let cfg = RunConfig::default();
+        assert!(FaultPlan::from_run_cfg(&cfg).unwrap().is_none());
+        let orphan_seed = RunConfig { fault_seed: Some(3), ..RunConfig::default() };
+        assert!(FaultPlan::from_run_cfg(&orphan_seed).is_err(), "--fault-seed needs a plan");
+        let missing = RunConfig {
+            fault_plan: Some("/nonexistent/fault.ini".into()),
+            ..RunConfig::default()
+        };
+        assert!(FaultPlan::from_run_cfg(&missing).is_err(), "a bad plan path is loud");
+    }
+
+    #[test]
+    fn fault_reliability_stats_merge_and_quiet() {
+        let mut a = ReliabilityStats::default();
+        assert!(a.is_quiet());
+        let b = ReliabilityStats {
+            respawns: 1,
+            retries: 2,
+            failed: 1,
+            backoff_ticks: 3,
+            worker_panics: 1,
+            injected_panics: 1,
+            injected_errors: 2,
+            injected_stalls: 1,
+            stall_ticks: 4,
+            injected_corruptions: 1,
+        };
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.retries, 4);
+        assert_eq!(a.respawns, 2);
+        assert_eq!(a.stall_ticks, 8);
+        assert!(!a.is_quiet());
+    }
+}

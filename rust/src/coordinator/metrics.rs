@@ -1,8 +1,9 @@
 //! Serving metrics aggregation, global and per model.
 
 use crate::arch::WeightCacheStats;
+use crate::coordinator::fault::ReliabilityStats;
 use crate::coordinator::registry::ModelId;
-use crate::coordinator::request::InferResponse;
+use crate::coordinator::request::{InferResponse, RequestOutcome};
 use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
 use crate::util::{stats::percentile, Summary};
 use std::collections::BTreeMap;
@@ -33,6 +34,14 @@ pub struct ModelMetrics {
     pub max_queue_depth: u64,
     /// Requests released only after waiting past the SLA deadline.
     pub starved: u64,
+    /// Requests rejected by admission control (never executed; excluded
+    /// from every functional summary above).
+    pub shed: u64,
+    /// Requests that exhausted the pool's retry budget.
+    pub failed: u64,
+    /// Failed attempts that were retried (including retries that
+    /// eventually completed).
+    pub retried: u64,
 }
 
 impl ModelMetrics {
@@ -62,15 +71,21 @@ impl ModelMetrics {
                 if self.starved > 0 { format!(" starved={}", self.starved) } else { String::new() }
             )
         };
+        let reliability = if self.shed + self.failed == 0 {
+            String::new()
+        } else {
+            format!(" shed={} failed={}", self.shed, self.failed)
+        };
         format!(
-            "n={} acc={} device={:.3}ms energy={:.3}mJ spikes={:.0} sops={}{}",
+            "n={} acc={} device={:.3}ms energy={:.3}mJ spikes={:.0} sops={}{}{}",
             self.completed,
             acc,
             self.device_ms.mean(),
             self.energy_mj.mean(),
             self.spikes.mean(),
             self.total_sops,
-            sched
+            sched,
+            reliability
         )
     }
 }
@@ -121,6 +136,15 @@ pub struct Metrics {
     /// Request ids in completion-record order (deterministic for any
     /// worker count: dispatch preserves the scheduler's release order).
     pub response_order: Vec<u64>,
+    /// Requests rejected by admission control across all models.
+    pub shed: u64,
+    /// Requests that exhausted the pool's retry budget.
+    pub failed: u64,
+    /// Failed attempts that were retried (recovered or not).
+    pub retried: u64,
+    /// The pool's supervision counters, absorbed at the end of a run via
+    /// [`Metrics::absorb_reliability`].
+    pub reliability: ReliabilityStats,
     per_model: BTreeMap<ModelId, ModelMetrics>,
     host_samples: Vec<f64>,
 }
@@ -142,8 +166,31 @@ impl Metrics {
         }
     }
 
-    /// Record one response (global counters + its model's slice).
+    /// Record one response (global counters + its model's slice). Shed
+    /// and failed marker responses only move the availability counters —
+    /// they carry no prediction, latency or energy, so they never touch
+    /// the functional summaries (acceptance: shed requests appear in no
+    /// accuracy or energy accounting).
     pub fn record(&mut self, r: &InferResponse) {
+        match r.outcome {
+            RequestOutcome::Shed => {
+                self.shed += 1;
+                self.per_model.entry(r.model).or_default().shed += 1;
+                return;
+            }
+            RequestOutcome::Failed { retries } => {
+                self.failed += 1;
+                self.retried += retries as u64;
+                let m = self.per_model.entry(r.model).or_default();
+                m.failed += 1;
+                m.retried += retries as u64;
+                return;
+            }
+            RequestOutcome::Ok => {
+                self.retried += r.retries as u64;
+                self.per_model.entry(r.model).or_default().retried += r.retries as u64;
+            }
+        }
         self.completed += 1;
         let correct = r.correct();
         if let Some(ok) = correct {
@@ -265,18 +312,72 @@ impl Metrics {
     }
 
     /// One-line weight-cache report (None when no cache saw traffic).
+    /// The corruption counter appears only when corruption was injected,
+    /// so fault-free output is unchanged character-for-character.
     pub fn cache_line(&self) -> Option<String> {
         let c = &self.weight_cache;
         if c.hits + c.misses == 0 {
             return None;
         }
+        let corrupted = if c.corruptions == 0 {
+            String::new()
+        } else {
+            format!(", {} corrupted", c.corruptions)
+        };
         Some(format!(
-            "weight cache: {} hits / {} transposes ({} evicted, {} entries, {:.1} KiB resident)",
+            "weight cache: {} hits / {} transposes ({} evicted, {} entries, {:.1} KiB resident{})",
             c.hits,
             c.misses,
             c.evictions,
             c.entries,
-            c.resident_bytes as f64 / 1024.0
+            c.resident_bytes as f64 / 1024.0,
+            corrupted
+        ))
+    }
+
+    /// Requests offered to the serving layer: completed + shed + failed.
+    pub fn offered(&self) -> u64 {
+        self.completed + self.shed + self.failed
+    }
+
+    /// Availability as a percentage of offered requests that completed
+    /// (100.0 when nothing was offered — an empty run is not an outage).
+    pub fn availability(&self) -> f64 {
+        if self.offered() == 0 {
+            100.0
+        } else {
+            self.completed as f64 / self.offered() as f64 * 100.0
+        }
+    }
+
+    /// Absorb the pool's supervision counters. Call once, at the end of a
+    /// run (after the last dispatch).
+    pub fn absorb_reliability(&mut self, stats: &ReliabilityStats) {
+        self.reliability = *stats;
+    }
+
+    /// One-line reliability report, or None when the run was fault-free
+    /// (no shed, no failure, no retry, quiet supervision counters) — so a
+    /// clean run's output stays bit-identical to the pre-reliability
+    /// layer.
+    pub fn reliability_line(&self) -> Option<String> {
+        if self.shed + self.failed + self.retried == 0 && self.reliability.is_quiet() {
+            return None;
+        }
+        let r = &self.reliability;
+        Some(format!(
+            "reliability: availability={:.2}% ok={} shed={} failed={} retries={} respawns={} \
+             backoff={}t stalls={}/{}t corruptions={}",
+            self.availability(),
+            self.completed,
+            self.shed,
+            self.failed,
+            self.retried,
+            r.respawns,
+            r.backoff_ticks,
+            r.injected_stalls,
+            r.stall_ticks,
+            r.injected_corruptions
         ))
     }
 }
@@ -306,6 +407,8 @@ mod tests {
             energy_mj: 1.0,
             total_spikes: 50,
             sops: 500,
+            outcome: RequestOutcome::Ok,
+            retries: 0,
         }
     }
 
@@ -444,10 +547,84 @@ mod tests {
             evictions: 1,
             resident_bytes: 2048,
             entries: 2,
+            corruptions: 0,
         };
         let line = m.cache_line().unwrap();
         assert!(line.contains("10 hits"), "{line}");
         assert!(line.contains("2 transposes"), "{line}");
         assert!(line.contains("2.0 KiB"), "{line}");
+        assert!(!line.contains("corrupted"), "clean runs never mention corruption: {line}");
+        m.weight_cache.corruptions = 3;
+        let line = m.cache_line().unwrap();
+        assert!(line.contains("3 corrupted"), "{line}");
+    }
+
+    #[test]
+    fn fault_shed_and_failed_stay_out_of_functional_summaries() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, Some(1), 2.0));
+        m.record(&InferResponse::shed(1, ModelId(0)));
+        m.record(&InferResponse::failed(2, ModelId(0), 2));
+        assert_eq!(m.completed, 1, "markers never count as completed");
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.retried, 2, "the failure's retries are accounted");
+        assert_eq!(m.labelled, 1, "markers never enter accuracy");
+        assert!((m.accuracy() - 1.0).abs() < 1e-12);
+        assert_eq!(m.energy_mj.count(), 1, "markers never enter energy");
+        assert_eq!(m.device_ms.count(), 1);
+        assert_eq!(m.response_order, vec![0], "markers are not completions");
+        assert_eq!(m.offered(), 3);
+        assert!((m.availability() - 100.0 / 3.0).abs() < 1e-9);
+        let slice = &m.per_model()[&ModelId(0)];
+        assert_eq!(slice.shed, 1);
+        assert_eq!(slice.failed, 1);
+        assert_eq!(slice.completed, 1);
+        let line = slice.summary_line();
+        assert!(line.contains("shed=1 failed=1"), "{line}");
+        // A retried-but-recovered response counts its retries too.
+        let mut ok = resp(3, 1, Some(1), 2.0);
+        ok.retries = 1;
+        m.record(&ok);
+        assert_eq!(m.retried, 3);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn fault_reliability_line_quiet_on_clean_runs() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, Some(1), 1.0));
+        assert!(m.reliability_line().is_none(), "clean runs print nothing");
+        assert_eq!(m.availability(), 100.0);
+        assert_eq!(Metrics::default().availability(), 100.0, "empty run is not an outage");
+        m.record(&InferResponse::shed(1, ModelId(0)));
+        let line = m.reliability_line().unwrap();
+        assert!(line.contains("availability=50.00%"), "{line}");
+        assert!(line.contains("ok=1 shed=1 failed=0"), "{line}");
+        // Quiet responses but noisy supervision (e.g. recovered stalls)
+        // still surface the line.
+        let mut m2 = Metrics::default();
+        m2.record(&resp(0, 1, Some(1), 1.0));
+        m2.absorb_reliability(&ReliabilityStats {
+            injected_stalls: 2,
+            stall_ticks: 6,
+            ..ReliabilityStats::default()
+        });
+        let line = m2.reliability_line().unwrap();
+        assert!(line.contains("stalls=2/6t"), "{line}");
+        assert!(line.contains("availability=100.00%"), "{line}");
+    }
+
+    #[test]
+    fn fault_global_summary_unchanged_by_markers() {
+        // The headline summary_line counts completed requests only, so a
+        // degraded run reports the same functional numbers as a clean run
+        // of its completed subset.
+        let mut clean = Metrics::default();
+        clean.record(&resp(0, 1, Some(1), 2.0));
+        let mut degraded = Metrics::default();
+        degraded.record(&resp(0, 1, Some(1), 2.0));
+        degraded.record(&InferResponse::shed(1, ModelId(0)));
+        assert_eq!(clean.summary_line(), degraded.summary_line());
     }
 }

@@ -15,6 +15,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod pool;
 pub mod registry;
@@ -22,11 +23,12 @@ pub mod request;
 pub mod sched;
 pub mod server;
 
-pub use batcher::Batcher;
+pub use batcher::{Admission, Batcher};
 pub use engine::Engine;
+pub use fault::{FaultAction, FaultPlan, ReliabilityStats};
 pub use metrics::{Metrics, ModelMetrics};
 pub use pool::{BatchResult, EnginePool};
 pub use registry::{ModelEntry, ModelId, ModelRegistry};
-pub use request::{InferRequest, InferResponse};
+pub use request::{InferRequest, InferResponse, RequestOutcome, ServeError};
 pub use sched::{ModelSched, SchedPolicy, TickStats, VirtualClock};
 pub use server::Coordinator;

@@ -1,4 +1,5 @@
-//! Engine pool: one independent [`Engine`] replica per worker thread.
+//! Engine pool: one independent [`Engine`] replica per worker thread,
+//! supervised for graceful degradation.
 //!
 //! The coordinator's batch path fans a [`crate::coordinator::Batcher`]
 //! batch out across CPU cores with `std::thread::scope` (no extra deps, no
@@ -7,6 +8,16 @@
 //! result is written to its request's slot — so the merged outcome vector
 //! is in submission order and bit-deterministic regardless of thread
 //! interleaving.
+//!
+//! Supervision: each worker's chunk executes under `catch_unwind`. A panic
+//! (real or injected by a [`FaultPlan`]) quarantines the worker for the
+//! rest of the round, requeues its unfinished requests on the survivors,
+//! and respawns the worker as a fresh clone of the pool's reference engine
+//! (sharing the [`crate::arch::SharedWeightCache`]); engine errors retry
+//! with tick-modeled backoff up to the pool's retry budget before the
+//! request surfaces as [`ServeError`]. When no fault fires, the fast path
+//! is a single round and the results are bit-identical to the unsupervised
+//! pool.
 //!
 //! Weight-stream accounting is a shared [`WmuBroadcast`] per device batch:
 //! workers executing the same node fetch its weight tile from DRAM once and
@@ -19,23 +30,61 @@
 
 use crate::arch::{WeightCacheStats, WmuBroadcast};
 use crate::coordinator::engine::{Engine, Outcome};
+use crate::coordinator::fault::{FaultAction, FaultPlan, ReliabilityStats};
 use crate::coordinator::registry::ModelId;
-use crate::coordinator::request::InferRequest;
-use anyhow::Result;
+use crate::coordinator::request::{InferRequest, ServeError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// One per-request result of a batch run.
 pub struct BatchResult {
-    /// The inference outcome (`Err` if the engine failed on this request).
-    pub outcome: Result<Outcome>,
+    /// The inference outcome, or the terminal [`ServeError`] when the
+    /// request exhausted the pool's retry budget.
+    pub outcome: Result<Outcome, ServeError>,
     /// Host latency for this request: batch dispatch → its inference
-    /// finished, in milliseconds.
+    /// finished (including any retry rounds), in milliseconds.
     pub host_ms: f64,
+    /// Failed attempts retried before this result (0 on the fault-free
+    /// path, for `Ok` and `Err` outcomes alike).
+    pub retries: u32,
 }
 
-/// A fixed set of engine replicas that batches fan out over.
+/// What one worker recorded for one attempted request of a round.
+enum Attempt {
+    /// Inference completed (outcome, host latency at completion).
+    Done(Outcome, f64),
+    /// The engine failed (injected or real) — retried up to the budget.
+    Errored(String),
+    /// The worker panicked on this request (injected or real): the worker
+    /// is quarantined and its remaining chunk stays [`Attempt::NotRun`].
+    Panicked(String),
+    /// Never reached (a dead worker's remainder) — requeued without
+    /// consuming an attempt.
+    NotRun,
+}
+
+/// Best-effort panic payload extraction for [`ServeError::Panic`].
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A supervised, fixed-size set of engine replicas that batches fan out
+/// over.
 pub struct EnginePool {
-    engines: Vec<Engine>,
+    /// The pristine replica respawns clone from (also serves single-shot
+    /// cross-checks). Never executes supervised work, so it cannot die.
+    reference: Engine,
+    workers: Vec<Mutex<Engine>>,
+    fault: Option<FaultPlan>,
+    max_retries: u32,
+    reliability: Mutex<ReliabilityStats>,
 }
 
 impl EnginePool {
@@ -46,12 +95,14 @@ impl EnginePool {
     /// pool.
     pub fn new(engine: Engine, workers: usize) -> Self {
         let workers = workers.max(1);
-        let mut engines = Vec::with_capacity(workers);
-        for _ in 1..workers {
-            engines.push(engine.clone());
+        let replicas = (0..workers).map(|_| Mutex::new(engine.clone())).collect();
+        EnginePool {
+            reference: engine,
+            workers: replicas,
+            fault: None,
+            max_retries: 2,
+            reliability: Mutex::new(ReliabilityStats::default()),
         }
-        engines.push(engine);
-        EnginePool { engines }
     }
 
     /// [`EnginePool::new`] with every replica's weight cache detached —
@@ -60,32 +111,62 @@ impl EnginePool {
     /// `perf_micro` and the regression tests; serving uses `new`.
     pub fn new_private_caches(engine: Engine, workers: usize) -> Self {
         let mut pool = Self::new(engine, workers);
-        for e in &mut pool.engines {
-            e.detach_weight_cache();
+        pool.reference.detach_weight_cache();
+        for w in &mut pool.workers {
+            w.get_mut().unwrap_or_else(|p| p.into_inner()).detach_weight_cache();
         }
         pool
     }
 
     /// Number of worker engines.
     pub fn workers(&self) -> usize {
-        self.engines.len()
+        self.workers.len()
     }
 
-    /// A reference engine (for single-shot inference such as cross-checks).
+    /// The reference engine (for single-shot inference such as
+    /// cross-checks).
     pub fn engine(&self) -> &Engine {
-        &self.engines[0]
+        &self.reference
+    }
+
+    /// Install (or clear) the pool's fault-injection plan. A quiet plan —
+    /// one that can never fire — is dropped outright so the fault-free
+    /// fast path stays fault-free.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan.filter(FaultPlan::is_active);
+    }
+
+    /// Retry budget per request (`--max-retries`): an attempt plus this
+    /// many retries before the request surfaces as [`ServeError`].
+    pub fn set_max_retries(&mut self, retries: u32) {
+        self.max_retries = retries;
+    }
+
+    /// Reliability counters accumulated across every supervised dispatch
+    /// since construction (or the last [`EnginePool::reset_reliability`]).
+    pub fn reliability(&self) -> ReliabilityStats {
+        *self.reliability.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Zero the accumulated reliability counters (start of a serving run).
+    pub fn reset_reliability(&self) {
+        *self.reliability.lock().unwrap_or_else(|p| p.into_inner()) = ReliabilityStats::default();
     }
 
     /// Aggregated transposed-weight-cache counters across the pool's
     /// distinct caches (one shared cache counts once, private caches sum;
     /// None for cache-less backends).
     pub fn cache_stats(&self) -> Option<WeightCacheStats> {
-        let mut caches = Vec::new();
-        for e in &self.engines {
-            if let Some(c) = e.weight_cache() {
-                if !caches.iter().any(|x: &crate::arch::SharedWeightCache| x.same_cache(&c)) {
-                    caches.push(c);
-                }
+        let mut handles: Vec<crate::arch::SharedWeightCache> = Vec::new();
+        handles.extend(self.reference.weight_cache());
+        for w in &self.workers {
+            let cache = w.lock().unwrap_or_else(|p| p.into_inner()).weight_cache();
+            handles.extend(cache);
+        }
+        let mut caches: Vec<crate::arch::SharedWeightCache> = Vec::new();
+        for c in handles {
+            if !caches.iter().any(|x| x.same_cache(&c)) {
+                caches.push(c);
             }
         }
         if caches.is_empty() {
@@ -168,6 +249,17 @@ impl EnginePool {
     /// fan-out, and every request shares weight fetches with the device
     /// batch it was released in, never with the combined dispatch (whose
     /// size varies with the worker count).
+    ///
+    /// Supervision loop: pending requests are re-chunked over the live
+    /// workers each round. Injected faults resolve *before* the inference
+    /// starts (a pure function of `(request id, arrival tick, attempt)`,
+    /// see [`FaultPlan::decide`]), so a faulted attempt never partially
+    /// charges its broadcast domain and the retry accounting is exact. A
+    /// panicked worker's finished results are kept, its unfinished chunk
+    /// requeues without consuming an attempt, and the worker respawns as a
+    /// clone of the reference engine after the round. The round loop
+    /// terminates because the first pending request is always attempted
+    /// each round and every request has a bounded attempt budget.
     pub fn run_batch_grouped(&self, batch: &[InferRequest], groups: &[usize]) -> Vec<BatchResult> {
         assert_eq!(
             groups.iter().sum::<usize>(),
@@ -194,40 +286,163 @@ impl EnginePool {
             start += n;
             req_group.extend(std::iter::repeat_n(gi, n));
         }
-        let workers = self.engines.len().min(batch.len());
-        let chunk = batch.len().div_ceil(workers);
         let t0 = Instant::now();
         let mut results: Vec<Option<BatchResult>> = Vec::with_capacity(batch.len());
         results.resize_with(batch.len(), || None);
-        std::thread::scope(|scope| {
-            let mut slots: &mut [Option<BatchResult>] = &mut results;
-            let mut reqs: &[InferRequest] = batch;
-            let mut gids: &[usize] = &req_group;
-            let broadcasts = &broadcasts;
-            for engine in &self.engines {
-                if reqs.is_empty() {
-                    break;
-                }
-                let take = chunk.min(reqs.len());
-                let (chunk_reqs, rest_reqs) = reqs.split_at(take);
-                let (chunk_gids, rest_gids) = gids.split_at(take);
-                let taken = std::mem::take(&mut slots);
-                let (chunk_slots, rest_slots) = taken.split_at_mut(take);
-                reqs = rest_reqs;
-                gids = rest_gids;
-                slots = rest_slots;
-                scope.spawn(move || {
-                    for ((req, &gid), slot) in
-                        chunk_reqs.iter().zip(chunk_gids).zip(chunk_slots.iter_mut())
-                    {
-                        let outcome =
-                            engine.infer_model(req.model, &req.spikes, Some(&broadcasts[gid]));
-                        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-                        *slot = Some(BatchResult { outcome, host_ms });
+        let mut attempts: Vec<u32> = vec![0; batch.len()];
+        let mut pending: Vec<usize> = (0..batch.len()).collect();
+        let mut stats = ReliabilityStats::default();
+        while !pending.is_empty() {
+            let nworkers = self.workers.len().min(pending.len());
+            let chunk = pending.len().div_ceil(nworkers);
+            let att_snapshot: Vec<u32> = pending.iter().map(|&i| attempts[i]).collect();
+            let mut outs: Vec<Attempt> = Vec::with_capacity(pending.len());
+            outs.resize_with(pending.len(), || Attempt::NotRun);
+            let mut dead: Vec<usize> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut idx: &[usize] = &pending;
+                let mut atts: &[u32] = &att_snapshot;
+                let mut slots: &mut [Attempt] = &mut outs;
+                let broadcasts = &broadcasts;
+                let req_group = &req_group;
+                let fault = self.fault.as_ref();
+                let mut handles = Vec::with_capacity(nworkers);
+                for worker in self.workers.iter().take(nworkers) {
+                    if idx.is_empty() {
+                        break;
                     }
-                });
+                    let take = chunk.min(idx.len());
+                    let (c_idx, rest_idx) = idx.split_at(take);
+                    let (c_att, rest_att) = atts.split_at(take);
+                    let taken = std::mem::take(&mut slots);
+                    let (c_out, rest_out) = taken.split_at_mut(take);
+                    idx = rest_idx;
+                    atts = rest_att;
+                    slots = rest_out;
+                    handles.push(scope.spawn(move || -> bool {
+                        let engine = worker.lock().unwrap_or_else(|p| p.into_inner());
+                        for ((&i, &att), out) in c_idx.iter().zip(c_att).zip(c_out.iter_mut()) {
+                            let req = &batch[i];
+                            let gid = req_group[i];
+                            let action = match fault {
+                                Some(p) => p.decide(req.id, req.arrival_tick, att),
+                                None => FaultAction::None,
+                            };
+                            if action == FaultAction::Error {
+                                *out = Attempt::Errored(format!(
+                                    "injected engine error (request {}, attempt {att})",
+                                    req.id
+                                ));
+                                continue;
+                            }
+                            if action == FaultAction::Corrupt {
+                                // Detected corruption: poison the model's
+                                // resident transposes; the next lookup
+                                // fails revalidation and refetches.
+                                engine.corrupt_weight_cache(req.model);
+                            }
+                            // Injected panics fire before `infer_model` so
+                            // the broadcast ledger is never left half
+                            // charged; the catch also contains any *real*
+                            // engine panic mid-inference (best effort: a
+                            // deterministic engine never produces one).
+                            let ran = catch_unwind(AssertUnwindSafe(|| {
+                                if action == FaultAction::Panic {
+                                    panic!(
+                                        "injected worker panic (request {}, attempt {att})",
+                                        req.id
+                                    );
+                                }
+                                engine.infer_model(req.model, &req.spikes, Some(&broadcasts[gid]))
+                            }));
+                            match ran {
+                                Ok(Ok(outcome)) => {
+                                    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+                                    *out = Attempt::Done(outcome, host_ms);
+                                }
+                                Ok(Err(e)) => *out = Attempt::Errored(format!("{e:#}")),
+                                Err(payload) => {
+                                    *out = Attempt::Panicked(panic_message(payload.as_ref()));
+                                    return true; // quarantined for the round
+                                }
+                            }
+                        }
+                        false
+                    }));
+                }
+                for (w, h) in handles.into_iter().enumerate() {
+                    // The closure catches every panic it can observe, so
+                    // join only errs on a catastrophic unwind — treat it as
+                    // a dead worker too.
+                    if h.join().unwrap_or(true) {
+                        dead.push(w);
+                    }
+                }
+            });
+            let mut next_pending: Vec<usize> = Vec::new();
+            for (pos, out) in outs.into_iter().enumerate() {
+                let i = pending[pos];
+                let att = att_snapshot[pos];
+                if matches!(out, Attempt::NotRun) {
+                    // A dead worker's remainder: requeue, no attempt spent.
+                    next_pending.push(i);
+                    continue;
+                }
+                // Post-hoc injected-fault accounting from the same pure
+                // decision the worker made — deterministic by construction.
+                if let Some(plan) = &self.fault {
+                    match plan.decide(batch[i].id, batch[i].arrival_tick, att) {
+                        FaultAction::Panic => stats.injected_panics += 1,
+                        FaultAction::Error => stats.injected_errors += 1,
+                        FaultAction::Stall(t) => {
+                            stats.injected_stalls += 1;
+                            stats.stall_ticks += t;
+                        }
+                        FaultAction::Corrupt => stats.injected_corruptions += 1,
+                        FaultAction::None => {}
+                    }
+                }
+                let (message, panicked) = match out {
+                    Attempt::Done(outcome, host_ms) => {
+                        results[i] =
+                            Some(BatchResult { outcome: Ok(outcome), host_ms, retries: att });
+                        continue;
+                    }
+                    Attempt::Errored(m) => (m, false),
+                    Attempt::Panicked(m) => {
+                        stats.worker_panics += 1;
+                        (m, true)
+                    }
+                    Attempt::NotRun => unreachable!("handled above"),
+                };
+                if att >= self.max_retries {
+                    stats.failed += 1;
+                    let retries = att;
+                    let outcome = if panicked {
+                        Err(ServeError::Panic { retries, message })
+                    } else {
+                        Err(ServeError::Engine { retries, message })
+                    };
+                    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    results[i] = Some(BatchResult { outcome, host_ms, retries });
+                } else {
+                    // Linear tick-modeled backoff: retry k waits k ticks.
+                    attempts[i] += 1;
+                    stats.retries += 1;
+                    stats.backoff_ticks += (att + 1) as u64;
+                    next_pending.push(i);
+                }
             }
-        });
+            for w in dead {
+                let mut guard = self.workers[w].lock().unwrap_or_else(|p| p.into_inner());
+                *guard = self.reference.clone();
+                stats.respawns += 1;
+            }
+            pending = next_pending;
+        }
+        if !stats.is_quiet() {
+            self.reliability.lock().unwrap_or_else(|p| p.into_inner()).merge(&stats);
+        }
         results
             .into_iter()
             .map(|slot| slot.expect("every batch slot is covered by exactly one worker chunk"))
@@ -256,6 +471,18 @@ mod tests {
                     label: Some(label),
                     arrival_tick: 0,
                 }
+            })
+            .collect()
+    }
+
+    /// Unwrap a batch's outcomes, asserting the fault-free path: every
+    /// request succeeded on its first attempt.
+    fn outcomes(results: Vec<BatchResult>) -> Vec<Outcome> {
+        results
+            .into_iter()
+            .map(|r| {
+                assert_eq!(r.retries, 0, "fault-free runs never retry");
+                r.outcome.expect("fault-free runs succeed")
             })
             .collect()
     }
@@ -289,18 +516,14 @@ mod tests {
     #[test]
     fn parallel_merge_is_deterministic_across_worker_counts() {
         let reqs = batch(9);
-        let reference: Vec<Outcome> = EnginePool::new(
-            Engine::sim(zoo::tiny(10, 2), ArchConfig::default()),
-            1,
-        )
-        .run_batch(&reqs)
-        .into_iter()
-        .map(|r| r.outcome.unwrap())
-        .collect();
+        let reference: Vec<Outcome> = outcomes(
+            EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 1)
+                .run_batch(&reqs),
+        );
         for workers in [2usize, 3, 4, 8] {
-            let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), workers);
-            let got: Vec<Outcome> =
-                pool.run_batch(&reqs).into_iter().map(|r| r.outcome.unwrap()).collect();
+            let pool =
+                EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), workers);
+            let got: Vec<Outcome> = outcomes(pool.run_batch(&reqs));
             assert_eq!(got.len(), reference.len());
             for (g, r) in got.iter().zip(&reference) {
                 assert_eq!(g.logits, r.logits, "workers={workers}");
@@ -319,14 +542,9 @@ mod tests {
         // term — function and device timing are unchanged).
         let reqs = batch(4);
         let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
-        let batched: Vec<Outcome> =
-            pool.run_batch(&reqs).into_iter().map(|r| r.outcome.unwrap()).collect();
+        let batched: Vec<Outcome> = outcomes(pool.run_batch(&reqs));
         for (i, req) in reqs.iter().enumerate() {
-            let single = pool
-                .run_batch(std::slice::from_ref(req))
-                .remove(0)
-                .outcome
-                .unwrap();
+            let single = outcomes(pool.run_batch(std::slice::from_ref(req))).remove(0);
             assert_eq!(single.logits, batched[i].logits, "req {i}");
             assert_eq!(single.device_ms, batched[i].device_ms, "req {i}");
             assert!(
@@ -351,13 +569,7 @@ mod tests {
         assert!(single_image > 0);
         let runs: Vec<Vec<Outcome>> = [1usize, 4]
             .iter()
-            .map(|&w| {
-                EnginePool::new(make(), w)
-                    .run_batch(&reqs)
-                    .into_iter()
-                    .map(|r| r.outcome.unwrap())
-                    .collect()
-            })
+            .map(|&w| outcomes(EnginePool::new(make(), w).run_batch(&reqs)))
             .collect();
         for (a, b) in runs[0].iter().zip(&runs[1]) {
             assert_eq!(a.weight_dram_bytes, b.weight_dram_bytes);
@@ -387,11 +599,7 @@ mod tests {
         // stream while the 3-image group splits one three ways.
         let reqs = batch(4);
         let pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
-        let out: Vec<Outcome> = pool
-            .run_batch_grouped(&reqs, &[3, 1])
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let out: Vec<Outcome> = outcomes(pool.run_batch_grouped(&reqs, &[3, 1]));
         let full = pool.engine().infer(&reqs[3].spikes).unwrap().weight_dram_bytes;
         assert_eq!(out[3].weight_dram_bytes, full, "singleton group pays in full");
         for o in &out[..3] {
@@ -416,12 +624,8 @@ mod tests {
         ];
         let (all, results) = pool.run_batches(released.clone(), true);
         assert_eq!(all.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
-        let got: Vec<Outcome> = results.into_iter().map(|r| r.outcome.unwrap()).collect();
-        let want: Vec<Outcome> = pool
-            .run_batch_grouped(&reqs, &[3, 1, 1])
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let got: Vec<Outcome> = outcomes(results);
+        let want: Vec<Outcome> = outcomes(pool.run_batch_grouped(&reqs, &[3, 1, 1]));
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(g.logits, w.logits);
             assert_eq!(g.energy_mj, w.energy_mj);
@@ -433,8 +637,8 @@ mod tests {
         assert!(got[0].weight_dram_bytes < full / 2);
         // broadcast off: every request is its own domain.
         let (_, unshared) = pool.run_batches(released, false);
-        for r in unshared {
-            assert_eq!(r.outcome.unwrap().weight_dram_bytes, full);
+        for r in outcomes(unshared) {
+            assert_eq!(r.weight_dram_bytes, full);
         }
         // Empty dispatch is fine.
         let (none, empty) = pool.run_batches(Vec::new(), true);
@@ -475,18 +679,11 @@ mod tests {
                 make().infer_model(ModelId(m), &reqs[0].spikes, None).unwrap().weight_dram_bytes
             })
             .collect();
-        let reference: Vec<Outcome> = EnginePool::new(make(), 1)
-            .run_batch_grouped(&reqs, &groups)
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let reference: Vec<Outcome> =
+            outcomes(EnginePool::new(make(), 1).run_batch_grouped(&reqs, &groups));
         for workers in [2usize, 4, 8] {
             let pool = EnginePool::new(make(), workers);
-            let got: Vec<Outcome> = pool
-                .run_batch_grouped(&reqs, &groups)
-                .into_iter()
-                .map(|r| r.outcome.unwrap())
-                .collect();
+            let got: Vec<Outcome> = outcomes(pool.run_batch_grouped(&reqs, &groups));
             for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
                 assert_eq!(g.logits, r.logits, "req {i} workers={workers}");
                 assert_eq!(g.energy_mj, r.energy_mj, "req {i} workers={workers}");
@@ -528,11 +725,7 @@ mod tests {
             .sum();
         let shared_pool =
             EnginePool::new(Engine::sim_registry(two_tiny(), ArchConfig::default()), workers);
-        let shared_out: Vec<Outcome> = shared_pool
-            .run_batch_grouped(&reqs, &groups)
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let shared_out: Vec<Outcome> = outcomes(shared_pool.run_batch_grouped(&reqs, &groups));
         let shared = shared_pool.cache_stats().unwrap();
         assert_eq!(shared.misses, convs, "one transpose per (model, conv) per pool");
         assert_eq!(shared.entries, convs);
@@ -540,11 +733,7 @@ mod tests {
             Engine::sim_registry(two_tiny(), ArchConfig::default()),
             workers,
         );
-        let private_out: Vec<Outcome> = private_pool
-            .run_batch_grouped(&reqs, &groups)
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let private_out: Vec<Outcome> = outcomes(private_pool.run_batch_grouped(&reqs, &groups));
         let private = private_pool.cache_stats().unwrap();
         assert_eq!(private.misses, workers as u64 * convs, "each worker re-transposes");
         // ≥ (workers-1)/workers fewer transposes — the acceptance bound.
@@ -578,25 +767,17 @@ mod tests {
         };
         let spikes0 = ds_spikes(&ds, 0);
         let full: Vec<u64> = (0..2usize)
-            .map(|m| {
-                engine().infer_model(ModelId(m), &spikes0, None).unwrap().weight_dram_bytes
-            })
+            .map(|m| engine().infer_model(ModelId(m), &spikes0, None).unwrap().weight_dram_bytes)
             .collect();
         let pool = EnginePool::new(engine(), 2);
-        let paired: Vec<Outcome> = pool
-            .run_batch(&[req(0, 0), req(1, 0), req(2, 1), req(3, 1)])
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let paired: Vec<Outcome> =
+            outcomes(pool.run_batch(&[req(0, 0), req(1, 0), req(2, 1), req(3, 1)]));
         for (i, o) in paired.iter().enumerate() {
             let m = i / 2;
             assert!(o.weight_dram_bytes < full[m], "req {i} shares its 2-domain");
         }
-        let alternating: Vec<Outcome> = pool
-            .run_batch(&[req(0, 0), req(1, 1), req(2, 0), req(3, 1)])
-            .into_iter()
-            .map(|r| r.outcome.unwrap())
-            .collect();
+        let alternating: Vec<Outcome> =
+            outcomes(pool.run_batch(&[req(0, 0), req(1, 1), req(2, 0), req(3, 1)]));
         for (i, o) in alternating.iter().enumerate() {
             assert_eq!(o.weight_dram_bytes, full[i % 2], "req {i} is its own domain");
         }
@@ -643,5 +824,174 @@ mod tests {
         let pool: crate::coordinator::EnginePool =
             EnginePool::new(Engine::golden(zoo::tiny(10, 2)), 2);
         let _: Vec<super::BatchResult> = pool.run_batch(&batch(1));
+    }
+
+    #[test]
+    fn fault_panic_recovery_respawns_and_completes() {
+        // One injected panic (request 2, first attempt only): the worker
+        // dies, its chunk requeues, the retry succeeds, the worker
+        // respawns — every request completes and the results match the
+        // fault-free run bit-for-bit.
+        let reqs = batch(8);
+        let want: Vec<Outcome> = outcomes(
+            EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 4)
+                .run_batch(&reqs),
+        );
+        let mut pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 4);
+        pool.set_fault_plan(Some(FaultPlan {
+            panic_requests: vec![2],
+            ..FaultPlan::seeded(1)
+        }));
+        let results = pool.run_batch(&reqs);
+        for (i, r) in results.iter().enumerate() {
+            let got = r.outcome.as_ref().expect("every request recovers");
+            assert_eq!(got.logits, want[i].logits, "req {i}");
+            assert_eq!(got.energy_mj, want[i].energy_mj, "req {i}");
+            assert_eq!(r.retries, u32::from(i == 2), "only request 2 retried");
+        }
+        let stats = pool.reliability();
+        assert_eq!(stats.worker_panics, 1);
+        assert_eq!(stats.injected_panics, 1);
+        assert_eq!(stats.respawns, 1, "the dead worker was replaced");
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.backoff_ticks, 1, "retry 1 waits 1 modeled tick");
+        assert_eq!(stats.failed, 0);
+        // The respawned replica still shares the pool's weight cache.
+        let cache = pool.cache_stats().unwrap();
+        assert_eq!(cache.entries, 2, "tiny's two convs, one shared cache");
+    }
+
+    #[test]
+    fn fault_retry_exhaustion_keeps_siblings() {
+        // A persistent engine error on request 1 exhausts the retry
+        // budget; its siblings complete with fault-free results.
+        let reqs = batch(6);
+        let want: Vec<Outcome> = outcomes(
+            EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2)
+                .run_batch(&reqs),
+        );
+        let mut pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        pool.set_fault_plan(Some(FaultPlan {
+            error_requests: vec![1],
+            persistent: true,
+            ..FaultPlan::seeded(1)
+        }));
+        pool.set_max_retries(2);
+        let results = pool.run_batch(&reqs);
+        match &results[1].outcome {
+            Err(ServeError::Engine { retries, message }) => {
+                assert_eq!(*retries, 2, "budget: one attempt + two retries");
+                assert!(message.contains("injected engine error"), "{message}");
+            }
+            other => panic!("request 1 must fail as an engine error, got {:?}", other.is_ok()),
+        }
+        assert_eq!(results[1].retries, 2);
+        for (i, r) in results.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            let got = r.outcome.as_ref().expect("siblings complete");
+            assert_eq!(got.logits, want[i].logits, "req {i} unaffected");
+            assert_eq!(r.retries, 0, "req {i} never retried");
+        }
+        let stats = pool.reliability();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.injected_errors, 3, "three attempts, three injections");
+        assert_eq!(stats.backoff_ticks, 1 + 2, "linear backoff over two retries");
+        assert_eq!(stats.respawns, 0, "errors never kill a worker");
+    }
+
+    #[test]
+    fn fault_results_and_stats_deterministic_across_worker_counts() {
+        // A seeded rate plan replays the same failure scenario on every
+        // pool shape: outcomes (including which requests failed and with
+        // how many retries) and the reliability counters are identical at
+        // 1 and 4 workers.
+        let reqs = batch(12);
+        // Rates exercise the seeded draws; the explicit ids guarantee at
+        // least one panic and one error fire whatever the draws say.
+        let plan = FaultPlan {
+            panic_rate: 0.2,
+            error_rate: 0.25,
+            stall_rate: 0.2,
+            corrupt_rate: 0.1,
+            panic_requests: vec![3],
+            error_requests: vec![7],
+            ..FaultPlan::seeded(99)
+        };
+        assert!(plan.is_active());
+        let run = |workers: usize| {
+            let mut pool =
+                EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), workers);
+            pool.set_fault_plan(Some(plan.clone()));
+            pool.set_max_retries(1); // tight budget so some requests fail
+            let results = pool.run_batch(&reqs);
+            let summary: Vec<(Result<Vec<f32>, ServeError>, u32)> = results
+                .into_iter()
+                .map(|r| (r.outcome.map(|o| o.logits), r.retries))
+                .collect();
+            (summary, pool.reliability())
+        };
+        let (res1, stats1) = run(1);
+        let (res4, stats4) = run(4);
+        assert_eq!(res1, res4, "response set is worker-count independent");
+        assert_eq!(stats1, stats4, "reliability counters are worker-count independent");
+        assert!(stats1.injected_panics > 0, "plan actually fired: {stats1:?}");
+        assert!(stats1.injected_errors > 0, "{stats1:?}");
+        assert_eq!(stats1.respawns, stats1.worker_panics, "every panic respawns");
+    }
+
+    #[test]
+    fn fault_inactive_plan_is_bit_identical_to_no_plan() {
+        // A plan naming only request ids outside the batch is active but
+        // never fires: results and cache counters match the plan-less pool
+        // exactly, and the reliability stats stay quiet.
+        let reqs = batch(5);
+        let plain = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        let want: Vec<Outcome> = outcomes(plain.run_batch(&reqs));
+        let mut pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        pool.set_fault_plan(Some(FaultPlan {
+            panic_requests: vec![999],
+            ..FaultPlan::seeded(3)
+        }));
+        let got: Vec<Outcome> = outcomes(pool.run_batch(&reqs));
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.logits, w.logits);
+            assert_eq!(g.energy_mj, w.energy_mj);
+        }
+        assert_eq!(pool.cache_stats().unwrap(), plain.cache_stats().unwrap());
+        assert!(pool.reliability().is_quiet());
+        // A quiet plan is dropped outright at install time.
+        pool.set_fault_plan(Some(FaultPlan::seeded(3)));
+        assert!(outcomes(pool.run_batch(&reqs)).len() == 5);
+    }
+
+    #[test]
+    fn fault_cache_corruption_refetches_transparently() {
+        // An injected corruption on request 2 poisons the model's resident
+        // transposes mid-batch; the next lookups silently re-transpose, so
+        // outputs never change — only the cache counters move. One worker
+        // keeps the execution order (and thus the counters) deterministic.
+        let reqs = batch(5);
+        let plain = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 1);
+        let want: Vec<Outcome> = outcomes(plain.run_batch(&reqs));
+        let clean = plain.cache_stats().unwrap();
+        let mut pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 1);
+        pool.set_fault_plan(Some(FaultPlan {
+            corrupt_requests: vec![2],
+            ..FaultPlan::seeded(1)
+        }));
+        let got: Vec<Outcome> = outcomes(pool.run_batch(&reqs));
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "req {i}: corruption is invisible functionally");
+            assert_eq!(g.energy_mj, w.energy_mj, "req {i}");
+        }
+        let stats = pool.cache_stats().unwrap();
+        assert_eq!(stats.corruptions, 2, "tiny's two resident convs were poisoned");
+        assert_eq!(stats.misses, clean.misses + 2, "both re-transposed on touch");
+        assert_eq!(stats.entries, clean.entries, "replaced in place, not grown");
+        assert_eq!(pool.reliability().injected_corruptions, 1);
+        assert_eq!(pool.reliability().failed, 0, "corruption never fails a request");
     }
 }

@@ -1,4 +1,6 @@
-//! Request/response types of the serving loop.
+//! Request/response types of the serving loop, including the error
+//! taxonomy ([`ServeError`], [`RequestOutcome`]) the reliability layer
+//! reports instead of panicking.
 
 use crate::coordinator::registry::ModelId;
 use crate::snn::SpikeMap;
@@ -22,6 +24,75 @@ pub struct InferRequest {
     pub arrival_tick: u64,
 }
 
+/// Why a request did not complete normally — the serving layer's error
+/// taxonomy. Every variant is terminal for its request but never for the
+/// run: shed requests are rejected at admission, engine/panic failures
+/// are surfaced after the pool's retry budget is exhausted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control rejected the request: its model's queue was at
+    /// the configured depth limit.
+    Shed {
+        /// Model whose queue was full.
+        model: ModelId,
+        /// Queue depth at rejection.
+        depth: u64,
+        /// Configured per-model depth limit.
+        limit: u64,
+    },
+    /// The engine returned an error on every attempt.
+    Engine {
+        /// Retries performed before giving up.
+        retries: u32,
+        /// The final attempt's error message.
+        message: String,
+    },
+    /// The executing worker panicked on every attempt (each panic also
+    /// quarantined and respawned the worker).
+    Panic {
+        /// Retries performed before giving up.
+        retries: u32,
+        /// The final panic payload.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed { model, depth, limit } => {
+                write!(f, "shed: {model} queue depth {depth} at limit {limit}")
+            }
+            ServeError::Engine { retries, message } => {
+                write!(f, "engine error after {retries} retries: {message}")
+            }
+            ServeError::Panic { retries, message } => {
+                write!(f, "worker panic after {retries} retries: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// How a request ended, carried on its [`InferResponse`]: metrics count
+/// `Ok` responses in accuracy/latency/energy and keep `Shed`/`Failed` in
+/// their own availability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Completed normally.
+    #[default]
+    Ok,
+    /// Rejected by admission control — never executed, never accounted in
+    /// accuracy or energy.
+    Shed,
+    /// Exhausted the pool's retry budget.
+    Failed {
+        /// Retries performed before the request was abandoned.
+        retries: u32,
+    },
+}
+
 /// One inference response.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
@@ -43,12 +114,58 @@ pub struct InferResponse {
     pub total_spikes: u64,
     /// Synaptic operations.
     pub sops: u64,
+    /// How the request ended ([`RequestOutcome::Ok`] unless shed/failed;
+    /// non-`Ok` responses carry zeroed functional fields).
+    pub outcome: RequestOutcome,
+    /// Failed attempts retried before this response (0 on the fault-free
+    /// path; also set for `Ok` responses that recovered via retry).
+    pub retries: u32,
 }
 
 impl InferResponse {
-    /// Whether the prediction matched the label (None if unlabelled).
+    /// Whether the prediction matched the label (None if unlabelled, and
+    /// None for shed/failed responses, which never predicted anything).
     pub fn correct(&self) -> Option<bool> {
+        if self.outcome != RequestOutcome::Ok {
+            return None;
+        }
         self.label.map(|l| l == self.predicted)
+    }
+
+    /// A shed marker response: admission control rejected the request, so
+    /// every functional field is zeroed and only the identity survives.
+    pub fn shed(id: u64, model: ModelId) -> Self {
+        InferResponse {
+            id,
+            model,
+            predicted: 0,
+            label: None,
+            device_ms: 0.0,
+            host_ms: 0.0,
+            energy_mj: 0.0,
+            total_spikes: 0,
+            sops: 0,
+            outcome: RequestOutcome::Shed,
+            retries: 0,
+        }
+    }
+
+    /// A failure marker response: the pool exhausted its retry budget on
+    /// this request.
+    pub fn failed(id: u64, model: ModelId, retries: u32) -> Self {
+        InferResponse {
+            id,
+            model,
+            predicted: 0,
+            label: None,
+            device_ms: 0.0,
+            host_ms: 0.0,
+            energy_mj: 0.0,
+            total_spikes: 0,
+            sops: 0,
+            outcome: RequestOutcome::Failed { retries },
+            retries,
+        }
     }
 }
 
@@ -69,6 +186,8 @@ mod tests {
             energy_mj: 0.5,
             total_spikes: 10,
             sops: 100,
+            outcome: RequestOutcome::Ok,
+            retries: 0,
         };
         assert_eq!(r.correct(), Some(true));
         let mut r2 = r.clone();
@@ -89,5 +208,31 @@ mod tests {
         assert_eq!(req.model, ModelId(2));
         assert_eq!(req.model.to_string(), "m2");
         assert_eq!(req.arrival_tick, 0, "unsubmitted requests carry tick 0");
+    }
+
+    #[test]
+    fn fault_outcome_markers_never_count_as_correct() {
+        let shed = InferResponse::shed(7, ModelId(1));
+        assert_eq!(shed.outcome, RequestOutcome::Shed);
+        assert_eq!(shed.correct(), None, "shed requests have no prediction");
+        assert_eq!(shed.energy_mj, 0.0);
+        let mut failed = InferResponse::failed(8, ModelId(0), 2);
+        assert_eq!(failed.outcome, RequestOutcome::Failed { retries: 2 });
+        assert_eq!(failed.retries, 2);
+        // Even a label sneaking onto a failed response never scores.
+        failed.label = Some(0);
+        assert_eq!(failed.correct(), None);
+        assert_eq!(RequestOutcome::default(), RequestOutcome::Ok);
+    }
+
+    #[test]
+    fn fault_serve_error_displays_taxonomy() {
+        let shed = ServeError::Shed { model: ModelId(2), depth: 9, limit: 8 };
+        assert!(shed.to_string().contains("m2 queue depth 9 at limit 8"), "{shed}");
+        let eng = ServeError::Engine { retries: 2, message: "boom".into() };
+        assert!(eng.to_string().contains("after 2 retries: boom"), "{eng}");
+        let panic = ServeError::Panic { retries: 1, message: "unwound".into() };
+        assert!(panic.to_string().contains("worker panic"), "{panic}");
+        let _: &dyn std::error::Error = &eng;
     }
 }

@@ -109,6 +109,20 @@ impl SchedPolicy {
         }
     }
 
+    /// SLA-derived per-model admission depth (`--max-queue-depth sla`): a
+    /// deadline of `d` ticks means a request arriving behind more than `d`
+    /// queued peers cannot be drained before its deadline ages out, so the
+    /// queue is bounded at `max(d, batch_size)` (never starving a batch).
+    /// Policies without a deadline have no SLA to derive a bound from.
+    pub fn sla_queue_limit(&self, batch_size: usize) -> Option<usize> {
+        match self {
+            SchedPolicy::DeadlineAging { deadline } => {
+                Some((*deadline as usize).max(batch_size).max(1))
+            }
+            SchedPolicy::FifoById | SchedPolicy::WeightedFair { .. } => None,
+        }
+    }
+
     /// Build the run's policy from `--sched` / `--sla-weights` /
     /// `--sla-deadline`: `wfair` weights fall back to the registry's
     /// `--model-mix` traffic weights when `--sla-weights` is absent, and a
@@ -302,6 +316,17 @@ mod tests {
         );
         cfg.sched = "lifo".into();
         assert!(SchedPolicy::from_run_cfg(&cfg, &registry).is_err());
+    }
+
+    #[test]
+    fn fault_sla_queue_limit_derives_from_deadline_only() {
+        let deadline = SchedPolicy::DeadlineAging { deadline: 6 };
+        assert_eq!(deadline.sla_queue_limit(4), Some(6), "deadline dominates");
+        assert_eq!(deadline.sla_queue_limit(8), Some(8), "never below a full batch");
+        let tight = SchedPolicy::DeadlineAging { deadline: 0 };
+        assert_eq!(tight.sla_queue_limit(0), Some(1), "clamped to at least one");
+        assert_eq!(SchedPolicy::FifoById.sla_queue_limit(4), None);
+        assert_eq!(SchedPolicy::WeightedFair { weights: vec![1, 2] }.sla_queue_limit(4), None);
     }
 
     #[test]

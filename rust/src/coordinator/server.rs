@@ -11,17 +11,19 @@
 //! scheduling). The PJRT cross-checker stays on the submitting thread
 //! (xla handles are not `Send`).
 
+use crate::config::run_cfg::QUEUE_DEPTH_SLA;
 use crate::config::RunConfig;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Admission, Batcher};
 use crate::coordinator::engine::Engine;
+use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::EnginePool;
 use crate::coordinator::registry::ModelId;
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{InferRequest, InferResponse, RequestOutcome, ServeError};
 use crate::coordinator::sched::SchedPolicy;
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
 
 /// The serving coordinator.
@@ -36,6 +38,9 @@ pub struct Coordinator {
     pub crosscheck_mismatches: u64,
     /// Cross-checks performed.
     pub crosschecks: u64,
+    /// Cross-check inferences that errored (logged and skipped — a broken
+    /// cross-checker must never abort the serving run).
+    pub crosscheck_errors: u64,
 }
 
 impl Coordinator {
@@ -59,6 +64,7 @@ impl Coordinator {
             crosscheck,
             crosscheck_mismatches: 0,
             crosschecks: 0,
+            crosscheck_errors: 0,
         }
     }
 
@@ -86,7 +92,23 @@ impl Coordinator {
     pub fn serve_dataset(&mut self, ds: &Dataset, n: usize) -> Result<Metrics> {
         let n = n.min(ds.len());
         let policy = SchedPolicy::from_run_cfg(&self.cfg, self.pool.engine().registry())?;
-        let mut batcher = Batcher::with_policy(self.cfg.batch_size, policy);
+        // Reliability wiring: the fault plan (if any), the per-request
+        // retry budget and the admission depth limit all come from the run
+        // config, and loading errors are loud — a typo'd plan must not
+        // silently serve fault-free.
+        self.pool.set_fault_plan(FaultPlan::from_run_cfg(&self.cfg)?);
+        self.pool.set_max_retries(self.cfg.max_retries as u32);
+        self.pool.reset_reliability();
+        let limit = match self.cfg.max_queue_depth {
+            0 => None,
+            QUEUE_DEPTH_SLA => Some(
+                policy
+                    .sla_queue_limit(self.cfg.batch_size)
+                    .ok_or_else(|| anyhow!("--max-queue-depth sla requires --sched deadline"))?,
+            ),
+            d => Some(d),
+        };
+        let mut batcher = Batcher::with_limits(self.cfg.batch_size, policy, limit);
         let mut metrics = Metrics::default();
         let mut pending: Vec<(Vec<InferRequest>, Instant)> = Vec::new();
         for i in 0..n {
@@ -105,21 +127,45 @@ impl Coordinator {
                     && model == ModelId(0)
                     && i % self.cfg.crosscheck_every == 0
                 {
-                    let sim_pred =
-                        self.pool.engine().infer_model(model, &spikes, None)?.predicted;
-                    let hlo_pred = hlo.predict(&spikes).context("cross-check inference")?;
-                    self.crosschecks += 1;
-                    if sim_pred != hlo_pred {
-                        self.crosscheck_mismatches += 1;
-                        eprintln!(
-                            "cross-check mismatch on image {i}: sim={sim_pred} hlo={hlo_pred}"
-                        );
+                    // A failing cross-check inference degrades to a logged
+                    // counter — the checker is advisory and must never
+                    // abort a serving run.
+                    let pair = self
+                        .pool
+                        .engine()
+                        .infer_model(model, &spikes, None)
+                        .map(|out| out.predicted)
+                        .and_then(|sim| {
+                            let hlo = hlo.predict(&spikes).context("cross-check inference")?;
+                            Ok((sim, hlo))
+                        });
+                    match pair {
+                        Ok((sim_pred, hlo_pred)) => {
+                            self.crosschecks += 1;
+                            if sim_pred != hlo_pred {
+                                self.crosscheck_mismatches += 1;
+                                eprintln!(
+                                    "cross-check mismatch on image {i}: sim={sim_pred} hlo={hlo_pred}"
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            self.crosscheck_errors += 1;
+                            eprintln!(
+                                "warning: cross-check failed on image {i} ({e:#}); serving continues"
+                            );
+                        }
                     }
                 }
             }
             let req =
                 InferRequest { id: i as u64, model, spikes, label: Some(label), arrival_tick: 0 };
-            batcher.push(req);
+            if let Admission::Shed { depth, limit } = batcher.push(req) {
+                // Shed at admission: never executed, never ticked — only
+                // the availability counters move.
+                eprintln!("shed request {i} ({model}): queue depth {depth} at limit {limit}");
+                metrics.record(&InferResponse::shed(i as u64, model));
+            }
             while let Some(batch) = batcher.pop_ready() {
                 pending.push((batch, Instant::now()));
             }
@@ -136,6 +182,7 @@ impl Coordinator {
             metrics.weight_cache = stats;
         }
         metrics.absorb_sched(batcher.policy(), batcher.sched_stats());
+        metrics.absorb_reliability(&self.pool.reliability());
         Ok(metrics)
     }
 
@@ -176,10 +223,21 @@ impl Coordinator {
                         energy_mj: out.energy_mj,
                         total_spikes: out.total_spikes,
                         sops: out.sops,
+                        outcome: RequestOutcome::Ok,
+                        retries: result.retries,
                     });
                 }
                 Err(e) => {
-                    eprintln!("worker: inference failed for request {}: {e:#}", req.id);
+                    // Terminal failure (retry budget exhausted): recorded,
+                    // never a panic — one bad request must not end the run.
+                    eprintln!("worker: request {} failed permanently: {e}", req.id);
+                    let retries = match &e {
+                        ServeError::Engine { retries, .. } | ServeError::Panic { retries, .. } => {
+                            *retries
+                        }
+                        ServeError::Shed { .. } => 0,
+                    };
+                    metrics.record(&InferResponse::failed(req.id, req.model, retries));
                 }
             }
         }

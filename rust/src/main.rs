@@ -6,7 +6,7 @@ use anyhow::{bail, Context, Result};
 use neural::arch::{ResourceModel, ResourceReport};
 use neural::baselines::BaselineKind;
 use neural::cli::{resolve_host_threads, Args, USAGE};
-use neural::config::run_cfg::{parse_list, parse_mix};
+use neural::config::run_cfg::{parse_list, parse_mix, parse_queue_depth};
 use neural::config::{ArchConfig, RunConfig};
 use neural::coordinator::{Coordinator, Engine, ModelRegistry};
 use neural::data::{Dataset, SynthCifar};
@@ -123,6 +123,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         },
         crosscheck_every: args.get_usize("crosscheck-every", 0)?,
         hlo_path: args.get("hlo").map(|s| s.to_string()),
+        max_queue_depth: match args.get("max-queue-depth") {
+            Some(s) => parse_queue_depth(s)?,
+            None => 0,
+        },
+        max_retries: args.get_usize("max-retries", 2)?,
+        fault_plan: args.get("fault-plan").map(|s| s.to_string()),
+        fault_seed: match args.get("fault-seed") {
+            Some(s) => Some(
+                s.parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("--fault-seed {s:?} is not an integer"))?,
+            ),
+            None => None,
+        },
         ..Default::default()
     };
     let registry = build_registry(args, &run_cfg)?;
@@ -178,16 +191,19 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(line) = metrics.cache_line() {
         println!("{line}");
     }
+    if let Some(line) = metrics.reliability_line() {
+        println!("{line}");
+    }
     println!(
         "host: wall={:.2}s throughput={:.1} img/s p99={:.2}ms",
         wall,
         metrics.completed as f64 / wall.max(1e-9),
         metrics.host_p99()
     );
-    if coord.crosschecks > 0 {
+    if coord.crosschecks > 0 || coord.crosscheck_errors > 0 {
         println!(
-            "cross-check: {}/{} mismatches vs PJRT golden",
-            coord.crosscheck_mismatches, coord.crosschecks
+            "cross-check: {}/{} mismatches vs PJRT golden ({} errored)",
+            coord.crosscheck_mismatches, coord.crosschecks, coord.crosscheck_errors
         );
     }
     Ok(())

@@ -1,0 +1,179 @@
+//! End-to-end fault-injection tests: a serving run under a deterministic
+//! [`FaultPlan`] must degrade gracefully (shed / retry / fail / respawn)
+//! while staying bit-identical across worker counts, and a fault-free run
+//! must be indistinguishable from the pre-reliability coordinator.
+
+use neural::config::run_cfg::QUEUE_DEPTH_SLA;
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine, Metrics, ModelRegistry, ReliabilityStats};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::zoo;
+
+fn dataset(n: usize) -> Dataset {
+    Dataset::from_synth(&SynthCifar::new(10, 2), n)
+}
+
+fn two_tiny() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 5), 1);
+    reg.register(zoo::tiny(10, 11), 1);
+    reg
+}
+
+/// Write a fault-plan INI to the temp dir and return its path (each test
+/// uses a distinct file name, so parallel tests never collide).
+fn write_plan(name: &str, body: &str) -> String {
+    let path = std::env::temp_dir().join(name);
+    std::fs::write(&path, body).expect("write fault plan");
+    path.to_string_lossy().into_owned()
+}
+
+/// The comparable slice of a degraded run: availability counters, the
+/// completion sequence and the supervision stats — everything the
+/// acceptance criteria require to be worker-count independent.
+fn snapshot(m: &Metrics) -> (u64, u64, u64, u64, Vec<u64>, ReliabilityStats, Vec<(u64, u64, u64)>) {
+    let per: Vec<(u64, u64, u64)> =
+        m.per_model().values().map(|mm| (mm.completed, mm.shed, mm.failed)).collect();
+    (m.completed, m.shed, m.failed, m.retried, m.response_order.clone(), m.reliability, per)
+}
+
+#[test]
+fn fault_explicit_plan_identical_across_worker_counts() {
+    // Persistent explicit faults: request 2 panics its worker on every
+    // attempt, request 5 errors on every attempt; with a retry budget of 1
+    // both exhaust deterministically while every sibling completes.
+    let path = write_plan(
+        "neural_fault_explicit.ini",
+        "[fault]\npanic_requests = 2\nerror_requests = 5\npersistent = true\n",
+    );
+    let data = dataset(16);
+    let mut runs = Vec::new();
+    for workers in [1usize, 4] {
+        let engine = Engine::golden_registry(two_tiny());
+        let cfg = RunConfig {
+            batch_size: 2,
+            workers,
+            fault_plan: Some(path.clone()),
+            max_retries: 1,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(engine, cfg);
+        let m = coord.serve_dataset(&data, 16).unwrap();
+        // Both doomed requests exhaust retries; nothing else is touched.
+        assert_eq!(m.completed, 14, "workers {workers}");
+        assert_eq!(m.failed, 2);
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.retried, 2, "one retry each before exhaustion");
+        assert!((m.availability() - 87.5).abs() < 1e-9);
+        let r = m.reliability;
+        assert_eq!(r.injected_panics, 2, "request 2: attempts 0 and 1");
+        assert_eq!(r.injected_errors, 2, "request 5: attempts 0 and 1");
+        assert_eq!(r.worker_panics, 2);
+        assert_eq!(r.respawns, 2, "every caught panic respawns the worker");
+        assert_eq!(r.retries, 2);
+        assert_eq!(r.backoff_ticks, 2, "each requeue backs off attempt+1 ticks");
+        assert_eq!(r.failed, 2);
+        let line = m.reliability_line().expect("a degraded run reports reliability");
+        assert!(line.contains("availability=87.50%"), "{line}");
+        assert!(line.contains("respawns=2"), "{line}");
+        assert_eq!(m.per_model().values().map(|mm| mm.failed).sum::<u64>(), 2);
+        runs.push(snapshot(&m));
+    }
+    assert_eq!(runs[0], runs[1], "fault outcomes must not depend on --workers");
+}
+
+#[test]
+fn fault_rate_plan_identical_across_worker_counts() {
+    // Seeded rates (the soak form): whatever fires, it must fire
+    // identically for 1 and 4 workers because decide() never sees worker
+    // identity — the full response set and every counter must match.
+    let path = write_plan(
+        "neural_fault_rates.ini",
+        "[fault]\nseed = 99\npanic_rate = 0.15\nerror_rate = 0.25\n",
+    );
+    let data = dataset(16);
+    let mut runs = Vec::new();
+    for workers in [1usize, 4] {
+        let engine = Engine::golden_registry(two_tiny());
+        let cfg = RunConfig {
+            batch_size: 2,
+            workers,
+            fault_plan: Some(path.clone()),
+            max_retries: 1,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(engine, cfg);
+        let m = coord.serve_dataset(&data, 16).unwrap();
+        assert_eq!(m.completed + m.failed, 16, "every request resolves");
+        assert_eq!(m.reliability.respawns, m.reliability.worker_panics);
+        runs.push(snapshot(&m));
+    }
+    assert_eq!(runs[0], runs[1], "rate draws are keyed on (request, attempt) only");
+}
+
+#[test]
+fn fault_shed_requests_never_enter_accuracy_or_energy() {
+    // A depth limit below the batch size caps the queue before fifo can
+    // ever release it: 2 requests are admitted, everything else is shed at
+    // the door, and the flush serves the admitted pair. Shed requests must
+    // appear in no functional summary — only the availability counters.
+    let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+    let cfg = RunConfig { batch_size: 4, workers: 2, max_queue_depth: 2, ..Default::default() };
+    let mut coord = Coordinator::new(engine, cfg);
+    let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+    assert_eq!(m.completed, 2, "only the admitted requests execute");
+    assert_eq!(m.shed, 8);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.offered(), 10);
+    assert!((m.availability() - 20.0).abs() < 1e-9);
+    assert_eq!(m.labelled, 2, "shed requests never enter accuracy");
+    assert_eq!(m.energy_mj.count(), 2, "shed requests never enter energy");
+    assert_eq!(m.device_ms.count(), 2);
+    assert_eq!(m.response_order.len(), 2);
+    let line = m.reliability_line().expect("shedding surfaces the reliability line");
+    assert!(line.contains("shed=8"), "{line}");
+    assert!(line.contains("availability=20.00%"), "{line}");
+}
+
+#[test]
+fn fault_sla_depth_limit_requires_deadline_policy() {
+    // `--max-queue-depth sla` derives the bound from the deadline, so it
+    // is an error under fifo and a working limit under deadline.
+    let fifo = RunConfig { max_queue_depth: QUEUE_DEPTH_SLA, ..Default::default() };
+    let mut coord = Coordinator::new(Engine::golden(zoo::tiny(10, 5)), fifo);
+    let err = coord.serve_dataset(&dataset(4), 4).unwrap_err().to_string();
+    assert!(err.contains("sla"), "{err}");
+    let deadline = RunConfig {
+        max_queue_depth: QUEUE_DEPTH_SLA,
+        sched: "deadline".into(),
+        sla_deadline: 8,
+        batch_size: 2,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(Engine::golden(zoo::tiny(10, 5)), deadline);
+    let m = coord.serve_dataset(&dataset(10), 10).unwrap();
+    assert_eq!(m.completed, 10, "a deadline-derived bound admits a drained queue");
+    assert_eq!(m.shed, 0);
+}
+
+#[test]
+fn fault_never_firing_plan_matches_no_plan_bit_exactly() {
+    // An installed plan whose faults never fire (explicit ids outside the
+    // trace) must leave the run indistinguishable from no plan at all:
+    // same summary, same completion order, no reliability line.
+    let path = write_plan("neural_fault_never.ini", "[fault]\npanic_requests = 999\n");
+    let run = |plan: Option<String>| {
+        let engine = Engine::sim(zoo::tiny(10, 5), ArchConfig::default());
+        let cfg = RunConfig { batch_size: 2, workers: 2, fault_plan: plan, ..Default::default() };
+        let mut coord = Coordinator::new(engine, cfg);
+        coord.serve_dataset(&dataset(8), 8).unwrap()
+    };
+    let clean = run(None);
+    let planned = run(Some(path));
+    assert_eq!(clean.summary_line(), planned.summary_line());
+    assert_eq!(clean.response_order, planned.response_order);
+    assert_eq!(clean.energy_mj.mean(), planned.energy_mj.mean());
+    assert!(planned.reliability.is_quiet());
+    assert!(planned.reliability_line().is_none(), "no fault fired, nothing to report");
+    assert_eq!(planned.shed + planned.failed + planned.retried, 0);
+}
