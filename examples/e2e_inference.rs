@@ -48,8 +48,11 @@ fn main() -> Result<()> {
     };
     let mut coord = Coordinator::new(engine, run_cfg);
 
+    // Top-level display timing around the whole run — the pattern the
+    // determinism lint allows (wall time outside the serving path).
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
-    let mut metrics = coord.serve_dataset(&ds, images)?;
+    let metrics = coord.serve_dataset(&ds, images)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n== end-to-end results (paper headline metrics) ==");
@@ -59,7 +62,6 @@ fn main() -> Result<()> {
     println!("energy/image    : {:.3} mJ (paper: 5.56 mJ)", metrics.energy_mj.mean());
     println!("total spikes/img: {:.0}   (paper: 76K)", metrics.spikes.mean());
     println!("host throughput : {:.1} img/s (wall {:.2}s)", metrics.completed as f64 / wall, wall);
-    println!("host p99        : {:.2} ms", metrics.host_p99());
     if coord.crosschecks > 0 {
         println!(
             "PJRT cross-check: {}/{} mismatches",

@@ -163,7 +163,10 @@ fn transpose_weights(weights: &[i8], cout: usize, taps: usize, wt: &mut [i32]) {
 /// [`WeightCache::clear`].
 #[derive(Debug, Default)]
 pub struct WeightCache {
-    entries: std::collections::HashMap<usize, CachedWt>,
+    /// BTreeMap, not HashMap: nothing iterates this map today, but the
+    /// determinism contract (detlint: unordered-iter) bans hash-ordered
+    /// state anywhere a future drain could leak order into results.
+    entries: std::collections::BTreeMap<usize, CachedWt>,
     /// Reuses served across the cache lifetime.
     pub hits: u64,
     /// Transposes performed (cold or invalidated entries).
@@ -324,7 +327,12 @@ impl SharedEntry {
 
 #[derive(Debug, Default)]
 struct SharedCacheInner {
-    map: std::collections::HashMap<(usize, usize), SharedEntry>,
+    /// Keyed `(model, node)` in a BTreeMap so the eviction scan and
+    /// [`SharedWeightCache::corrupt_model`]'s sweep walk entries in key
+    /// order — victim choice already tie-breaks on `seq`, but the scan
+    /// order itself must not depend on a hasher either (detlint:
+    /// unordered-iter).
+    map: std::collections::BTreeMap<(usize, usize), SharedEntry>,
     bytes: u64,
     next_seq: u64,
 }

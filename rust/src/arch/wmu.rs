@@ -16,8 +16,8 @@
 //! consumer over the port — n images, one fetch — instead of the retired
 //! scalar `1/n` amortization credit.
 
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// One logged weight stream: which node, how many bytes, how long the port
@@ -103,7 +103,10 @@ struct NodeFetch {
 
 #[derive(Debug, Default)]
 struct Ledger {
-    nodes: HashMap<usize, NodeFetch>,
+    /// Keyed by node id in a BTreeMap so any future drain/inspection of
+    /// the ledger walks nodes in id order — broadcast accounting must
+    /// never depend on hash-iteration order (detlint: unordered-iter).
+    nodes: BTreeMap<usize, NodeFetch>,
     dram_bytes: u64,
     transactions: u64,
 }

@@ -69,6 +69,11 @@ impl BenchRunner {
 
     /// Time `f`, which returns a checksum-ish value to keep the optimizer
     /// honest; prints and returns the result.
+    ///
+    /// Wall-clock measurement is this harness's whole job, so the bench
+    /// tree is allowlisted for detlint's `wall-clock` rule and the clippy
+    /// disallowed-method wall is waived here.
+    #[allow(clippy::disallowed_methods)]
     pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
         for _ in 0..self.warmup {
             std::hint::black_box(f());

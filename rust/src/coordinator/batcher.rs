@@ -259,7 +259,12 @@ impl Batcher {
             _ => None,
         };
         let now = self.clock.now();
-        let q = self.queues.get_mut(&model).expect("release targets an existing queue");
+        // Every caller picks `model` from `self.queues`, so the lookup
+        // cannot miss; if it ever does, releasing nothing degrades
+        // gracefully instead of panicking mid-dispatch.
+        let Some(q) = self.queues.get_mut(&model) else {
+            return Vec::new();
+        };
         let n = max_n.min(q.len());
         let batch: Vec<InferRequest> = q.drain(..n).collect();
         let completion = self.clock.stamp_drain();

@@ -5,7 +5,7 @@ use crate::coordinator::fault::ReliabilityStats;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferResponse, RequestOutcome};
 use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
-use crate::util::{stats::percentile, Summary};
+use crate::util::Summary;
 use std::collections::BTreeMap;
 
 /// Per-model slice of a serving run (the multi-tenant breakdown).
@@ -101,8 +101,6 @@ pub struct Metrics {
     pub labelled: u64,
     /// Device-latency summary (ms).
     pub device_ms: Summary,
-    /// Host-latency summary (ms).
-    pub host_ms: Summary,
     /// Energy per image (mJ).
     pub energy_mj: Summary,
     /// Total spikes summary.
@@ -145,8 +143,13 @@ pub struct Metrics {
     /// The pool's supervision counters, absorbed at the end of a run via
     /// [`Metrics::absorb_reliability`].
     pub reliability: ReliabilityStats,
+    /// Display-only run wall time in seconds, stamped by the CLI *after*
+    /// the deterministic serving path finished (`None` until then). The
+    /// only host-time-derived value in the metrics, and nothing merged or
+    /// compared across runs reads it — detlint's `wall-clock` rule keeps
+    /// the producer out of the serving path.
+    pub wall_s: Option<f64>,
     per_model: BTreeMap<ModelId, ModelMetrics>,
-    host_samples: Vec<f64>,
 }
 
 impl Metrics {
@@ -200,11 +203,9 @@ impl Metrics {
             }
         }
         self.device_ms.add(r.device_ms);
-        self.host_ms.add(r.host_ms);
         self.energy_mj.add(r.energy_mj);
         self.spikes.add(r.total_spikes as f64);
         self.total_sops += r.sops;
-        self.host_samples.push(r.host_ms);
         self.response_order.push(r.id);
         let m = self.per_model.entry(r.model).or_default();
         m.completed += 1;
@@ -244,9 +245,16 @@ impl Metrics {
         }
     }
 
-    /// Host p99 latency (ms).
-    pub fn host_p99(&mut self) -> f64 {
-        percentile(&mut self.host_samples, 99.0)
+    /// One-line host report (None until the CLI stamps [`Metrics::wall_s`]
+    /// after the run): run wall time and implied throughput. Display
+    /// only — never part of merged results or cross-run comparisons.
+    pub fn host_line(&self) -> Option<String> {
+        let wall = self.wall_s?;
+        Some(format!(
+            "host: wall={:.2}s throughput={:.1} img/s",
+            wall,
+            self.completed as f64 / wall.max(1e-9)
+        ))
     }
 
     /// One-line report. Unlabelled runs print `acc=n/a` rather than the
@@ -403,7 +411,6 @@ mod tests {
             predicted,
             label,
             device_ms: ms,
-            host_ms: ms * 2.0,
             energy_mj: 1.0,
             total_spikes: 50,
             sops: 500,
@@ -527,6 +534,17 @@ mod tests {
             !ModelMetrics::default().summary_line().contains("wait"),
             "no sched clause before telemetry"
         );
+    }
+
+    #[test]
+    fn host_line_is_display_only() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, Some(1), 1.0));
+        assert!(m.host_line().is_none(), "no host line until the CLI stamps wall_s");
+        m.wall_s = Some(2.0);
+        let line = m.host_line().unwrap();
+        assert!(line.contains("wall=2.00s"), "{line}");
+        assert!(line.contains("throughput=0.5 img/s"), "{line}");
     }
 
     #[test]

@@ -35,16 +35,17 @@ use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, ServeError};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
-use std::time::Instant;
 
 /// One per-request result of a batch run.
+///
+/// Deliberately wall-clock-free: host latency is measured once around the
+/// whole run by the CLI (display only) and never travels with a result,
+/// so nothing downstream can key on it. Enforced by detlint's
+/// `wall-clock` rule.
 pub struct BatchResult {
     /// The inference outcome, or the terminal [`ServeError`] when the
     /// request exhausted the pool's retry budget.
     pub outcome: Result<Outcome, ServeError>,
-    /// Host latency for this request: batch dispatch → its inference
-    /// finished (including any retry rounds), in milliseconds.
-    pub host_ms: f64,
     /// Failed attempts retried before this result (0 on the fault-free
     /// path, for `Ok` and `Err` outcomes alike).
     pub retries: u32,
@@ -52,8 +53,8 @@ pub struct BatchResult {
 
 /// What one worker recorded for one attempted request of a round.
 enum Attempt {
-    /// Inference completed (outcome, host latency at completion).
-    Done(Outcome, f64),
+    /// Inference completed.
+    Done(Outcome),
     /// The engine failed (injected or real) — retried up to the budget.
     Errored(String),
     /// The worker panicked on this request (injected or real): the worker
@@ -183,8 +184,8 @@ impl EnginePool {
     /// return the per-request results in submission order.
     ///
     /// Deterministic merge: result `i` always belongs to `batch[i]`; with a
-    /// deterministic engine every functional field of the result vector is
-    /// identical for any worker count (only the measured `host_ms` varies).
+    /// deterministic engine every field of the result vector is identical
+    /// for any worker count.
     ///
     /// Device-batch accounting: each contiguous run of same-model requests
     /// is one broadcast domain — it runs back-to-back on the simulated
@@ -202,11 +203,12 @@ impl EnginePool {
         let mut groups: Vec<usize> = Vec::new();
         let mut last: Option<ModelId> = None;
         for r in batch {
-            if last == Some(r.model) {
-                *groups.last_mut().expect("last is Some only after a push") += 1;
-            } else {
-                groups.push(1);
-                last = Some(r.model);
+            match groups.last_mut() {
+                Some(g) if last == Some(r.model) => *g += 1,
+                _ => {
+                    groups.push(1);
+                    last = Some(r.model);
+                }
             }
         }
         self.run_batch_grouped(batch, &groups)
@@ -286,7 +288,6 @@ impl EnginePool {
             start += n;
             req_group.extend(std::iter::repeat_n(gi, n));
         }
-        let t0 = Instant::now();
         let mut results: Vec<Option<BatchResult>> = Vec::with_capacity(batch.len());
         results.resize_with(batch.len(), || None);
         let mut attempts: Vec<u32> = vec![0; batch.len()];
@@ -348,6 +349,7 @@ impl EnginePool {
                             // deterministic engine never produces one).
                             let ran = catch_unwind(AssertUnwindSafe(|| {
                                 if action == FaultAction::Panic {
+                                    // detlint::allow(dispatch-unwrap, injected fault: fires inside catch_unwind and is contained by the supervision loop)
                                     panic!(
                                         "injected worker panic (request {}, attempt {att})",
                                         req.id
@@ -356,10 +358,7 @@ impl EnginePool {
                                 engine.infer_model(req.model, &req.spikes, Some(&broadcasts[gid]))
                             }));
                             match ran {
-                                Ok(Ok(outcome)) => {
-                                    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-                                    *out = Attempt::Done(outcome, host_ms);
-                                }
+                                Ok(Ok(outcome)) => *out = Attempt::Done(outcome),
                                 Ok(Err(e)) => *out = Attempt::Errored(format!("{e:#}")),
                                 Err(payload) => {
                                     *out = Attempt::Panicked(panic_message(payload.as_ref()));
@@ -380,16 +379,11 @@ impl EnginePool {
                 }
             });
             let mut next_pending: Vec<usize> = Vec::new();
-            for (pos, out) in outs.into_iter().enumerate() {
-                let i = pending[pos];
-                let att = att_snapshot[pos];
-                if matches!(out, Attempt::NotRun) {
-                    // A dead worker's remainder: requeue, no attempt spent.
-                    next_pending.push(i);
-                    continue;
-                }
-                // Post-hoc injected-fault accounting from the same pure
-                // decision the worker made — deterministic by construction.
+            // Post-hoc injected-fault accounting from the same pure
+            // decision the worker made — deterministic by construction.
+            // Charged only for attempted requests (never a dead worker's
+            // NotRun remainder, which spent no attempt).
+            let charge_injected = |stats: &mut ReliabilityStats, i: usize, att: u32| {
                 if let Some(plan) = &self.fault {
                     match plan.decide(batch[i].id, batch[i].arrival_tick, att) {
                         FaultAction::Panic => stats.injected_panics += 1,
@@ -402,18 +396,31 @@ impl EnginePool {
                         FaultAction::None => {}
                     }
                 }
+            };
+            for (pos, out) in outs.into_iter().enumerate() {
+                let i = pending[pos];
+                let att = att_snapshot[pos];
                 let (message, panicked) = match out {
-                    Attempt::Done(outcome, host_ms) => {
-                        results[i] =
-                            Some(BatchResult { outcome: Ok(outcome), host_ms, retries: att });
+                    Attempt::NotRun => {
+                        // A dead worker's remainder: requeue, no attempt
+                        // spent.
+                        next_pending.push(i);
                         continue;
                     }
-                    Attempt::Errored(m) => (m, false),
+                    Attempt::Done(outcome) => {
+                        charge_injected(&mut stats, i, att);
+                        results[i] = Some(BatchResult { outcome: Ok(outcome), retries: att });
+                        continue;
+                    }
+                    Attempt::Errored(m) => {
+                        charge_injected(&mut stats, i, att);
+                        (m, false)
+                    }
                     Attempt::Panicked(m) => {
+                        charge_injected(&mut stats, i, att);
                         stats.worker_panics += 1;
                         (m, true)
                     }
-                    Attempt::NotRun => unreachable!("handled above"),
                 };
                 if att >= self.max_retries {
                     stats.failed += 1;
@@ -423,8 +430,7 @@ impl EnginePool {
                     } else {
                         Err(ServeError::Engine { retries, message })
                     };
-                    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    results[i] = Some(BatchResult { outcome, host_ms, retries });
+                    results[i] = Some(BatchResult { outcome, retries });
                 } else {
                     // Linear tick-modeled backoff: retry k waits k ticks.
                     attempts[i] += 1;
@@ -443,9 +449,24 @@ impl EnginePool {
         if !stats.is_quiet() {
             self.reliability.lock().unwrap_or_else(|p| p.into_inner()).merge(&stats);
         }
+        // Every slot is covered by exactly one worker chunk; a miss would
+        // be a supervision-loop bug, surfaced as a ServeError rather than
+        // a panic so siblings in the batch still complete.
         results
             .into_iter()
-            .map(|slot| slot.expect("every batch slot is covered by exactly one worker chunk"))
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.unwrap_or_else(|| BatchResult {
+                    outcome: Err(ServeError::Engine {
+                        retries: 0,
+                        message: format!(
+                            "internal: request {} was never attempted by any worker",
+                            batch[i].id
+                        ),
+                    }),
+                    retries: 0,
+                })
+            })
             .collect()
     }
 }
@@ -808,7 +829,7 @@ mod tests {
         let out = pool.run_batch(&batch(3));
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|r| r.outcome.is_ok()));
-        assert!(out.iter().all(|r| r.host_ms >= 0.0));
+        assert!(out.iter().all(|r| r.retries == 0));
     }
 
     #[test]

@@ -106,8 +106,6 @@ pub struct InferResponse {
     pub label: Option<usize>,
     /// Simulated device latency (ms) for this image.
     pub device_ms: f64,
-    /// Wall-clock host latency (ms): queue + batch + simulate.
-    pub host_ms: f64,
     /// Simulated device energy (mJ).
     pub energy_mj: f64,
     /// Total spikes of this inference (Table II's TS).
@@ -141,7 +139,6 @@ impl InferResponse {
             predicted: 0,
             label: None,
             device_ms: 0.0,
-            host_ms: 0.0,
             energy_mj: 0.0,
             total_spikes: 0,
             sops: 0,
@@ -159,7 +156,6 @@ impl InferResponse {
             predicted: 0,
             label: None,
             device_ms: 0.0,
-            host_ms: 0.0,
             energy_mj: 0.0,
             total_spikes: 0,
             sops: 0,
@@ -182,7 +178,6 @@ mod tests {
             predicted: 3,
             label: Some(3),
             device_ms: 1.0,
-            host_ms: 2.0,
             energy_mj: 0.5,
             total_spikes: 10,
             sops: 100,

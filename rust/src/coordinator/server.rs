@@ -24,7 +24,6 @@ use crate::coordinator::sched::SchedPolicy;
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
 use anyhow::{anyhow, Context, Result};
-use std::time::Instant;
 
 /// The serving coordinator.
 pub struct Coordinator {
@@ -110,7 +109,13 @@ impl Coordinator {
         };
         let mut batcher = Batcher::with_limits(self.cfg.batch_size, policy, limit);
         let mut metrics = Metrics::default();
-        let mut pending: Vec<(Vec<InferRequest>, Instant)> = Vec::new();
+        // Wall-clock-free by design: released batches carry no host
+        // timestamps (queue waits are measured in virtual-clock ticks by
+        // the scheduler, see `Metrics::queue_wait_ticks`), so nothing in the
+        // serving path can observe host timing. Enforced by detlint's
+        // `wall-clock` rule; run-level wall time is measured once in
+        // `main.rs` for display only.
+        let mut pending: Vec<Vec<InferRequest>> = Vec::new();
         for i in 0..n {
             let (img, label) = ds.get(i);
             let spikes = encode_threshold(&img, 128);
@@ -167,7 +172,7 @@ impl Coordinator {
                 metrics.record(&InferResponse::shed(i as u64, model));
             }
             while let Some(batch) = batcher.pop_ready() {
-                pending.push((batch, Instant::now()));
+                pending.push(batch);
             }
             if pending.len() >= self.pool.workers() {
                 self.dispatch(&mut pending, &mut metrics);
@@ -175,7 +180,7 @@ impl Coordinator {
         }
         // End of stream: drain every model's remainder in policy order.
         while let Some(batch) = batcher.flush() {
-            pending.push((batch, Instant::now()));
+            pending.push(batch);
         }
         self.dispatch(&mut pending, &mut metrics);
         if let Some(stats) = self.pool.cache_stats() {
@@ -187,9 +192,11 @@ impl Coordinator {
     }
 
     /// Fan the pending batches across the pool in one combined run and
-    /// record every outcome in submission order. `host_ms` covers the full
-    /// host latency: batch release (queueing in `pending`) → inference
-    /// finished. Each batcher batch stays its own broadcast-WMU group (the
+    /// record every outcome in submission order. No host timing is taken
+    /// here: latency percentiles come from the scheduler's virtual-clock
+    /// ticks, and the run-level wall measurement lives in `main.rs`,
+    /// outside the deterministic path. Each batcher batch stays its own
+    /// broadcast-WMU group (the
     /// device batch that shares one weight stream per node) and is
     /// model-homogeneous by construction (per-model batcher queues), so
     /// energy accounting follows `--batch`, is independent of how many
@@ -197,20 +204,17 @@ impl Coordinator {
     /// `--workers`), and weight broadcasts never cross models;
     /// `--broadcast-wmu off` degrades every request to a singleton group
     /// (full per-image weight stream, the unshared reference mode).
-    fn dispatch(&self, pending: &mut Vec<(Vec<InferRequest>, Instant)>, metrics: &mut Metrics) {
+    fn dispatch(&self, pending: &mut Vec<Vec<InferRequest>>, metrics: &mut Metrics) {
         if pending.is_empty() {
             return;
         }
         let mut batches: Vec<Vec<InferRequest>> = Vec::with_capacity(pending.len());
-        let mut queued_ms: Vec<f64> = Vec::new();
-        for (batch, released) in pending.drain(..) {
+        for batch in pending.drain(..) {
             metrics.record_batch(batch.len());
-            let waited = released.elapsed().as_secs_f64() * 1e3;
-            queued_ms.resize(queued_ms.len() + batch.len(), waited);
             batches.push(batch);
         }
         let (all, results) = self.pool.run_batches(batches, self.cfg.broadcast_wmu);
-        for ((req, result), queued) in all.iter().zip(results).zip(queued_ms) {
+        for (req, result) in all.iter().zip(results) {
             match result.outcome {
                 Ok(out) => {
                     metrics.record(&InferResponse {
@@ -219,7 +223,6 @@ impl Coordinator {
                         predicted: out.predicted,
                         label: req.label,
                         device_ms: out.device_ms,
-                        host_ms: queued + result.host_ms,
                         energy_mj: out.energy_mj,
                         total_spikes: out.total_spikes,
                         sops: out.sops,

@@ -171,9 +171,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     run_cfg.images = run_cfg.images.min(ds.len());
     let engine_label = engine.name();
     let mut coord = Coordinator::new(engine, run_cfg.clone());
+    // The run's only wall measurement: taken around the whole serving
+    // call and stamped onto the metrics afterwards, so host time exists
+    // for display but can never influence scheduling or merged results
+    // (detlint allowlists exactly this file for `wall-clock`).
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let mut metrics = coord.serve_dataset(&ds, run_cfg.images)?;
-    let wall = t0.elapsed().as_secs_f64();
+    metrics.wall_s = Some(t0.elapsed().as_secs_f64());
     println!(
         "engine={} model-classes={} images={}",
         engine_label, ds.num_classes, run_cfg.images
@@ -194,12 +199,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(line) = metrics.reliability_line() {
         println!("{line}");
     }
-    println!(
-        "host: wall={:.2}s throughput={:.1} img/s p99={:.2}ms",
-        wall,
-        metrics.completed as f64 / wall.max(1e-9),
-        metrics.host_p99()
-    );
+    if let Some(line) = metrics.host_line() {
+        println!("{line}");
+    }
     if coord.crosschecks > 0 || coord.crosscheck_errors > 0 {
         println!(
             "cross-check: {}/{} mismatches vs PJRT golden ({} errored)",

@@ -1,0 +1,103 @@
+//! Determinism identity: the invariants detlint enforces statically,
+//! checked dynamically from outside the crate.
+//!
+//! The contract (DESIGN.md §Determinism invariants): every functional
+//! output of a serving run — predictions, per-model energy/latency bits,
+//! completion order, the printed summary — is a pure function of
+//! (trace, config) and never of the worker count, wall clock, or hash
+//! ordering. This suite drives the exact paths this PR rewrote (wall-time
+//! removal in pool/server/metrics, HashMap→BTreeMap in epa/wmu) under
+//! shared-cache eviction pressure, where iteration-order bugs would
+//! actually change victim picks.
+
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine, Metrics, ModelRegistry};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::zoo;
+
+fn ds(n: usize) -> Dataset {
+    Dataset::from_synth(&SynthCifar::new(10, 77), n)
+}
+
+fn two_model_registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 2), 1);
+    reg.register(zoo::tiny(10, 31), 1);
+    reg
+}
+
+/// Serve a 16-image two-tenant trace with the given worker count and
+/// transposed-weight-cache budget (MiB). Budget 0 keeps at most one
+/// resident entry, so every mixed-model batch sequence churns the
+/// eviction scan — the code path a hash-ordered map would randomize.
+fn serve(workers: usize, cache_mib: usize) -> Metrics {
+    let arch = ArchConfig { weight_cache_mib: cache_mib, ..Default::default() };
+    let engine = Engine::sim_registry(two_model_registry(), arch);
+    let cfg = RunConfig { batch_size: 2, workers, ..Default::default() };
+    let mut coord = Coordinator::new(engine, cfg);
+    coord.serve_dataset(&ds(16), 16).unwrap()
+}
+
+/// Everything a run reports that the determinism contract covers. Cache
+/// hit/miss counters are deliberately absent: with racing workers they
+/// depend on interleaving (a worker may re-transpose a key another worker
+/// just evicted), which is allowed — only *functional* outputs are pinned.
+fn functional_snapshot(m: &Metrics) -> (String, Vec<u64>, Vec<(u64, u64, u64, u64, u64)>) {
+    let per: Vec<(u64, u64, u64, u64, u64)> = m
+        .per_model()
+        .values()
+        .map(|mm| {
+            (
+                mm.completed,
+                mm.correct,
+                mm.energy_mj.mean().to_bits(),
+                mm.device_ms.mean().to_bits(),
+                mm.total_sops,
+            )
+        })
+        .collect();
+    (m.summary_line(), m.response_order.clone(), per)
+}
+
+#[test]
+fn functional_outputs_bit_identical_across_worker_counts_under_eviction() {
+    let one = serve(1, 0);
+    let four = serve(4, 0);
+    // The zero-budget cache really was under pressure (otherwise this
+    // test silently stops covering the eviction scan).
+    assert!(one.weight_cache.evictions > 0, "zero budget must force evictions");
+    assert!(four.weight_cache.misses > 0);
+    assert_eq!(
+        functional_snapshot(&one),
+        functional_snapshot(&four),
+        "1-worker and 4-worker runs must agree on every functional output"
+    );
+    assert!(one.wall_s.is_none() && four.wall_s.is_none(), "serving never reads the wall clock");
+}
+
+#[test]
+fn serial_repeat_runs_identical_including_cache_counters() {
+    // With a single worker there is no racing, so even the host-side
+    // cache telemetry (hits, transposes, evictions, resident bytes) must
+    // repeat exactly — the BTreeMap eviction scan has one victim order.
+    let a = serve(1, 0);
+    let b = serve(1, 0);
+    assert!(a.weight_cache.evictions > 0);
+    assert_eq!(functional_snapshot(&a), functional_snapshot(&b));
+    assert_eq!(a.cache_line(), b.cache_line(), "serial cache telemetry must repeat exactly");
+    assert!(a.cache_line().is_some());
+}
+
+#[test]
+fn cache_budget_never_changes_results() {
+    // The transposed-weight cache is a host-side memoization: starving it
+    // to zero may change how often work repeats, never what it computes.
+    let starved = serve(1, 0);
+    let roomy = serve(1, 256);
+    assert_eq!(
+        functional_snapshot(&starved),
+        functional_snapshot(&roomy),
+        "cache budget is a performance knob, not a functional one"
+    );
+    assert!(starved.weight_cache.evictions > roomy.weight_cache.evictions);
+}

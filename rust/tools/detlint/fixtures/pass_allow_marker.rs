@@ -1,0 +1,11 @@
+// Fixture: MUST pass — a justified detlint::allow marker suppresses the
+// rule on its own line and the next.
+
+// detlint::allow(unordered-iter, profiling scratch; never reaches Report or merged output)
+use std::collections::HashMap;
+
+// detlint::allow(unordered-iter, local scratch drained through a sorted Vec before output)
+pub fn scratch() -> HashMap<u32, u32> {
+    // detlint::allow(unordered-iter, local scratch drained through a sorted Vec before output)
+    HashMap::new()
+}

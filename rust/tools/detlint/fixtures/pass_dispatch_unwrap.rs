@@ -1,0 +1,18 @@
+// Fixture: fixed twin of trip_dispatch_unwrap (same fixtures.toml
+// scoping) — MUST pass. Failures are routed through the result channel,
+// and poisoned-lock recovery via unwrap_or_else is allowed.
+
+pub fn dispatch(slot: Option<u32>) -> Result<u32, String> {
+    let Some(v) = slot else {
+        return Err("slot was never filled".to_string());
+    };
+    if v == 0 {
+        return Err("zero slot".to_string());
+    }
+    Ok(v)
+}
+
+pub fn drain(lock: &std::sync::Mutex<Vec<u32>>) -> Vec<u32> {
+    let mut q = lock.lock().unwrap_or_else(|p| p.into_inner());
+    std::mem::take(&mut *q)
+}

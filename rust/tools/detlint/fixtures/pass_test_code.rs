@@ -1,0 +1,22 @@
+// Fixture: MUST pass — rules do not apply inside #[cfg(test)] / #[test]
+// regions; test scaffolding may use HashMap, unwrap, and wall time.
+
+pub fn live(x: u32) -> u32 {
+    x + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn scaffolding_is_exempt() {
+        let t0 = Instant::now();
+        let mut m = HashMap::new();
+        m.insert(1u32, live(1));
+        assert_eq!(*m.get(&1).unwrap(), 2);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

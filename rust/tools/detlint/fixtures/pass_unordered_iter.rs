@@ -1,0 +1,12 @@
+// Fixture: fixed twin of trip_unordered_iter — MUST pass. BTreeMap
+// iterates in key order, so the report is deterministic.
+
+use std::collections::BTreeMap;
+
+pub fn report(counts: &BTreeMap<String, u64>) -> String {
+    let mut out = String::new();
+    for (k, v) in counts {
+        out.push_str(&format!("{k}={v}\n"));
+    }
+    out
+}

@@ -1,0 +1,7 @@
+// Fixture: fixed twin of trip_unseeded_rng — MUST pass. All randomness
+// comes from an explicitly seeded stream.
+
+pub fn jitter(seed: u64) -> u64 {
+    let mut rng = crate::util::rng::Pcg32::new(seed, 0xda3e39cb94b95bdb);
+    rng.next_u64() % 100
+}

@@ -1,0 +1,7 @@
+// Fixture: fixed twin of trip_wall_clock — MUST pass. Time flows from
+// the virtual clock, never the host.
+
+pub fn measure(work: impl Fn(), tick_before: u64, tick_after: u64) -> u64 {
+    work();
+    tick_after - tick_before
+}

@@ -1,0 +1,11 @@
+// Fixture: fixed twin of trip_worker_dep (same fixtures.toml scoping) —
+// MUST pass. The decision is a pure function of the request's identity
+// and attempt, so any worker reaches the same verdict.
+
+pub fn should_inject(req_id: u64, arrival_tick: u64, attempt: u32) -> bool {
+    let h = req_id
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(arrival_tick)
+        .wrapping_add(attempt as u64);
+    h % 17 == 0
+}

@@ -1,0 +1,10 @@
+// Fixture: MUST trip — a detlint::allow marker without a reason is
+// itself a finding (malformed-allow) AND fails to suppress the rule.
+
+// detlint::allow(unordered-iter)
+use std::collections::HashMap;
+
+pub fn scratch() -> HashMap<u32, u32> {
+    // detlint::allow(unordered-iter)
+    HashMap::new()
+}

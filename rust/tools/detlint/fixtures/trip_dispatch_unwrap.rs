@@ -1,0 +1,11 @@
+// Fixture: MUST trip `dispatch-unwrap` (scoped onto this file by
+// fixtures.toml) — panics in the supervised dispatch path kill workers
+// instead of surfacing as ServeError.
+
+pub fn dispatch(slot: Option<u32>) -> u32 {
+    let v = slot.expect("slot must be filled");
+    if v == 0 {
+        panic!("zero slot");
+    }
+    v
+}

@@ -1,0 +1,12 @@
+// Fixture: MUST trip `unordered-iter` — HashMap iteration order reaches
+// the returned report.
+
+use std::collections::HashMap;
+
+pub fn report(counts: &HashMap<String, u64>) -> String {
+    let mut out = String::new();
+    for (k, v) in counts {
+        out.push_str(&format!("{k}={v}\n"));
+    }
+    out
+}

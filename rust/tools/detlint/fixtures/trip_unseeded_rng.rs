@@ -1,0 +1,7 @@
+// Fixture: MUST trip `unseeded-rng` — entropy-seeded randomness outside
+// util/rng makes runs irreproducible.
+
+pub fn jitter() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen_range(0..100)
+}

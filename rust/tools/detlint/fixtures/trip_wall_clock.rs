@@ -1,0 +1,9 @@
+// Fixture: MUST trip `wall-clock` — Instant in result-affecting code.
+
+use std::time::Instant;
+
+pub fn measure(work: impl Fn()) -> f64 {
+    let t0 = Instant::now();
+    work();
+    t0.elapsed().as_secs_f64()
+}

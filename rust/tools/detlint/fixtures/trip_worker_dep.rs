@@ -1,0 +1,7 @@
+// Fixture: MUST trip `worker-dependent-decision` (scoped onto this file
+// by fixtures.toml) — a fault decision keyed on worker identity changes
+// with pool size, breaking cross-worker-count bit-identity.
+
+pub fn should_inject(req_id: u64, worker_id: usize, n_workers: usize) -> bool {
+    (req_id as usize + worker_id) % n_workers == 0
+}

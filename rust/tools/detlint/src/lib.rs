@@ -1,0 +1,944 @@
+//! detlint — determinism-invariant static analysis for the NEURAL tree.
+//!
+//! Every guarantee the coordinator advertises — bit-identical results
+//! across worker counts, a virtual clock that never reads wall time,
+//! fault decisions that are pure functions of `(request_id, arrival_tick,
+//! attempt)` — is enforced here as a machine-checked pass over `rust/src`.
+//! Five rules:
+//!
+//! | rule id                     | forbids                                             |
+//! |-----------------------------|-----------------------------------------------------|
+//! | `wall-clock`                | `Instant` / `SystemTime` outside the allowlist      |
+//! | `unordered-iter`            | `HashMap` / `HashSet` state (use `BTreeMap`)        |
+//! | `unseeded-rng`              | entropy-seeded randomness outside `util/rng`        |
+//! | `dispatch-unwrap`           | `unwrap`/`expect`/`panic!` in the supervised path   |
+//! | `worker-dependent-decision` | worker/thread identity in fault or sched decisions  |
+//!
+//! The pass is lexical, not syntactic (`syn` is not in the offline vendor
+//! set): sources are scrubbed — comments, string literals and char
+//! literals blanked with line numbers preserved — then `#[cfg(test)]` /
+//! `#[test]` brace regions are skipped, and each rule matches whole
+//! identifiers against the surviving code. That is precise enough for the
+//! five rule classes (they all key on identifier tokens), and a lexical
+//! pass can never be confused by macro expansion it cannot see.
+//!
+//! Escape hatch: a `// detlint::allow(rule-id, reason)` comment suppresses
+//! that rule on its own line and the next. The reason is mandatory — a
+//! bare marker is itself reported (`malformed-allow`).
+//!
+//! Determinism of the lint itself: files are walked in sorted order and
+//! findings are sorted `(file, line, column, rule)`, so output is
+//! bit-identical across platforms and runs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The five rule identifiers, in report order.
+pub const RULES: [&str; 5] = [
+    "wall-clock",
+    "unordered-iter",
+    "unseeded-rng",
+    "dispatch-unwrap",
+    "worker-dependent-decision",
+];
+
+/// Pseudo-rule reported for a `detlint::allow` marker with no reason or an
+/// unknown rule id. Always deny — a broken suppression must never pass.
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+
+/// Per-rule enforcement level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Findings fail the run (non-zero exit).
+    Deny,
+    /// Findings print but never fail the run.
+    Warn,
+    /// Rule disabled.
+    Off,
+}
+
+impl Severity {
+    fn parse(s: &str) -> Result<Severity, String> {
+        match s {
+            "deny" => Ok(Severity::Deny),
+            "warn" => Ok(Severity::Warn),
+            "off" => Ok(Severity::Off),
+            other => Err(format!("unknown severity {other:?} (deny|warn|off)")),
+        }
+    }
+
+    /// The configured name (`deny`/`warn`/`off`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+            Severity::Off => "off",
+        }
+    }
+}
+
+/// One rule's configuration.
+#[derive(Debug, Clone)]
+pub struct RuleCfg {
+    /// Enforcement level.
+    pub severity: Severity,
+    /// Path substrings exempt from the rule (normalized `/` separators).
+    pub allow: Vec<String>,
+    /// For scoped rules (`dispatch-unwrap`, `worker-dependent-decision`):
+    /// path substrings the rule applies to. Empty = applies everywhere.
+    pub paths: Vec<String>,
+}
+
+impl Default for RuleCfg {
+    fn default() -> Self {
+        RuleCfg { severity: Severity::Deny, allow: Vec::new(), paths: Vec::new() }
+    }
+}
+
+/// Full lint configuration (one [`RuleCfg`] per rule id).
+#[derive(Debug, Clone)]
+pub struct Config {
+    rules: BTreeMap<String, RuleCfg>,
+}
+
+impl Default for Config {
+    /// Built-in defaults mirroring the shipped `rust/detlint.toml`, so the
+    /// pass is meaningful even with no config file on disk.
+    fn default() -> Self {
+        let mut rules: BTreeMap<String, RuleCfg> = BTreeMap::new();
+        for r in RULES {
+            rules.insert(r.to_string(), RuleCfg::default());
+        }
+        let set = |rules: &mut BTreeMap<String, RuleCfg>, id: &str, allow: &[&str], paths: &[&str]| {
+            let c = rules.get_mut(id).expect("all five rules were just inserted");
+            c.allow = allow.iter().map(|s| s.to_string()).collect();
+            c.paths = paths.iter().map(|s| s.to_string()).collect();
+        };
+        set(&mut rules, "wall-clock", &["src/main.rs", "src/bench/", "benches/", "examples/"], &[]);
+        set(&mut rules, "unseeded-rng", &["src/util/rng.rs", "src/testing/"], &[]);
+        set(
+            &mut rules,
+            "dispatch-unwrap",
+            &[],
+            &["src/coordinator/pool.rs", "src/coordinator/server.rs", "src/coordinator/batcher.rs"],
+        );
+        set(
+            &mut rules,
+            "worker-dependent-decision",
+            &[],
+            &["src/coordinator/fault.rs", "src/coordinator/sched.rs"],
+        );
+        Config { rules }
+    }
+}
+
+impl Config {
+    /// Parse the `detlint.toml` subset: `[rule-id]` sections with
+    /// `severity = "deny"`, `allow = ["path", ...]`, `paths = [...]` keys.
+    /// Unknown sections and keys are errors — a typo'd config must not
+    /// silently disable a rule.
+    pub fn from_toml(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section: Option<String> = None;
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if !RULES.contains(&name) {
+                    return Err(format!(
+                        "line {}: unknown rule section [{name}] (one of {})",
+                        no + 1,
+                        RULES.join(", ")
+                    ));
+                }
+                section = Some(name.to_string());
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("line {}: expected `key = value`, got {line:?}", no + 1));
+            };
+            let Some(sec) = &section else {
+                return Err(format!("line {}: key outside a [rule] section", no + 1));
+            };
+            let rule = cfg.rules.get_mut(sec).expect("sections are validated above");
+            let key = key.trim();
+            let value = value.trim();
+            match key {
+                "severity" => rule.severity = Severity::parse(&parse_str(value, no)?)?,
+                "allow" => rule.allow = parse_str_list(value, no)?,
+                "paths" => rule.paths = parse_str_list(value, no)?,
+                other => {
+                    return Err(format!(
+                        "line {}: unknown key {other:?} (severity|allow|paths)",
+                        no + 1
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a config file path.
+    pub fn from_path(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Config::from_toml(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    fn rule(&self, id: &str) -> &RuleCfg {
+        self.rules.get(id).expect("all five rules exist in every Config")
+    }
+
+    /// Mutable access for programmatic configs (tests).
+    pub fn rule_mut(&mut self, id: &str) -> &mut RuleCfg {
+        self.rules.get_mut(id).expect("all five rules exist in every Config")
+    }
+}
+
+fn parse_str(value: &str, no: usize) -> Result<String, String> {
+    let v = value.trim();
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("line {}: expected a quoted string, got {v:?}", no + 1))
+}
+
+fn parse_str_list(value: &str, no: usize) -> Result<Vec<String>, String> {
+    let v = value.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("line {}: expected a [\"...\"] list, got {v:?}", no + 1))?;
+    let mut out = Vec::new();
+    for item in inner.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        out.push(parse_str(item, no)?);
+    }
+    Ok(out)
+}
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as given to the linter (normalized `/` separators).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based column of the offending token.
+    pub column: usize,
+    /// Rule id (or [`MALFORMED_ALLOW`]).
+    pub rule: String,
+    /// Configured severity at report time.
+    pub severity: Severity,
+    /// Human explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Whether `path` (normalized) matches any configured path fragment.
+fn matches_any(path: &str, fragments: &[String]) -> bool {
+    fragments.iter().any(|f| path.contains(f.as_str()))
+}
+
+/// A source file after lexical scrubbing.
+struct Scrubbed {
+    /// Code lines with comments/strings/char literals blanked.
+    lines: Vec<String>,
+    /// `(line, text)` of every comment, for allow-marker parsing.
+    comments: Vec<(usize, String)>,
+    /// Per-line: inside a `#[cfg(test)]` / `#[test]` brace region.
+    in_test: Vec<bool>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank comments, string literals and char literals (newlines kept so
+/// line numbers survive), collecting comment text. Handles nested block
+/// comments, escapes, raw/byte strings (`r"…"`, `r#"…"#`, `b"…"`,
+/// `br#"…"#`) and the char-literal/lifetime ambiguity.
+fn scrub(source: &str) -> Scrubbed {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let mut prev_code: Option<char> = None;
+    // Blank `n` chars starting at `i`, preserving newlines.
+    let blank = |out: &mut String, line: &mut usize, chars: &[char], from: usize, to: usize| {
+        for &c in &chars[from..to] {
+            if c == '\n' {
+                *line += 1;
+                out.push('\n');
+            } else {
+                out.push(' ');
+            }
+        }
+    };
+    while i < chars.len() {
+        let c = chars[i];
+        // Raw / byte string openers: r", r#", b", br", br#" — only when
+        // the prefix letters are not the tail of a longer identifier.
+        if (c == 'r' || c == 'b') && !prev_code.is_some_and(is_ident) {
+            let mut j = i + 1;
+            if c == 'b' && chars.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let raw = chars.get(j.wrapping_sub(1)) == Some(&'r') || c == 'r';
+            let mut hashes = 0usize;
+            while raw && chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') && (raw || c == 'b') {
+                // Emit the opener verbatim, blank the contents.
+                for &p in &chars[i..=j] {
+                    out.push(p);
+                }
+                let body = j + 1;
+                let mut k = body;
+                'scan: while k < chars.len() {
+                    if chars[k] == '"' && !raw {
+                        // plain b"…": honor escapes
+                        break 'scan;
+                    }
+                    if chars[k] == '"' && raw {
+                        let mut h = 0usize;
+                        while chars.get(k + 1 + h) == Some(&'#') {
+                            h += 1;
+                        }
+                        if h >= hashes {
+                            break 'scan;
+                        }
+                    }
+                    if chars[k] == '\\' && !raw {
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                blank(&mut out, &mut line, &chars, body, k.min(chars.len()));
+                // closer: `"` plus hashes
+                let close_end = (k + 1 + hashes).min(chars.len());
+                for &p in chars.get(k..close_end).unwrap_or(&[]) {
+                    out.push(p);
+                }
+                i = close_end;
+                prev_code = Some('"');
+                continue;
+            }
+        }
+        match c {
+            '\n' => {
+                line += 1;
+                out.push('\n');
+                i += 1;
+            }
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let start = i;
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+                comments.push((line, chars[start..i].iter().collect()));
+                blank(&mut out, &mut line, &chars, start, i);
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                let start_line = line;
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                comments.push((start_line, chars[start..i].iter().collect()));
+                blank(&mut out, &mut line, &chars, start, i);
+            }
+            '"' => {
+                out.push('"');
+                let body = i + 1;
+                let mut k = body;
+                while k < chars.len() && chars[k] != '"' {
+                    if chars[k] == '\\' {
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                blank(&mut out, &mut line, &chars, body, k.min(chars.len()));
+                if k < chars.len() {
+                    out.push('"');
+                    k += 1;
+                }
+                i = k;
+                prev_code = Some('"');
+            }
+            '\'' => {
+                // Char literal vs lifetime: `'\…'` and `'x'` are literals;
+                // anything else (`'a` in `<'a>`, `'static`) is a lifetime.
+                let is_char = match chars.get(i + 1) {
+                    Some('\\') => true,
+                    Some(_) => chars.get(i + 2) == Some(&'\''),
+                    None => false,
+                };
+                if is_char {
+                    out.push('\'');
+                    let body = i + 1;
+                    let mut k = body;
+                    while k < chars.len() && chars[k] != '\'' {
+                        if chars[k] == '\\' {
+                            k += 1;
+                        }
+                        k += 1;
+                    }
+                    blank(&mut out, &mut line, &chars, body, k.min(chars.len()));
+                    if k < chars.len() {
+                        out.push('\'');
+                        k += 1;
+                    }
+                    i = k;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+                prev_code = Some('\'');
+            }
+            _ => {
+                out.push(c);
+                if !c.is_whitespace() {
+                    prev_code = Some(c);
+                }
+                i += 1;
+            }
+        }
+    }
+    let lines: Vec<String> = out.lines().map(|l| l.to_string()).collect();
+    let in_test = mark_test_regions(&lines);
+    Scrubbed { lines, comments, in_test }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` brace regions (the item
+/// following the attribute, tracked by brace depth on scrubbed text).
+fn mark_test_regions(lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth = 0i64;
+    let mut skip_at: Option<i64> = None;
+    let mut pending = false;
+    for (idx, l) in lines.iter().enumerate() {
+        if skip_at.is_some() {
+            in_test[idx] = true;
+        }
+        if skip_at.is_none() && (l.contains("#[cfg(test)]") || l.contains("#[test]")) {
+            pending = true;
+            in_test[idx] = true;
+        }
+        for ch in l.chars() {
+            match ch {
+                '{' => {
+                    if pending && skip_at.is_none() {
+                        skip_at = Some(depth);
+                        pending = false;
+                        in_test[idx] = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if skip_at == Some(depth) {
+                        skip_at = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if pending {
+            in_test[idx] = true; // attribute lines before the opening brace
+        }
+    }
+    in_test
+}
+
+/// A parsed `detlint::allow(rule, reason)` marker.
+struct AllowMarker {
+    line: usize,
+    rule: String,
+    reason: String,
+}
+
+fn parse_allow_markers(comments: &[(usize, String)]) -> Vec<AllowMarker> {
+    let mut markers = Vec::new();
+    for (line, text) in comments {
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("detlint::allow(") {
+            let after = &rest[pos + "detlint::allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let body = &after[..close];
+            let (rule, reason) = match body.split_once(',') {
+                Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+                None => (body.trim().to_string(), String::new()),
+            };
+            markers.push(AllowMarker { line: *line, rule, reason });
+            rest = &after[close + 1..];
+        }
+    }
+    markers
+}
+
+/// Identifier tokens of a scrubbed line with 0-based columns plus the
+/// nearest non-space neighbors (for `.unwrap()` / `panic!` shapes).
+struct Tok<'a> {
+    text: &'a str,
+    col: usize,
+    prev: Option<char>,
+    next: Option<char>,
+}
+
+fn tokens(line: &str) -> Vec<Tok<'_>> {
+    let bytes = line.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if is_ident(c) && !c.is_ascii_digit() {
+            let start = i;
+            while i < bytes.len() && is_ident(bytes[i] as char) {
+                i += 1;
+            }
+            let prev = line[..start].trim_end().chars().next_back();
+            let next = line[i..].trim_start().chars().next();
+            toks.push(Tok { text: &line[start..i], col: start, prev, next });
+        } else {
+            i += 1;
+        }
+    }
+    toks
+}
+
+const WALL_CLOCK_TYPES: [&str; 2] = ["Instant", "SystemTime"];
+const UNORDERED_TYPES: [&str; 4] = ["HashMap", "HashSet", "hash_map", "hash_set"];
+const ENTROPY_SOURCES: [&str; 5] =
+    ["thread_rng", "from_entropy", "OsRng", "RandomState", "getrandom"];
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Exact identifiers that make a decision worker-shape-dependent. Matched
+/// whole, so counters like `worker_panics` never false-positive.
+const WORKER_IDENTITY: [&str; 12] = [
+    "worker_id",
+    "worker_ids",
+    "worker_index",
+    "worker_count",
+    "workers",
+    "nworkers",
+    "n_workers",
+    "num_workers",
+    "thread_id",
+    "ThreadId",
+    "thread",
+    "available_parallelism",
+];
+
+/// Lint one file's source. `label` is the path used for scoping, allow
+/// matching and reporting (normalized to `/` separators).
+pub fn lint_source(label: &str, source: &str, cfg: &Config) -> Vec<Finding> {
+    let label = label.replace('\\', "/");
+    let scrubbed = scrub(source);
+    let markers = parse_allow_markers(&scrubbed.comments);
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // Malformed markers are findings themselves (always deny).
+    for m in &markers {
+        if !RULES.contains(&m.rule.as_str()) {
+            findings.push(Finding {
+                file: label.clone(),
+                line: m.line,
+                column: 1,
+                rule: MALFORMED_ALLOW.to_string(),
+                severity: Severity::Deny,
+                message: format!(
+                    "detlint::allow names unknown rule {:?} (one of {})",
+                    m.rule,
+                    RULES.join(", ")
+                ),
+            });
+        } else if m.reason.is_empty() {
+            findings.push(Finding {
+                file: label.clone(),
+                line: m.line,
+                column: 1,
+                rule: MALFORMED_ALLOW.to_string(),
+                severity: Severity::Deny,
+                message: format!(
+                    "detlint::allow({}) requires a justification: detlint::allow({}, reason)",
+                    m.rule, m.rule
+                ),
+            });
+        }
+    }
+    // A valid marker suppresses its rule on its own line and the next.
+    let suppressed = |rule: &str, line: usize| {
+        markers.iter().any(|m| {
+            m.rule == rule && !m.reason.is_empty() && (m.line == line || m.line + 1 == line)
+        })
+    };
+
+    let mut emit = |rule: &str, severity: Severity, line: usize, col: usize, message: String| {
+        if severity == Severity::Off || suppressed(rule, line) {
+            return;
+        }
+        findings.push(Finding {
+            file: label.clone(),
+            line,
+            column: col + 1,
+            rule: rule.to_string(),
+            severity,
+            message,
+        });
+    };
+
+    let wall = cfg.rule("wall-clock");
+    let unordered = cfg.rule("unordered-iter");
+    let rng = cfg.rule("unseeded-rng");
+    let unwrap = cfg.rule("dispatch-unwrap");
+    let worker = cfg.rule("worker-dependent-decision");
+    let wall_on = !matches_any(&label, &wall.allow);
+    let unordered_on = !matches_any(&label, &unordered.allow);
+    let rng_on = !matches_any(&label, &rng.allow);
+    let unwrap_on = (unwrap.paths.is_empty() || matches_any(&label, &unwrap.paths))
+        && !matches_any(&label, &unwrap.allow);
+    let worker_on = (worker.paths.is_empty() || matches_any(&label, &worker.paths))
+        && !matches_any(&label, &worker.allow);
+
+    for (idx, code) in scrubbed.lines.iter().enumerate() {
+        if scrubbed.in_test[idx] {
+            continue;
+        }
+        let lineno = idx + 1;
+        for t in tokens(code) {
+            if wall_on && WALL_CLOCK_TYPES.contains(&t.text) {
+                emit(
+                    "wall-clock",
+                    wall.severity,
+                    lineno,
+                    t.col,
+                    format!(
+                        "wall-clock type `{}` outside the timing allowlist; deterministic \
+                         paths must use the virtual clock",
+                        t.text
+                    ),
+                );
+            }
+            if unordered_on && UNORDERED_TYPES.contains(&t.text) {
+                emit(
+                    "unordered-iter",
+                    unordered.severity,
+                    lineno,
+                    t.col,
+                    format!(
+                        "`{}` has nondeterministic iteration order; use BTreeMap/BTreeSet \
+                         or justify with detlint::allow(unordered-iter, reason)",
+                        t.text
+                    ),
+                );
+            }
+            if rng_on && ENTROPY_SOURCES.contains(&t.text) {
+                emit(
+                    "unseeded-rng",
+                    rng.severity,
+                    lineno,
+                    t.col,
+                    format!(
+                        "entropy source `{}` outside util/rng; all randomness must be \
+                         seeded Pcg32 streams",
+                        t.text
+                    ),
+                );
+            }
+            if unwrap_on {
+                let method_panic =
+                    (t.text == "unwrap" || t.text == "expect") && t.prev == Some('.');
+                let macro_panic = PANIC_MACROS.contains(&t.text) && t.next == Some('!');
+                if method_panic || macro_panic {
+                    emit(
+                        "dispatch-unwrap",
+                        unwrap.severity,
+                        lineno,
+                        t.col,
+                        format!(
+                            "`{}` in the supervised dispatch path; route the failure \
+                             through BatchResult.outcome / ServeError instead",
+                            t.text
+                        ),
+                    );
+                }
+            }
+            if worker_on && WORKER_IDENTITY.contains(&t.text) {
+                emit(
+                    "worker-dependent-decision",
+                    worker.severity,
+                    lineno,
+                    t.col,
+                    format!(
+                        "`{}` reachable from fault/scheduling decisions; outcomes must be \
+                         pure functions of (request_id, arrival_tick, attempt)",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `root` (or `root` itself when it
+/// is a file), in sorted order. `fixtures/` and `target/` directories are
+/// skipped — fixture files trip rules by design.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "fixtures" || name == "target" {
+                continue;
+            }
+            out.extend(collect_rs_files(&path)?);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(out)
+}
+
+/// Lint every `.rs` file under the given paths. Findings come back sorted
+/// `(file, line, column, rule)` — deterministic output is part of the
+/// lint's own contract.
+pub fn lint_paths(paths: &[PathBuf], cfg: &Config) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for root in paths {
+        for file in collect_rs_files(root)? {
+            let source = std::fs::read_to_string(&file)?;
+            let label = file.to_string_lossy().replace('\\', "/");
+            findings.extend(lint_source(&label, &source, cfg));
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.column, &a.rule).cmp(&(&b.file, b.line, b.column, &b.rule))
+    });
+    Ok(findings)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable output: a JSON array of finding objects.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\": \"{}\", \"line\": {}, \"column\": {}, \"rule\": \"{}\", \
+             \"severity\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.column,
+            json_escape(&f.rule),
+            f.severity.name(),
+            json_escape(&f.message)
+        ));
+    }
+    out.push_str(if findings.is_empty() { "]" } else { "\n]" });
+    out
+}
+
+/// True when any finding is at deny severity (the failing-gate condition).
+pub fn any_deny(findings: &[Finding]) -> bool {
+    findings.iter().any(|f| f.severity == Severity::Deny)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(label: &str, src: &str) -> Vec<Finding> {
+        lint_source(label, src, &Config::default())
+    }
+
+    #[test]
+    fn scrubber_blanks_strings_comments_chars() {
+        let src = "let a = \"Instant::now() HashMap\"; // HashMap in comment\nlet c = 'H'; let l: &'static str = x;\n/* Instant */ let d = 1;\n";
+        assert!(lint("x.rs", src).is_empty(), "{:?}", lint("x.rs", src));
+    }
+
+    #[test]
+    fn scrubber_handles_raw_and_byte_strings() {
+        let src = "let a = r#\"Instant HashMap \"quoted\" \"#;\nlet b = b\"SystemTime\";\nlet c = br#\"thread_rng\"#;\n";
+        assert!(lint("x.rs", src).is_empty(), "{:?}", lint("x.rs", src));
+    }
+
+    #[test]
+    fn wall_clock_flags_instant_and_allowlists() {
+        let src = "use std::time::Instant;\n";
+        let f = lint("src/coordinator/pool.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(f[0].line, 1);
+        assert!(lint("src/main.rs", src).is_empty(), "main.rs is allowlisted");
+        assert!(lint("src/bench/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_flags_hashmap_everywhere() {
+        let src = "use std::collections::HashMap;\nlet m: HashMap<u32, u32> = HashMap::new();\n";
+        let f = lint("src/arch/epa.rs", src);
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "unordered-iter"));
+    }
+
+    #[test]
+    fn dispatch_unwrap_scoped_to_dispatch_path() {
+        let src = "let x = m.lock().unwrap();\nlet y = o.expect(\"msg\");\npanic!(\"boom\");\nunreachable!();\n";
+        let f = lint("src/coordinator/pool.rs", src);
+        assert_eq!(f.len(), 4, "{f:?}");
+        assert!(lint("src/arch/epa.rs", src).is_empty(), "rule is path-scoped");
+    }
+
+    #[test]
+    fn dispatch_unwrap_ignores_unwrap_or_else_and_asserts() {
+        let src = "let x = m.lock().unwrap_or_else(|p| p.into_inner());\nlet y = h.join().unwrap_or(true);\nassert_eq!(a, b);\nassert!(x > 0);\ndebug_assert!(ok);\n";
+        assert!(lint("src/coordinator/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn worker_identity_exact_tokens_only() {
+        let trip = "let shard = req_id % n_workers as u64;\n";
+        let f = lint("src/coordinator/fault.rs", trip);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "worker-dependent-decision");
+        let pass = "stats.worker_panics += other.worker_panics;\n";
+        assert!(lint("src/coordinator/fault.rs", pass).is_empty(), "substring must not match");
+        assert!(lint("src/coordinator/pool.rs", trip).is_empty(), "rule is path-scoped");
+    }
+
+    #[test]
+    fn unseeded_rng_flags_entropy_sources() {
+        let src = "let mut rng = rand::thread_rng();\n";
+        let f = lint("src/snn/sda.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unseeded-rng");
+        assert!(lint("src/util/rng.rs", src).is_empty(), "util/rng is the sanctioned module");
+    }
+
+    #[test]
+    fn allow_marker_suppresses_same_and_next_line() {
+        let src = "// detlint::allow(unordered-iter, profiling scratch never reaches output)\nuse std::collections::HashMap;\n";
+        assert!(lint("src/arch/epa.rs", src).is_empty());
+        let inline = "let m = HashMap::new(); // detlint::allow(unordered-iter, scratch)\n";
+        assert!(lint("src/arch/epa.rs", inline).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_without_reason_is_a_finding() {
+        let src = "// detlint::allow(unordered-iter)\nuse std::collections::HashMap;\n";
+        let f = lint("src/arch/epa.rs", src);
+        assert_eq!(f.len(), 2, "bare marker reports itself AND fails to suppress: {f:?}");
+        assert!(f.iter().any(|x| x.rule == MALFORMED_ALLOW));
+        assert!(f.iter().any(|x| x.rule == "unordered-iter"));
+    }
+
+    #[test]
+    fn allow_marker_unknown_rule_is_a_finding() {
+        let src = "// detlint::allow(wibble, because)\n";
+        let f = lint("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, MALFORMED_ALLOW);
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "pub fn live() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    #[test]\n    fn t() { let _ = HashMap::new(); x.unwrap(); }\n}\n";
+        assert!(lint("src/coordinator/pool.rs", src).is_empty(), "test code is exempt");
+    }
+
+    #[test]
+    fn code_after_test_region_still_linted() {
+        let src = "#[cfg(test)]\nmod tests {\n}\nuse std::collections::HashMap;\n";
+        let f = lint("src/arch/wmu.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn severity_and_config_parsing() {
+        let toml = "# comment\n[wall-clock]\nseverity = \"warn\"\nallow = [\"src/special.rs\"]\n\n[dispatch-unwrap]\npaths = [\"src/x.rs\"]\n";
+        let cfg = Config::from_toml(toml).unwrap();
+        let f = lint_source("src/a.rs", "use std::time::Instant;\n", &cfg);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].severity, Severity::Warn);
+        assert!(!any_deny(&f), "warn findings never fail the gate");
+        assert!(lint_source("src/special.rs", "use std::time::Instant;\n", &cfg).is_empty());
+        assert!(Config::from_toml("[nope]\n").is_err(), "unknown section must error");
+        assert!(Config::from_toml("[wall-clock]\nseverity = \"loud\"\n").is_err());
+        assert!(Config::from_toml("[wall-clock]\nwibble = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn off_severity_disables_rule() {
+        let cfg = Config::from_toml("[wall-clock]\nseverity = \"off\"\n").unwrap();
+        assert!(lint_source("src/a.rs", "use std::time::Instant;\n", &cfg).is_empty());
+    }
+
+    #[test]
+    fn json_output_shape_and_escaping() {
+        let f = lint("src/a.rs", "use std::time::Instant;\n");
+        let json = to_json(&f);
+        assert!(json.starts_with('['), "{json}");
+        assert!(json.contains("\"rule\": \"wall-clock\""), "{json}");
+        assert!(json.contains("\"line\": 1"), "{json}");
+        assert_eq!(to_json(&[]), "[]");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn findings_display_as_file_line_rule_message() {
+        let f = lint("src/a.rs", "use std::time::Instant;\n");
+        let line = f[0].to_string();
+        assert!(line.starts_with("src/a.rs:1 wall-clock "), "{line}");
+    }
+}

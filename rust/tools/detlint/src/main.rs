@@ -1,0 +1,111 @@
+//! detlint CLI.
+//!
+//! ```text
+//! detlint [--json] [--config PATH] PATH...
+//! ```
+//!
+//! Walks each PATH (file or directory) for `.rs` sources, lints them
+//! against the determinism rules, and prints findings as
+//! `file:line rule message` (or a JSON array with `--json`).
+//!
+//! Exit codes: 0 = clean (or warn-only findings), 1 = at least one
+//! deny-severity finding, 2 = usage/config error.
+//!
+//! Config resolution: `--config PATH` if given, else `./detlint.toml`
+//! if present, else built-in defaults.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{any_deny, lint_paths, to_json, Config};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: detlint [--json] [--config PATH] PATH...");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut config_path: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--config" => match args.next() {
+                Some(p) => config_path = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "--help" | "-h" => {
+                println!("detlint [--json] [--config PATH] PATH...");
+                println!("rules: {}", detlint::RULES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("detlint: unknown flag {other}");
+                return usage();
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        return usage();
+    }
+
+    let cfg = if let Some(p) = &config_path {
+        match Config::from_path(p) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("detlint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        let default_path = PathBuf::from("detlint.toml");
+        if default_path.is_file() {
+            match Config::from_path(&default_path) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("detlint: {e}");
+                    return ExitCode::from(2);
+                }
+            }
+        } else {
+            Config::default()
+        }
+    };
+
+    let findings = match lint_paths(&paths, &cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        if !findings.is_empty() {
+            let denies = findings
+                .iter()
+                .filter(|f| f.severity == detlint::Severity::Deny)
+                .count();
+            eprintln!(
+                "detlint: {} finding(s), {} at deny severity",
+                findings.len(),
+                denies
+            );
+        }
+    }
+
+    if any_deny(&findings) {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

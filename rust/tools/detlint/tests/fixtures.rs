@@ -1,0 +1,93 @@
+//! Fixture suite: every `trip_*.rs` fixture must produce at least one
+//! finding of its rule, and every `pass_*.rs` twin must produce zero
+//! findings — under the same `fixtures.toml` config CI uses for the
+//! trip-fixture loop.
+
+use std::path::PathBuf;
+
+use detlint::{any_deny, lint_paths, Config};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn fixture_cfg() -> Config {
+    Config::from_path(&fixture_dir().join("fixtures.toml")).expect("fixtures.toml parses")
+}
+
+fn lint_fixture(name: &str) -> Vec<detlint::Finding> {
+    let path = fixture_dir().join(name);
+    lint_paths(&[path], &fixture_cfg()).expect("fixture file reads")
+}
+
+/// (trip fixture, rule it must report)
+const TRIPS: [(&str, &str); 6] = [
+    ("trip_wall_clock.rs", "wall-clock"),
+    ("trip_unordered_iter.rs", "unordered-iter"),
+    ("trip_unseeded_rng.rs", "unseeded-rng"),
+    ("trip_dispatch_unwrap.rs", "dispatch-unwrap"),
+    ("trip_worker_dep.rs", "worker-dependent-decision"),
+    ("trip_allow_marker.rs", detlint::MALFORMED_ALLOW),
+];
+
+const PASSES: [&str; 7] = [
+    "pass_wall_clock.rs",
+    "pass_unordered_iter.rs",
+    "pass_unseeded_rng.rs",
+    "pass_dispatch_unwrap.rs",
+    "pass_worker_dep.rs",
+    "pass_allow_marker.rs",
+    "pass_test_code.rs",
+];
+
+#[test]
+fn every_trip_fixture_trips_its_rule() {
+    for (name, rule) in TRIPS {
+        let findings = lint_fixture(name);
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "{name} must report {rule}, got: {findings:?}"
+        );
+        assert!(any_deny(&findings), "{name} findings must be deny severity");
+    }
+}
+
+#[test]
+fn every_pass_fixture_is_clean() {
+    for name in PASSES {
+        let findings = lint_fixture(name);
+        assert!(findings.is_empty(), "{name} must be clean, got: {findings:?}");
+    }
+}
+
+#[test]
+fn every_trip_fixture_has_a_pass_twin_on_disk() {
+    for (trip, _) in TRIPS {
+        let twin = trip.replacen("trip_", "pass_", 1);
+        assert!(
+            fixture_dir().join(&twin).is_file(),
+            "{trip} is missing its fixed twin {twin}"
+        );
+    }
+}
+
+#[test]
+fn bare_allow_marker_fails_to_suppress() {
+    let findings = lint_fixture("trip_allow_marker.rs");
+    assert!(
+        findings.iter().any(|f| f.rule == "unordered-iter"),
+        "a reasonless marker must not suppress the underlying rule: {findings:?}"
+    );
+}
+
+#[test]
+fn directory_walk_skips_fixtures_dir() {
+    // Linting the crate root must not descend into fixtures/ (which trips
+    // rules by design) — only explicit fixture paths are linted.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_paths(&[root], &fixture_cfg()).expect("crate tree reads");
+    assert!(
+        findings.is_empty(),
+        "detlint's own sources must be clean and fixtures skipped: {findings:?}"
+    );
+}

@@ -1,0 +1,47 @@
+//! Self-check: the shipped `rust/src` tree must be clean under the
+//! shipped `rust/detlint.toml`. This is the same invocation CI runs as
+//! a gate (`cargo run -p detlint -- --config detlint.toml src`), kept
+//! here too so `cargo test -p detlint` alone catches regressions.
+
+use std::path::PathBuf;
+
+use detlint::{lint_paths, Config};
+
+fn rust_root() -> PathBuf {
+    // tools/detlint -> tools -> rust
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(|p| p.parent())
+        .expect("detlint lives at rust/tools/detlint")
+        .to_path_buf()
+}
+
+#[test]
+fn shipped_src_tree_is_clean() {
+    let root = rust_root();
+    let cfg = Config::from_path(&root.join("detlint.toml")).expect("shipped detlint.toml parses");
+    let findings = lint_paths(&[root.join("src")], &cfg).expect("src tree reads");
+    assert!(
+        findings.is_empty(),
+        "determinism-invariant violations in shipped src:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn shipped_config_keeps_all_rules_deny() {
+    let cfg = Config::from_path(&rust_root().join("detlint.toml")).expect("config parses");
+    for rule in detlint::RULES {
+        // Rules may scope or allowlist, but none may be softened below deny
+        // without a PR that changes this test too.
+        let sev = {
+            let mut c = cfg.clone();
+            c.rule_mut(rule).severity
+        };
+        assert_eq!(sev, detlint::Severity::Deny, "{rule} must stay deny");
+    }
+}
