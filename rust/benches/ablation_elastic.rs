@@ -7,7 +7,8 @@
 //! 3. **Broadcast weight-stream sharing** — each device batch fetches
 //!    every node's weight tile once and broadcasts it (measured from the
 //!    `WmuBroadcast` ledger), plus the cross-layer prefetch pipeline
-//!    against the serial composition.
+//!    (W-FIFO weight prefetch and A-FIFO activation prescan) against the
+//!    serial composition.
 //! 4. **EPA geometry** — latency vs array size (elasticity of the array).
 
 use neural::arch::Accelerator;
@@ -94,12 +95,23 @@ fn main() {
     t3.print();
     println!();
 
-    // 3b. cross-layer weight prefetch: pipelined vs serial composition.
+    // 3b. cross-layer prefetch: the three-stream pipelined schedule
+    // (W-FIFO weight prefetch + A-FIFO activation prescan) vs serial.
     let mut serial_acc = Accelerator::new(ArchConfig::default());
     serial_acc.pipeline = false;
     let mut t3b = Table::new(
-        "ablation 3b — cross-layer weight prefetch (pipelined vs serial cycles)",
-        &["model", "serial", "pipelined", "hidden", "stalled", "W-FIFO peak B"],
+        "ablation 3b — cross-layer prefetch (pipelined vs serial cycles)",
+        &[
+            "model",
+            "serial",
+            "pipelined",
+            "W-hidden",
+            "W-stalled",
+            "W-FIFO peak B",
+            "A-hidden",
+            "A-stalled",
+            "A-FIFO peak B",
+        ],
     );
     for m in [&model, &qkf] {
         let piped = Accelerator::new(ArchConfig::default()).run(m, &spikes).unwrap();
@@ -111,6 +123,9 @@ fn main() {
             piped.wfifo.hidden_cycles.to_string(),
             piped.wfifo.stall_cycles.to_string(),
             piped.wfifo.high_water_bytes.to_string(),
+            piped.afifo.hidden_cycles.to_string(),
+            piped.afifo.stall_cycles.to_string(),
+            piped.afifo.high_water_bytes.to_string(),
         ]);
     }
     t3b.print();

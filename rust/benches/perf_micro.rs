@@ -12,11 +12,13 @@
 //! walks, and a full qkfresnet11 image pits the packed default against the
 //! materializing mode end to end. The host-parallel section times the
 //! fused conv scatter fanned out over output-channel blocks. The pipeline
-//! section records simulated device cycles for the cross-layer weight
-//! prefetch against the serial elastic composition (with the W-FIFO
-//! hidden/stall/occupancy counters). The batch section measures how a
-//! 16-image batch scales across the coordinator's engine pool from 1 to 4
-//! workers, and the weight-DRAM section records the per-image weight
+//! section records simulated device cycles for the three-stream pipelined
+//! schedule (W-FIFO weight prefetch + A-FIFO activation prescan) against
+//! both the serial elastic composition and the weight-only afifo_depth=0
+//! schedule, with the hidden/stall/occupancy counters for both FIFOs, and
+//! sweeps the wfifo×afifo depth grid on vgg11. The batch section measures
+//! how a 16-image batch scales across the coordinator's engine pool from 1
+//! to 4 workers, and the weight-DRAM section records the per-image weight
 //! stream bytes for a standalone image vs an image inside a 4-image
 //! broadcast batch (one modeled fetch per node shared through the
 //! `WmuBroadcast` ledger, backed by the pool-shared transposed weight
@@ -216,14 +218,19 @@ fn main() {
     let host_par_speedup = full_warm.time.mean() / host_par.time.mean();
     println!("  -> host-parallel scatter speedup {host_par_speedup:.2}x over 1 warm thread");
 
-    // Cross-layer pipelined weight prefetch vs the serial elastic
-    // composition (simulated device cycles, not wall-clock): the W-FIFO
-    // hides stream-bound layers' weight loads behind earlier compute.
+    // Cross-layer pipelined prefetch vs the serial elastic composition
+    // (simulated device cycles, not wall-clock): the W-FIFO hides
+    // stream-bound layers' weight loads behind earlier compute, and the
+    // A-FIFO additionally hides each conv's input-scan slack behind its
+    // producer's drain. The afifo_depth=0 run isolates the activation
+    // side's contribution on top of the weight-only schedule.
     let mut acc_serial = Accelerator::new(ArchConfig::default());
     acc_serial.pipeline = false;
+    let acc_no_a = Accelerator::new(ArchConfig { afifo_depth: 0, ..Default::default() });
     let mut pipeline_sections = Vec::new();
     for m in [&model, &qkf_model] {
         let piped = acc.run(m, &spikes).unwrap();
+        let weight_only = acc_no_a.run(m, &spikes).unwrap();
         let serial = acc_serial.run(m, &spikes).unwrap();
         // The strict-improvement invariant itself is enforced by the
         // sim.rs unit tests; here we only record and flag, so a future
@@ -232,26 +239,68 @@ fn main() {
             eprintln!("  !! {}: pipelined schedule did not beat serial", m.name);
         }
         let cycle_speedup = serial.cycles as f64 / piped.cycles as f64;
+        let activation_overlap_speedup = weight_only.cycles as f64 / piped.cycles as f64;
         println!(
-            "  -> {} pipelined {} cycles vs serial {} ({cycle_speedup:.4}x, {} hidden, {} stalled)",
+            "  -> {} pipelined {} cycles vs serial {} ({cycle_speedup:.4}x; wfifo {} hidden / \
+             {} stalled, afifo {} hidden / {} stalled, {activation_overlap_speedup:.4}x over \
+             weight-only)",
             m.name,
             piped.cycles,
             serial.cycles,
             piped.wfifo.hidden_cycles,
-            piped.wfifo.stall_cycles
+            piped.wfifo.stall_cycles,
+            piped.afifo.hidden_cycles,
+            piped.afifo.stall_cycles
         );
         pipeline_sections.push((
             m.name.clone(),
             Json::obj(vec![
                 ("serial_cycles", Json::Num(serial.cycles as f64)),
                 ("pipelined_cycles", Json::Num(piped.cycles as f64)),
+                ("weight_only_cycles", Json::Num(weight_only.cycles as f64)),
                 ("cycle_speedup", Json::Num(cycle_speedup)),
+                ("activation_overlap_speedup", Json::Num(activation_overlap_speedup)),
                 ("hidden_cycles", Json::Num(piped.wfifo.hidden_cycles as f64)),
                 ("stall_cycles", Json::Num(piped.wfifo.stall_cycles as f64)),
                 ("wfifo_high_water_bytes", Json::Num(piped.wfifo.high_water_bytes as f64)),
                 ("wfifo_capacity_bytes", Json::Num(piped.wfifo.capacity_bytes as f64)),
+                ("afifo_hidden_cycles", Json::Num(piped.afifo.hidden_cycles as f64)),
+                ("afifo_stall_cycles", Json::Num(piped.afifo.stall_cycles as f64)),
+                ("afifo_high_water_bytes", Json::Num(piped.afifo.high_water_bytes as f64)),
+                ("afifo_capacity_bytes", Json::Num(piped.afifo.capacity_bytes as f64)),
             ]),
         ));
+    }
+
+    // W-FIFO x A-FIFO depth sweep on vgg11 (simulated cycles): how the two
+    // elastic capacities compose on the zoo's most stream-bound CNN — the
+    // buffer-sizing view for the two knobs (`wfifo_depth` entries vs
+    // `afifo_depth` scan beats). One warm SimScratch serves every point;
+    // the device schedule is independent of the host cache.
+    let sweep_model = zoo::vgg11(10, 3);
+    let mut sweep_scratch = SimScratch::default();
+    let wfifo_depths = [0usize, 32, 128];
+    let afifo_depths = [0usize, 2048, 8192];
+    let mut sweep_rows = Vec::new();
+    println!("  -> vgg11 wfifo x afifo depth sweep (cycles):");
+    for &wd in &wfifo_depths {
+        for &ad in &afifo_depths {
+            let cfg = ArchConfig { wfifo_depth: wd, afifo_depth: ad, ..Default::default() };
+            let r = Accelerator::new(cfg)
+                .run_cached(&sweep_model, &spikes, &mut sweep_scratch, WeightFlow::Exclusive)
+                .unwrap();
+            println!(
+                "     wfifo={wd:>3} afifo={ad:>4}: {} cycles ({} w-hidden, {} a-hidden)",
+                r.cycles, r.wfifo.hidden_cycles, r.afifo.hidden_cycles
+            );
+            sweep_rows.push(Json::obj(vec![
+                ("wfifo_depth", Json::Num(wd as f64)),
+                ("afifo_depth", Json::Num(ad as f64)),
+                ("cycles", Json::Num(r.cycles as f64)),
+                ("wfifo_hidden_cycles", Json::Num(r.wfifo.hidden_cycles as f64)),
+                ("afifo_hidden_cycles", Json::Num(r.afifo.hidden_cycles as f64)),
+            ]));
+        }
     }
 
     // Broadcast-WMU weight-stream sharing vs the retired scalar credit:
@@ -459,6 +508,13 @@ fn main() {
             ]),
         ),
         ("pipeline", Json::Obj(pipeline_sections.into_iter().collect())),
+        (
+            "pipeline_sweep",
+            Json::obj(vec![
+                ("model", Json::Str(sweep_model.name.clone())),
+                ("rows", Json::Arr(sweep_rows)),
+            ]),
+        ),
         (
             "host_parallel",
             Json::obj(vec![

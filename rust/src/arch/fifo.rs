@@ -229,6 +229,172 @@ impl PrefetchWindow {
     }
 }
 
+/// Occupancy/stall accounting of the analytic A-FIFO (activation-side
+/// prefetch) model, in bytes and cycles — the activation twin of
+/// [`WfifoStats`], surfaced per image through
+/// [`crate::arch::Report::afifo`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AfifoStats {
+    /// Configured A-FIFO capacity in bytes
+    /// ([`crate::config::ArchConfig::afifo_bytes`]).
+    pub capacity_bytes: u64,
+    /// Peak prescanned-ahead occupancy observed, in bytes (scan beats of a
+    /// layer's input sitting in the A-FIFO before that layer starts).
+    pub high_water_bytes: u64,
+    /// Cycles the array critical path was extended by exposed
+    /// (non-prefetched) activation scan — the stage stayed scan-bound even
+    /// after overlap.
+    pub stall_cycles: u64,
+    /// Activation-scan cycles hidden behind the previous stage's drain (0
+    /// when the pipeline is disabled or the A-FIFO capacity is 0).
+    pub hidden_cycles: u64,
+}
+
+/// Per-stage cost decomposition for the three-stream pipeline composition.
+///
+/// A timed node contributes three rate-decoupled streams — the IG
+/// activation scan, the array work (SDA event diffusion + EPA compute), and
+/// the WMU weight stream — plus an un-hideable floor:
+///
+/// * `scan` — the *hideable* part of the SDA cost: the IG scan beats that
+///   exceed the event-diffusion time (`scan_cycles − event_cycles`, clamped
+///   at 0). Only this slack can be prescanned into the A-FIFO during the
+///   previous stage; once the scan falls behind diffusion the diffusion
+///   itself is the bound and running the scanner ahead buys nothing.
+/// * `floor` — `fill + event_cycles` for a conv (pipeline fill plus event
+///   diffusion, which must feed the EPA in order), or the whole cost of a
+///   non-conv node. By construction `floor + scan` equals the node's
+///   elastic SDA cost, so the serial reference is preserved exactly.
+/// * `compute` — EPA array cycles, overlapped with the SDA term through
+///   the intra-layer elastic `max`.
+/// * `stream` — WMU weight-stream cycles, hidden by [`PrefetchWindow`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageCost {
+    /// Hideable activation-scan cycles (IG scan slack over diffusion).
+    pub scan: u64,
+    /// Un-hideable stage floor (fill + diffusion, or a non-conv node's
+    /// whole cost).
+    pub floor: u64,
+    /// EPA array cycles.
+    pub compute: u64,
+    /// WMU weight-stream cycles.
+    pub stream: u64,
+}
+
+impl StageCost {
+    /// A node with no separable scan or weight stream (pool / attention /
+    /// WTFC): its whole cost is floor.
+    pub fn opaque(cycles: u64) -> Self {
+        StageCost { scan: 0, floor: cycles, compute: 0, stream: 0 }
+    }
+
+    /// The stage's cost under the serial (non-pipelined) elastic
+    /// composition: scan + floor serialize, then `max` against compute and
+    /// stream. Identical to the pre-split `max(work, stream)` reference.
+    pub fn serial(&self) -> u64 {
+        (self.floor + self.scan).max(self.compute).max(self.stream)
+    }
+}
+
+/// Three-stream elastic composition: [`PrefetchWindow`] generalized with a
+/// capacity-bounded A-FIFO on the activation-scan side.
+///
+/// While layer L drains through the EPA, the IG scanner is idle (its own
+/// scan finished early — that is exactly the `scan` slack of
+/// [`StageCost`]); with double-buffered packed spike maps at the layer
+/// boundary it can already scan layer L+1's input words as the producing
+/// layer writes them, parking the scanned beats in the elastic A-FIFO. The
+/// beats prescanned this way are hidden from L+1's critical path.
+///
+/// Unlike the W-FIFO's budget — weights live in DRAM, so one long idle
+/// period can prefetch several later layers' tiles — the A-budget *resets
+/// every stage*: a layer's input only exists while its producer runs, so
+/// the scanner can never run more than one layer boundary ahead. The budget
+/// offered to stage i is the scanner-idle time of stage i−1 alone, clamped
+/// to the A-FIFO capacity, and the peak occupancy is therefore the largest
+/// single-stage hide (no multi-stage accumulation).
+///
+/// With `a_capacity = 0` every stage degenerates to
+/// `max(floor + scan, compute)` composed through the plain
+/// [`PrefetchWindow`]; with both capacities 0 the walk reproduces the
+/// serial elastic reference bit-exactly.
+#[derive(Debug, Clone)]
+pub struct PipelineWindow {
+    /// Weight-side window (accumulating budget, unchanged semantics).
+    w: PrefetchWindow,
+    /// A-FIFO capacity in scan beats (0 disables activation prefetch).
+    a_capacity: u64,
+    /// Scan beats prescannable by the next stage: the previous stage's
+    /// scanner-idle time, clamped to capacity. Reset (not accumulated)
+    /// every stage.
+    a_budget: u64,
+    /// Peak per-stage prescanned occupancy, in beats.
+    a_high_water: u64,
+    /// Total scan cycles hidden behind earlier stages' drain.
+    pub a_hidden_cycles: u64,
+    /// Total cycles the array path was extended by exposed scan.
+    pub a_stall_cycles: u64,
+}
+
+impl PipelineWindow {
+    /// New window over an A-FIFO of `a_capacity_beats` scan beats and a
+    /// W-FIFO of `w_capacity_cycles` WMU port cycles (either 0 disables
+    /// that side's prefetch).
+    pub fn new(a_capacity_beats: u64, w_capacity_cycles: u64) -> Self {
+        PipelineWindow {
+            w: PrefetchWindow::new(w_capacity_cycles),
+            a_capacity: a_capacity_beats,
+            a_budget: 0,
+            a_high_water: 0,
+            a_hidden_cycles: 0,
+            a_stall_cycles: 0,
+        }
+    }
+
+    /// Account one three-stream stage and return its realized duration.
+    ///
+    /// The scan beats covered by the A-budget were prescanned during the
+    /// previous stage and vanish from this stage's SDA term; the exposed
+    /// remainder serializes onto the floor before the intra-layer `max`
+    /// against compute. The resulting array time then composes with the
+    /// weight stream through the W-window exactly as before. Finally the
+    /// scanner-idle time of *this* stage (duration minus the scan it had to
+    /// perform inline) becomes the next stage's A-budget.
+    pub fn stage(&mut self, c: StageCost) -> u64 {
+        let hidden = c.scan.min(self.a_budget);
+        self.a_hidden_cycles += hidden;
+        self.a_high_water = self.a_high_water.max(hidden);
+        let exposed_scan = c.scan - hidden;
+        let array = (c.floor + exposed_scan).max(c.compute);
+        self.a_stall_cycles += array - c.floor.max(c.compute);
+        let duration = self.w.stage(array, c.stream);
+        self.a_budget = duration.saturating_sub(exposed_scan).min(self.a_capacity);
+        duration
+    }
+
+    /// Peak prescanned A-FIFO occupancy in beats (largest single-stage
+    /// hide — the per-stage budget reset means occupancy never accumulates
+    /// across stages).
+    pub fn a_high_water_beats(&self) -> u64 {
+        self.a_high_water
+    }
+
+    /// Snapshot the A-side stats in bytes at the given scan-beat width.
+    pub fn a_stats(&self, bytes_per_beat: u64, capacity_bytes: u64) -> AfifoStats {
+        AfifoStats {
+            capacity_bytes,
+            high_water_bytes: self.a_high_water * bytes_per_beat,
+            stall_cycles: self.a_stall_cycles,
+            hidden_cycles: self.a_hidden_cycles,
+        }
+    }
+
+    /// Snapshot the W-side stats in bytes at the given WMU port width.
+    pub fn w_stats(&self, bytes_per_cycle: usize, capacity_bytes: u64) -> WfifoStats {
+        self.w.stats(bytes_per_cycle, capacity_bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +554,122 @@ mod tests {
             assert!(total >= stream_sum, "pipelined {total} < total stream {stream_sum}");
             assert!(w.hidden_cycles >= serial - total, "hidden must cover the gap");
             assert!(w.high_water_cycles() <= cap, "occupancy can never exceed the FIFO");
+        });
+    }
+
+    #[test]
+    fn pipeline_window_hides_scan_behind_prior_drain() {
+        // Stage 1 is drain-heavy (floor 10, no scan): its whole 10-cycle
+        // duration is scanner-idle, banking 10 beats of A-budget. Stage 2's
+        // 6-beat scan slack is fully prescanned, leaving floor 4 vs
+        // compute 7 -> 7 cycles instead of the serial 10.
+        let mut p = PipelineWindow::new(16, 0);
+        assert_eq!(p.stage(StageCost::opaque(10)), 10);
+        let c = StageCost { scan: 6, floor: 4, compute: 7, stream: 0 };
+        assert_eq!(c.serial(), 10);
+        assert_eq!(p.stage(c), 7);
+        assert_eq!(p.a_hidden_cycles, 6);
+        assert_eq!(p.a_stall_cycles, 0);
+        assert_eq!(p.a_high_water_beats(), 6);
+    }
+
+    #[test]
+    fn pipeline_window_a_budget_resets_every_stage() {
+        // Two consecutive idle-heavy stages must NOT accumulate A-budget
+        // the way the W-window banks WMU idle: a layer's input only exists
+        // while its direct producer runs, so only the immediately preceding
+        // stage's idle time (20 cycles here, not 40) can hide scan.
+        let mut p = PipelineWindow::new(1 << 30, 0);
+        p.stage(StageCost::opaque(20));
+        p.stage(StageCost::opaque(20));
+        let c = StageCost { scan: 30, floor: 5, compute: 0, stream: 0 };
+        assert_eq!(p.stage(c), 5 + (30 - 20), "only one stage's idle hides");
+        assert_eq!(p.a_hidden_cycles, 20);
+        assert_eq!(p.a_stall_cycles, 10, "the exposed 10 beats extend the array path");
+    }
+
+    #[test]
+    fn pipeline_window_a_budget_clamped_to_capacity() {
+        // A long drain banks far more idle than the A-FIFO can park; the
+        // next scan hides at most `capacity` beats.
+        let mut p = PipelineWindow::new(4, 0);
+        p.stage(StageCost::opaque(100));
+        let c = StageCost { scan: 20, floor: 0, compute: 0, stream: 0 };
+        assert_eq!(p.stage(c), 16, "only 4 beats fit the A-FIFO");
+        assert_eq!(p.a_hidden_cycles, 4);
+        assert_eq!(p.a_stats(4, 16).high_water_bytes, 16);
+    }
+
+    #[test]
+    fn zero_capacity_pipeline_window_matches_prefetch_window() {
+        // a_capacity = 0 must reproduce the two-stream W-window composition
+        // bit-exactly (the pre-split pipeline), and both capacities 0 must
+        // reproduce the serial elastic reference.
+        let stages = [
+            StageCost { scan: 7, floor: 3, compute: 5, stream: 4 },
+            StageCost::opaque(6),
+            StageCost { scan: 0, floor: 2, compute: 9, stream: 12 },
+            StageCost { scan: 4, floor: 1, compute: 0, stream: 7 },
+        ];
+        let mut p = PipelineWindow::new(0, 8);
+        let mut w = PrefetchWindow::new(8);
+        let mut p_total = 0u64;
+        let mut w_total = 0u64;
+        for c in stages {
+            p_total += p.stage(c);
+            w_total += w.stage((c.floor + c.scan).max(c.compute), c.stream);
+        }
+        assert_eq!(p_total, w_total);
+        assert_eq!(p.a_hidden_cycles, 0);
+        assert_eq!(p.w_stats(8, 64), w.stats(8, 64));
+        let mut serial_win = PipelineWindow::new(0, 0);
+        let total: u64 = stages.iter().map(|&c| serial_win.stage(c)).sum();
+        let serial: u64 = stages.iter().map(StageCost::serial).sum();
+        assert_eq!(total, serial, "both FIFOs at 0 is exactly the serial reference");
+    }
+
+    #[test]
+    fn prop_pipeline_window_bounded_by_serial_and_resource_totals() {
+        // For any stage sequence and capacities: the three-stream total is
+        // never above the serial elastic composition and never below any
+        // serialized resource — Σ stream (one WMU port), Σ scan (one IG
+        // scanner), Σ max(floor, compute) (one array) — and the hidden
+        // counters must cover the whole gap to serial.
+        forall("pipeline window bounds", 120, |g| {
+            let a_cap = g.size(0, 64) as u64;
+            let w_cap = g.size(0, 64) as u64;
+            let mut p = PipelineWindow::new(a_cap, w_cap);
+            let n = g.size(1, 20);
+            let mut total = 0u64;
+            let mut serial = 0u64;
+            let mut scan_sum = 0u64;
+            let mut stream_sum = 0u64;
+            let mut array_sum = 0u64;
+            for _ in 0..n {
+                let c = StageCost {
+                    scan: g.size(0, 40) as u64,
+                    floor: g.size(0, 40) as u64,
+                    compute: g.size(0, 40) as u64,
+                    stream: g.size(0, 40) as u64,
+                };
+                total += p.stage(c);
+                serial += c.serial();
+                scan_sum += c.scan;
+                stream_sum += c.stream;
+                array_sum += c.floor.max(c.compute);
+            }
+            assert!(total <= serial, "pipelined {total} > serial {serial}");
+            assert!(total >= scan_sum, "pipelined {total} < total scan {scan_sum}");
+            assert!(total >= stream_sum, "pipelined {total} < total stream {stream_sum}");
+            assert!(total >= array_sum, "pipelined {total} < total array {array_sum}");
+            assert!(
+                p.a_hidden_cycles + p.w.hidden_cycles >= serial - total,
+                "hidden must cover the gap"
+            );
+            assert!(p.a_high_water_beats() <= a_cap, "occupancy can never exceed the A-FIFO");
+            if a_cap == 0 {
+                assert_eq!(p.a_hidden_cycles, 0);
+            }
         });
     }
 

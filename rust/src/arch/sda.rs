@@ -92,6 +92,13 @@ pub struct SdaStats {
     pub cycles: u64,
     /// Cycles a rigid (non-elastic) pipeline would have spent.
     pub cycles_rigid: u64,
+    /// IG scan cycles alone (`ceil(C·H·W / scan_width)`): the component the
+    /// activation-side prefetch can hide behind the previous layer's drain.
+    pub scan_cycles: u64,
+    /// CP-gen/diffusion cycles alone (`ceil(spikes / events_per_cycle)`):
+    /// events must feed the EPA in order, so this component is never
+    /// hideable. `cycles = fill + max(scan_cycles, event_cycles)`.
+    pub event_cycles: u64,
     /// Events dropped into the virtual halo (padding clips).
     pub halo_drops: u64,
     /// Input spike count (IG stage output).
@@ -111,6 +118,10 @@ pub struct SdaOutput {
     pub cycles: u64,
     /// Cycles a rigid (non-elastic) pipeline would have spent.
     pub cycles_rigid: u64,
+    /// IG scan cycles alone (see [`SdaStats::scan_cycles`]).
+    pub scan_cycles: u64,
+    /// CP-gen/diffusion cycles alone (see [`SdaStats::event_cycles`]).
+    pub event_cycles: u64,
     /// Events dropped into the virtual halo (padding clips).
     pub halo_drops: u64,
     /// Input spike count (IG stage output).
@@ -124,6 +135,8 @@ impl SdaOutput {
         SdaStats {
             cycles: self.cycles,
             cycles_rigid: self.cycles_rigid,
+            scan_cycles: self.scan_cycles,
+            event_cycles: self.event_cycles,
             halo_drops: self.halo_drops,
             input_spikes: self.input_spikes,
             events: self.events.len() as u64,
@@ -249,6 +262,8 @@ impl PipeSda {
         let scan = ((geom.in_dims.0 * h * w) as u64).div_ceil(self.scan_width.max(1) as u64);
         let ev = (events_in.len() as u64).div_ceil(self.events_per_cycle.max(1) as u64);
         let fill = self.stages as u64;
+        out.scan_cycles = scan;
+        out.event_cycles = ev;
         out.cycles = fill + scan.max(ev);
         out.cycles_rigid = fill + scan + events_in.len() as u64;
         out
@@ -377,9 +392,19 @@ impl PipeSda {
         let scan = ((geom.in_dims.0 * h * w) as u64).div_ceil(self.scan_width.max(1) as u64);
         let ev = stats.input_spikes.div_ceil(self.events_per_cycle.max(1) as u64);
         let fill = self.stages as u64;
+        stats.scan_cycles = scan;
+        stats.event_cycles = ev;
         stats.cycles = fill + scan.max(ev);
         stats.cycles_rigid = fill + scan + stats.input_spikes;
         stats
+    }
+
+    /// Scan beats of a boundary buffer's front map this SDA's IG could have
+    /// prescanned into the A-FIFO while the producing layer ran — the
+    /// residency bound of the activation-side prefetch (the capacity and
+    /// idle-time bounds live in `arch::fifo::PipelineWindow`).
+    pub fn prescan_beats(&self, boundary: &crate::snn::SpikeDoubleBuffer) -> u64 {
+        boundary.scannable_beats(self.scan_width)
     }
 }
 
@@ -449,6 +474,8 @@ mod tests {
         // fill (3 stages) + max(scan = 2, ev = ceil(1/8) = 1)
         assert_eq!(out.cycles, 3 + 2);
         assert_eq!(out.cycles_rigid, 3 + 2 + 1);
+        assert_eq!(out.scan_cycles, 2);
+        assert_eq!(out.event_cycles, 1);
         let packed = crate::snn::PackedSpikeMap::from_map(&m);
         let mut sink = MaterializeSink::for_geom(&geom);
         let stats = sda.stream(&packed, &geom, &mut sink);

@@ -20,24 +20,27 @@
 //! event-vector path and the attention/WTFC through the byte-map walks —
 //! both must produce bit-identical reports.
 //!
-//! Latency composition (see DESIGN.md §Cross-layer weight prefetch): each
-//! timed node contributes an (array work, weight stream) stage; the
-//! elastic default threads the stages through a capacity-bounded
-//! [`PrefetchWindow`] so a layer's weight stream hides behind earlier
-//! layers' compute (the WMU filling the W-FIFO "based on the computation
-//! status", paper Fig 3), while `pipeline = false` keeps the per-layer
-//! serial `max` and the rigid ablation keeps the `+`.
+//! Latency composition (see DESIGN.md §Cross-layer weight prefetch and
+//! §Activation-side prefetch): each timed node contributes a three-stream
+//! [`StageCost`] — hideable input-scan beats, array floor, weight stream —
+//! and the elastic default threads the stages through a capacity-bounded
+//! [`PipelineWindow`]: the weight stream hides behind earlier layers'
+//! compute (the WMU filling the W-FIFO "based on the computation status",
+//! paper Fig 3) and the input scan hides behind the producing layer's
+//! drain (the IG prescanning the double-buffered spike map into the
+//! A-FIFO), while `pipeline = false` keeps the per-layer serial `max` and
+//! the rigid ablation keeps the `+`.
 
 use crate::arch::energy::{Activity, EnergyBreakdown, EnergyModel};
 use crate::arch::epa::{ConvParams, ConvScratch, Epa, SharedWeightCache};
-use crate::arch::fifo::{PrefetchWindow, WfifoStats};
+use crate::arch::fifo::{AfifoStats, PipelineWindow, StageCost, WfifoStats};
 use crate::arch::qkformer::{on_the_fly_attention, on_the_fly_attention_bytes};
 use crate::arch::sda::{ConvGeom, PipeSda};
 use crate::arch::wmu::{Wmu, WmuBroadcast};
 use crate::arch::wtfc::Wtfc;
 use crate::config::ArchConfig;
 use crate::model::ir::{Model, Op};
-use crate::snn::{PackedSpikeMap, SpikeMap};
+use crate::snn::{PackedSpikeMap, SpikeDoubleBuffer, SpikeMap};
 use anyhow::{bail, Result};
 
 /// Per-module cycle accounting (paper Table I module granularity).
@@ -78,7 +81,8 @@ pub enum WeightFlow<'a> {
 #[derive(Debug, Clone, Default)]
 pub struct Report {
     /// End-to-end latency in cycles (elastic composition per layer, with
-    /// cross-layer weight prefetch when [`Accelerator::pipeline`] is on).
+    /// cross-layer weight prefetch and activation-side scan prefetch when
+    /// [`Accelerator::pipeline`] is on).
     pub cycles: u64,
     /// What a rigid (non-elastic) design would pay.
     pub cycles_rigid: u64,
@@ -90,6 +94,8 @@ pub struct Report {
     pub modules: ModuleCycles,
     /// W-FIFO prefetch-model occupancy/stall stats (buffer-sizing view).
     pub wfifo: WfifoStats,
+    /// A-FIFO (activation-side prescan) occupancy/stall stats.
+    pub afifo: AfifoStats,
     /// Total WMU port-busy cycles across the image's weight streams.
     pub weight_stream_cycles: u64,
     /// Activity counters (drives the energy model).
@@ -252,9 +258,15 @@ impl Accelerator {
         let mut report = Report::default();
         let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
         let mut acts: Vec<PackedSpikeMap> = Vec::with_capacity(model.nodes.len());
-        // Per-node (array work, weight stream) stage costs in walk order,
-        // composed into the end-to-end latency after the walk.
-        let mut stages: Vec<(u64, u64)> = Vec::with_capacity(model.nodes.len());
+        // Per-node three-stream stage costs in walk order, composed into
+        // the end-to-end latency after the walk.
+        let mut stages: Vec<StageCost> = Vec::with_capacity(model.nodes.len());
+        // Double-buffered spiking buffer at the current layer boundary: the
+        // front bank always holds the most recently produced activation
+        // map, which is what the next conv's IG prescans while the producer
+        // drains. Bounds how many scan beats a conv may hide to what its
+        // direct producer has actually published.
+        let mut boundary = SpikeDoubleBuffer::default();
         let mut fc_weight_nodes: Vec<(usize, u64)> = Vec::new();
         let mut util_sum = 0.0;
         let mut util_n = 0usize;
@@ -266,6 +278,7 @@ impl Accelerator {
                 Op::Input => {
                     let packed = PackedSpikeMap::from_map(input);
                     report.total_spikes += packed.count_ones() as u64;
+                    boundary.publish_map(&packed);
                     acts.push(packed);
                 }
                 Op::Conv { cin, cout, k, stride, pad, thresholds, tau_half, weights, .. } => {
@@ -285,7 +298,7 @@ impl Accelerator {
                     // cache. Validation mode materializes the events and
                     // replays them; both yield bit-identical reports.
                     wmu.begin_node(nid);
-                    let (out, st, sda_c, sda_cr) = if self.fused {
+                    let (out, st, sda_st) = if self.fused {
                         let taps = *cin * *k * *k;
                         let wt = weight_cache.transposed(model_key, nid, weights, *cout, taps);
                         let (out, st, sda_st) = self.epa.run_conv_fused_cached_par(
@@ -298,7 +311,7 @@ impl Accelerator {
                             conv_scratch,
                             self.host_threads,
                         );
-                        (out, st, sda_st.cycles, sda_st.cycles_rigid)
+                        (out, st, sda_st)
                     } else {
                         let dense = x.to_map();
                         let sda_out = self.sda.process(&dense, &geom);
@@ -309,27 +322,48 @@ impl Accelerator {
                             geom.out_dims.0,
                             geom.out_dims.1,
                         );
-                        (PackedSpikeMap::from_map(&out), st, sda_out.cycles, sda_out.cycles_rigid)
+                        (PackedSpikeMap::from_map(&out), st, sda_out.stats())
                     };
                     // Elastic: SDA streams into the EPA through S-FIFO, so
                     // the layer costs max(sda, epa); rigid pays the sum.
                     let (sda_c, epa_c) = if self.elastic {
-                        (sda_c, st.cycles)
+                        (sda_st.cycles, st.cycles)
                     } else {
-                        (sda_cr, st.cycles_rigid)
+                        (sda_st.cycles_rigid, st.cycles_rigid)
                     };
-                    // Stage decomposition for the cross-layer pipeline:
-                    // an elastic layer splits into (array work, weight
-                    // stream) so the prefetch window can hide the stream
-                    // behind earlier layers; a rigid layer stays one serial
-                    // lump (its stream is already summed into
-                    // `st.cycles_rigid`), keeping the ablation's `+`.
+                    // Stage decomposition for the cross-layer pipeline: an
+                    // elastic layer splits into three streams — the IG scan
+                    // slack that a prescan could hide behind the producing
+                    // layer's drain, the array floor that always runs under
+                    // this stage, and the weight stream the W-FIFO can pull
+                    // in early. Only `scan - event` beats are hideable: the
+                    // CP diffusion must still replay every event through the
+                    // array, so prescanning beyond the event stream buys
+                    // nothing (fill + max(scan - h, ev) stays exact for any
+                    // hidden h up to that slack). The double-buffer clamp
+                    // additionally bounds the slack to what the direct
+                    // producer has published (skip inputs are long
+                    // complete, so only the adjacent edge binds). A rigid
+                    // layer stays one serial lump (its stream is already
+                    // summed into `st.cycles_rigid`), keeping the
+                    // ablation's `+`.
                     if self.elastic {
-                        stages.push((sda_c.max(st.compute_cycles), st.weight_cycles));
+                        let ascan = sda_st.scan_cycles.saturating_sub(sda_st.event_cycles);
+                        let hideable = if node.inputs[0] + 1 == nid {
+                            ascan.min(self.sda.prescan_beats(&boundary))
+                        } else {
+                            ascan
+                        };
+                        stages.push(StageCost {
+                            scan: hideable,
+                            floor: sda_c - hideable,
+                            compute: st.compute_cycles,
+                            stream: st.weight_cycles,
+                        });
                     } else {
-                        stages.push((sda_c + epa_c, 0));
+                        stages.push(StageCost::opaque(sda_c + epa_c));
                     }
-                    report.cycles_rigid += sda_cr + st.cycles_rigid;
+                    report.cycles_rigid += sda_st.cycles_rigid + st.cycles_rigid;
                     report.modules.sda += sda_c;
                     report.modules.epa += epa_c;
                     report.activity.sops += st.sops;
@@ -340,18 +374,22 @@ impl Accelerator {
                     report.total_spikes += st.fires;
                     util_sum += st.utilization;
                     util_n += 1;
+                    boundary.publish_map(&out);
                     acts.push(out);
                 }
                 Op::MaxPool { k, stride } => {
                     let x = &acts[node.inputs[0]];
                     let out = pool_or(x, *k, *stride)?;
                     // Pool runs in the spiking-buffer datapath: one scan.
+                    // Opaque stage: its whole duration is scanner-idle, so
+                    // the next conv's prescan can bank against it.
                     let cyc = (x.numel() as u64).div_ceil(32);
-                    stages.push((cyc, 0));
+                    stages.push(StageCost::opaque(cyc));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
                     report.total_spikes += out.count_ones() as u64;
+                    boundary.publish_map(&out);
                     acts.push(out);
                 }
                 Op::Or => {
@@ -361,11 +399,12 @@ impl Accelerator {
                     let mut out = a.clone();
                     out.or_assign(b);
                     let cyc = (a.numel() as u64).div_ceil(32);
-                    stages.push((cyc, 0));
+                    stages.push(StageCost::opaque(cyc));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (a.numel() as u64).div_ceil(8) * 2;
                     report.total_spikes += out.count_ones() as u64;
+                    boundary.publish_map(&out);
                     acts.push(out);
                 }
                 Op::TokenMask { mode } => {
@@ -389,6 +428,7 @@ impl Accelerator {
                     report.activity.buf_bytes += (st.reg_updates + st.mask_applies).div_ceil(8);
                     report.qkf_suppressed += st.suppressed;
                     report.total_spikes += out.count_ones() as u64;
+                    boundary.publish_map(&out);
                     acts.push(out);
                 }
                 Op::W2ttfsFc { classes, cin, ho, wo, window, weights, .. } => {
@@ -401,7 +441,7 @@ impl Accelerator {
                         self.wtfc.run(&x.to_map(), *classes, *cin, *ho, *wo, *window, weights)
                     };
                     let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
-                    stages.push((cyc, 0));
+                    stages.push(StageCost::opaque(cyc));
                     report.cycles_rigid += out.cycles_rigid;
                     report.modules.wtfc += cyc;
                     report.activity.sops += out.sops;
@@ -409,7 +449,9 @@ impl Accelerator {
                     // the broadcast ledger can share the fetch).
                     fc_weight_nodes.push((nid, weights.len() as u64));
                     report.logits = out.logits;
-                    acts.push(PackedSpikeMap::zeros((*classes, 1, 1)));
+                    let sink = PackedSpikeMap::zeros((*classes, 1, 1));
+                    boundary.publish_map(&sink);
+                    acts.push(sink);
                 }
             }
         }
@@ -417,22 +459,28 @@ impl Accelerator {
         // `cycles_serial` is the per-layer elastic `max` composition (the
         // pre-pipeline model); `cycles` additionally hides each layer's
         // weight stream behind earlier layers' compute through the W-FIFO
-        // prefetch window — capacity-bounded, so an undersized FIFO only
-        // partially overlaps and capacity 0 reproduces the serial numbers
+        // prefetch window and each conv's input-scan slack behind its
+        // producer's drain through the A-FIFO prescan window — both
+        // capacity-bounded, so an undersized FIFO only partially overlaps
+        // and capacity 0 on both sides reproduces the serial numbers
         // exactly. The rigid ablation's stages are serial lumps, so both
         // compositions degenerate to the rigid `+` there.
-        let cap_cycles = if self.elastic && self.pipeline {
+        let w_cap_cycles = if self.elastic && self.pipeline {
             self.cfg.wfifo_bytes() / self.cfg.wmu_bytes_per_cycle.max(1) as u64
         } else {
             0
         };
-        let mut window = PrefetchWindow::new(cap_cycles);
-        for &(work, stream) in &stages {
-            report.cycles_serial += work.max(stream);
-            report.cycles += window.stage(work, stream);
+        let a_cap_beats =
+            if self.elastic && self.pipeline { self.cfg.afifo_depth as u64 } else { 0 };
+        let mut window = PipelineWindow::new(a_cap_beats, w_cap_cycles);
+        for &c in &stages {
+            report.cycles_serial += c.serial();
+            report.cycles += window.stage(c);
         }
-        let cap_bytes = if cap_cycles > 0 { self.cfg.wfifo_bytes() } else { 0 };
-        report.wfifo = window.stats(self.cfg.wmu_bytes_per_cycle, cap_bytes);
+        let w_cap_bytes = if w_cap_cycles > 0 { self.cfg.wfifo_bytes() } else { 0 };
+        report.wfifo = window.w_stats(self.cfg.wmu_bytes_per_cycle, w_cap_bytes);
+        let a_cap_bytes = if a_cap_beats > 0 { self.cfg.afifo_bytes() } else { 0 };
+        report.afifo = window.a_stats(self.cfg.afifo_beat_bytes(), a_cap_bytes);
         report.weight_stream_cycles = wmu.stream_cycles;
         // Weight-stream DRAM: conv weights (per-node WMU transactions) + FC
         // weights — full charge standalone, or the even split of the single
@@ -585,6 +633,7 @@ mod tests {
                 assert_eq!(fused.cycles_serial, mat.cycles_serial, "{label}");
                 assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{label}");
                 assert_eq!(fused.wfifo, mat.wfifo, "{label}");
+                assert_eq!(fused.afifo, mat.afifo, "{label}");
                 assert_eq!(fused.weight_stream_cycles, mat.weight_stream_cycles, "{label}");
                 assert_eq!(fused.modules.sda, mat.modules.sda, "{label}");
                 assert_eq!(fused.modules.epa, mat.modules.epa, "{label}");
@@ -720,15 +769,18 @@ mod tests {
             let label = &model.name;
             assert_eq!(serial.cycles, serial.cycles_serial, "{label}: pipeline off == serial");
             assert_eq!(serial.wfifo.hidden_cycles, 0, "{label}");
+            assert_eq!(serial.afifo.hidden_cycles, 0, "{label}");
             assert_eq!(piped.cycles_serial, serial.cycles, "{label}: same serial reference");
             assert!(piped.cycles <= piped.cycles_serial, "{label}");
             assert!(piped.cycles < serial.cycles, "{label}: prefetch must strictly help");
             assert!(piped.cycles >= piped.weight_stream_cycles, "{label}: WMU is one port");
             assert!(
-                piped.cycles_serial - piped.cycles <= piped.wfifo.hidden_cycles,
-                "{label}: the gap must be covered by hidden stream cycles"
+                piped.cycles_serial - piped.cycles
+                    <= piped.wfifo.hidden_cycles + piped.afifo.hidden_cycles,
+                "{label}: the gap must be covered by hidden stream + prescan cycles"
             );
             assert!(piped.wfifo.high_water_bytes <= piped.wfifo.capacity_bytes, "{label}");
+            assert!(piped.afifo.high_water_bytes <= piped.afifo.capacity_bytes, "{label}");
             // Function is untouched by the schedule.
             assert_eq!(piped.logits, serial.logits, "{label}");
             assert_eq!(piped.total_spikes, serial.total_spikes, "{label}");
@@ -738,11 +790,12 @@ mod tests {
 
     #[test]
     fn zero_capacity_wfifo_degenerates_to_serial() {
-        // wfifo_depth = 0 means nothing can be prefetched ahead: the
-        // pipelined schedule must reproduce the serial composition exactly.
+        // Depth 0 on both elastic FIFOs means nothing can be prefetched or
+        // prescanned ahead: the pipelined schedule must reproduce the
+        // serial composition exactly.
         let m = zoo::resnet11(10, 3);
         let x = input(3);
-        let cfg = ArchConfig { wfifo_depth: 0, ..Default::default() };
+        let cfg = ArchConfig { wfifo_depth: 0, afifo_depth: 0, ..Default::default() };
         let piped = Accelerator::new(cfg.clone()).run(&m, &x).unwrap();
         let mut serial_acc = Accelerator::new(cfg);
         serial_acc.pipeline = false;
@@ -751,7 +804,28 @@ mod tests {
         assert_eq!(piped.cycles, piped.cycles_serial);
         assert_eq!(piped.wfifo.hidden_cycles, 0);
         assert_eq!(piped.wfifo.capacity_bytes, 0);
+        assert_eq!(piped.afifo.hidden_cycles, 0);
+        assert_eq!(piped.afifo.capacity_bytes, 0);
         assert!(piped.wfifo.stall_cycles > 0, "stream-bound layers stall in the open");
+    }
+
+    #[test]
+    fn zero_afifo_depth_keeps_weight_prefetch_but_no_prescan() {
+        // afifo_depth = 0 alone must reproduce the two-stream (weight
+        // prefetch only) schedule: the W-FIFO still hides streams, but no
+        // scan beat is ever hidden.
+        let m = zoo::resnet11(10, 3);
+        let x = input(3);
+        let cfg = ArchConfig { afifo_depth: 0, ..Default::default() };
+        let rep = Accelerator::new(cfg).run(&m, &x).unwrap();
+        assert_eq!(rep.afifo.hidden_cycles, 0);
+        assert_eq!(rep.afifo.high_water_bytes, 0);
+        assert_eq!(rep.afifo.capacity_bytes, 0);
+        assert!(rep.wfifo.hidden_cycles > 0, "weight prefetch is independent of the A-FIFO");
+        let full = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        assert!(full.cycles <= rep.cycles, "adding the A-FIFO never hurts");
+        assert_eq!(full.cycles_serial, rep.cycles_serial, "serial reference unchanged");
+        assert_eq!(full.logits, rep.logits);
     }
 
     #[test]
@@ -768,6 +842,8 @@ mod tests {
             assert_eq!(par.logits, serial.logits, "{label}");
             assert_eq!(par.cycles, serial.cycles, "{label}");
             assert_eq!(par.cycles_rigid, serial.cycles_rigid, "{label}");
+            assert_eq!(par.wfifo, serial.wfifo, "{label}");
+            assert_eq!(par.afifo, serial.afifo, "{label}");
             assert_eq!(par.total_spikes, serial.total_spikes, "{label}");
             assert_eq!(par.activity.sops, serial.activity.sops, "{label}");
             assert_eq!(par.activity.dram_bytes, serial.activity.dram_bytes, "{label}");

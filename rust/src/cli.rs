@@ -138,7 +138,8 @@ USAGE:
                     [--sla-weights W,W,..]
                     [--max-queue-depth N|sla] [--max-retries N]
                     [--fault-plan PATH.ini] [--fault-seed N]
-                    [--pipeline on|off] [--broadcast-wmu on|off] [--host-threads N|auto]
+                    [--pipeline on|off] [--afifo-depth N] [--broadcast-wmu on|off]
+                    [--host-threads N|auto]
                     (--workers N sizes the engine pool: one simulator replica
                      per worker thread, batches fan out across them and all
                      replicas share one cross-worker transposed-weight cache;
@@ -158,7 +159,11 @@ USAGE:
                      `materializing` runs the event-vector
                      validation path; --pipeline, default on, overlaps each
                      layer's weight stream with earlier layers' compute through
-                     the W-FIFO; --broadcast-wmu, default on, shares one weight
+                     the W-FIFO and each layer's input scan with its producer's
+                     drain through the A-FIFO; --afifo-depth N overrides the
+                     A-FIFO capacity in 32-pixel scan beats ([sda] afifo_depth
+                     in the arch INI; 0 disables activation-side prefetch);
+                     --broadcast-wmu, default on, shares one weight
                      fetch per node across each device batch; --host-threads N
                      spreads the fused conv scatter over N host threads per
                      image, `auto` detects the core count when --workers is 1;

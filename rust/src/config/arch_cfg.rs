@@ -20,6 +20,11 @@ pub struct ArchConfig {
     pub epa_cols: usize,
     /// Elastic weight FIFO depth (entries per column).
     pub wfifo_depth: usize,
+    /// Elastic activation FIFO depth, in IG scan beats (one beat = one
+    /// `sdu_grid`-pixel word of a packed spike map). Bounds how far the
+    /// next layer's input scan can run ahead of the current layer's drain;
+    /// 0 disables activation-side prefetch.
+    pub afifo_depth: usize,
     /// Elastic spike FIFO depth (entries per row).
     pub sfifo_depth: usize,
     /// Per-PE event FIFO depth (paper Fig 3 ③).
@@ -82,6 +87,7 @@ impl Default for ArchConfig {
             epa_rows: 16,
             epa_cols: 16,
             wfifo_depth: 32,
+            afifo_depth: 2048, // 2048 32-pixel beats = 8 KiB, symmetric with the W-FIFO
             sfifo_depth: 32,
             event_fifo_depth: 16,
             sda_stages: 3,
@@ -111,6 +117,7 @@ impl ArchConfig {
             epa_rows: ini.get_usize("epa", "rows", d.epa_rows)?,
             epa_cols: ini.get_usize("epa", "cols", d.epa_cols)?,
             wfifo_depth: ini.get_usize("epa", "wfifo_depth", d.wfifo_depth)?,
+            afifo_depth: ini.get_usize("sda", "afifo_depth", d.afifo_depth)?,
             sfifo_depth: ini.get_usize("epa", "sfifo_depth", d.sfifo_depth)?,
             event_fifo_depth: ini.get_usize("epa", "event_fifo_depth", d.event_fifo_depth)?,
             sda_stages: ini.get_usize("sda", "stages", d.sda_stages)?,
@@ -157,6 +164,22 @@ impl ArchConfig {
         (self.wfifo_depth * self.epa_cols * self.epa_rows * weight_bytes) as u64
     }
 
+    /// Bytes per A-FIFO entry: one IG scan beat is one 32-pixel word of a
+    /// packed spike map (the PipeSDA's fixed scan width), 1 bit per pixel.
+    pub fn afifo_beat_bytes(&self) -> u64 {
+        4
+    }
+
+    /// Elastic A-FIFO capacity in bytes: `afifo_depth` scan-beat entries of
+    /// [`ArchConfig::afifo_beat_bytes`] each. This bounds how many beats of
+    /// the next layer's input the IG can prescan while the current layer
+    /// drains (activation-side prefetch); a depth of 0 disables the
+    /// overlap and the stage walk degenerates to the two-stream (weight
+    /// prefetch only) composition.
+    pub fn afifo_bytes(&self) -> u64 {
+        self.afifo_depth as u64 * self.afifo_beat_bytes()
+    }
+
     /// Shared transposed-weight cache budget in bytes (see
     /// [`crate::arch::SharedWeightCache`]).
     pub fn weight_cache_bytes(&self) -> u64 {
@@ -197,6 +220,15 @@ mod tests {
     }
 
     #[test]
+    fn afifo_bytes_from_depth() {
+        // Default: 2048 beats × 4 B/beat = 8 KiB, symmetric with the
+        // W-FIFO default.
+        assert_eq!(ArchConfig::default().afifo_bytes(), 8192);
+        let none = ArchConfig { afifo_depth: 0, ..Default::default() };
+        assert_eq!(none.afifo_bytes(), 0);
+    }
+
+    #[test]
     fn cycles_to_ms_at_200mhz() {
         let c = ArchConfig::default();
         // 200 MHz -> 200k cycles per ms.
@@ -205,10 +237,15 @@ mod tests {
 
     #[test]
     fn ini_overrides() {
-        let ini = Ini::parse("[epa]\nrows = 8\ncols = 4\n[energy]\ne_sop_pj = 9.9\n").unwrap();
+        let ini = Ini::parse(
+            "[epa]\nrows = 8\ncols = 4\n[sda]\nafifo_depth = 64\n[energy]\ne_sop_pj = 9.9\n",
+        )
+        .unwrap();
         let c = ArchConfig::from_ini(&ini).unwrap();
         assert_eq!(c.num_pes(), 32);
         assert!((c.energy.e_sop_pj - 9.9).abs() < 1e-12);
+        assert_eq!(c.afifo_depth, 64);
+        assert_eq!(c.afifo_bytes(), 256);
         // untouched key keeps default
         assert_eq!(c.sfifo_depth, 32);
     }

@@ -12,6 +12,7 @@ use crate::arch::{Accelerator, Report, SimScratch, WeightFlow, WmuBroadcast};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::config::ArchConfig;
 use crate::coordinator::registry::{ModelId, ModelRegistry};
+use crate::coordinator::request::PipelineCounters;
 use crate::model::{exec, Model};
 use crate::snn::SpikeMap;
 use anyhow::Result;
@@ -33,6 +34,8 @@ pub struct Outcome {
     /// Conv/FC weight-stream DRAM bytes charged to this image (after any
     /// broadcast-WMU sharing; 0 for golden).
     pub weight_dram_bytes: u64,
+    /// Device pipeline-overlap counters (all zero for golden).
+    pub pipe: PipelineCounters,
     /// Raw logits (integer domain).
     pub logits: Vec<i64>,
 }
@@ -250,6 +253,7 @@ impl Engine {
                     total_spikes: t.total_spikes,
                     sops: t.total_sops,
                     weight_dram_bytes: 0,
+                    pipe: PipelineCounters::default(),
                     logits: t.logits,
                 })
             }
@@ -280,6 +284,14 @@ fn report_to_outcome(r: Report) -> Outcome {
         total_spikes: r.total_spikes,
         sops: r.activity.sops,
         weight_dram_bytes: r.weight_dram_bytes,
+        pipe: PipelineCounters {
+            cycles: r.cycles,
+            cycles_serial: r.cycles_serial,
+            wfifo_hidden: r.wfifo.hidden_cycles,
+            wfifo_stall: r.wfifo.stall_cycles,
+            afifo_hidden: r.afifo.hidden_cycles,
+            afifo_stall: r.afifo.stall_cycles,
+        },
         logits: r.logits,
     }
 }

@@ -3,7 +3,7 @@
 use crate::arch::WeightCacheStats;
 use crate::coordinator::fault::ReliabilityStats;
 use crate::coordinator::registry::ModelId;
-use crate::coordinator::request::{InferResponse, RequestOutcome};
+use crate::coordinator::request::{InferResponse, PipelineCounters, RequestOutcome};
 use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
 use crate::util::Summary;
 use std::collections::BTreeMap;
@@ -143,6 +143,9 @@ pub struct Metrics {
     /// The pool's supervision counters, absorbed at the end of a run via
     /// [`Metrics::absorb_reliability`].
     pub reliability: ReliabilityStats,
+    /// Device pipeline-overlap counters summed over completed requests
+    /// (all zero for backends without a device model).
+    pub pipeline: PipelineCounters,
     /// Display-only run wall time in seconds, stamped by the CLI *after*
     /// the deterministic serving path finished (`None` until then). The
     /// only host-time-derived value in the metrics, and nothing merged or
@@ -206,6 +209,7 @@ impl Metrics {
         self.energy_mj.add(r.energy_mj);
         self.spikes.add(r.total_spikes as f64);
         self.total_sops += r.sops;
+        self.pipeline.add(&r.pipe);
         self.response_order.push(r.id);
         let m = self.per_model.entry(r.model).or_default();
         m.completed += 1;
@@ -343,6 +347,28 @@ impl Metrics {
         ))
     }
 
+    /// One-line pipeline-overlap report (None when no device-modeled
+    /// request completed — golden/baseline-less runs stay quiet, keeping
+    /// pre-pipeline output bit-identical). The speedup is the run-wide
+    /// serial-vs-pipelined cycle ratio; the FIFO clauses split the hidden
+    /// and exposed cycles between the weight and activation sides.
+    pub fn pipeline_line(&self) -> Option<String> {
+        let p = &self.pipeline;
+        if p.cycles_serial == 0 {
+            return None;
+        }
+        Some(format!(
+            "pipeline: cycles={} serial={} ({:.3}x) wfifo hidden={} stalled={} afifo hidden={} stalled={}",
+            p.cycles,
+            p.cycles_serial,
+            p.cycles_serial as f64 / p.cycles.max(1) as f64,
+            p.wfifo_hidden,
+            p.wfifo_stall,
+            p.afifo_hidden,
+            p.afifo_stall
+        ))
+    }
+
     /// Requests offered to the serving layer: completed + shed + failed.
     pub fn offered(&self) -> u64 {
         self.completed + self.shed + self.failed
@@ -414,6 +440,14 @@ mod tests {
             energy_mj: 1.0,
             total_spikes: 50,
             sops: 500,
+            pipe: PipelineCounters {
+                cycles: 80,
+                cycles_serial: 100,
+                wfifo_hidden: 15,
+                wfifo_stall: 3,
+                afifo_hidden: 5,
+                afifo_stall: 2,
+            },
             outcome: RequestOutcome::Ok,
             retries: 0,
         }
@@ -631,6 +665,30 @@ mod tests {
         let line = m2.reliability_line().unwrap();
         assert!(line.contains("stalls=2/6t"), "{line}");
         assert!(line.contains("availability=100.00%"), "{line}");
+    }
+
+    #[test]
+    fn pipeline_line_aggregates_and_stays_quiet_without_device_model() {
+        let mut m = Metrics::default();
+        assert!(m.pipeline_line().is_none(), "empty run prints nothing");
+        // A golden-backend response carries all-zero counters: still quiet.
+        let mut zero = resp(0, 1, Some(1), 1.0);
+        zero.pipe = PipelineCounters::default();
+        m.record(&zero);
+        assert!(m.pipeline_line().is_none(), "all-zero counters stay quiet");
+        m.record(&resp(1, 1, Some(1), 1.0));
+        m.record(&resp(2, 1, Some(1), 1.0));
+        assert_eq!(m.pipeline.cycles, 160);
+        assert_eq!(m.pipeline.cycles_serial, 200);
+        let line = m.pipeline_line().unwrap();
+        assert!(line.contains("cycles=160 serial=200 (1.250x)"), "{line}");
+        assert!(line.contains("wfifo hidden=30 stalled=6"), "{line}");
+        assert!(line.contains("afifo hidden=10 stalled=4"), "{line}");
+        // Shed/failed markers never touch the counters.
+        m.record(&InferResponse::shed(3, ModelId(0)));
+        m.record(&InferResponse::failed(4, ModelId(0), 1));
+        assert_eq!(m.pipeline.cycles, 160);
+        assert_eq!(m.pipeline.afifo_hidden, 10);
     }
 
     #[test]

@@ -29,6 +29,6 @@ pub use fault::{FaultAction, FaultPlan, ReliabilityStats};
 pub use metrics::{Metrics, ModelMetrics};
 pub use pool::{BatchResult, EnginePool};
 pub use registry::{ModelEntry, ModelId, ModelRegistry};
-pub use request::{InferRequest, InferResponse, RequestOutcome, ServeError};
+pub use request::{InferRequest, InferResponse, PipelineCounters, RequestOutcome, ServeError};
 pub use sched::{ModelSched, SchedPolicy, TickStats, VirtualClock};
 pub use server::Coordinator;

@@ -75,6 +75,38 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Pipeline-overlap counters of one simulated inference, copied off the
+/// device report so the metrics layer can aggregate a serving-wide view of
+/// how much latency the elastic FIFOs hid (all zero for backends without a
+/// device model, e.g. the golden executor, and for shed/failed requests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineCounters {
+    /// End-to-end device cycles (elastic pipelined composition).
+    pub cycles: u64,
+    /// Serial-reference cycles (per-layer `max`, no cross-layer overlap).
+    pub cycles_serial: u64,
+    /// Weight-stream cycles hidden behind earlier layers by the W-FIFO.
+    pub wfifo_hidden: u64,
+    /// Cycles the array stalled waiting on the weight stream.
+    pub wfifo_stall: u64,
+    /// IG scan cycles hidden behind the producer's drain by the A-FIFO.
+    pub afifo_hidden: u64,
+    /// IG scan cycles paid in the open (prescan missed or disabled).
+    pub afifo_stall: u64,
+}
+
+impl PipelineCounters {
+    /// Accumulate another response's counters (metrics aggregation).
+    pub fn add(&mut self, o: &PipelineCounters) {
+        self.cycles += o.cycles;
+        self.cycles_serial += o.cycles_serial;
+        self.wfifo_hidden += o.wfifo_hidden;
+        self.wfifo_stall += o.wfifo_stall;
+        self.afifo_hidden += o.afifo_hidden;
+        self.afifo_stall += o.afifo_stall;
+    }
+}
+
 /// How a request ended, carried on its [`InferResponse`]: metrics count
 /// `Ok` responses in accuracy/latency/energy and keep `Shed`/`Failed` in
 /// their own availability counters.
@@ -112,6 +144,9 @@ pub struct InferResponse {
     pub total_spikes: u64,
     /// Synaptic operations.
     pub sops: u64,
+    /// Device pipeline-overlap counters (zero when the backend has no
+    /// device model or the request was shed/failed).
+    pub pipe: PipelineCounters,
     /// How the request ended ([`RequestOutcome::Ok`] unless shed/failed;
     /// non-`Ok` responses carry zeroed functional fields).
     pub outcome: RequestOutcome,
@@ -142,6 +177,7 @@ impl InferResponse {
             energy_mj: 0.0,
             total_spikes: 0,
             sops: 0,
+            pipe: PipelineCounters::default(),
             outcome: RequestOutcome::Shed,
             retries: 0,
         }
@@ -159,6 +195,7 @@ impl InferResponse {
             energy_mj: 0.0,
             total_spikes: 0,
             sops: 0,
+            pipe: PipelineCounters::default(),
             outcome: RequestOutcome::Failed { retries },
             retries,
         }
@@ -181,6 +218,7 @@ mod tests {
             energy_mj: 0.5,
             total_spikes: 10,
             sops: 100,
+            pipe: PipelineCounters::default(),
             outcome: RequestOutcome::Ok,
             retries: 0,
         };

@@ -226,6 +226,7 @@ impl Coordinator {
                         energy_mj: out.energy_mj,
                         total_spikes: out.total_spikes,
                         sops: out.sops,
+                        pipe: out.pipe,
                         outcome: RequestOutcome::Ok,
                         retries: result.retries,
                     });

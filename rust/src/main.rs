@@ -91,11 +91,16 @@ fn build_registry(args: &Args, cfg: &RunConfig) -> Result<ModelRegistry> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     use neural::arch::Accelerator;
-    let arch = load_arch(args)?;
+    let mut arch = load_arch(args)?;
     let engine_name = args.get_or("engine", "sim");
     // Simulator schedule knobs (pipeline/broadcast default on; the
     // broadcast WMU is a coordinator concern and lands in RunConfig).
     let pipeline = args.get_on_off("pipeline", true)?;
+    if let Some(depth) = args.get("afifo-depth") {
+        arch.afifo_depth = depth
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--afifo-depth {depth:?} is not an integer"))?;
+    }
     let workers = args.get_usize("workers", 1)?;
     let available = std::thread::available_parallelism().map_or(1, |n| n.get());
     let (host_threads, warning) =
@@ -189,6 +194,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         for (id, mm) in metrics.per_model() {
             println!("  {}: {}", registry.name(*id), mm.summary_line());
         }
+    }
+    if let Some(line) = metrics.pipeline_line() {
+        println!("{line}");
     }
     if let Some(line) = metrics.sched_line() {
         println!("{line}");

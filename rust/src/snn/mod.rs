@@ -6,4 +6,4 @@ pub mod lif;
 pub mod spikes;
 
 pub use lif::LifUnit;
-pub use spikes::{EventList, PackedSpikeMap, SpikeMap};
+pub use spikes::{EventList, PackedSpikeMap, SpikeDoubleBuffer, SpikeMap};

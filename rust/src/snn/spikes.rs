@@ -216,6 +216,133 @@ impl PackedSpikeMap {
     }
 }
 
+/// Double-buffered Spiking Buffer at a layer boundary: two packed-map banks
+/// with a word-granular residency watermark on the producing side.
+///
+/// In hardware the boundary between layer L and layer L+1 is two banks of
+/// the Spiking Buffer: layer L's EPA writes its fired output words into the
+/// *back* bank while layer L+1's IG reads the *front* bank — and, crucially
+/// for the activation-side prefetch, the IG may already scan the back
+/// bank's published prefix before the producing layer finishes, parking the
+/// scanned beats in the elastic A-FIFO. [`SpikeDoubleBuffer::flip`] swaps
+/// the banks at the layer boundary.
+///
+/// The simulator's stage walk publishes each timed node's output through
+/// [`SpikeDoubleBuffer::publish_map`] (reusing the bank allocation — one
+/// small word copy per layer) and bounds a conv's prescannable beats by the
+/// front bank's residency via `PipeSda::prescan_beats`. The partial-publish
+/// API (`begin` / `or_word` / `publish_words`) models streaming production
+/// and is what a word-granular fused hookup would drive.
+#[derive(Debug, Clone)]
+pub struct SpikeDoubleBuffer {
+    banks: [PackedSpikeMap; 2],
+    /// Published words per bank (the producer's residency watermark).
+    resident_words: [usize; 2],
+    /// Whether each bank's map is complete (its final partial word — if
+    /// any — is fully produced, so the last scan beat is serviceable).
+    complete: [bool; 2],
+    /// Index of the consumer-visible (front) bank.
+    front: usize,
+}
+
+impl Default for SpikeDoubleBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpikeDoubleBuffer {
+    /// Empty boundary: both banks zero-sized, nothing resident.
+    pub fn new() -> Self {
+        SpikeDoubleBuffer {
+            banks: [PackedSpikeMap::zeros((0, 0, 0)), PackedSpikeMap::zeros((0, 0, 0))],
+            resident_words: [0, 0],
+            complete: [false, false],
+            front: 0,
+        }
+    }
+
+    /// Start producing a new map of `dims` into the back bank: the bank's
+    /// word storage is resized in place (no allocation once warm), zeroed,
+    /// and the residency watermark reset.
+    pub fn begin(&mut self, dims: (usize, usize, usize)) {
+        let back = 1 - self.front;
+        let n = dims.0 * dims.1 * dims.2;
+        let bank = &mut self.banks[back];
+        bank.dims = dims;
+        bank.words.clear();
+        bank.words.resize(n.div_ceil(64), 0);
+        self.resident_words[back] = 0;
+        self.complete[back] = false;
+    }
+
+    /// Producer writes (ORs) word `i` of the back bank. Writes may land in
+    /// any order; residency only advances via
+    /// [`SpikeDoubleBuffer::publish_words`].
+    pub fn or_word(&mut self, i: usize, bits: u64) {
+        let back = 1 - self.front;
+        self.banks[back].words[i] |= bits;
+    }
+
+    /// Advance the back bank's residency watermark to `words` published
+    /// words (monotonic; clamped to the bank size). Marks the bank complete
+    /// when every word is in.
+    pub fn publish_words(&mut self, words: usize) {
+        let back = 1 - self.front;
+        let len = self.banks[back].words.len();
+        self.resident_words[back] = self.resident_words[back].max(words.min(len));
+        if self.resident_words[back] == len {
+            self.complete[back] = true;
+        }
+    }
+
+    /// Swap the banks: the produced map becomes the front (consumer-visible)
+    /// map for the next layer's IG scan.
+    pub fn flip(&mut self) {
+        self.front = 1 - self.front;
+    }
+
+    /// Publish a completed map through the boundary in one step: begin a
+    /// back bank of the map's dims, copy its words (reusing the bank
+    /// allocation), mark it fully resident and flip it to the front.
+    pub fn publish_map(&mut self, map: &PackedSpikeMap) {
+        self.begin(map.dims());
+        let back = 1 - self.front;
+        self.banks[back].words.copy_from_slice(map.words());
+        self.publish_words(map.words().len());
+        self.flip();
+    }
+
+    /// The consumer-visible bank.
+    pub fn front(&self) -> &PackedSpikeMap {
+        &self.banks[self.front]
+    }
+
+    /// Whether the front map is complete (production finished and flipped).
+    pub fn front_complete(&self) -> bool {
+        self.complete[self.front]
+    }
+
+    /// Published bits of the front bank (full words only until complete).
+    pub fn front_resident_bits(&self) -> u64 {
+        let bits = self.resident_words[self.front] as u64 * 64;
+        bits.min(self.front().numel() as u64)
+    }
+
+    /// Scan beats of the front map an IG scanning `scan_width` pixels per
+    /// beat can service: whole beats covered by published words, plus the
+    /// final partial beat once the map is complete (there are no more
+    /// pixels to wait for).
+    pub fn scannable_beats(&self, scan_width: usize) -> u64 {
+        let sw = scan_width.max(1) as u64;
+        if self.front_complete() {
+            (self.front().numel() as u64).div_ceil(sw)
+        } else {
+            self.front_resident_bits() / sw
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +484,57 @@ mod tests {
             let want: u64 = bits[start..start + len].iter().map(|&b| b as u64).sum();
             assert_eq!(packed.count_ones_range(start, len), want, "start={start} len={len}");
         });
+    }
+
+    #[test]
+    fn double_buffer_publish_and_flip() {
+        // Publishing a map through the boundary makes it the front bank,
+        // bit-identical, complete, with every scan beat serviceable
+        // (including the final partial beat: 100 px / 32 -> 4 beats).
+        let mut m = PackedSpikeMap::zeros((1, 10, 10));
+        m.set(0);
+        m.set(77);
+        m.set(99);
+        let mut b = SpikeDoubleBuffer::new();
+        b.publish_map(&m);
+        assert_eq!(b.front(), &m);
+        assert!(b.front_complete());
+        assert_eq!(b.front_resident_bits(), 100);
+        assert_eq!(b.scannable_beats(32), 4, "complete map: partial beat scannable");
+        // The next layer's output replaces the front on the next flip and
+        // the bank allocation is reused.
+        let m2 = PackedSpikeMap::zeros((1, 4, 4));
+        b.publish_map(&m2);
+        assert_eq!(b.front(), &m2);
+        assert_eq!(b.scannable_beats(32), 1);
+    }
+
+    #[test]
+    fn double_buffer_partial_residency_floors_beats() {
+        // Streaming production: with 2 of 4 words published (128 of 200
+        // bits), only whole 32-pixel beats inside the resident prefix are
+        // scannable — 4, not ceil(200/32) = 7 — and an unaligned watermark
+        // never exposes a half-produced beat.
+        let mut b = SpikeDoubleBuffer::new();
+        b.begin((1, 10, 20));
+        b.or_word(0, u64::MAX);
+        b.or_word(1, 0b1011);
+        b.publish_words(2);
+        b.flip();
+        assert!(!b.front_complete());
+        assert_eq!(b.front_resident_bits(), 128);
+        assert_eq!(b.scannable_beats(32), 4);
+        assert_eq!(b.front().count_ones(), 64 + 3);
+        // Publishing the rest completes the map: watermark is monotonic and
+        // clamped, and the final partial beat becomes scannable.
+        b.flip(); // back to producing the same bank
+        b.publish_words(1); // regression: must not move the watermark back
+        assert_eq!(b.resident_words[1 - b.front], 2);
+        b.publish_words(99);
+        b.flip();
+        assert!(b.front_complete());
+        assert_eq!(b.front_resident_bits(), 200);
+        assert_eq!(b.scannable_beats(32), 7);
     }
 
     #[test]

@@ -88,6 +88,36 @@ fn serial_repeat_runs_identical_including_cache_counters() {
     assert!(a.cache_line().is_some());
 }
 
+/// Serve with both elastic prefetch FIFOs explicitly enabled (weight-side
+/// W-FIFO and activation-side A-FIFO), so the three-stream pipelined
+/// schedule is exercised end to end through the coordinator.
+fn serve_pipelined(workers: usize) -> Metrics {
+    let arch = ArchConfig { wfifo_depth: 32, afifo_depth: 2048, ..Default::default() };
+    let engine = Engine::sim_registry(two_model_registry(), arch);
+    let cfg = RunConfig { batch_size: 2, workers, ..Default::default() };
+    let mut coord = Coordinator::new(engine, cfg);
+    coord.serve_dataset(&ds(16), 16).unwrap()
+}
+
+#[test]
+fn pipelined_fifos_deterministic_across_worker_counts() {
+    // The overlap counters are functional outputs of (trace, config):
+    // 1-worker and 4-worker runs must agree bit-for-bit, including the
+    // aggregated pipeline telemetry line.
+    let one = serve_pipelined(1);
+    let four = serve_pipelined(4);
+    assert_eq!(
+        functional_snapshot(&one),
+        functional_snapshot(&four),
+        "both-FIFO pipelined runs must agree on every functional output"
+    );
+    assert_eq!(one.pipeline, four.pipeline, "overlap counters are functional outputs");
+    assert_eq!(one.pipeline_line(), four.pipeline_line());
+    assert!(one.pipeline.cycles_serial > 0, "sim runs must surface the counters");
+    assert!(one.pipeline.cycles <= one.pipeline.cycles_serial);
+    assert!(one.pipeline_line().is_some());
+}
+
 #[test]
 fn cache_budget_never_changes_results() {
     // The transposed-weight cache is a host-side memoization: starving it

@@ -1,0 +1,126 @@
+//! Acceptance tests for the activation-side prefetch pipeline (A-FIFO)
+//! composed with the cross-layer weight prefetch (W-FIFO).
+//!
+//! The contract (DESIGN.md §Activation-side prefetch): overlap is a pure
+//! schedule — it may only ever lower `Report.cycles`, never change a
+//! logit, a spike count, or the serial reference `cycles_serial`; and
+//! zero capacity on both FIFOs (or `pipeline = false`) reproduces the
+//! serial composition bit-exactly.
+
+use neural::arch::Accelerator;
+use neural::config::ArchConfig;
+use neural::data::{encode_threshold, SynthCifar};
+use neural::model::zoo;
+use neural::snn::SpikeMap;
+
+fn input(seed: u64) -> SpikeMap {
+    let ds = SynthCifar::new(10, seed);
+    let (img, _) = ds.sample(0);
+    encode_threshold(&img, 128)
+}
+
+#[test]
+fn pipelined_never_slower_across_the_zoo_and_strictly_faster_where_stream_bound() {
+    // Every zoo model: pipelined cycles bounded by the serial reference,
+    // same function. The CNNs whose late layers are weight-stream-bound
+    // (vgg11's 512-channel tail, qkfresnet11) must strictly improve.
+    for name in zoo::NAMES {
+        let m = zoo::by_name(name, 10, 3).unwrap();
+        let x = input(21);
+        let piped = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        let mut serial_acc = Accelerator::new(ArchConfig::default());
+        serial_acc.pipeline = false;
+        let serial = serial_acc.run(&m, &x).unwrap();
+        assert_eq!(serial.cycles, serial.cycles_serial, "{name}: pipeline off == serial");
+        assert_eq!(piped.cycles_serial, serial.cycles, "{name}: same serial reference");
+        assert!(piped.cycles <= piped.cycles_serial, "{name}: overlap may only help");
+        assert!(
+            piped.cycles_serial - piped.cycles
+                <= piped.wfifo.hidden_cycles + piped.afifo.hidden_cycles,
+            "{name}: the gap must be covered by hidden cycles"
+        );
+        assert!(piped.afifo.high_water_bytes <= piped.afifo.capacity_bytes, "{name}");
+        // The schedule never touches function.
+        assert_eq!(piped.logits, serial.logits, "{name}");
+        assert_eq!(piped.total_spikes, serial.total_spikes, "{name}");
+        assert_eq!(piped.activity.sops, serial.activity.sops, "{name}");
+        assert_eq!(piped.weight_dram_bytes, serial.weight_dram_bytes, "{name}");
+        if name == "vgg11" || name == "qkfresnet11" {
+            assert!(
+                piped.cycles < piped.cycles_serial,
+                "{name}: stream-bound model must strictly improve ({} vs {})",
+                piped.cycles,
+                piped.cycles_serial
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_zero_capacity_fifos_reproduce_the_serial_reference() {
+    // Randomized models and inputs: with both FIFO depths at 0 the
+    // pipelined walk must land on `cycles_serial` exactly, with nothing
+    // hidden on either side.
+    use neural::testing::forall;
+    forall("zero-depth FIFOs == serial", 8, |g| {
+        let m = zoo::tiny(10, g.size(1, 50) as u64);
+        let x = input(g.size(0, 1000) as u64);
+        let cfg = ArchConfig { wfifo_depth: 0, afifo_depth: 0, ..Default::default() };
+        let piped = Accelerator::new(cfg.clone()).run(&m, &x).unwrap();
+        let mut off = Accelerator::new(cfg);
+        off.pipeline = false;
+        let serial = off.run(&m, &x).unwrap();
+        assert_eq!(piped.cycles, serial.cycles);
+        assert_eq!(piped.cycles, piped.cycles_serial);
+        assert_eq!(piped.wfifo.hidden_cycles, 0);
+        assert_eq!(piped.afifo.hidden_cycles, 0);
+        assert_eq!(piped.afifo.high_water_bytes, 0);
+        assert_eq!(piped.logits, serial.logits);
+    });
+}
+
+#[test]
+fn afifo_depth_zero_reproduces_the_weight_prefetch_only_schedule() {
+    // afifo_depth = 0 with the W-FIFO still enabled is the two-stream
+    // (weight prefetch only) model this PR generalized: no scan beat is
+    // ever hidden, weight hiding is untouched, and enabling the A-FIFO on
+    // top never hurts while leaving the serial reference alone.
+    for name in ["resnet11", "vgg11", "qkfresnet11"] {
+        let m = zoo::by_name(name, 10, 3).unwrap();
+        let x = input(9);
+        let no_a = ArchConfig { afifo_depth: 0, ..Default::default() };
+        let two_stream = Accelerator::new(no_a).run(&m, &x).unwrap();
+        assert_eq!(two_stream.afifo.hidden_cycles, 0, "{name}");
+        assert_eq!(two_stream.afifo.capacity_bytes, 0, "{name}");
+        assert!(two_stream.wfifo.hidden_cycles > 0, "{name}: W-FIFO must still hide");
+        let three_stream = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+        assert!(three_stream.cycles <= two_stream.cycles, "{name}: A-FIFO may only help");
+        assert_eq!(three_stream.cycles_serial, two_stream.cycles_serial, "{name}");
+        assert_eq!(three_stream.logits, two_stream.logits, "{name}");
+    }
+}
+
+#[test]
+fn pipeline_toggle_is_functionally_invisible() {
+    // Full functional bit-identity between pipeline on and off, across
+    // models with attention and pooling topologies and several inputs.
+    for name in ["resnet11", "qkfresnet11"] {
+        let m = zoo::by_name(name, 10, 3).unwrap();
+        for seed in [2u64, 77, 4096] {
+            let x = input(seed);
+            let on = Accelerator::new(ArchConfig::default()).run(&m, &x).unwrap();
+            let mut acc = Accelerator::new(ArchConfig::default());
+            acc.pipeline = false;
+            let off = acc.run(&m, &x).unwrap();
+            let label = format!("{name} seed={seed}");
+            assert_eq!(on.logits, off.logits, "{label}");
+            assert_eq!(on.predicted, off.predicted, "{label}");
+            assert_eq!(on.total_spikes, off.total_spikes, "{label}");
+            assert_eq!(on.qkf_suppressed, off.qkf_suppressed, "{label}");
+            assert_eq!(on.activity.sops, off.activity.sops, "{label}");
+            assert_eq!(on.activity.buf_bytes, off.activity.buf_bytes, "{label}");
+            assert_eq!(on.weight_dram_bytes, off.weight_dram_bytes, "{label}");
+            assert_eq!(on.cycles_rigid, off.cycles_rigid, "{label}");
+        }
+    }
+}
