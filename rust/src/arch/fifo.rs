@@ -296,6 +296,30 @@ impl StageCost {
     }
 }
 
+/// Realized per-stage timing attribution from one
+/// [`PipelineWindow::stage_detailed`] step: the stage's duration plus the
+/// hidden/stall beats *this stage alone* contributed to the window's
+/// cumulative counters. Each field is the delta of the corresponding
+/// window counter across the step, so summing `StageBeats` over a walk
+/// reproduces the window totals exactly — this is what lets the trace
+/// subsystem annotate per-layer spans with FIFO behavior without touching
+/// the aggregate accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageBeats {
+    /// The stage's realized duration (identical to what
+    /// [`PipelineWindow::stage`] returns).
+    pub duration: u64,
+    /// Scan beats hidden behind the previous stage's drain (A-FIFO).
+    pub a_hidden: u64,
+    /// Cycles the array path was extended by exposed scan (A-FIFO stall).
+    pub a_stall: u64,
+    /// Weight-stream cycles hidden behind earlier compute (W-FIFO).
+    pub w_hidden: u64,
+    /// Cycles the array sat waiting on an exposed weight stream (W-FIFO
+    /// stall).
+    pub w_stall: u64,
+}
+
 /// Three-stream elastic composition: [`PrefetchWindow`] generalized with a
 /// capacity-bounded A-FIFO on the activation-scan side.
 ///
@@ -361,15 +385,31 @@ impl PipelineWindow {
     /// scanner-idle time of *this* stage (duration minus the scan it had to
     /// perform inline) becomes the next stage's A-budget.
     pub fn stage(&mut self, c: StageCost) -> u64 {
-        let hidden = c.scan.min(self.a_budget);
-        self.a_hidden_cycles += hidden;
-        self.a_high_water = self.a_high_water.max(hidden);
-        let exposed_scan = c.scan - hidden;
+        self.stage_detailed(c).duration
+    }
+
+    /// [`PipelineWindow::stage`] with the stage's own hidden/stall
+    /// attribution returned alongside the duration (the deltas of the
+    /// cumulative window counters across this step).
+    pub fn stage_detailed(&mut self, c: StageCost) -> StageBeats {
+        let a_hidden = c.scan.min(self.a_budget);
+        self.a_hidden_cycles += a_hidden;
+        self.a_high_water = self.a_high_water.max(a_hidden);
+        let exposed_scan = c.scan - a_hidden;
         let array = (c.floor + exposed_scan).max(c.compute);
-        self.a_stall_cycles += array - c.floor.max(c.compute);
+        let a_stall = array - c.floor.max(c.compute);
+        self.a_stall_cycles += a_stall;
+        let w_hidden_before = self.w.hidden_cycles;
+        let w_stall_before = self.w.stall_cycles;
         let duration = self.w.stage(array, c.stream);
         self.a_budget = duration.saturating_sub(exposed_scan).min(self.a_capacity);
-        duration
+        StageBeats {
+            duration,
+            a_hidden,
+            a_stall,
+            w_hidden: self.w.hidden_cycles - w_hidden_before,
+            w_stall: self.w.stall_cycles - w_stall_before,
+        }
     }
 
     /// Peak prescanned A-FIFO occupancy in beats (largest single-stage
@@ -671,6 +711,38 @@ mod tests {
                 assert_eq!(p.a_hidden_cycles, 0);
             }
         });
+    }
+
+    #[test]
+    fn stage_detailed_deltas_sum_to_window_totals() {
+        // The per-stage attribution must partition the cumulative window
+        // counters exactly: summing every StageBeats field over a walk
+        // reproduces the totals, and durations match the plain stage()
+        // composition bit-for-bit on an identical twin window.
+        let stages = [
+            StageCost { scan: 7, floor: 3, compute: 5, stream: 4 },
+            StageCost::opaque(12),
+            StageCost { scan: 5, floor: 2, compute: 9, stream: 12 },
+            StageCost { scan: 4, floor: 1, compute: 0, stream: 7 },
+        ];
+        let mut detailed = PipelineWindow::new(8, 6);
+        let mut plain = PipelineWindow::new(8, 6);
+        let mut sums = StageBeats::default();
+        for c in stages {
+            let b = detailed.stage_detailed(c);
+            assert_eq!(b.duration, plain.stage(c), "duration identical to stage()");
+            sums.duration += b.duration;
+            sums.a_hidden += b.a_hidden;
+            sums.a_stall += b.a_stall;
+            sums.w_hidden += b.w_hidden;
+            sums.w_stall += b.w_stall;
+        }
+        assert_eq!(sums.a_hidden, detailed.a_hidden_cycles);
+        assert_eq!(sums.a_stall, detailed.a_stall_cycles);
+        assert_eq!(sums.w_hidden, detailed.w.hidden_cycles);
+        assert_eq!(sums.w_stall, detailed.w.stall_cycles);
+        assert_eq!(detailed.w_stats(8, 64), plain.w_stats(8, 64));
+        assert_eq!(detailed.a_stats(4, 32), plain.a_stats(4, 32));
     }
 
     #[test]

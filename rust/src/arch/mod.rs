@@ -36,7 +36,9 @@ pub mod wtfc;
 
 pub use energy::EnergyModel;
 pub use epa::{SharedWeightCache, WeightCacheStats};
-pub use fifo::{AfifoStats, ElasticFifo, PipelineWindow, PrefetchWindow, StageCost, WfifoStats};
+pub use fifo::{
+    AfifoStats, ElasticFifo, PipelineWindow, PrefetchWindow, StageBeats, StageCost, WfifoStats,
+};
 pub use resource::{ResourceModel, ResourceReport};
-pub use sim::{Accelerator, Report, SimScratch, WeightFlow};
+pub use sim::{Accelerator, LayerSpan, Report, SimScratch, WeightFlow};
 pub use wmu::{Wmu, WmuBroadcast};

@@ -63,6 +63,45 @@ impl ModuleCycles {
     }
 }
 
+/// One timed node's slot in the pipelined latency composition: where the
+/// stage landed on the device cycle axis, its three-stream cost split, and
+/// the FIFO hidden/stall beats attributed to it by the
+/// [`PipelineWindow`] walk. Emitted per image as [`Report::stages`] so
+/// the trace subsystem can render per-layer device spans (IG scan /
+/// array+EPA / WMU weight stream) without re-deriving the schedule.
+/// Cycle positions are virtual device cycles — never wall time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerSpan {
+    /// Graph node id of the stage.
+    pub node: usize,
+    /// Short op tag: `"conv"`, `"pool"`, `"or"` or `"wtfc"` (untimed
+    /// Input/TokenMask nodes contribute no stage).
+    pub op: &'static str,
+    /// Device cycle at which the stage starts (cumulative pipelined
+    /// latency of all earlier stages).
+    pub start_cycle: u64,
+    /// Realized pipelined duration of the stage in cycles.
+    pub duration: u64,
+    /// The stage's three-stream cost decomposition.
+    pub cost: StageCost,
+    /// Scan beats hidden in the A-FIFO behind the producer's drain.
+    pub a_hidden: u64,
+    /// Cycles the array path was extended by exposed scan.
+    pub a_stall: u64,
+    /// Weight-stream cycles hidden in the W-FIFO behind earlier compute.
+    pub w_hidden: u64,
+    /// Cycles the array waited on an exposed weight stream.
+    pub w_stall: u64,
+}
+
+impl LayerSpan {
+    /// The stage's serial (non-pipelined) elastic cost — the reference the
+    /// hidden beats are measured against.
+    pub fn serial(&self) -> u64 {
+        self.cost.serial()
+    }
+}
+
 /// How an image's conv/FC weight streams are charged to its report.
 #[derive(Debug, Clone, Copy)]
 pub enum WeightFlow<'a> {
@@ -96,6 +135,12 @@ pub struct Report {
     pub wfifo: WfifoStats,
     /// A-FIFO (activation-side prescan) occupancy/stall stats.
     pub afifo: AfifoStats,
+    /// Per-layer pipelined stage spans in walk order (device cycle axis):
+    /// the full schedule behind `cycles`, with per-stage FIFO hidden/stall
+    /// attribution. Summing `duration` reproduces `cycles` exactly;
+    /// summing the FIFO fields reproduces the `wfifo`/`afifo` cycle
+    /// counters.
+    pub stages: Vec<LayerSpan>,
     /// Total WMU port-busy cycles across the image's weight streams.
     pub weight_stream_cycles: u64,
     /// Activity counters (drives the energy model).
@@ -258,9 +303,11 @@ impl Accelerator {
         let mut report = Report::default();
         let mut wmu = Wmu::new(self.cfg.wmu_bytes_per_cycle);
         let mut acts: Vec<PackedSpikeMap> = Vec::with_capacity(model.nodes.len());
-        // Per-node three-stream stage costs in walk order, composed into
-        // the end-to-end latency after the walk.
-        let mut stages: Vec<StageCost> = Vec::with_capacity(model.nodes.len());
+        // Per-node three-stream stage costs in walk order (tagged with the
+        // node id and op for span attribution), composed into the
+        // end-to-end latency after the walk.
+        let mut stages: Vec<(usize, &'static str, StageCost)> =
+            Vec::with_capacity(model.nodes.len());
         // Double-buffered spiking buffer at the current layer boundary: the
         // front bank always holds the most recently produced activation
         // map, which is what the next conv's IG prescans while the producer
@@ -354,14 +401,18 @@ impl Accelerator {
                         } else {
                             ascan
                         };
-                        stages.push(StageCost {
-                            scan: hideable,
-                            floor: sda_c - hideable,
-                            compute: st.compute_cycles,
-                            stream: st.weight_cycles,
-                        });
+                        stages.push((
+                            nid,
+                            "conv",
+                            StageCost {
+                                scan: hideable,
+                                floor: sda_c - hideable,
+                                compute: st.compute_cycles,
+                                stream: st.weight_cycles,
+                            },
+                        ));
                     } else {
-                        stages.push(StageCost::opaque(sda_c + epa_c));
+                        stages.push((nid, "conv", StageCost::opaque(sda_c + epa_c)));
                     }
                     report.cycles_rigid += sda_st.cycles_rigid + st.cycles_rigid;
                     report.modules.sda += sda_c;
@@ -384,7 +435,7 @@ impl Accelerator {
                     // Opaque stage: its whole duration is scanner-idle, so
                     // the next conv's prescan can bank against it.
                     let cyc = (x.numel() as u64).div_ceil(32);
-                    stages.push(StageCost::opaque(cyc));
+                    stages.push((nid, "pool", StageCost::opaque(cyc)));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (x.numel() as u64).div_ceil(8);
@@ -399,7 +450,7 @@ impl Accelerator {
                     let mut out = a.clone();
                     out.or_assign(b);
                     let cyc = (a.numel() as u64).div_ceil(32);
-                    stages.push(StageCost::opaque(cyc));
+                    stages.push((nid, "or", StageCost::opaque(cyc)));
                     report.cycles_rigid += cyc;
                     report.modules.other += cyc;
                     report.activity.buf_bytes += (a.numel() as u64).div_ceil(8) * 2;
@@ -441,7 +492,7 @@ impl Accelerator {
                         self.wtfc.run(&x.to_map(), *classes, *cin, *ho, *wo, *window, weights)
                     };
                     let cyc = if self.elastic { out.cycles } else { out.cycles_rigid };
-                    stages.push(StageCost::opaque(cyc));
+                    stages.push((nid, "wtfc", StageCost::opaque(cyc)));
                     report.cycles_rigid += out.cycles_rigid;
                     report.modules.wtfc += cyc;
                     report.activity.sops += out.sops;
@@ -473,9 +524,22 @@ impl Accelerator {
         let a_cap_beats =
             if self.elastic && self.pipeline { self.cfg.afifo_depth as u64 } else { 0 };
         let mut window = PipelineWindow::new(a_cap_beats, w_cap_cycles);
-        for &c in &stages {
+        report.stages.reserve(stages.len());
+        for &(node, op, c) in &stages {
             report.cycles_serial += c.serial();
-            report.cycles += window.stage(c);
+            let beats = window.stage_detailed(c);
+            report.stages.push(LayerSpan {
+                node,
+                op,
+                start_cycle: report.cycles,
+                duration: beats.duration,
+                cost: c,
+                a_hidden: beats.a_hidden,
+                a_stall: beats.a_stall,
+                w_hidden: beats.w_hidden,
+                w_stall: beats.w_stall,
+            });
+            report.cycles += beats.duration;
         }
         let w_cap_bytes = if w_cap_cycles > 0 { self.cfg.wfifo_bytes() } else { 0 };
         report.wfifo = window.w_stats(self.cfg.wmu_bytes_per_cycle, w_cap_bytes);
@@ -634,6 +698,7 @@ mod tests {
                 assert_eq!(fused.cycles_rigid, mat.cycles_rigid, "{label}");
                 assert_eq!(fused.wfifo, mat.wfifo, "{label}");
                 assert_eq!(fused.afifo, mat.afifo, "{label}");
+                assert_eq!(fused.stages, mat.stages, "{label}");
                 assert_eq!(fused.weight_stream_cycles, mat.weight_stream_cycles, "{label}");
                 assert_eq!(fused.modules.sda, mat.modules.sda, "{label}");
                 assert_eq!(fused.modules.epa, mat.modules.epa, "{label}");
@@ -931,6 +996,41 @@ mod tests {
         // elastic max() composition => per-module busy sum >= end-to-end
         assert!(rep.modules.sum() >= rep.cycles);
         assert!(rep.cycles <= rep.cycles_rigid);
+    }
+
+    #[test]
+    fn layer_spans_partition_the_pipelined_schedule() {
+        // The per-layer spans are the full schedule: back-to-back on the
+        // device cycle axis summing to `cycles`, FIFO attributions summing
+        // to the wfifo/afifo counters, serial costs summing to
+        // `cycles_serial` — on models with and without attention.
+        for model in [zoo::resnet11(10, 3), zoo::qkfresnet11(10, 3)] {
+            let x = input(7);
+            let rep = Accelerator::new(ArchConfig::default()).run(&model, &x).unwrap();
+            assert!(!rep.stages.is_empty());
+            let label = &model.name;
+            let mut cursor = 0u64;
+            let (mut a_hid, mut a_stall, mut w_hid, mut w_stall) = (0u64, 0u64, 0u64, 0u64);
+            for s in &rep.stages {
+                assert_eq!(s.start_cycle, cursor, "{label}: spans tile the cycle axis");
+                cursor += s.duration;
+                a_hid += s.a_hidden;
+                a_stall += s.a_stall;
+                w_hid += s.w_hidden;
+                w_stall += s.w_stall;
+                assert!(matches!(s.op, "conv" | "pool" | "or" | "wtfc"), "{label}: {}", s.op);
+            }
+            assert_eq!(cursor, rep.cycles, "{label}: durations partition the latency");
+            assert_eq!(a_hid, rep.afifo.hidden_cycles, "{label}");
+            assert_eq!(a_stall, rep.afifo.stall_cycles, "{label}");
+            assert_eq!(w_hid, rep.wfifo.hidden_cycles, "{label}");
+            assert_eq!(w_stall, rep.wfifo.stall_cycles, "{label}");
+            assert_eq!(
+                rep.stages.iter().map(LayerSpan::serial).sum::<u64>(),
+                rep.cycles_serial,
+                "{label}"
+            );
+        }
     }
 
     #[test]

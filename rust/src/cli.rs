@@ -140,6 +140,7 @@ USAGE:
                     [--fault-plan PATH.ini] [--fault-seed N]
                     [--pipeline on|off] [--afifo-depth N] [--broadcast-wmu on|off]
                     [--host-threads N|auto]
+                    [--trace-out PATH.json] [--metrics-out PATH.json]
                     (--workers N sizes the engine pool: one simulator replica
                      per worker thread, batches fan out across them and all
                      replicas share one cross-worker transposed-weight cache;
@@ -177,7 +178,19 @@ USAGE:
                      virtual clock so failures replay identically at any
                      --workers count; --fault-seed overrides the plan's seed;
                      --max-retries, default 2, bounds per-request retries
-                     before a request surfaces as failed)
+                     before a request surfaces as failed; --trace-out writes
+                     a Chrome trace-event JSON (open in Perfetto or
+                     chrome://tracing): per-request lifecycle spans on the
+                     virtual clock — queue, exec, complete/shed/failed
+                     markers, replayed fault-injection outcomes — plus
+                     per-layer device spans in cycles with scan/compute/
+                     stream splits and W-/A-FIFO hidden/stall annotations;
+                     timestamps are virtual ticks and device cycles, never
+                     wall time, so traces are byte-identical across
+                     --workers counts; --metrics-out writes the summary
+                     counters as structured JSON at PATH and Prometheus
+                     text at PATH.prom — wall time is excluded, so both
+                     files are deterministic)
   neural inspect    (--model NAME|--neuw PATH) [--classes N]   print graph + shapes
   neural resources  [--arch PATH.ini]                          Table-I style report
   neural sweep      (--model NAME|--neuw PATH)                 EPA geometry Pareto sweep

@@ -56,6 +56,12 @@ pub struct RunConfig {
     pub fault_plan: Option<String>,
     /// Seed override for the fault plan's rate draws (`--fault-seed`).
     pub fault_seed: Option<u64>,
+    /// Chrome trace-event JSON output path (`--trace-out`; None = tracing
+    /// off, the zero-overhead default).
+    pub trace_out: Option<String>,
+    /// Machine-readable metrics output path (`--metrics-out`): structured
+    /// JSON at the path, Prometheus text at `<path>.prom`. None = off.
+    pub metrics_out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -79,6 +85,8 @@ impl Default for RunConfig {
             max_retries: 2,
             fault_plan: None,
             fault_seed: None,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -148,6 +156,8 @@ impl RunConfig {
                         .map_err(|_| anyhow::anyhow!("fault_seed {s:?} is not an integer"))
                 })
                 .transpose()?,
+            trace_out: ini.get("run", "trace_out").map(|s| s.to_string()),
+            metrics_out: ini.get("run", "metrics_out").map(|s| s.to_string()),
         })
     }
 
@@ -217,6 +227,18 @@ mod tests {
         assert_eq!(d.max_retries, 2);
         assert!(d.fault_plan.is_none());
         assert!(d.fault_seed.is_none());
+        assert!(d.trace_out.is_none(), "tracing is off by default");
+        assert!(d.metrics_out.is_none(), "metrics export is off by default");
+    }
+
+    #[test]
+    fn observability_knobs_from_ini() {
+        let ini =
+            Ini::parse("[run]\ntrace_out = out/trace.json\nmetrics_out = out/metrics.json\n")
+                .unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.json"));
     }
 
     #[test]

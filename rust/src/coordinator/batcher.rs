@@ -25,6 +25,7 @@
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferRequest;
 use crate::coordinator::sched::{ModelSched, SchedPolicy, VirtualClock};
+use crate::coordinator::trace::QueueEvent;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Admission decision returned by [`Batcher::push`]: either the request
@@ -63,6 +64,10 @@ pub struct Batcher {
     sched: BTreeMap<ModelId, ModelSched>,
     /// Per-model admission limit (`None` = unbounded, the default).
     depth_limit: Option<usize>,
+    /// Queue-lifecycle event log for the trace recorder. `None` (the
+    /// default) keeps push/release on the exact pre-tracing path: one
+    /// `Option` check, no allocation, no event construction.
+    events: Option<Vec<QueueEvent>>,
 }
 
 impl Batcher {
@@ -89,7 +94,21 @@ impl Batcher {
             served: BTreeMap::new(),
             sched: BTreeMap::new(),
             depth_limit: limit.filter(|l| *l > 0),
+            events: None,
         }
+    }
+
+    /// Turn on the queue-event log (for tracing). Off by default.
+    pub fn enable_event_log(&mut self) {
+        if self.events.is_none() {
+            self.events = Some(Vec::new());
+        }
+    }
+
+    /// Drain the logged events accumulated since the last call. Empty
+    /// when the log was never enabled.
+    pub fn take_events(&mut self) -> Vec<QueueEvent> {
+        self.events.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
     /// The active policy.
@@ -113,10 +132,22 @@ impl Batcher {
         if let Some(limit) = self.depth_limit {
             let depth = self.queues.get(&model).map_or(0, |q| q.len());
             if depth >= limit {
+                if let Some(log) = self.events.as_mut() {
+                    log.push(QueueEvent::Shed {
+                        id: req.id,
+                        model,
+                        tick: self.clock.now(),
+                        depth: depth as u64,
+                        limit: limit as u64,
+                    });
+                }
                 return Admission::Shed { depth: depth as u64, limit: limit as u64 };
             }
         }
         req.arrival_tick = self.clock.stamp_submit();
+        if let Some(log) = self.events.as_mut() {
+            log.push(QueueEvent::Admitted { id: req.id, model, tick: req.arrival_tick });
+        }
         let depth = {
             let q = self.queues.entry(model).or_default();
             q.push_back(req);
@@ -279,6 +310,16 @@ impl Batcher {
             s.e2e.add(completion - r.arrival_tick);
             if deadline.is_some_and(|d| wait > d) {
                 s.starved += 1;
+            }
+            if let Some(log) = self.events.as_mut() {
+                log.push(QueueEvent::Released {
+                    id: r.id,
+                    model,
+                    arrival: r.arrival_tick,
+                    release: now,
+                    completion,
+                    forced,
+                });
             }
         }
         *self.served.entry(model).or_default() += 1;
@@ -688,6 +729,53 @@ mod tests {
             (shed, out)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn event_log_records_lifecycle_and_stays_empty_when_disabled() {
+        // Disabled log: no events, ever (the zero-overhead default).
+        let mut b = Batcher::with_limits(2, SchedPolicy::FifoById, Some(2));
+        b.push(req(0));
+        assert!(b.take_events().is_empty());
+        // Enabled log: admit carries the stamped arrival tick, shed the
+        // un-ticked clock position, release the (arrival, release,
+        // completion) triple the trace spans are built from.
+        let mut b = Batcher::with_limits(2, SchedPolicy::FifoById, Some(2));
+        b.enable_event_log();
+        b.push(req(0));
+        b.push(req(1));
+        assert_eq!(b.push(req(2)), Admission::Shed { depth: 2, limit: 2 });
+        let mut out = Vec::new();
+        while let Some(batch) = b.pop_ready() {
+            out.push(batch);
+        }
+        assert_eq!(out.len(), 1);
+        let events = b.take_events();
+        assert_eq!(
+            events,
+            vec![
+                QueueEvent::Admitted { id: 0, model: ModelId(0), tick: 1 },
+                QueueEvent::Admitted { id: 1, model: ModelId(0), tick: 2 },
+                QueueEvent::Shed { id: 2, model: ModelId(0), tick: 2, depth: 2, limit: 2 },
+                QueueEvent::Released {
+                    id: 0,
+                    model: ModelId(0),
+                    arrival: 1,
+                    release: 2,
+                    completion: 3,
+                    forced: false
+                },
+                QueueEvent::Released {
+                    id: 1,
+                    model: ModelId(0),
+                    arrival: 2,
+                    release: 2,
+                    completion: 3,
+                    forced: false
+                },
+            ]
+        );
+        assert!(b.take_events().is_empty(), "take drains the log");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! * `Baseline` — one of the comparison architectures.
 
 use crate::arch::epa::SharedWeightCache;
-use crate::arch::{Accelerator, Report, SimScratch, WeightFlow, WmuBroadcast};
+use crate::arch::{Accelerator, LayerSpan, Report, SimScratch, WeightFlow, WmuBroadcast};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::config::ArchConfig;
 use crate::coordinator::registry::{ModelId, ModelRegistry};
@@ -36,6 +36,11 @@ pub struct Outcome {
     pub weight_dram_bytes: u64,
     /// Device pipeline-overlap counters (all zero for golden).
     pub pipe: PipelineCounters,
+    /// Per-layer pipelined stage spans from the device schedule (moved
+    /// verbatim from [`Report::stages`]; empty for golden, which has no
+    /// device model). The trace subsystem renders these as per-layer
+    /// device spans; everything else ignores them.
+    pub stages: Vec<LayerSpan>,
     /// Raw logits (integer domain).
     pub logits: Vec<i64>,
 }
@@ -254,6 +259,7 @@ impl Engine {
                     sops: t.total_sops,
                     weight_dram_bytes: 0,
                     pipe: PipelineCounters::default(),
+                    stages: Vec::new(),
                     logits: t.logits,
                 })
             }
@@ -292,6 +298,7 @@ fn report_to_outcome(r: Report) -> Outcome {
             afifo_hidden: r.afifo.hidden_cycles,
             afifo_stall: r.afifo.stall_cycles,
         },
+        stages: r.stages,
         logits: r.logits,
     }
 }

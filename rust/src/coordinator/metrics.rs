@@ -5,6 +5,7 @@ use crate::coordinator::fault::ReliabilityStats;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferResponse, PipelineCounters, RequestOutcome};
 use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
+use crate::util::json::Json;
 use crate::util::Summary;
 use std::collections::BTreeMap;
 
@@ -310,12 +311,14 @@ impl Metrics {
         if self.queue_wait_ticks.count() == 0 {
             return None;
         }
+        // One cumulative histogram walk for all three wait percentiles.
+        let wait = self.queue_wait_ticks.percentiles(&[50.0, 95.0, 99.0]);
         Some(format!(
             "sched: policy={} wait p50/p95/p99={}/{}/{} ticks e2e p99={} depth max={} starved={} forced={}",
             if self.sched_policy.is_empty() { "?" } else { self.sched_policy.as_str() },
-            self.queue_wait_ticks.p50(),
-            self.queue_wait_ticks.p95(),
-            self.queue_wait_ticks.p99(),
+            wait[0],
+            wait[1],
+            wait[2],
             self.e2e_ticks.p99(),
             self.max_queue_depth,
             self.starved,
@@ -413,6 +416,206 @@ impl Metrics {
             r.stall_ticks,
             r.injected_corruptions
         ))
+    }
+
+    /// Structured snapshot of everything the summary lines print, as
+    /// canonical JSON (sorted keys, compact) — so CI gates and benches
+    /// assert on fields instead of parsing display strings. Deterministic
+    /// by construction: [`Metrics::wall_s`] (the only host-time-derived
+    /// value) is deliberately excluded, and every other field is a pure
+    /// function of the served trace.
+    pub fn to_json(&self) -> Json {
+        let wait = self.queue_wait_ticks.percentiles(&[50.0, 95.0, 99.0]);
+        let c = &self.weight_cache;
+        let p = &self.pipeline;
+        let r = &self.reliability;
+        let mut per_model = BTreeMap::new();
+        for (id, mm) in &self.per_model {
+            per_model.insert(format!("m{}", id.0), mm.to_json());
+        }
+        Json::obj(vec![
+            ("schema", Json::Str("neural-metrics-v1".into())),
+            ("completed", unum(self.completed)),
+            ("correct", unum(self.correct)),
+            ("labelled", unum(self.labelled)),
+            ("accuracy", Json::Num(self.accuracy())),
+            ("device_ms_mean", Json::Num(self.device_ms.mean())),
+            ("device_fps", Json::Num(self.device_fps())),
+            ("energy_mj_mean", Json::Num(self.energy_mj.mean())),
+            ("spikes_mean", Json::Num(self.spikes.mean())),
+            ("total_sops", unum(self.total_sops)),
+            (
+                "batches",
+                Json::obj(vec![
+                    ("count", unum(self.batches)),
+                    ("dispatched", unum(self.dispatched)),
+                    ("max", unum(self.max_batch)),
+                    ("mean", Json::Num(self.mean_batch())),
+                ]),
+            ),
+            (
+                "sched",
+                Json::obj(vec![
+                    ("policy", Json::Str(self.sched_policy.clone())),
+                    ("wait_p50_ticks", unum(wait[0])),
+                    ("wait_p95_ticks", unum(wait[1])),
+                    ("wait_p99_ticks", unum(wait[2])),
+                    ("wait_max_ticks", unum(self.queue_wait_ticks.max())),
+                    ("e2e_p99_ticks", unum(self.e2e_ticks.p99())),
+                    ("max_queue_depth", unum(self.max_queue_depth)),
+                    ("starved", unum(self.starved)),
+                    ("forced_releases", unum(self.forced_releases)),
+                ]),
+            ),
+            (
+                "weight_cache",
+                Json::obj(vec![
+                    ("hits", unum(c.hits)),
+                    ("misses", unum(c.misses)),
+                    ("evictions", unum(c.evictions)),
+                    ("entries", unum(c.entries)),
+                    ("resident_bytes", unum(c.resident_bytes)),
+                    ("corruptions", unum(c.corruptions)),
+                ]),
+            ),
+            (
+                "pipeline",
+                Json::obj(vec![
+                    ("cycles", unum(p.cycles)),
+                    ("cycles_serial", unum(p.cycles_serial)),
+                    ("wfifo_hidden", unum(p.wfifo_hidden)),
+                    ("wfifo_stall", unum(p.wfifo_stall)),
+                    ("afifo_hidden", unum(p.afifo_hidden)),
+                    ("afifo_stall", unum(p.afifo_stall)),
+                ]),
+            ),
+            (
+                "reliability",
+                Json::obj(vec![
+                    ("availability", Json::Num(self.availability())),
+                    ("offered", unum(self.offered())),
+                    ("shed", unum(self.shed)),
+                    ("failed", unum(self.failed)),
+                    ("retried", unum(self.retried)),
+                    ("respawns", unum(r.respawns)),
+                    ("retries", unum(r.retries)),
+                    ("backoff_ticks", unum(r.backoff_ticks)),
+                    ("worker_panics", unum(r.worker_panics)),
+                    ("injected_panics", unum(r.injected_panics)),
+                    ("injected_errors", unum(r.injected_errors)),
+                    ("injected_stalls", unum(r.injected_stalls)),
+                    ("stall_ticks", unum(r.stall_ticks)),
+                    ("injected_corruptions", unum(r.injected_corruptions)),
+                ]),
+            ),
+            ("per_model", Json::Obj(per_model)),
+        ])
+    }
+
+    /// The same snapshot as [`Metrics::to_json`] in Prometheus text
+    /// exposition format (`# TYPE` headers, `neural_*` series, per-model
+    /// series labelled `{model="mN"}`). Wall time is excluded here too.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let gauge = |out: &mut String, name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        gauge(&mut out, "neural_completed_total", "Completed requests.", self.completed as f64);
+        gauge(&mut out, "neural_correct_total", "Correct predictions.", self.correct as f64);
+        gauge(&mut out, "neural_labelled_total", "Labelled requests.", self.labelled as f64);
+        gauge(&mut out, "neural_accuracy", "Accuracy over labelled requests.", self.accuracy());
+        gauge(&mut out, "neural_device_ms_mean", "Mean device latency ms.", self.device_ms.mean());
+        gauge(&mut out, "neural_device_fps", "Device FPS from mean latency.", self.device_fps());
+        gauge(&mut out, "neural_energy_mj_mean", "Mean energy/image (mJ).", self.energy_mj.mean());
+        gauge(&mut out, "neural_total_sops", "Total synaptic operations.", self.total_sops as f64);
+        gauge(&mut out, "neural_batches_total", "Device batches dispatched.", self.batches as f64);
+        gauge(&mut out, "neural_batch_mean", "Mean requests per batch.", self.mean_batch());
+        let wait = self.queue_wait_ticks.percentiles(&[50.0, 95.0, 99.0]);
+        gauge(&mut out, "neural_wait_p50_ticks", "Queue wait p50 (virtual ticks).", wait[0] as f64);
+        gauge(&mut out, "neural_wait_p95_ticks", "Queue wait p95 (virtual ticks).", wait[1] as f64);
+        gauge(&mut out, "neural_wait_p99_ticks", "Queue wait p99 (virtual ticks).", wait[2] as f64);
+        gauge(&mut out, "neural_e2e_p99_ticks", "E2E p99 ticks.", self.e2e_ticks.p99() as f64);
+        gauge(&mut out, "neural_max_queue_depth", "Max queue depth.", self.max_queue_depth as f64);
+        gauge(&mut out, "neural_starved_total", "Released past deadline.", self.starved as f64);
+        gauge(&mut out, "neural_forced_releases_total", "Forced.", self.forced_releases as f64);
+        gauge(&mut out, "neural_shed_total", "Requests shed at admission.", self.shed as f64);
+        gauge(&mut out, "neural_failed_total", "Requests failed permanently.", self.failed as f64);
+        gauge(&mut out, "neural_retried_total", "Retried attempts.", self.retried as f64);
+        gauge(&mut out, "neural_availability_percent", "Completed/offered.", self.availability());
+        let c = &self.weight_cache;
+        gauge(&mut out, "neural_weight_cache_hits_total", "Weight cache hits.", c.hits as f64);
+        gauge(&mut out, "neural_weight_cache_misses_total", "Cache transposes.", c.misses as f64);
+        gauge(&mut out, "neural_weight_cache_evictions_total", "Evictions.", c.evictions as f64);
+        gauge(&mut out, "neural_weight_cache_resident_bytes", "Bytes.", c.resident_bytes as f64);
+        let p = &self.pipeline;
+        gauge(&mut out, "neural_pipeline_cycles", "Pipelined device cycles.", p.cycles as f64);
+        gauge(&mut out, "neural_pipeline_cycles_serial", "Serial cycles.", p.cycles_serial as f64);
+        gauge(&mut out, "neural_wfifo_hidden_cycles", "W-FIFO hidden.", p.wfifo_hidden as f64);
+        gauge(&mut out, "neural_wfifo_stall_cycles", "W-FIFO stall cycles.", p.wfifo_stall as f64);
+        gauge(&mut out, "neural_afifo_hidden_beats", "A-FIFO hidden beats.", p.afifo_hidden as f64);
+        gauge(&mut out, "neural_afifo_stall_beats", "A-FIFO stall beats.", p.afifo_stall as f64);
+        let r = &self.reliability;
+        gauge(&mut out, "neural_respawns_total", "Worker respawns.", r.respawns as f64);
+        gauge(&mut out, "neural_backoff_ticks_total", "Backoff ticks.", r.backoff_ticks as f64);
+        gauge(&mut out, "neural_injected_faults_total", "Injected faults (all kinds).",
+            (r.injected_panics + r.injected_errors + r.injected_stalls + r.injected_corruptions)
+                as f64);
+        // Per-model series, labelled, in id order.
+        out.push_str("# HELP neural_model_completed_total Completed requests per model.\n");
+        out.push_str("# TYPE neural_model_completed_total gauge\n");
+        for (id, mm) in &self.per_model {
+            out.push_str(&format!(
+                "neural_model_completed_total{{model=\"m{}\"}} {}\n",
+                id.0, mm.completed
+            ));
+        }
+        out.push_str("# HELP neural_model_accuracy Accuracy per model.\n");
+        out.push_str("# TYPE neural_model_accuracy gauge\n");
+        for (id, mm) in &self.per_model {
+            out.push_str(&format!(
+                "neural_model_accuracy{{model=\"m{}\"}} {}\n",
+                id.0,
+                mm.accuracy()
+            ));
+        }
+        out.push_str("# HELP neural_model_energy_mj_mean Mean energy per model (mJ).\n");
+        out.push_str("# TYPE neural_model_energy_mj_mean gauge\n");
+        for (id, mm) in &self.per_model {
+            out.push_str(&format!(
+                "neural_model_energy_mj_mean{{model=\"m{}\"}} {}\n",
+                id.0,
+                mm.energy_mj.mean()
+            ));
+        }
+        out
+    }
+}
+
+/// u64 counter as a JSON number (exact to 2^53 — far past any run size).
+fn unum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl ModelMetrics {
+    /// Per-model slice of [`Metrics::to_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", unum(self.completed)),
+            ("correct", unum(self.correct)),
+            ("labelled", unum(self.labelled)),
+            ("accuracy", Json::Num(self.accuracy())),
+            ("device_ms_mean", Json::Num(self.device_ms.mean())),
+            ("energy_mj_mean", Json::Num(self.energy_mj.mean())),
+            ("spikes_mean", Json::Num(self.spikes.mean())),
+            ("total_sops", unum(self.total_sops)),
+            ("wait_p99_ticks", unum(self.queue_wait_ticks.p99())),
+            ("e2e_p99_ticks", unum(self.e2e_ticks.p99())),
+            ("max_queue_depth", unum(self.max_queue_depth)),
+            ("starved", unum(self.starved)),
+            ("shed", unum(self.shed)),
+            ("failed", unum(self.failed)),
+            ("retried", unum(self.retried)),
+        ])
     }
 }
 
@@ -689,6 +892,54 @@ mod tests {
         m.record(&InferResponse::failed(4, ModelId(0), 1));
         assert_eq!(m.pipeline.cycles, 160);
         assert_eq!(m.pipeline.afifo_hidden, 10);
+    }
+
+    #[test]
+    fn metrics_json_snapshot_matches_counters_and_omits_wall_time() {
+        let mut m = Metrics::default();
+        m.record_batch(2);
+        m.record(&resp_for(0, ModelId(0), 1, Some(1), 2.0));
+        m.record(&resp_for(1, ModelId(1), 1, Some(2), 4.0));
+        m.record(&InferResponse::shed(2, ModelId(0)));
+        m.wall_s = Some(1.23);
+        let doc = m.to_json();
+        let text = doc.to_text();
+        let back = Json::parse(&text).expect("canonical JSON round-trips");
+        assert_eq!(back.get("completed").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(back.get("accuracy").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(
+            back.get("reliability").unwrap().get("shed").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert_eq!(
+            back.get("per_model").unwrap().get("m0").unwrap().get("shed").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            back.get("batches").unwrap().get("dispatched").unwrap().as_f64(),
+            Some(2.0)
+        );
+        // Display-only wall time must never leak into the export.
+        assert!(!text.contains("wall"), "{text}");
+        // Canonical writer: identical metrics serialize to identical bytes.
+        assert_eq!(text, m.to_json().to_text());
+    }
+
+    #[test]
+    fn metrics_prometheus_series_cover_summary_counters() {
+        let mut m = Metrics::default();
+        m.record(&resp_for(0, ModelId(0), 1, Some(1), 2.0));
+        m.record(&resp_for(1, ModelId(1), 2, Some(2), 4.0));
+        m.record(&InferResponse::failed(2, ModelId(1), 3));
+        let prom = m.prometheus();
+        assert!(prom.contains("neural_completed_total 2\n"), "{prom}");
+        assert!(prom.contains("neural_accuracy 1\n"), "{prom}");
+        assert!(prom.contains("neural_failed_total 1\n"), "{prom}");
+        assert!(prom.contains("neural_model_completed_total{model=\"m0\"} 1\n"), "{prom}");
+        assert!(prom.contains("neural_model_completed_total{model=\"m1\"} 1\n"), "{prom}");
+        assert!(prom.contains("# TYPE neural_completed_total gauge\n"), "{prom}");
+        assert!(!prom.contains("wall"), "wall time is display-only: {prom}");
+        assert_eq!(prom, m.prometheus(), "deterministic bytes");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod registry;
 pub mod request;
 pub mod sched;
 pub mod server;
+pub mod trace;
 
 pub use batcher::{Admission, Batcher};
 pub use engine::Engine;
@@ -32,3 +33,4 @@ pub use registry::{ModelEntry, ModelId, ModelRegistry};
 pub use request::{InferRequest, InferResponse, PipelineCounters, RequestOutcome, ServeError};
 pub use sched::{ModelSched, SchedPolicy, TickStats, VirtualClock};
 pub use server::Coordinator;
+pub use trace::{QueueEvent, TraceRecorder};

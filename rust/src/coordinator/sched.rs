@@ -153,41 +153,125 @@ impl SchedPolicy {
     }
 }
 
+/// Sub-buckets per octave of the [`TickStats`] histogram (HDR-style
+/// log-bucketing): 2^7 = 128, so the log region's relative quantization
+/// error is bounded by 1/128 (< 0.8%).
+const TICK_SUB_BITS: u32 = 7;
+/// Sub-bucket count per octave.
+const TICK_SUB: usize = 1 << TICK_SUB_BITS;
+/// Values below this are stored in exact unit-width buckets; at or above
+/// it the log region starts. Equals two full octaves of sub-buckets.
+const TICK_EXACT: usize = 2 * TICK_SUB;
+
 /// A tick-valued sample distribution: queue waits and end-to-end
 /// latencies in virtual-clock ticks, reported as nearest-rank
-/// percentiles. Samples are whole ticks, so percentiles are exact (no
-/// float ordering involved).
+/// percentiles.
+///
+/// Storage is a log-bucketed (HDR-style) histogram, not a sample vector,
+/// so memory is bounded (~7.5k u64 buckets worst case for the full u64
+/// range, grown lazily) and percentile queries are one cumulative walk —
+/// million-request runs pay O(1) per `add` and never re-sort anything.
+/// Values below [`TICK_EXACT`] (256) land in exact unit buckets, so
+/// small-tick distributions keep the old exact nearest-rank percentiles
+/// bit-for-bit; larger values are quantized to 128 sub-buckets per
+/// power-of-two octave and a percentile reports the bucket's upper bound
+/// (clamped to the exact recorded max), overestimating the true
+/// nearest-rank sample by at most 1/128 relative. `count` and `max` stay
+/// exact at every scale.
 #[derive(Debug, Clone, Default)]
 pub struct TickStats {
-    samples: Vec<u64>,
+    counts: Vec<u64>,
+    count: u64,
+    max: u64,
+}
+
+/// Histogram bucket index of tick value `v` (exact below [`TICK_EXACT`],
+/// log-bucketed above).
+fn tick_bucket(v: u64) -> usize {
+    if v < TICK_EXACT as u64 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros(); // >= TICK_SUB_BITS + 1 here
+    let sub = ((v >> (octave - TICK_SUB_BITS)) as usize) - TICK_SUB;
+    TICK_EXACT + (octave - (TICK_SUB_BITS + 1)) as usize * TICK_SUB + sub
+}
+
+/// Largest tick value that maps to bucket `index` (the reported
+/// representative: nearest-rank generalizes to "the smallest bucket upper
+/// bound with at least the requested rank at or below it").
+fn tick_bucket_upper(index: usize) -> u64 {
+    if index < TICK_EXACT {
+        return index as u64;
+    }
+    let off = index - TICK_EXACT;
+    let octave = (TICK_SUB_BITS + 1) as usize + off / TICK_SUB;
+    let sub = (off % TICK_SUB) as u64;
+    let width = 1u64 << (octave as u32 - TICK_SUB_BITS);
+    (1u64 << octave) + sub * width + (width - 1)
 }
 
 impl TickStats {
     /// Record one sample.
     pub fn add(&mut self, t: u64) {
-        self.samples.push(t);
+        let idx = tick_bucket(t);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.max = self.max.max(t);
     }
 
     /// Number of samples.
     pub fn count(&self) -> u64 {
-        self.samples.len() as u64
+        self.count
     }
 
-    /// Largest sample (0 when empty).
+    /// Largest sample (0 when empty; always exact).
     pub fn max(&self) -> u64 {
-        self.samples.iter().copied().max().unwrap_or(0)
+        self.max
     }
 
-    /// Nearest-rank percentile (0 when empty): the smallest sample with at
-    /// least `p`% of the distribution at or below it.
+    /// Nearest-rank percentile (0 when empty): the smallest bucket upper
+    /// bound with at least `p`% of the distribution at or below it,
+    /// clamped to the recorded max. Exact for distributions entirely
+    /// below [`TICK_EXACT`] ticks.
     pub fn percentile(&self, p: f64) -> u64 {
-        if self.samples.is_empty() {
-            return 0;
+        self.percentiles(&[p])[0]
+    }
+
+    /// All requested percentiles from ONE cumulative walk over the
+    /// buckets (the `p50`/`p95`/`p99` trio used to pay a full clone +
+    /// sort each). Queries may come in any order; each result is the
+    /// nearest-rank value as in [`TickStats::percentile`].
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; ps.len()];
+        if self.count == 0 {
+            return out;
         }
-        let mut xs = self.samples.clone();
-        xs.sort_unstable();
-        let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
-        xs[rank.saturating_sub(1).min(xs.len() - 1)]
+        // Nearest rank of each query, walked in ascending rank order.
+        let mut ranks: Vec<(usize, u64)> = ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+                (i, rank.clamp(1, self.count))
+            })
+            .collect();
+        ranks.sort_by_key(|&(_, r)| r);
+        let mut cum = 0u64;
+        let mut next = 0usize;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            while next < ranks.len() && ranks[next].1 <= cum {
+                out[ranks[next].0] = tick_bucket_upper(idx).min(self.max);
+                next += 1;
+            }
+            if next == ranks.len() {
+                break;
+            }
+        }
+        out
     }
 
     /// Median / tail percentiles used by the serving report.
@@ -205,9 +289,16 @@ impl TickStats {
         self.percentile(99.0)
     }
 
-    /// Absorb another distribution's samples.
+    /// Absorb another distribution (bucket counts sum; max/count exact).
     pub fn merge(&mut self, other: &TickStats) {
-        self.samples.extend_from_slice(&other.samples);
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (s, o) in self.counts.iter_mut().zip(&other.counts) {
+            *s += o;
+        }
+        self.count += other.count;
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -266,6 +357,77 @@ mod tests {
         merged.merge(&empty);
         assert_eq!(merged.count(), 100);
         assert_eq!(merged.p50(), 50);
+    }
+
+    #[test]
+    fn tick_stats_one_pass_percentiles_match_singles() {
+        let mut t = TickStats::default();
+        for x in 1..=100u64 {
+            t.add(x);
+        }
+        // The batch query (one cumulative walk) must agree with the
+        // per-call API, in any query order.
+        assert_eq!(t.percentiles(&[50.0, 95.0, 99.0]), vec![50, 95, 99]);
+        assert_eq!(t.percentiles(&[99.0, 50.0, 95.0]), vec![99, 50, 95]);
+        assert_eq!(t.percentiles(&[]), Vec::<u64>::new());
+        assert_eq!(TickStats::default().percentiles(&[50.0, 99.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn tick_stats_log_region_pinned_error_bounds() {
+        // Fixture pinning the histogram's log-bucket representatives:
+        // values >= 256 quantize to 128 sub-buckets per octave and a
+        // percentile reports the bucket's UPPER bound clamped to the
+        // exact max — so the overshoot is bounded by 1/128 relative.
+        let mut t = TickStats::default();
+        for x in [1000u64, 3000, 500_000] {
+            t.add(x);
+        }
+        assert_eq!(t.count(), 3);
+        assert_eq!(t.max(), 500_000, "max stays exact at every scale");
+        // 1000 sits on a bucket lower bound whose width is 4: upper 1003,
+        // but clamp-to-max never fires below the top; nearest rank 1.
+        assert_eq!(t.percentile(1.0), 1003);
+        // 3000 lands in bucket [2992, 3007] (octave 11, width 16).
+        assert_eq!(t.p50(), 3007);
+        assert!((t.p50() - 3000) as f64 / 3000.0 <= 1.0 / 128.0);
+        // The top sample reports the exact max, not its bucket's upper
+        // bound (501759).
+        assert_eq!(t.p99(), 500_000);
+        assert_eq!(t.percentile(100.0), 500_000);
+        // Exact/log boundary: 255 is exact, 256 shares a width-2 bucket
+        // with 257.
+        let mut b = TickStats::default();
+        b.add(255);
+        b.add(256);
+        assert_eq!(b.percentile(50.0), 255, "below 256 stays exact");
+        assert_eq!(b.percentile(100.0), 256, "clamped to the exact max");
+        b.add(257);
+        assert_eq!(b.percentile(67.0), 257, "256 and 257 share one bucket");
+    }
+
+    #[test]
+    fn tick_stats_merge_sums_buckets_across_scales() {
+        let mut small = TickStats::default();
+        for x in 1..=10u64 {
+            small.add(x);
+        }
+        let mut big = TickStats::default();
+        big.add(500_000);
+        small.merge(&big);
+        assert_eq!(small.count(), 11);
+        assert_eq!(small.max(), 500_000);
+        assert_eq!(small.p50(), 6);
+        assert_eq!(small.percentile(100.0), 500_000);
+        // Merge direction must not matter.
+        let mut other = TickStats::default();
+        other.add(500_000);
+        for x in 1..=10u64 {
+            other.add(x);
+        }
+        for p in [1.0, 50.0, 95.0, 100.0] {
+            assert_eq!(small.percentile(p), other.percentile(p), "p{p}");
+        }
     }
 
     #[test]

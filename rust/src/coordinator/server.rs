@@ -21,6 +21,7 @@ use crate::coordinator::pool::EnginePool;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, InferResponse, RequestOutcome, ServeError};
 use crate::coordinator::sched::SchedPolicy;
+use crate::coordinator::trace::TraceRecorder;
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
 use anyhow::{anyhow, Context, Result};
@@ -95,7 +96,16 @@ impl Coordinator {
         // retry budget and the admission depth limit all come from the run
         // config, and loading errors are loud — a typo'd plan must not
         // silently serve fault-free.
-        self.pool.set_fault_plan(FaultPlan::from_run_cfg(&self.cfg)?);
+        let fault_plan = FaultPlan::from_run_cfg(&self.cfg)?;
+        // Tracing is opt-in (`--trace-out`): without it no recorder exists,
+        // the batcher's event log stays disabled and the serving path is
+        // bit-identical to the untraced one.
+        let mut recorder = self.cfg.trace_out.as_ref().map(|_| {
+            let mut rec = TraceRecorder::new();
+            rec.set_fault_plan(fault_plan.clone());
+            rec
+        });
+        self.pool.set_fault_plan(fault_plan);
         self.pool.set_max_retries(self.cfg.max_retries as u32);
         self.pool.reset_reliability();
         let limit = match self.cfg.max_queue_depth {
@@ -108,6 +118,9 @@ impl Coordinator {
             d => Some(d),
         };
         let mut batcher = Batcher::with_limits(self.cfg.batch_size, policy, limit);
+        if recorder.is_some() {
+            batcher.enable_event_log();
+        }
         let mut metrics = Metrics::default();
         // Wall-clock-free by design: released batches carry no host
         // timestamps (queue waits are measured in virtual-clock ticks by
@@ -174,20 +187,36 @@ impl Coordinator {
             while let Some(batch) = batcher.pop_ready() {
                 pending.push(batch);
             }
+            // Feed queue events to the recorder before dispatch so every
+            // span exists when its terminal outcome arrives.
+            if let Some(rec) = recorder.as_mut() {
+                for ev in batcher.take_events() {
+                    rec.record_queue_event(&ev);
+                }
+            }
             if pending.len() >= self.pool.workers() {
-                self.dispatch(&mut pending, &mut metrics);
+                self.dispatch(&mut pending, &mut metrics, recorder.as_mut());
             }
         }
         // End of stream: drain every model's remainder in policy order.
         while let Some(batch) = batcher.flush() {
             pending.push(batch);
         }
-        self.dispatch(&mut pending, &mut metrics);
+        if let Some(rec) = recorder.as_mut() {
+            for ev in batcher.take_events() {
+                rec.record_queue_event(&ev);
+            }
+        }
+        self.dispatch(&mut pending, &mut metrics, recorder.as_mut());
         if let Some(stats) = self.pool.cache_stats() {
             metrics.weight_cache = stats;
         }
         metrics.absorb_sched(batcher.policy(), batcher.sched_stats());
         metrics.absorb_reliability(&self.pool.reliability());
+        if let (Some(path), Some(rec)) = (self.cfg.trace_out.as_deref(), recorder.as_ref()) {
+            std::fs::write(path, rec.to_chrome_json())
+                .with_context(|| format!("writing trace to {path}"))?;
+        }
         Ok(metrics)
     }
 
@@ -204,7 +233,12 @@ impl Coordinator {
     /// `--workers`), and weight broadcasts never cross models;
     /// `--broadcast-wmu off` degrades every request to a singleton group
     /// (full per-image weight stream, the unshared reference mode).
-    fn dispatch(&self, pending: &mut Vec<Vec<InferRequest>>, metrics: &mut Metrics) {
+    fn dispatch(
+        &self,
+        pending: &mut Vec<Vec<InferRequest>>,
+        metrics: &mut Metrics,
+        mut recorder: Option<&mut TraceRecorder>,
+    ) {
         if pending.is_empty() {
             return;
         }
@@ -217,6 +251,9 @@ impl Coordinator {
         for (req, result) in all.iter().zip(results) {
             match result.outcome {
                 Ok(out) => {
+                    if let Some(rec) = recorder.as_deref_mut() {
+                        rec.record_completed(req.id, req.model, result.retries, &out.stages);
+                    }
                     metrics.record(&InferResponse {
                         id: req.id,
                         model: req.model,
@@ -241,6 +278,9 @@ impl Coordinator {
                         }
                         ServeError::Shed { .. } => 0,
                     };
+                    if let Some(rec) = recorder.as_deref_mut() {
+                        rec.record_failed(req.id, retries);
+                    }
                     metrics.record(&InferResponse::failed(req.id, req.model, retries));
                 }
             }
@@ -454,6 +494,37 @@ mod tests {
         let mut coord =
             Coordinator::new(engine, RunConfig { sched: "lifo".into(), ..Default::default() });
         assert!(coord.serve_dataset(&dataset(2), 2).is_err());
+    }
+
+    #[test]
+    fn trace_out_bytes_identical_across_worker_counts() {
+        // The tentpole invariant at the serving level: the exported trace
+        // is timed purely on the virtual clock and device cycles, so its
+        // bytes cannot depend on --workers.
+        let path = std::env::temp_dir()
+            .join(format!("neural_trace_unit_{}.json", std::process::id()));
+        let path_str = path.to_string_lossy().into_owned();
+        let run = |workers: usize| {
+            let engine = Engine::sim_registry(two_tiny(), ArchConfig::default());
+            let cfg = RunConfig {
+                batch_size: 2,
+                workers,
+                trace_out: Some(path_str.clone()),
+                ..Default::default()
+            };
+            let mut coord = Coordinator::new(engine, cfg);
+            coord.serve_dataset(&dataset(8), 8).unwrap();
+            std::fs::read_to_string(&path).unwrap()
+        };
+        let one = run(1);
+        let four = run(4);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(one, four, "trace bytes must not depend on --workers");
+        assert!(one.contains("\"traceEvents\""));
+        assert!(one.contains("\"complete r0\""), "every request gets a terminal marker");
+        assert!(one.contains("\"queue r7\"") && one.contains("\"exec r7\""));
+        // Per-layer device spans with FIFO annotations rode along.
+        assert!(one.contains(":conv\"") && one.contains("\"w_hidden\""), "{one}");
     }
 
     #[test]

@@ -1,0 +1,545 @@
+//! Deterministic request/device tracing — the observability layer.
+//!
+//! A [`TraceRecorder`] collects two kinds of spans, both on *virtual*
+//! timebases (detlint's `wall-clock` rule covers this module — nothing
+//! here may read host time, so a trace is byte-identical across
+//! `--workers 1` and `--workers 4`):
+//!
+//! * **Request lifecycle spans** on the scheduler's
+//!   [`crate::coordinator::sched::VirtualClock`] tick axis (trace pid 1):
+//!   admit → queue → policy release → dispatch/execute →
+//!   complete/shed/failed, with retry counts and replayed fault-injection
+//!   outcomes as instant markers. The batcher logs [`QueueEvent`]s (only
+//!   when tracing is enabled — a disabled log is a single `Option` check,
+//!   zero allocation) and the serving loop feeds them here together with
+//!   each request's terminal outcome.
+//! * **Per-layer device spans** on the simulated device cycle axis (trace
+//!   pid 2), taken verbatim from the first completed inference's
+//!   [`LayerSpan`] schedule per model: IG scan / array+EPA / WMU weight
+//!   stream cost splits with W-FIFO and A-FIFO hidden/stall beats as span
+//!   arguments. Device timing is worker- and batch-independent by the
+//!   repo's determinism invariants, so "first completed per model" is a
+//!   deterministic representative.
+//!
+//! Fault-injection outcomes are *replayed*, not observed: a
+//! [`FaultPlan`]'s decision is a pure function of
+//! `(request id, arrival tick, attempt)`, so the recorder re-derives every
+//! attempt's action instead of threading observer state through the pool's
+//! supervision loop.
+//!
+//! The export is Chrome trace-event JSON (one `traceEvents` array of
+//! `ph: "X"` complete spans, `ph: "i"` instants and `ph: "M"` metadata),
+//! viewable as a flamegraph in Perfetto / `chrome://tracing`. Timestamps
+//! are virtual ticks or device cycles — never wall time — and the writer
+//! walks `BTreeMap`s in key order, so the serialized bytes are a pure
+//! function of the trace content.
+//!
+//! The recorder is bounded: at most `cap` request spans are kept (admits
+//! past the cap are counted in `dropped_requests` inside the export's
+//! `otherData`), and device spans are one schedule per model.
+
+use crate::arch::LayerSpan;
+use crate::coordinator::fault::{FaultAction, FaultPlan};
+use crate::coordinator::registry::ModelId;
+use crate::coordinator::request::RequestOutcome;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Default bound on recorded request spans (~48 MB worst case): enough
+/// for a million-request run while keeping the recorder's memory finite.
+pub const TRACE_REQUEST_CAP: usize = 1 << 20;
+
+/// Trace process id of the virtual-clock (tick) axis.
+const PID_TICKS: u64 = 1;
+/// Trace process id of the device (cycle) axis.
+const PID_CYCLES: u64 = 2;
+
+/// One queue-lifecycle event, logged by the batcher when its event log is
+/// enabled and drained into the [`TraceRecorder`] by the serving loop.
+/// All times are virtual-clock ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueEvent {
+    /// The request was admitted and stamped with its arrival tick.
+    Admitted {
+        /// Request id.
+        id: u64,
+        /// Target model.
+        model: ModelId,
+        /// Arrival tick stamped at admission.
+        tick: u64,
+    },
+    /// Admission control rejected the request (queue at depth limit). Shed
+    /// requests consume no clock tick; `tick` is the clock's position when
+    /// the rejection happened.
+    Shed {
+        /// Request id.
+        id: u64,
+        /// Target model.
+        model: ModelId,
+        /// Virtual time at rejection.
+        tick: u64,
+        /// Queue depth at rejection.
+        depth: u64,
+        /// Configured per-model depth limit.
+        limit: u64,
+    },
+    /// The policy released the request's batch to the dispatcher.
+    Released {
+        /// Request id.
+        id: u64,
+        /// Target model.
+        model: ModelId,
+        /// The request's arrival tick.
+        arrival: u64,
+        /// Virtual time at release (queue wait = `release - arrival`).
+        release: u64,
+        /// The batch's drain tick (e2e = `completion - arrival`).
+        completion: u64,
+        /// Whether a deadline forced a partial release.
+        forced: bool,
+    },
+}
+
+/// Lifecycle state accumulated per request before export.
+#[derive(Debug, Clone, Default)]
+struct ReqSpan {
+    model: usize,
+    arrival: u64,
+    /// `(release tick, completion tick, forced)` once released.
+    release: Option<(u64, u64, bool)>,
+    /// `(tick, depth, limit)` when shed at admission.
+    shed: Option<(u64, u64, u64)>,
+    outcome: Option<RequestOutcome>,
+    retries: u32,
+}
+
+/// Bounded deterministic trace collector (see the module docs).
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    cap: usize,
+    dropped: u64,
+    reqs: BTreeMap<u64, ReqSpan>,
+    /// One representative per-layer device schedule per model (the first
+    /// completed inference's spans — deterministic because device timing
+    /// is independent of workers and batching).
+    device: BTreeMap<usize, Vec<LayerSpan>>,
+    fault: Option<FaultPlan>,
+}
+
+impl TraceRecorder {
+    /// Recorder bounded at [`TRACE_REQUEST_CAP`] request spans.
+    pub fn new() -> Self {
+        Self::with_capacity(TRACE_REQUEST_CAP)
+    }
+
+    /// Recorder bounded at `cap` request spans (at least 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        TraceRecorder { cap: cap.max(1), ..TraceRecorder::default() }
+    }
+
+    /// Attach the run's fault plan so per-attempt injection outcomes can
+    /// be replayed into the trace (the decision is pure in
+    /// `(id, arrival tick, attempt)`).
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+    }
+
+    /// Record one batcher queue event.
+    pub fn record_queue_event(&mut self, ev: &QueueEvent) {
+        match *ev {
+            QueueEvent::Admitted { id, model, tick } => {
+                self.insert(id, ReqSpan { model: model.0, arrival: tick, ..ReqSpan::default() });
+            }
+            QueueEvent::Shed { id, model, tick, depth, limit } => {
+                self.insert(
+                    id,
+                    ReqSpan {
+                        model: model.0,
+                        arrival: tick,
+                        shed: Some((tick, depth, limit)),
+                        outcome: Some(RequestOutcome::Shed),
+                        ..ReqSpan::default()
+                    },
+                );
+            }
+            QueueEvent::Released { id, release, completion, forced, .. } => {
+                if let Some(s) = self.reqs.get_mut(&id) {
+                    s.release = Some((release, completion, forced));
+                }
+            }
+        }
+    }
+
+    /// Record a completed request: its retry count and (once per model)
+    /// the per-layer device schedule of its inference.
+    pub fn record_completed(
+        &mut self,
+        id: u64,
+        model: ModelId,
+        retries: u32,
+        stages: &[LayerSpan],
+    ) {
+        if let Some(s) = self.reqs.get_mut(&id) {
+            s.outcome = Some(RequestOutcome::Ok);
+            s.retries = retries;
+        }
+        if !stages.is_empty() {
+            self.device.entry(model.0).or_insert_with(|| stages.to_vec());
+        }
+    }
+
+    /// Record a request that exhausted its retry budget.
+    pub fn record_failed(&mut self, id: u64, retries: u32) {
+        if let Some(s) = self.reqs.get_mut(&id) {
+            s.outcome = Some(RequestOutcome::Failed { retries });
+            s.retries = retries;
+        }
+    }
+
+    /// Request spans currently held.
+    pub fn request_count(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// Admits dropped past the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn insert(&mut self, id: u64, span: ReqSpan) {
+        if self.reqs.len() >= self.cap && !self.reqs.contains_key(&id) {
+            self.dropped += 1;
+            return;
+        }
+        self.reqs.insert(id, span);
+    }
+
+    /// Serialize the trace as Chrome trace-event JSON. Deterministic: the
+    /// event order walks the id-ordered maps, every timestamp is a virtual
+    /// tick (pid 1) or device cycle (pid 2), and the JSON writer is
+    /// canonical — identical traces serialize to identical bytes.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(meta_process(PID_TICKS, "virtual clock (ticks)"));
+        events.push(meta_process(PID_CYCLES, "device (cycles)"));
+        let models: std::collections::BTreeSet<usize> =
+            self.reqs.values().map(|s| s.model).collect();
+        for &m in &models {
+            events.push(meta_thread(PID_TICKS, m, &format!("requests m{m}")));
+        }
+        for &m in self.device.keys() {
+            events.push(meta_thread(PID_CYCLES, m, &format!("layers m{m}")));
+        }
+        for (&id, s) in &self.reqs {
+            self.request_events(id, s, &mut events);
+        }
+        for (&m, spans) in &self.device {
+            for sp in spans {
+                events.push(complete(
+                    PID_CYCLES,
+                    m,
+                    sp.start_cycle,
+                    sp.duration,
+                    &format!("L{}:{}", sp.node, sp.op),
+                    vec![
+                        ("scan", num(sp.cost.scan)),
+                        ("floor", num(sp.cost.floor)),
+                        ("compute", num(sp.cost.compute)),
+                        ("stream", num(sp.cost.stream)),
+                        ("serial", num(sp.serial())),
+                        ("a_hidden", num(sp.a_hidden)),
+                        ("a_stall", num(sp.a_stall)),
+                        ("w_hidden", num(sp.w_hidden)),
+                        ("w_stall", num(sp.w_stall)),
+                    ],
+                ));
+            }
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("dropped_requests", num(self.dropped)),
+                    (
+                        "timebase",
+                        Json::Str("virtual ticks (pid 1) / device cycles (pid 2)".into()),
+                    ),
+                ]),
+            ),
+            ("traceEvents", Json::Arr(events)),
+        ])
+        .to_text()
+    }
+
+    /// Emit one request's lifecycle events in a fixed order: queue span,
+    /// exec span, terminal marker, replayed fault instants.
+    fn request_events(&self, id: u64, s: &ReqSpan, events: &mut Vec<Json>) {
+        let tid = s.model;
+        if let Some((tick, depth, limit)) = s.shed {
+            events.push(instant(
+                PID_TICKS,
+                tid,
+                tick,
+                &format!("shed r{id}"),
+                vec![("depth", num(depth)), ("limit", num(limit))],
+            ));
+            return;
+        }
+        let Some((release, completion, forced)) = s.release else {
+            // Admitted but never released — cannot happen through
+            // `serve_dataset` (flush drains every queue), but an external
+            // driver stopping mid-stream still gets an honest marker.
+            events.push(instant(PID_TICKS, tid, s.arrival, &format!("admitted r{id}"), vec![]));
+            return;
+        };
+        events.push(complete(
+            PID_TICKS,
+            tid,
+            s.arrival,
+            release - s.arrival,
+            &format!("queue r{id}"),
+            vec![("forced_release", Json::Bool(forced))],
+        ));
+        events.push(complete(
+            PID_TICKS,
+            tid,
+            release,
+            completion - release,
+            &format!("exec r{id}"),
+            vec![("retries", num(s.retries as u64))],
+        ));
+        let terminal = match s.outcome {
+            Some(RequestOutcome::Failed { .. }) => format!("failed r{id}"),
+            _ => format!("complete r{id}"),
+        };
+        events.push(instant(
+            PID_TICKS,
+            tid,
+            completion,
+            &terminal,
+            vec![("retries", num(s.retries as u64))],
+        ));
+        if let Some(plan) = &self.fault {
+            if plan.is_active() {
+                for attempt in 0..=s.retries {
+                    let action = plan.decide(id, s.arrival, attempt);
+                    let Some(tag) = fault_tag(action) else { continue };
+                    let mut args = vec![("attempt", num(attempt as u64))];
+                    if let FaultAction::Stall(ticks) = action {
+                        args.push(("ticks", num(ticks)));
+                    }
+                    events.push(instant(
+                        PID_TICKS,
+                        tid,
+                        completion,
+                        &format!("fault:{tag} r{id}"),
+                        args,
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Short tag for a fault action, `None` for the quiet case.
+fn fault_tag(action: FaultAction) -> Option<&'static str> {
+    match action {
+        FaultAction::None => None,
+        FaultAction::Panic => Some("panic"),
+        FaultAction::Error => Some("error"),
+        FaultAction::Stall(_) => Some("stall"),
+        FaultAction::Corrupt => Some("corrupt"),
+    }
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// `ph: "X"` complete span.
+fn complete(pid: u64, tid: usize, ts: u64, dur: u64, name: &str, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("X".into())),
+        ("pid", num(pid)),
+        ("tid", num(tid as u64)),
+        ("ts", num(ts)),
+        ("dur", num(dur)),
+        ("name", Json::Str(name.into())),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// `ph: "i"` thread-scoped instant marker.
+fn instant(pid: u64, tid: usize, ts: u64, name: &str, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("pid", num(pid)),
+        ("tid", num(tid as u64)),
+        ("ts", num(ts)),
+        ("name", Json::Str(name.into())),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// `ph: "M"` process-name metadata.
+fn meta_process(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", num(pid)),
+        ("tid", num(0)),
+        ("name", Json::Str("process_name".into())),
+        ("args", Json::obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+/// `ph: "M"` thread-name metadata.
+fn meta_thread(pid: u64, tid: usize, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", num(pid)),
+        ("tid", num(tid as u64)),
+        ("name", Json::Str("thread_name".into())),
+        ("args", Json::obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{LayerSpan, StageCost};
+
+    fn span(node: usize, start: u64, dur: u64) -> LayerSpan {
+        LayerSpan {
+            node,
+            op: "conv",
+            start_cycle: start,
+            duration: dur,
+            cost: StageCost { scan: 1, floor: dur.saturating_sub(1), compute: 2, stream: 3 },
+            a_hidden: 1,
+            a_stall: 0,
+            w_hidden: 2,
+            w_stall: 0,
+        }
+    }
+
+    fn scripted_recorder() -> TraceRecorder {
+        let mut rec = TraceRecorder::new();
+        let m = ModelId(0);
+        rec.record_queue_event(&QueueEvent::Admitted { id: 0, model: m, tick: 1 });
+        rec.record_queue_event(&QueueEvent::Admitted { id: 1, model: m, tick: 2 });
+        rec.record_queue_event(&QueueEvent::Shed { id: 2, model: m, tick: 2, depth: 2, limit: 2 });
+        rec.record_queue_event(&QueueEvent::Released {
+            id: 0,
+            model: m,
+            arrival: 1,
+            release: 2,
+            completion: 3,
+            forced: false,
+        });
+        rec.record_queue_event(&QueueEvent::Released {
+            id: 1,
+            model: m,
+            arrival: 2,
+            release: 2,
+            completion: 3,
+            forced: false,
+        });
+        rec.record_completed(0, m, 0, &[span(1, 0, 10), span(2, 10, 4)]);
+        rec.record_failed(1, 2);
+        rec
+    }
+
+    #[test]
+    fn trace_export_parses_and_covers_every_outcome() {
+        let text = scripted_recorder().to_chrome_json();
+        let doc = Json::parse(&text).expect("trace must be valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        // Terminal markers for completed, failed and shed requests.
+        assert!(text.contains("\"complete r0\""), "{text}");
+        assert!(text.contains("\"failed r1\""), "{text}");
+        assert!(text.contains("\"shed r2\""), "{text}");
+        // Queue + exec spans on the tick axis, layer spans on the cycle
+        // axis with FIFO annotations.
+        assert!(text.contains("\"queue r0\""));
+        assert!(text.contains("\"exec r0\""));
+        assert!(text.contains("\"L1:conv\""));
+        assert!(text.contains("\"w_hidden\""));
+        assert!(text.contains("\"a_stall\""));
+        // Every event's phase is one of X / i / M, and every timestamp is
+        // a finite number (virtual ticks or cycles, never wall time).
+        for ev in events {
+            let ph = ev.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "X" | "i" | "M"), "phase {ph}");
+            if ph != "M" {
+                assert!(ev.get("ts").unwrap().as_f64().unwrap().is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn trace_serialization_is_byte_deterministic() {
+        // Two independently scripted identical recorders must serialize to
+        // identical bytes — the property the 1-vs-4-workers integration
+        // test leans on.
+        assert_eq!(scripted_recorder().to_chrome_json(), scripted_recorder().to_chrome_json());
+    }
+
+    #[test]
+    fn trace_capacity_bounds_request_spans() {
+        let mut rec = TraceRecorder::with_capacity(2);
+        let m = ModelId(0);
+        for id in 0..5 {
+            rec.record_queue_event(&QueueEvent::Admitted { id, model: m, tick: id + 1 });
+        }
+        assert_eq!(rec.request_count(), 2);
+        assert_eq!(rec.dropped(), 3);
+        let text = rec.to_chrome_json();
+        assert!(text.contains("\"dropped_requests\":3"), "{text}");
+        // Updates to already-tracked requests still land past the cap.
+        rec.record_queue_event(&QueueEvent::Released {
+            id: 0,
+            model: m,
+            arrival: 1,
+            release: 5,
+            completion: 6,
+            forced: true,
+        });
+        rec.record_completed(0, m, 1, &[]);
+        assert!(rec.to_chrome_json().contains("\"complete r0\""));
+    }
+
+    #[test]
+    fn trace_replays_fault_plan_outcomes() {
+        let mut rec = TraceRecorder::new();
+        let m = ModelId(0);
+        let mut plan = FaultPlan::seeded(1);
+        plan.error_requests = vec![4];
+        plan.stall_requests = vec![5];
+        plan.stall_ticks = 3;
+        plan.persistent = true;
+        rec.set_fault_plan(Some(plan));
+        for id in [4u64, 5] {
+            rec.record_queue_event(&QueueEvent::Admitted { id, model: m, tick: id });
+            rec.record_queue_event(&QueueEvent::Released {
+                id,
+                model: m,
+                arrival: id,
+                release: 6,
+                completion: 7,
+                forced: false,
+            });
+        }
+        rec.record_failed(4, 2);
+        rec.record_completed(5, m, 0, &[]);
+        let text = rec.to_chrome_json();
+        // Persistent error: one instant per attempt (0..=2).
+        assert_eq!(text.matches("fault:error r4").count(), 3, "{text}");
+        assert!(text.contains("\"fault:stall r5\""), "{text}");
+        assert!(text.contains("\"ticks\":3"), "{text}");
+        assert!(text.contains("\"failed r4\""));
+        assert!(text.contains("\"complete r5\""));
+    }
+}

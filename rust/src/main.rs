@@ -141,6 +141,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             ),
             None => None,
         },
+        trace_out: args.get("trace-out").map(|s| s.to_string()),
+        metrics_out: args.get("metrics-out").map(|s| s.to_string()),
         ..Default::default()
     };
     let registry = build_registry(args, &run_cfg)?;
@@ -215,6 +217,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             "cross-check: {}/{} mismatches vs PJRT golden ({} errored)",
             coord.crosscheck_mismatches, coord.crosschecks, coord.crosscheck_errors
         );
+    }
+    // Machine-readable exports: structured JSON at the path, Prometheus
+    // text at `<path>.prom`. Both are deterministic snapshots of the
+    // summary-line counters (the wall measurement above is display-only
+    // and deliberately excluded), so CI gates and benches can assert on
+    // fields instead of parsing display strings.
+    if let Some(path) = &run_cfg.metrics_out {
+        std::fs::write(path, metrics.to_json().to_text())
+            .with_context(|| format!("writing metrics JSON to {path}"))?;
+        let prom_path = format!("{path}.prom");
+        std::fs::write(&prom_path, metrics.prometheus())
+            .with_context(|| format!("writing Prometheus text to {prom_path}"))?;
+        println!("metrics: wrote {path} and {prom_path}");
+    }
+    if let Some(path) = &run_cfg.trace_out {
+        println!("trace: wrote {path}");
     }
     Ok(())
 }

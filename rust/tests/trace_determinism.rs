@@ -1,0 +1,214 @@
+//! End-to-end trace/metrics-export determinism tests (the observability
+//! acceptance criteria): `--trace-out` must produce valid Chrome
+//! trace-event JSON that is byte-identical across worker counts — clean
+//! and under a persistent fault plan — with terminal markers for
+//! completed, shed and failed requests and per-layer device spans; and a
+//! run with tracing disabled must report counters and summary lines
+//! bit-identical to one that never had the subsystem at all.
+
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine, Metrics, ModelRegistry};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::zoo;
+use neural::util::json::Json;
+
+fn dataset(n: usize) -> Dataset {
+    Dataset::from_synth(&SynthCifar::new(10, 2), n)
+}
+
+fn two_tiny() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 5), 1);
+    reg.register(zoo::tiny(10, 11), 1);
+    reg
+}
+
+/// Distinct temp path per test so parallel tests never collide.
+fn temp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("neural_{name}_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Serve `n` images with the given config; return (metrics, trace bytes).
+fn serve(cfg: RunConfig, n: usize) -> (Metrics, Option<String>) {
+    let engine = Engine::sim_registry(two_tiny(), ArchConfig::default());
+    let trace_path = cfg.trace_out.clone();
+    let mut coord = Coordinator::new(engine, cfg);
+    let m = coord.serve_dataset(&dataset(n), n).unwrap();
+    let trace = trace_path.map(|p| {
+        let text = std::fs::read_to_string(&p).expect("trace file written");
+        let _ = std::fs::remove_file(&p);
+        text
+    });
+    (m, trace)
+}
+
+/// Every trace must parse as Chrome trace-event JSON: a `traceEvents`
+/// array whose entries are X/i/M events with finite virtual timestamps.
+fn assert_valid_chrome_trace(text: &str) -> usize {
+    let doc = Json::parse(text).expect("trace is valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace has events");
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(matches!(ph, "X" | "i" | "M"), "unexpected phase {ph}");
+        if ph != "M" {
+            let ts = ev.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts.is_finite() && ts >= 0.0, "virtual timestamps only");
+        }
+        if ph == "X" {
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    events.len()
+}
+
+#[test]
+fn trace_bytes_identical_across_workers_clean_run() {
+    let path = temp_path("trace_clean");
+    let run = |workers: usize| {
+        let cfg = RunConfig {
+            batch_size: 2,
+            workers,
+            trace_out: Some(path.clone()),
+            ..Default::default()
+        };
+        serve(cfg, 10).1.unwrap()
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one, four, "trace bytes must not depend on --workers");
+    assert_valid_chrome_trace(&one);
+    // Every request appears with queue + exec spans and a terminal marker.
+    for id in 0..10 {
+        assert!(one.contains(&format!("\"queue r{id}\"")), "queue span for r{id}");
+        assert!(one.contains(&format!("\"exec r{id}\"")), "exec span for r{id}");
+        assert!(one.contains(&format!("\"complete r{id}\"")), "terminal marker for r{id}");
+    }
+    // Per-layer device spans on the cycle axis with FIFO annotations, one
+    // schedule per model.
+    assert!(one.contains(":conv\""), "conv layer spans present");
+    assert!(one.contains("\"w_hidden\"") && one.contains("\"a_stall\""), "FIFO annotations");
+    assert!(one.contains("device (cycles)") && one.contains("virtual clock (ticks)"));
+    assert!(one.contains("\"layers m0\"") && one.contains("\"layers m1\""));
+}
+
+#[test]
+fn trace_bytes_identical_across_workers_under_persistent_faults() {
+    // Persistent explicit faults: request 3 panics every attempt, request
+    // 6 errors every attempt — both exhaust the retry budget and must
+    // appear as `failed` markers with replayed fault instants, and the
+    // whole trace must still be byte-identical across worker counts.
+    let plan = std::env::temp_dir().join(format!("neural_trace_plan_{}.ini", std::process::id()));
+    std::fs::write(&plan, "[fault]\npanic_requests = 3\nerror_requests = 6\npersistent = true\n")
+        .unwrap();
+    let path = temp_path("trace_faulted");
+    let run = |workers: usize| {
+        let cfg = RunConfig {
+            batch_size: 2,
+            workers,
+            max_retries: 1,
+            fault_plan: Some(plan.to_string_lossy().into_owned()),
+            trace_out: Some(path.clone()),
+            ..Default::default()
+        };
+        serve(cfg, 12)
+    };
+    let (m1, t1) = run(1);
+    let (m4, t4) = run(4);
+    let _ = std::fs::remove_file(&plan);
+    let (one, four) = (t1.unwrap(), t4.unwrap());
+    assert_eq!(one, four, "faulted trace bytes must not depend on --workers");
+    assert_valid_chrome_trace(&one);
+    assert_eq!(m1.failed, 2);
+    assert_eq!(m4.failed, 2);
+    assert!(one.contains("\"failed r3\""), "exhausted request gets a failed marker");
+    assert!(one.contains("\"failed r6\""));
+    // Replayed fault instants: one per attempt (0 and 1) for each.
+    assert_eq!(one.matches("fault:panic r3").count(), 2, "{one}");
+    assert_eq!(one.matches("fault:error r6").count(), 2);
+    assert!(one.contains("\"complete r0\""), "siblings complete normally");
+}
+
+#[test]
+fn trace_marks_shed_requests_without_ticking_them() {
+    // A per-model depth limit below the batch size on the 1:1 two-model
+    // mix: each model admits its first 2 requests (ids 0-3), everything
+    // after is shed at the door. Shed requests appear as instant markers
+    // (no queue/exec span — they never consumed a tick) and the trace
+    // stays worker-independent.
+    let path = temp_path("trace_shed");
+    let run = |workers: usize| {
+        let cfg = RunConfig {
+            batch_size: 4,
+            workers,
+            max_queue_depth: 2,
+            trace_out: Some(path.clone()),
+            ..Default::default()
+        };
+        serve(cfg, 10)
+    };
+    let (m1, t1) = run(1);
+    let (_, t4) = run(4);
+    let (one, four) = (t1.unwrap(), t4.unwrap());
+    assert_eq!(one, four);
+    assert_valid_chrome_trace(&one);
+    assert_eq!(m1.shed, 6);
+    assert_eq!(m1.completed, 4);
+    let shed_markers = one.matches("\"shed r").count();
+    assert_eq!(shed_markers, 6, "every shed request gets a marker: {one}");
+    for id in 0..4u64 {
+        assert!(one.contains(&format!("\"complete r{id}\"")), "admitted requests complete");
+    }
+    // A shed request has no exec span.
+    assert!(!one.contains("\"exec r4\""), "shed requests never execute");
+}
+
+#[test]
+fn tracing_off_leaves_counters_and_summary_lines_bit_identical() {
+    // The zero-overhead guarantee, observed end-to-end: a run without
+    // --trace-out must produce exactly the metrics of a traced run (the
+    // recorder only observes), and its own summary lines must be
+    // unchanged by this PR's plumbing.
+    let path = temp_path("trace_overhead");
+    let base = RunConfig { batch_size: 2, workers: 2, ..Default::default() };
+    let (untraced, no_file) = serve(base.clone(), 10);
+    assert!(no_file.is_none());
+    let traced_cfg = RunConfig { trace_out: Some(path.clone()), ..base };
+    let (traced, file) = serve(traced_cfg, 10);
+    assert!(file.is_some());
+    assert_eq!(untraced.summary_line(), traced.summary_line());
+    assert_eq!(untraced.sched_line(), traced.sched_line());
+    assert_eq!(untraced.pipeline_line(), traced.pipeline_line());
+    assert_eq!(untraced.cache_line(), traced.cache_line());
+    assert_eq!(untraced.reliability_line(), traced.reliability_line());
+    assert_eq!(untraced.response_order, traced.response_order);
+    assert_eq!(untraced.to_json().to_text(), traced.to_json().to_text());
+    assert_eq!(untraced.prometheus(), traced.prometheus());
+}
+
+#[test]
+fn metrics_export_round_trips_and_matches_the_run() {
+    // The --metrics-out JSON is written by main.rs from Metrics::to_json;
+    // here we pin the library side: the snapshot parses, matches the
+    // run's counters, and is byte-deterministic across worker counts.
+    let run = |workers: usize| {
+        let cfg = RunConfig { batch_size: 2, workers, ..Default::default() };
+        serve(cfg, 10).0
+    };
+    let m1 = run(1);
+    let m4 = run(4);
+    assert_eq!(m1.to_json().to_text(), m4.to_json().to_text(), "export is worker-independent");
+    let doc = Json::parse(&m1.to_json().to_text()).unwrap();
+    assert_eq!(doc.get("completed").unwrap().as_f64().unwrap(), 10.0);
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "neural-metrics-v1");
+    let sched = doc.get("sched").unwrap();
+    assert_eq!(sched.get("policy").unwrap().as_str().unwrap(), "fifo");
+    assert!(doc.get("per_model").unwrap().get("m0").is_some());
+    assert!(doc.get("per_model").unwrap().get("m1").is_some());
+    let prom = m1.prometheus();
+    assert_eq!(prom, m4.prometheus());
+    assert!(prom.contains("neural_completed_total 10\n"), "{prom}");
+}

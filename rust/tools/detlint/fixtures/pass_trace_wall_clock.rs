@@ -1,0 +1,6 @@
+// Fixture: fixed twin of trip_trace_wall_clock — MUST pass. The trace
+// timestamp is the caller's virtual-clock tick, never the host clock.
+
+pub fn trace_event(name: &str, tick: u64) -> String {
+    format!("{{\"name\":\"{name}\",\"ph\":\"i\",\"ts\":{tick}}}")
+}

@@ -1,0 +1,13 @@
+// Fixture: MUST trip `wall-clock` — a wall-time stamp in a trace event.
+// Trace timestamps are virtual ticks / device cycles; reading the host
+// clock to fill `ts` makes the exported trace machine-dependent.
+
+use std::time::SystemTime;
+
+pub fn trace_event(name: &str) -> String {
+    let ts = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_micros())
+        .unwrap_or(0);
+    format!("{{\"name\":\"{name}\",\"ph\":\"i\",\"ts\":{ts}}}")
+}

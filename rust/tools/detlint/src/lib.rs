@@ -121,7 +121,12 @@ impl Default for Config {
             &mut rules,
             "dispatch-unwrap",
             &[],
-            &["src/coordinator/pool.rs", "src/coordinator/server.rs", "src/coordinator/batcher.rs"],
+            &[
+                "src/coordinator/pool.rs",
+                "src/coordinator/server.rs",
+                "src/coordinator/batcher.rs",
+                "src/coordinator/trace.rs",
+            ],
         );
         set(
             &mut rules,

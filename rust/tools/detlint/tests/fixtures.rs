@@ -21,8 +21,9 @@ fn lint_fixture(name: &str) -> Vec<detlint::Finding> {
 }
 
 /// (trip fixture, rule it must report)
-const TRIPS: [(&str, &str); 6] = [
+const TRIPS: [(&str, &str); 7] = [
     ("trip_wall_clock.rs", "wall-clock"),
+    ("trip_trace_wall_clock.rs", "wall-clock"),
     ("trip_unordered_iter.rs", "unordered-iter"),
     ("trip_unseeded_rng.rs", "unseeded-rng"),
     ("trip_dispatch_unwrap.rs", "dispatch-unwrap"),
@@ -30,8 +31,9 @@ const TRIPS: [(&str, &str); 6] = [
     ("trip_allow_marker.rs", detlint::MALFORMED_ALLOW),
 ];
 
-const PASSES: [&str; 7] = [
+const PASSES: [&str; 8] = [
     "pass_wall_clock.rs",
+    "pass_trace_wall_clock.rs",
     "pass_unordered_iter.rs",
     "pass_unseeded_rng.rs",
     "pass_dispatch_unwrap.rs",
