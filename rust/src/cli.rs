@@ -135,7 +135,7 @@ USAGE:
                     [--batch N] [--workers N] [--hlo PATH --crosscheck-every N]
                     [--arch PATH.ini] [--classes N] [--seed N]
                     [--sched fifo|wfair|deadline] [--sla-deadline TICKS]
-                    [--sla-weights W,W,..]
+                    [--sla-weights W,W,..] [--service-cost unit|modeled]
                     [--max-queue-depth N|sla] [--max-retries N]
                     [--fault-plan PATH.ini] [--fault-seed N]
                     [--pipeline on|off] [--afifo-depth N] [--broadcast-wmu on|off]
@@ -155,8 +155,15 @@ USAGE:
                      (--sla-weights, default --model-mix), deadline ages
                      queued requests and force-releases a partial batch once
                      a queue head has waited --sla-deadline ticks (one tick
-                     per submitted request or drained batch, never wall
-                     time, so waits and percentiles replay exactly);
+                     per submitted request, never wall time, so waits and
+                     percentiles replay exactly); --service-cost prices each
+                     drained batch on that clock: `unit` (default) charges
+                     one tick per batch — the historical bit-exact
+                     schedule — while `modeled` calibrates a per-model cycle
+                     cost from one reference inference per model and charges
+                     ceil(cycles/2^14) ticks per request times the batch
+                     length, so heavy batches age every queue, deadline and
+                     admission bound by the work they displace;
                      `materializing` runs the event-vector
                      validation path; --pipeline, default on, overlaps each
                      layer's weight stream with earlier layers' compute through

@@ -44,6 +44,11 @@ pub struct RunConfig {
     /// `wfair` policy: explicit per-model dequeue weights (empty = fall
     /// back to the `--model-mix` traffic weights, then to 1).
     pub sla_weights: Vec<usize>,
+    /// Batch-drain pricing on the virtual clock: `unit` (one tick per
+    /// drained batch, the historical bit-exact schedule) or `modeled`
+    /// (per-model calibrated cycle cost × batch length — see
+    /// `ServiceCostModel`).
+    pub service_cost: String,
     /// Cross-check every Nth image against the PJRT golden model (0 = off).
     pub crosscheck_every: usize,
     /// Per-model admission depth limit: 0 = unbounded (the default, the
@@ -80,6 +85,7 @@ impl Default for RunConfig {
             sched: "fifo".into(),
             sla_deadline: 32,
             sla_weights: Vec::new(),
+            service_cost: "unit".into(),
             crosscheck_every: 0,
             max_queue_depth: 0,
             max_retries: 2,
@@ -140,6 +146,7 @@ impl RunConfig {
                 .map(parse_mix)
                 .transpose()?
                 .unwrap_or_default(),
+            service_cost: ini.get("run", "service_cost").unwrap_or(&d.service_cost).to_string(),
             crosscheck_every: ini.get_usize("run", "crosscheck_every", d.crosscheck_every)?,
             max_queue_depth: ini
                 .get("run", "max_queue_depth")
@@ -196,6 +203,7 @@ mod tests {
         assert_eq!(c.sched, "fifo", "the reference policy is the default");
         assert_eq!(c.sla_deadline, 32);
         assert!(c.sla_weights.is_empty());
+        assert_eq!(c.service_cost, "unit", "unit pricing is the bit-exact default");
     }
 
     #[test]
@@ -208,6 +216,9 @@ mod tests {
         assert_eq!(c.sla_weights, vec![3, 1]);
         let bad = Ini::parse("[run]\nsla_weights = 3,heavy\n").unwrap();
         assert!(RunConfig::from_ini(&bad).is_err());
+        let ini = Ini::parse("[run]\nservice_cost = modeled\n").unwrap();
+        let c = RunConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.service_cost, "modeled");
     }
 
     #[test]

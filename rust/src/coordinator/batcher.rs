@@ -10,8 +10,10 @@
 //! models.
 //!
 //! *Which* queue releases *when* is the [`SchedPolicy`]'s decision, timed
-//! by the deterministic [`VirtualClock`] (one tick per submitted request,
-//! one per drained batch — never wall time): [`Batcher::push`] enqueues
+//! by the deterministic [`VirtualClock`] (one tick per submitted request;
+//! per drained batch, the ticks the installed [`ServiceCostModel`] prices
+//! it at — one under unit cost, the calibrated per-model cost × batch
+//! length under `modeled` — never wall time): [`Batcher::push`] enqueues
 //! and stamps the arrival tick, [`Batcher::pop_ready`] releases the next
 //! batch the policy considers due (call until `None` after every push),
 //! and [`Batcher::flush`] drains the end-of-stream remainder in policy
@@ -24,7 +26,7 @@
 
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::InferRequest;
-use crate::coordinator::sched::{ModelSched, SchedPolicy, VirtualClock};
+use crate::coordinator::sched::{ModelSched, SchedPolicy, ServiceCostModel, VirtualClock};
 use crate::coordinator::trace::QueueEvent;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -68,6 +70,9 @@ pub struct Batcher {
     /// default) keeps push/release on the exact pre-tracing path: one
     /// `Option` check, no allocation, no event construction.
     events: Option<Vec<QueueEvent>>,
+    /// How a drained batch is priced on the virtual clock. The default is
+    /// unit cost — one tick per drained batch, the historical schedule.
+    cost: ServiceCostModel,
 }
 
 impl Batcher {
@@ -95,7 +100,28 @@ impl Batcher {
             sched: BTreeMap::new(),
             depth_limit: limit.filter(|l| *l > 0),
             events: None,
+            cost: ServiceCostModel::default(),
         }
+    }
+
+    /// Install the service-cost model pricing each drained batch's clock
+    /// advance. The default [`ServiceCostModel`] is unit mode, under
+    /// which this batcher's schedule is bit-identical to the
+    /// pre-cost-model batcher.
+    pub fn set_service_cost(&mut self, cost: ServiceCostModel) {
+        self.cost = cost;
+    }
+
+    /// The installed service-cost model.
+    pub fn service_cost(&self) -> &ServiceCostModel {
+        &self.cost
+    }
+
+    /// Record `model`'s device-cycle estimate on the installed cost
+    /// model (first calibration wins; see
+    /// [`ServiceCostModel::calibrate`]).
+    pub fn calibrate_service_cost(&mut self, model: ModelId, report_cycles: u64) {
+        self.cost.calibrate(model, report_cycles);
     }
 
     /// Turn on the queue-event log (for tracing). Off by default.
@@ -283,7 +309,8 @@ impl Batcher {
 
     /// Drain up to `max_n` requests from the front of `model`'s queue,
     /// record their waits against the current tick, and charge the
-    /// batch's drain tick.
+    /// batch's drain cost to the clock (one tick under unit cost, the
+    /// modeled per-request cost × batch length under `modeled`).
     fn release(&mut self, model: ModelId, max_n: usize, forced: bool) -> Vec<InferRequest> {
         let deadline = match &self.policy {
             SchedPolicy::DeadlineAging { deadline } => Some(*deadline),
@@ -298,7 +325,7 @@ impl Batcher {
         };
         let n = max_n.min(q.len());
         let batch: Vec<InferRequest> = q.drain(..n).collect();
-        let completion = self.clock.stamp_drain();
+        let completion = self.clock.stamp_drain_cost(self.cost.batch_cost(model, batch.len()));
         let s = self.sched.entry(model).or_default();
         s.batches += 1;
         if forced {
@@ -776,6 +803,60 @@ mod tests {
             ]
         );
         assert!(b.take_events().is_empty(), "take drains the log");
+    }
+
+    #[test]
+    fn modeled_cost_charges_drain_by_per_request_cost_times_len() {
+        use crate::coordinator::sched::{ServiceCostMode, COST_QUANTUM_CYCLES};
+        let mut cost = ServiceCostModel::new(ServiceCostMode::Modeled);
+        cost.calibrate(ModelId(0), 3 * COST_QUANTUM_CYCLES);
+        let mut b = Batcher::new(2);
+        b.set_service_cost(cost);
+        b.push(req(0)); // arrival 1
+        b.push(req(1)); // arrival 2
+        let batch = b.pop_ready().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.now(), 8, "drain charged 3 ticks x 2 requests on top of tick 2");
+        let s = &b.sched_stats()[&ModelId(0)];
+        assert_eq!(s.e2e.max(), 7, "completion 8 - arrival 1");
+        assert_eq!(s.queue_wait.max(), 1, "waits still measured to the release tick");
+        // An uncalibrated second model falls back to one tick per request.
+        b.push(req_for(2, ModelId(1))); // arrival 9
+        b.push(req_for(3, ModelId(1)));
+        assert!(b.pop_ready().is_some());
+        assert_eq!(b.now(), 12, "modeled fallback: 1 tick x 2 requests");
+    }
+
+    #[test]
+    fn unit_cost_model_is_bit_identical_to_the_default_batcher() {
+        use crate::coordinator::sched::{ServiceCostMode, COST_QUANTUM_CYCLES};
+        // A calibrated unit-mode model must leave the schedule — ticks,
+        // event log, release order — exactly as a cost-model-free batcher
+        // produces it, for every policy.
+        let policies = [
+            SchedPolicy::FifoById,
+            SchedPolicy::WeightedFair { weights: vec![2, 1, 1] },
+            SchedPolicy::DeadlineAging { deadline: 3 },
+        ];
+        for policy in policies {
+            let run = |with_cost: bool| {
+                let mut b = Batcher::with_policy(2, policy.clone());
+                if with_cost {
+                    let mut cost = ServiceCostModel::new(ServiceCostMode::Unit);
+                    cost.calibrate(ModelId(0), 40 * COST_QUANTUM_CYCLES);
+                    cost.calibrate(ModelId(1), 3 * COST_QUANTUM_CYCLES);
+                    b.set_service_cost(cost);
+                }
+                b.enable_event_log();
+                for id in 0..20u64 {
+                    b.push(req_for(id, ModelId(id as usize % 3)));
+                    while b.pop_ready().is_some() {}
+                }
+                while b.flush().is_some() {}
+                (b.now(), b.take_events())
+            };
+            assert_eq!(run(false), run(true), "{}", policy.name());
+        }
     }
 
     #[test]

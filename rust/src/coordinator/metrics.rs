@@ -4,7 +4,7 @@ use crate::arch::WeightCacheStats;
 use crate::coordinator::fault::ReliabilityStats;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferResponse, PipelineCounters, RequestOutcome};
-use crate::coordinator::sched::{ModelSched, SchedPolicy, TickStats};
+use crate::coordinator::sched::{ModelSched, SchedPolicy, ServiceCostModel, TickStats};
 use crate::util::json::Json;
 use crate::util::Summary;
 use std::collections::BTreeMap;
@@ -147,6 +147,14 @@ pub struct Metrics {
     /// Device pipeline-overlap counters summed over completed requests
     /// (all zero for backends without a device model).
     pub pipeline: PipelineCounters,
+    /// Service-cost mode that priced batch drains (`""` until the
+    /// coordinator absorbs the cost model via
+    /// [`Metrics::absorb_service_cost`]; `"unit"` or `"modeled"` after).
+    pub service_cost_mode: String,
+    /// Calibrated per-model service costs in id order:
+    /// `(model, report_cycles, per_request_ticks)`. Empty under unit
+    /// pricing and for models that never calibrated (golden backends).
+    pub service_cost: Vec<(ModelId, u64, u64)>,
     /// Display-only run wall time in seconds, stamped by the CLI *after*
     /// the deterministic serving path finished (`None` until then). The
     /// only host-time-derived value in the metrics, and nothing merged or
@@ -303,6 +311,13 @@ impl Metrics {
         }
     }
 
+    /// Absorb the service-cost model that priced batch drains. Call
+    /// once, at the end of a run, alongside [`Metrics::absorb_sched`].
+    pub fn absorb_service_cost(&mut self, cost: &ServiceCostModel) {
+        self.service_cost_mode = cost.mode().name().to_string();
+        self.service_cost = cost.calibrated();
+    }
+
     /// One-line scheduler report (None until sched telemetry is
     /// absorbed). Latencies are virtual-clock ticks — scheduling order
     /// words, not milliseconds (the wall/device view stays in
@@ -433,8 +448,20 @@ impl Metrics {
         for (id, mm) in &self.per_model {
             per_model.insert(format!("m{}", id.0), mm.to_json());
         }
+        // v2: the service_cost section below is new; everything else is
+        // the v1 layout unchanged.
+        let mut calibrated = BTreeMap::new();
+        for (id, cycles, ticks) in &self.service_cost {
+            calibrated.insert(
+                format!("m{}", id.0),
+                Json::obj(vec![
+                    ("cycles", unum(*cycles)),
+                    ("per_request_ticks", unum(*ticks)),
+                ]),
+            );
+        }
         Json::obj(vec![
-            ("schema", Json::Str("neural-metrics-v1".into())),
+            ("schema", Json::Str("neural-metrics-v2".into())),
             ("completed", unum(self.completed)),
             ("correct", unum(self.correct)),
             ("labelled", unum(self.labelled)),
@@ -465,6 +492,13 @@ impl Metrics {
                     ("max_queue_depth", unum(self.max_queue_depth)),
                     ("starved", unum(self.starved)),
                     ("forced_releases", unum(self.forced_releases)),
+                ]),
+            ),
+            (
+                "service_cost",
+                Json::obj(vec![
+                    ("mode", Json::Str(self.service_cost_mode.clone())),
+                    ("calibrated", Json::Obj(calibrated)),
                 ]),
             ),
             (
@@ -515,6 +549,13 @@ impl Metrics {
     /// The same snapshot as [`Metrics::to_json`] in Prometheus text
     /// exposition format (`# TYPE` headers, `neural_*` series, per-model
     /// series labelled `{model="mN"}`). Wall time is excluded here too.
+    ///
+    /// NaN policy: accuracy is undefined on label-free traffic, and a
+    /// literal `NaN` sample poisons any dashboard aggregation over the
+    /// series. So `neural_accuracy` is omitted when the run saw no
+    /// labels, and `neural_model_accuracy{model="mN"}` is omitted for
+    /// each unlabelled model — absent means "no labels", never 0.
+    /// (The JSON export keeps the field and serializes NaN as `null`.)
     pub fn prometheus(&self) -> String {
         let mut out = String::new();
         let gauge = |out: &mut String, name: &str, help: &str, v: f64| {
@@ -523,7 +564,9 @@ impl Metrics {
         gauge(&mut out, "neural_completed_total", "Completed requests.", self.completed as f64);
         gauge(&mut out, "neural_correct_total", "Correct predictions.", self.correct as f64);
         gauge(&mut out, "neural_labelled_total", "Labelled requests.", self.labelled as f64);
-        gauge(&mut out, "neural_accuracy", "Accuracy over labelled requests.", self.accuracy());
+        if self.labelled > 0 {
+            gauge(&mut out, "neural_accuracy", "Accuracy over labelled requests.", self.accuracy());
+        }
         gauge(&mut out, "neural_device_ms_mean", "Mean device latency ms.", self.device_ms.mean());
         gauge(&mut out, "neural_device_fps", "Device FPS from mean latency.", self.device_fps());
         gauge(&mut out, "neural_energy_mj_mean", "Mean energy/image (mJ).", self.energy_mj.mean());
@@ -560,6 +603,17 @@ impl Metrics {
         gauge(&mut out, "neural_injected_faults_total", "Injected faults (all kinds).",
             (r.injected_panics + r.injected_errors + r.injected_stalls + r.injected_corruptions)
                 as f64);
+        // Calibrated service costs, in id order (empty under unit pricing).
+        if !self.service_cost.is_empty() {
+            out.push_str("# HELP neural_service_cost_ticks Modeled per-request cost ticks.\n");
+            out.push_str("# TYPE neural_service_cost_ticks gauge\n");
+            for (id, _cycles, ticks) in &self.service_cost {
+                out.push_str(&format!(
+                    "neural_service_cost_ticks{{model=\"m{}\"}} {}\n",
+                    id.0, ticks
+                ));
+            }
+        }
         // Per-model series, labelled, in id order.
         out.push_str("# HELP neural_model_completed_total Completed requests per model.\n");
         out.push_str("# TYPE neural_model_completed_total gauge\n");
@@ -569,9 +623,12 @@ impl Metrics {
                 id.0, mm.completed
             ));
         }
-        out.push_str("# HELP neural_model_accuracy Accuracy per model.\n");
+        out.push_str("# HELP neural_model_accuracy Accuracy per model (unlabelled omitted).\n");
         out.push_str("# TYPE neural_model_accuracy gauge\n");
         for (id, mm) in &self.per_model {
+            if mm.labelled == 0 {
+                continue; // NaN policy: no labels → no sample.
+            }
             out.push_str(&format!(
                 "neural_model_accuracy{{model=\"m{}\"}} {}\n",
                 id.0,
@@ -940,6 +997,68 @@ mod tests {
         assert!(prom.contains("# TYPE neural_completed_total gauge\n"), "{prom}");
         assert!(!prom.contains("wall"), "wall time is display-only: {prom}");
         assert_eq!(prom, m.prometheus(), "deterministic bytes");
+    }
+
+    #[test]
+    fn unlabelled_accuracy_is_null_in_json_and_absent_from_prometheus() {
+        // Satellite pin: label-free traffic must export machine-readable
+        // degenerate values — `null` accuracy in JSON (never the literal
+        // NaN, which json.tool rejects) and *no* accuracy sample in
+        // Prometheus (absent means "no labels", never 0).
+        let mut m = Metrics::default();
+        m.record(&resp_for(0, ModelId(0), 1, None, 1.0));
+        m.record(&resp_for(1, ModelId(1), 1, Some(1), 1.0));
+        let text = m.to_json().to_text();
+        assert!(!text.contains("NaN"), "{text}");
+        let back = Json::parse(&text).expect("export must stay parseable JSON");
+        // m0 is unlabelled: its accuracy serializes as null.
+        assert_eq!(
+            back.get("per_model").unwrap().get("m0").unwrap().get("accuracy"),
+            Some(&Json::Null)
+        );
+        assert_eq!(
+            back.get("per_model").unwrap().get("m1").unwrap().get("accuracy").unwrap().as_f64(),
+            Some(1.0)
+        );
+        let prom = m.prometheus();
+        assert!(!prom.contains("NaN"), "{prom}");
+        assert!(!prom.contains("neural_model_accuracy{model=\"m0\"}"), "{prom}");
+        assert!(prom.contains("neural_model_accuracy{model=\"m1\"} 1\n"), "{prom}");
+        // A fully label-free run omits the global accuracy series too,
+        // and its JSON accuracy is null.
+        let mut bare = Metrics::default();
+        bare.record(&resp_for(0, ModelId(0), 1, None, 1.0));
+        let prom = bare.prometheus();
+        assert!(!prom.contains("neural_accuracy "), "{prom}");
+        let back = Json::parse(&bare.to_json().to_text()).unwrap();
+        assert_eq!(back.get("accuracy"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn service_cost_section_exports_mode_and_calibration() {
+        use crate::coordinator::sched::{ServiceCostMode, COST_QUANTUM_CYCLES};
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, Some(1), 1.0));
+        // Before absorption: empty mode, empty calibration table.
+        let back = Json::parse(&m.to_json().to_text()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("neural-metrics-v2"));
+        assert_eq!(back.get("service_cost").unwrap().get("mode").unwrap().as_str(), Some(""));
+        let mut cost = ServiceCostModel::new(ServiceCostMode::Modeled);
+        cost.calibrate(ModelId(0), 3 * COST_QUANTUM_CYCLES);
+        m.absorb_service_cost(&cost);
+        assert_eq!(m.service_cost_mode, "modeled");
+        let back = Json::parse(&m.to_json().to_text()).unwrap();
+        let sc = back.get("service_cost").unwrap();
+        assert_eq!(sc.get("mode").unwrap().as_str(), Some("modeled"));
+        let m0 = sc.get("calibrated").unwrap().get("m0").unwrap();
+        assert_eq!(m0.get("cycles").unwrap().as_f64(), Some(3.0 * COST_QUANTUM_CYCLES as f64));
+        assert_eq!(m0.get("per_request_ticks").unwrap().as_f64(), Some(3.0));
+        let prom = m.prometheus();
+        assert!(prom.contains("neural_service_cost_ticks{model=\"m0\"} 3\n"), "{prom}");
+        // Unit pricing never calibrates, so it exports no cost series.
+        m.absorb_service_cost(&ServiceCostModel::default());
+        assert_eq!(m.service_cost_mode, "unit");
+        assert!(!m.prometheus().contains("neural_service_cost_ticks"), "unit emits no series");
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::coordinator::engine::{Engine, Outcome};
 use crate::coordinator::fault::{FaultAction, FaultPlan, ReliabilityStats};
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, ServeError};
+use crate::coordinator::sched::ServiceCostModel;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
@@ -86,6 +87,9 @@ pub struct EnginePool {
     fault: Option<FaultPlan>,
     max_retries: u32,
     reliability: Mutex<ReliabilityStats>,
+    /// Prices backoff and stall ticks on the same scale as the batcher's
+    /// drain costs (default unit: one tick stays one tick).
+    cost: ServiceCostModel,
 }
 
 impl EnginePool {
@@ -103,7 +107,18 @@ impl EnginePool {
             fault: None,
             max_retries: 2,
             reliability: Mutex::new(ReliabilityStats::default()),
+            cost: ServiceCostModel::default(),
         }
+    }
+
+    /// Install the service-cost model the coordinator calibrated, so the
+    /// pool's backoff and stall tick accounting shares the virtual
+    /// clock's scale: a retry of (or a stall on) an expensive model's
+    /// request displaces proportionally more schedule than a cheap one's.
+    /// The default unit model leaves both charges at their historical
+    /// one-tick-per-tick values.
+    pub fn set_service_cost(&mut self, cost: ServiceCostModel) {
+        self.cost = cost;
     }
 
     /// [`EnginePool::new`] with every replica's weight cache detached —
@@ -390,7 +405,11 @@ impl EnginePool {
                         FaultAction::Error => stats.injected_errors += 1,
                         FaultAction::Stall(t) => {
                             stats.injected_stalls += 1;
-                            stats.stall_ticks += t;
+                            // Stall ticks share the service-cost scale: a
+                            // stalled slot on an expensive model displaces
+                            // proportionally more schedule (×1 under unit).
+                            stats.stall_ticks +=
+                                t.saturating_mul(self.cost.per_request_ticks(batch[i].model));
                         }
                         FaultAction::Corrupt => stats.injected_corruptions += 1,
                         FaultAction::None => {}
@@ -432,10 +451,13 @@ impl EnginePool {
                     };
                     results[i] = Some(BatchResult { outcome, retries });
                 } else {
-                    // Linear tick-modeled backoff: retry k waits k ticks.
+                    // Linear tick-modeled backoff: retry k waits k ticks,
+                    // scaled by the model's per-request service cost
+                    // (×1 under the default unit model).
                     attempts[i] += 1;
                     stats.retries += 1;
-                    stats.backoff_ticks += (att + 1) as u64;
+                    stats.backoff_ticks += ((att + 1) as u64)
+                        .saturating_mul(self.cost.per_request_ticks(batch[i].model));
                     next_pending.push(i);
                 }
             }
@@ -921,6 +943,31 @@ mod tests {
         assert_eq!(stats.injected_errors, 3, "three attempts, three injections");
         assert_eq!(stats.backoff_ticks, 1 + 2, "linear backoff over two retries");
         assert_eq!(stats.respawns, 0, "errors never kill a worker");
+    }
+
+    #[test]
+    fn fault_backoff_ticks_scale_with_modeled_service_cost() {
+        use crate::coordinator::sched::{ServiceCostMode, ServiceCostModel, COST_QUANTUM_CYCLES};
+        // The same persistent-error exhaustion as above under a modeled
+        // 5-tick-per-request cost: the two retries' linear backoff (1 + 2
+        // ticks) scales by 5, while retry/failure counts stay unchanged.
+        let reqs = batch(4);
+        let mut pool = EnginePool::new(Engine::sim(zoo::tiny(10, 2), ArchConfig::default()), 2);
+        let mut cost = ServiceCostModel::new(ServiceCostMode::Modeled);
+        cost.calibrate(ModelId(0), 5 * COST_QUANTUM_CYCLES);
+        pool.set_service_cost(cost);
+        pool.set_fault_plan(Some(FaultPlan {
+            error_requests: vec![1],
+            persistent: true,
+            ..FaultPlan::seeded(1)
+        }));
+        pool.set_max_retries(2);
+        let results = pool.run_batch(&reqs);
+        assert!(results[1].outcome.is_err(), "budget exhausted as before");
+        let stats = pool.reliability();
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.backoff_ticks, (1 + 2) * 5, "backoff on the cost scale");
     }
 
     #[test]

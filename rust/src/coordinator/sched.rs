@@ -24,11 +24,14 @@
 //!   forces a *partial* batch release once a queue's head has waited
 //!   `deadline` ticks — the no-starvation policy.
 //!
-//! Time is the [`VirtualClock`]: one tick per submitted request, one tick
-//! per drained batch, never wall time — every scheduling decision (and
-//! every recorded wait) is a pure function of the trace and the policy,
-//! so tests replay it exactly and latency percentiles are bit-identical
-//! across worker counts.
+//! Time is the [`VirtualClock`]: one tick per submitted request, and per
+//! drained batch the ticks the [`ServiceCostModel`] prices it at — one
+//! under `--service-cost unit` (the historical schedule, bit-exact), or
+//! a calibrated per-model cost × batch length under `modeled` — never
+//! wall time. Every scheduling decision (and every recorded wait) stays
+//! a pure function of the trace, the policy and the cost model, so tests
+//! replay it exactly and latency percentiles are bit-identical across
+//! worker counts.
 
 use crate::config::RunConfig;
 use crate::coordinator::registry::{ModelId, ModelRegistry};
@@ -62,10 +65,135 @@ impl VirtualClock {
     }
 
     /// Advance one tick for a drained batch and return the completion
-    /// tick its requests share.
+    /// tick its requests share (the unit-cost reference drain).
     pub fn stamp_drain(&mut self) -> u64 {
-        self.now += 1;
+        self.stamp_drain_cost(1)
+    }
+
+    /// Advance `cost` ticks for a drained batch (at least one — a drain
+    /// always moves time) and return the completion tick its requests
+    /// share. Unit cost reproduces [`VirtualClock::stamp_drain`] exactly;
+    /// a modeled cost lets an expensive batch age every other queue by
+    /// what it actually displaced.
+    pub fn stamp_drain_cost(&mut self, cost: u64) -> u64 {
+        self.now += cost.max(1);
         self.now
+    }
+}
+
+/// How a drained batch is priced on the virtual clock
+/// (`--service-cost unit|modeled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServiceCostMode {
+    /// One tick per drained batch regardless of content — the historical
+    /// schedule, kept bit-exact as the reference mode.
+    #[default]
+    Unit,
+    /// `per-request cost ticks × batch length` per drain, where the
+    /// per-request cost is calibrated once per model from the first
+    /// completed inference's device cycles.
+    Modeled,
+}
+
+impl ServiceCostMode {
+    /// Mode name as spelled on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceCostMode::Unit => "unit",
+            ServiceCostMode::Modeled => "modeled",
+        }
+    }
+
+    /// Parse the `--service-cost` / INI `service_cost` spelling.
+    pub fn from_run_cfg(cfg: &RunConfig) -> Result<ServiceCostMode> {
+        match cfg.service_cost.as_str() {
+            "unit" => Ok(ServiceCostMode::Unit),
+            "modeled" => Ok(ServiceCostMode::Modeled),
+            other => bail!("unknown --service-cost {other:?} (one of unit|modeled)"),
+        }
+    }
+}
+
+/// Device cycles per cost tick under [`ServiceCostMode::Modeled`]: a tick
+/// stays a coarse scheduling quantum (tiny models still round up to one
+/// full tick), while big-model batches span many ticks. 2^14 cycles keeps
+/// zoo-model per-request costs in single-to-few-hundred tick range.
+pub const COST_QUANTUM_CYCLES: u64 = 1 << 14;
+
+/// Deterministic per-model service-cost model: maps a released batch to
+/// the virtual-clock ticks its drain advances.
+///
+/// Calibration follows the replay-don't-observe idiom: the per-model
+/// cycle estimate is taken ONCE per model from a completed inference's
+/// `Report.cycles` (the coordinator calibrates every registered model
+/// up front from the reference engine, so the estimate never depends on
+/// worker count or dispatch interleaving), then every cost is a pure
+/// function of `(model, batch length)`. Uncalibrated models — including
+/// every model on a device-less golden/baseline engine, whose reports
+/// carry zero cycles — deterministically fall back to unit cost.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceCostModel {
+    mode: ServiceCostMode,
+    /// First-calibration-wins device-cycle estimate per model.
+    cycles: std::collections::BTreeMap<ModelId, u64>,
+}
+
+impl ServiceCostModel {
+    /// A model in the given mode with no calibration yet.
+    pub fn new(mode: ServiceCostMode) -> Self {
+        ServiceCostModel { mode, cycles: std::collections::BTreeMap::new() }
+    }
+
+    /// The pricing mode.
+    pub fn mode(&self) -> ServiceCostMode {
+        self.mode
+    }
+
+    /// Record `model`'s device-cycle estimate from a completed
+    /// inference's report. First calibration wins (replay semantics: the
+    /// estimate must never drift mid-run); zero cycles — a device-less
+    /// backend — is ignored so the model keeps its unit fallback.
+    pub fn calibrate(&mut self, model: ModelId, report_cycles: u64) {
+        if report_cycles > 0 {
+            self.cycles.entry(model).or_insert(report_cycles);
+        }
+    }
+
+    /// The calibrated cycle estimate, if any.
+    pub fn calibrated_cycles(&self, model: ModelId) -> Option<u64> {
+        self.cycles.get(&model).copied()
+    }
+
+    /// Cost ticks one request of `model` contributes to its batch's
+    /// drain: `ceil(cycles / COST_QUANTUM_CYCLES)`, at least 1. Unit mode
+    /// and uncalibrated models price every request at one tick.
+    pub fn per_request_ticks(&self, model: ModelId) -> u64 {
+        match self.mode {
+            ServiceCostMode::Unit => 1,
+            ServiceCostMode::Modeled => match self.cycles.get(&model) {
+                Some(&c) => c.div_ceil(COST_QUANTUM_CYCLES).max(1),
+                None => 1,
+            },
+        }
+    }
+
+    /// Ticks a released batch of `len` requests advances the clock.
+    /// Unit mode charges exactly one tick per drained batch regardless
+    /// of `len` — the historical schedule, bit-exact; modeled mode
+    /// charges `per_request_ticks × len` (saturating, at least 1).
+    pub fn batch_cost(&self, model: ModelId, len: usize) -> u64 {
+        match self.mode {
+            ServiceCostMode::Unit => 1,
+            ServiceCostMode::Modeled => {
+                self.per_request_ticks(model).saturating_mul(len as u64).max(1)
+            }
+        }
+    }
+
+    /// Per-model `(model, per-request ticks)` pairs for calibrated
+    /// models, in id order (the metrics export's `service_cost` section).
+    pub fn calibrated(&self) -> Vec<(ModelId, u64, u64)> {
+        self.cycles.iter().map(|(&m, &c)| (m, c, self.per_request_ticks(m))).collect()
     }
 }
 
@@ -114,10 +242,22 @@ impl SchedPolicy {
     /// queued peers cannot be drained before its deadline ages out, so the
     /// queue is bounded at `max(d, batch_size)` (never starving a batch).
     /// Policies without a deadline have no SLA to derive a bound from.
+    /// This is the unit-cost reference; see
+    /// [`SchedPolicy::sla_queue_limit_cost`] for the cost-aware bound.
     pub fn sla_queue_limit(&self, batch_size: usize) -> Option<usize> {
+        self.sla_queue_limit_cost(batch_size, 1)
+    }
+
+    /// Cost-aware SLA admission depth: with a per-request service cost of
+    /// `c` ticks, each queued peer ahead of a request displaces `c` ticks
+    /// of its deadline budget, so the bound tightens to
+    /// `max(deadline / c, batch_size, 1)`. At `c = 1` this reduces to the
+    /// historical `max(deadline, batch_size, 1)` bit-exactly.
+    pub fn sla_queue_limit_cost(&self, batch_size: usize, per_request_ticks: u64) -> Option<usize> {
         match self {
             SchedPolicy::DeadlineAging { deadline } => {
-                Some((*deadline as usize).max(batch_size).max(1))
+                let budget = (deadline / per_request_ticks.max(1)) as usize;
+                Some(budget.max(batch_size).max(1))
             }
             SchedPolicy::FifoById | SchedPolicy::WeightedFair { .. } => None,
         }
@@ -309,7 +449,9 @@ pub struct ModelSched {
     /// Ticks from arrival to release from the model's queue.
     pub queue_wait: TickStats,
     /// Ticks from arrival to the completion of the batch's drain (queue
-    /// wait plus the unit drain cost — see DESIGN.md's tick caveats).
+    /// wait plus the batch's service cost — one tick under
+    /// `--service-cost unit`, the modeled cost under `modeled`; see
+    /// DESIGN.md's service-cost-model section).
     pub e2e: TickStats,
     /// Largest queue depth observed at submission.
     pub max_depth: u64,
@@ -335,6 +477,79 @@ mod tests {
         assert_eq!(c.stamp_submit(), 2);
         assert_eq!(c.stamp_drain(), 3);
         assert_eq!(c.now(), 3);
+    }
+
+    #[test]
+    fn clock_cost_drain_advances_by_cost_and_clamps_to_one() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.stamp_drain_cost(5), 5, "a 5-tick batch ages the clock by 5");
+        assert_eq!(c.stamp_drain_cost(0), 6, "a drain always moves time");
+        assert_eq!(c.stamp_drain_cost(1), 7, "unit cost matches stamp_drain");
+        assert_eq!(c.stamp_drain(), 8);
+        assert_eq!(c.now(), 8);
+    }
+
+    #[test]
+    fn service_cost_unit_mode_prices_every_batch_at_one_tick() {
+        let mut m = ServiceCostModel::new(ServiceCostMode::Unit);
+        // Even a calibrated model stays at one tick per BATCH in unit
+        // mode — the historical schedule must reproduce bit-exactly.
+        m.calibrate(ModelId(0), 10 * COST_QUANTUM_CYCLES);
+        assert_eq!(m.per_request_ticks(ModelId(0)), 1);
+        assert_eq!(m.batch_cost(ModelId(0), 16), 1);
+        assert_eq!(m.batch_cost(ModelId(0), 1), 1);
+        assert_eq!(m.batch_cost(ModelId(7), 0), 1, "empty/unknown still one tick");
+        assert_eq!(m.mode().name(), "unit");
+    }
+
+    #[test]
+    fn service_cost_modeled_scales_with_cycles_and_batch_length() {
+        let mut m = ServiceCostModel::new(ServiceCostMode::Modeled);
+        assert_eq!(m.per_request_ticks(ModelId(0)), 1, "uncalibrated falls back to unit");
+        assert_eq!(m.batch_cost(ModelId(0), 4), 4, "modeled unit fallback still scales by len");
+        m.calibrate(ModelId(0), 3 * COST_QUANTUM_CYCLES);
+        m.calibrate(ModelId(1), 1); // sub-quantum rounds up to one tick
+        m.calibrate(ModelId(2), 0); // device-less report: ignored
+        assert_eq!(m.per_request_ticks(ModelId(0)), 3);
+        assert_eq!(m.per_request_ticks(ModelId(1)), 1);
+        assert_eq!(m.per_request_ticks(ModelId(2)), 1);
+        assert_eq!(m.batch_cost(ModelId(0), 4), 12);
+        assert_eq!(m.batch_cost(ModelId(1), 4), 4);
+        // First calibration wins: the estimate never drifts mid-run.
+        m.calibrate(ModelId(0), 100 * COST_QUANTUM_CYCLES);
+        assert_eq!(m.per_request_ticks(ModelId(0)), 3);
+        assert_eq!(m.calibrated_cycles(ModelId(0)), Some(3 * COST_QUANTUM_CYCLES));
+        assert_eq!(m.calibrated_cycles(ModelId(2)), None);
+        // Ceiling division: one cycle past a quantum boundary adds a tick.
+        let mut n = ServiceCostModel::new(ServiceCostMode::Modeled);
+        n.calibrate(ModelId(0), COST_QUANTUM_CYCLES + 1);
+        assert_eq!(n.per_request_ticks(ModelId(0)), 2);
+        // The export view lists calibrated models in id order.
+        let cal = m.calibrated();
+        assert_eq!(cal.len(), 2);
+        assert_eq!(cal[0], (ModelId(0), 3 * COST_QUANTUM_CYCLES, 3));
+        assert_eq!(cal[1], (ModelId(1), 1, 1));
+    }
+
+    #[test]
+    fn service_cost_mode_from_run_cfg() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(ServiceCostMode::from_run_cfg(&cfg).unwrap(), ServiceCostMode::Unit);
+        cfg.service_cost = "modeled".into();
+        assert_eq!(ServiceCostMode::from_run_cfg(&cfg).unwrap(), ServiceCostMode::Modeled);
+        cfg.service_cost = "fast".into();
+        assert!(ServiceCostMode::from_run_cfg(&cfg).is_err());
+    }
+
+    #[test]
+    fn sla_queue_limit_cost_tightens_with_per_request_cost() {
+        let p = SchedPolicy::DeadlineAging { deadline: 12 };
+        assert_eq!(p.sla_queue_limit_cost(2, 1), Some(12), "unit cost = historical bound");
+        assert_eq!(p.sla_queue_limit_cost(2, 3), Some(4), "3-tick requests: 12/3 peers fit");
+        assert_eq!(p.sla_queue_limit_cost(2, 100), Some(2), "never below a full batch");
+        assert_eq!(p.sla_queue_limit_cost(0, 100), Some(1), "clamped to at least one");
+        assert_eq!(p.sla_queue_limit_cost(2, 0), Some(12), "zero cost clamps to unit");
+        assert_eq!(SchedPolicy::FifoById.sla_queue_limit_cost(2, 3), None);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::EnginePool;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::request::{InferRequest, InferResponse, RequestOutcome, ServeError};
-use crate::coordinator::sched::SchedPolicy;
+use crate::coordinator::sched::{SchedPolicy, ServiceCostMode, ServiceCostModel};
 use crate::coordinator::trace::TraceRecorder;
 use crate::data::{encode_threshold, Dataset};
 use crate::runtime::HloModel;
@@ -108,16 +108,55 @@ impl Coordinator {
         self.pool.set_fault_plan(fault_plan);
         self.pool.set_max_retries(self.cfg.max_retries as u32);
         self.pool.reset_reliability();
+        // Service-cost model (`--service-cost unit|modeled`). Under
+        // `modeled`, every registered model is calibrated UP FRONT from
+        // one reference-engine inference on the trace's first image —
+        // never from dispatch outcomes, whose arrival points depend on
+        // `--workers` — so the per-model cost (and with it the whole
+        // schedule) stays a pure function of (trace, config). Under
+        // `unit` no calibration runs and the schedule is bit-identical
+        // to the pre-cost-model coordinator.
+        let cost_mode = ServiceCostMode::from_run_cfg(&self.cfg)?;
+        let mut cost = ServiceCostModel::new(cost_mode);
+        if cost_mode == ServiceCostMode::Modeled && n > 0 {
+            let (img, _) = ds.get(0);
+            let spikes = encode_threshold(&img, 128);
+            for m in 0..self.pool.engine().registry().len() {
+                let model = ModelId(m);
+                match self.pool.engine().infer_model(model, &spikes, None) {
+                    // Device-less backends report zero cycles; calibrate
+                    // ignores them and the model keeps its unit fallback.
+                    Ok(out) => cost.calibrate(model, out.pipe.cycles),
+                    Err(e) => eprintln!(
+                        "warning: service-cost calibration failed for {model} ({e:#}); \
+                         pricing it at unit cost"
+                    ),
+                }
+            }
+        }
         let limit = match self.cfg.max_queue_depth {
             0 => None,
-            QUEUE_DEPTH_SLA => Some(
-                policy
-                    .sla_queue_limit(self.cfg.batch_size)
-                    .ok_or_else(|| anyhow!("--max-queue-depth sla requires --sched deadline"))?,
-            ),
+            QUEUE_DEPTH_SLA => {
+                // Cost-aware admission depth: each queued peer displaces
+                // `per_request_ticks` of a request's deadline budget. With
+                // heterogeneous tenants the bound follows the slowest
+                // calibrated model (conservative toward the deadline); at
+                // unit cost this is exactly the historical max(d, batch).
+                let per_req = (0..self.pool.engine().registry().len())
+                    .map(|m| cost.per_request_ticks(ModelId(m)))
+                    .max()
+                    .unwrap_or(1);
+                Some(
+                    policy
+                        .sla_queue_limit_cost(self.cfg.batch_size, per_req)
+                        .ok_or_else(|| anyhow!("--max-queue-depth sla requires --sched deadline"))?,
+                )
+            }
             d => Some(d),
         };
+        self.pool.set_service_cost(cost.clone());
         let mut batcher = Batcher::with_limits(self.cfg.batch_size, policy, limit);
+        batcher.set_service_cost(cost);
         if recorder.is_some() {
             batcher.enable_event_log();
         }
@@ -212,6 +251,7 @@ impl Coordinator {
             metrics.weight_cache = stats;
         }
         metrics.absorb_sched(batcher.policy(), batcher.sched_stats());
+        metrics.absorb_service_cost(batcher.service_cost());
         metrics.absorb_reliability(&self.pool.reliability());
         if let (Some(path), Some(rec)) = (self.cfg.trace_out.as_deref(), recorder.as_ref()) {
             std::fs::write(path, rec.to_chrome_json())

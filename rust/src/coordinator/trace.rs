@@ -12,7 +12,10 @@
 //!   outcomes as instant markers. The batcher logs [`QueueEvent`]s (only
 //!   when tracing is enabled — a disabled log is a single `Option` check,
 //!   zero allocation) and the serving loop feeds them here together with
-//!   each request's terminal outcome.
+//!   each request's terminal outcome. Exec-span durations are
+//!   `completion - release` on that clock, so under `--service-cost
+//!   modeled` they stretch to the batch's priced cost ticks instead of
+//!   the flat unit tick.
 //! * **Per-layer device spans** on the simulated device cycle axis (trace
 //!   pid 2), taken verbatim from the first completed inference's
 //!   [`LayerSpan`] schedule per model: IG scan / array+EPA / WMU weight

@@ -126,6 +126,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             Some(s) => parse_mix(s)?,
             None => Vec::new(),
         },
+        service_cost: args.get_or("service-cost", "unit"),
         crosscheck_every: args.get_usize("crosscheck-every", 0)?,
         hlo_path: args.get("hlo").map(|s| s.to_string()),
         max_queue_depth: match args.get("max-queue-depth") {

@@ -230,15 +230,26 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// String body. Unescaped bytes are accumulated raw and decoded as
+    /// UTF-8 at escape/close boundaries, so multi-byte sequences survive
+    /// intact (`s.push(c as char)` on raw bytes used to reinterpret each
+    /// continuation byte as a Latin-1 code point — mojibake). `\uXXXX`
+    /// escapes combine surrogate pairs; a lone surrogate decodes to
+    /// U+FFFD rather than failing the whole document.
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut s = String::new();
+        let mut raw: Vec<u8> = Vec::new();
         loop {
             let c = self.peek()?;
             self.i += 1;
             match c {
-                b'"' => return Ok(s),
+                b'"' => {
+                    self.flush_raw(&mut raw, &mut s)?;
+                    return Ok(s);
+                }
                 b'\\' => {
+                    self.flush_raw(&mut raw, &mut s)?;
                     let e = self.peek()?;
                     self.i += 1;
                     match e {
@@ -251,22 +262,78 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                bail!("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            let c = self.unicode_escape()?;
+                            s.push(c);
                         }
                         other => bail!("bad escape \\{}", other as char),
                     }
                 }
-                _ => s.push(c as char),
+                _ => raw.push(c),
             }
         }
     }
 
+    /// Validate and append a pending run of unescaped string bytes.
+    fn flush_raw(&mut self, raw: &mut Vec<u8>, s: &mut String) -> Result<()> {
+        if raw.is_empty() {
+            return Ok(());
+        }
+        let text = std::str::from_utf8(raw)
+            .map_err(|_| anyhow!("invalid UTF-8 in string before offset {}", self.i))?;
+        s.push_str(text);
+        raw.clear();
+        Ok(())
+    }
+
+    /// Decode a `\uXXXX` escape (the `\u` is already consumed). A high
+    /// surrogate pairs with an immediately following `\uDC00`–`\uDFFF`
+    /// escape into one supplementary-plane char; a lone surrogate — high
+    /// or low — decodes to U+FFFD, matching the usual lenient-decode
+    /// policy for ill-formed UTF-16 escape sequences.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let code = match hi {
+            0xD800..=0xDBFF => {
+                if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                    let mark = self.i;
+                    self.i += 2;
+                    let lo = self.hex4()?;
+                    if (0xDC00..=0xDFFF).contains(&lo) {
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                    } else {
+                        // Not a low surrogate: the escape stands on its
+                        // own — rewind and let the caller re-parse it.
+                        self.i = mark;
+                        0xFFFD
+                    }
+                } else {
+                    0xFFFD
+                }
+            }
+            0xDC00..=0xDFFF => 0xFFFD,
+            c => c,
+        };
+        Ok(char::from_u32(code).unwrap_or('\u{fffd}'))
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let code = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow!("bad \\u escape \\u{hex} at offset {}", self.i))?;
+        self.i += 4;
+        Ok(code)
+    }
+
+    /// Number token, validated against the JSON grammar
+    /// (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`) before the f64
+    /// parse — `f64::from_str` alone also accepts `+1`, `.5`, `1.`,
+    /// `inf` and `NaN`, none of which are JSON. Grammar-valid overflow
+    /// like `1e999` is rejected too: it would silently become
+    /// `f64::INFINITY`, which the writer cannot represent.
     fn number(&mut self) -> Result<Json> {
         let start = self.i;
         while self.i < self.b.len()
@@ -275,8 +342,56 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(text.parse()?))
+        if !valid_json_number(text) {
+            bail!("invalid JSON number {text:?} at offset {start}");
+        }
+        let n: f64 = text.parse()?;
+        if !n.is_finite() {
+            bail!("JSON number {text:?} overflows f64 at offset {start}");
+        }
+        Ok(Json::Num(n))
     }
+}
+
+/// Strict JSON number grammar:
+/// `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+fn valid_json_number(t: &str) -> bool {
+    let b = t.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(b'1'..=b'9') => {
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    i == b.len()
 }
 
 #[cfg(test)]
@@ -329,5 +444,102 @@ mod tests {
     fn writer_escapes_control_chars() {
         let j = Json::Str("a\nb\u{1}".into());
         assert_eq!(j.to_text(), "\"a\\nb\\u0001\"");
+    }
+
+    #[test]
+    fn multibyte_utf8_strings_survive_parsing() {
+        // Every one of these used to come back as mojibake (each UTF-8
+        // continuation byte reinterpreted as its own Latin-1 char).
+        let doc = "{\"s\": \"héllo — 日本語 🦀\"}";
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("héllo — 日本語 🦀"));
+        // Multi-byte text adjacent to escapes flushes in the right order.
+        let j = Json::parse("{\"s\": \"日\\n本\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("日\n本"));
+    }
+
+    #[test]
+    fn utf8_roundtrip_property_over_boundary_code_points() {
+        // Writer → parser roundtrip across every UTF-8 encoding-length
+        // boundary: 1-, 2-, 3- and 4-byte sequences, plus the extremes
+        // of each range and characters the writer escapes.
+        let corpus: Vec<char> = [
+            0x20u32, 0x22, 0x5C, 0x7F, // ASCII incl. quote/backslash
+            0x80, 0xE9, 0x7FF, // 2-byte boundary
+            0x800, 0x65E5, 0xFFFD, 0xFFFF, // 3-byte boundary
+            0x10000, 0x1F980, 0x10FFFF, // 4-byte boundary
+            0x09, 0x0A, 0x0D, 0x01, // escaped controls
+        ]
+        .iter()
+        .filter_map(|&c| char::from_u32(c))
+        .collect();
+        // Singles, pairs, and one string holding the whole corpus.
+        let mut samples: Vec<String> = corpus.iter().map(|c| c.to_string()).collect();
+        for w in corpus.windows(2) {
+            samples.push(w.iter().collect());
+        }
+        samples.push(corpus.iter().collect());
+        for s in samples {
+            let doc = Json::obj(vec![("s", Json::Str(s.clone()))]);
+            let text = doc.to_text();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("roundtrip parse failed for {s:?}: {e:#}"));
+            assert_eq!(back.get("s").unwrap().as_str(), Some(s.as_str()), "text={text:?}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_combine_and_lone_surrogates_are_replaced() {
+        let j = Json::parse("{\"s\": \"\\ud83e\\udd80\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("🦀"));
+        // Lone high, lone low, and high-followed-by-ordinary-escape all
+        // decode to U+FFFD instead of failing the document.
+        let j = Json::parse("{\"s\": \"\\ud83e!\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("\u{fffd}!"));
+        let j = Json::parse("{\"s\": \"\\udd80\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("\u{fffd}"));
+        let j = Json::parse("{\"s\": \"\\ud83e\\n\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("\u{fffd}\n"));
+        // Two high surrogates: each stands alone.
+        let j = Json::parse("{\"s\": \"\\ud83e\\ud83e\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("\u{fffd}\u{fffd}"));
+        // Non-surrogate escapes still decode exactly.
+        let j = Json::parse("{\"s\": \"\\u65e5\"}").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("日"));
+        assert!(Json::parse("{\"s\": \"\\uZZZZ\"}").is_err(), "non-hex digits");
+        assert!(Json::parse("{\"s\": \"\\u00\"}").is_err(), "truncated escape");
+    }
+
+    #[test]
+    fn rejects_nonstandard_numbers() {
+        // f64::from_str accepts all of these; JSON forbids them.
+        for bad in [
+            "+1", ".5", "1.", "01", "-01", "00", "1e", "1e+", "1.e5", "-", "--1", "1.2.3",
+            "Infinity", "-Infinity", "NaN", "inf",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+            assert!(Json::parse(&format!("[{bad}]")).is_err(), "[{bad}] must not parse");
+        }
+        // Grammar-valid overflow would silently become f64::INFINITY.
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+    }
+
+    #[test]
+    fn accepts_standard_numbers() {
+        for (text, want) in [
+            ("0", 0.0),
+            ("-0", 0.0),
+            ("0.5", 0.5),
+            ("123", 123.0),
+            ("-123.456", -123.456),
+            ("1e10", 1e10),
+            ("1E-3", 1e-3),
+            ("-1.5e-2", -0.015),
+            ("0e0", 0.0),
+        ] {
+            let v = Json::parse(text).unwrap_or_else(|e| panic!("{text:?}: {e:#}"));
+            assert_eq!(v.as_f64(), Some(want), "{text:?}");
+        }
     }
 }

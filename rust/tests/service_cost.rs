@@ -1,0 +1,199 @@
+//! Integration: the cost-aware virtual clock end to end.
+//!
+//! Acceptance pins for the service-cost model:
+//! * `--service-cost unit` reproduces the pre-change drain schedule
+//!   bit-exactly — pinned 3-model mixed trace, all three policies
+//!   (fifo/wfair/deadline), 1 vs 4 workers, and byte-identical exports
+//!   (mirrors the PR 5 fifo response-order pin).
+//! * `--service-cost modeled` keeps every export byte-deterministic
+//!   across worker counts (calibration runs up front from the trace's
+//!   first image, never from dispatch outcomes).
+//! * Under `modeled`, per-model e2e tick percentiles strictly separate a
+//!   tiny-model batch from a qkfresnet11 batch on the same trace, by
+//!   exactly the calibrated per-request cost.
+
+use neural::config::{ArchConfig, RunConfig};
+use neural::coordinator::{Coordinator, Engine, Metrics, ModelId, ModelRegistry};
+use neural::data::{Dataset, SynthCifar};
+use neural::model::zoo;
+use neural::util::json::Json;
+
+fn ds(n: usize) -> Dataset {
+    Dataset::from_synth(&SynthCifar::new(10, 42), n)
+}
+
+/// Three structurally equal, differently-seeded tenants on a 1:1:1 mix
+/// (`assign(i) = i % 3`).
+fn three_tiny() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 5), 1);
+    reg.register(zoo::tiny(10, 11), 1);
+    reg.register(zoo::tiny(10, 17), 1);
+    reg
+}
+
+fn serve(reg: ModelRegistry, cfg: RunConfig, n: usize) -> (Metrics, Option<String>) {
+    let engine = Engine::sim_registry(reg, ArchConfig::default());
+    let trace_path = cfg.trace_out.clone();
+    let mut coord = Coordinator::new(engine, cfg);
+    let m = coord.serve_dataset(&ds(n), n).unwrap();
+    let trace = trace_path.map(|p| {
+        let text = std::fs::read_to_string(&p).expect("trace file written");
+        let _ = std::fs::remove_file(&p);
+        text
+    });
+    (m, trace)
+}
+
+#[test]
+fn unit_cost_reproduces_the_pre_change_drain_schedule() {
+    // The recorded reference: batch 2, 1:1:1 three-model trace over 12
+    // images, submissions at ticks 1.. and ONE tick per drained batch
+    // (the pre-cost-model clock). Hand-replayed, the drains are
+    // [0,3]@5 [1,4]@7 [2,5]@9 [6,9]@14 [7,10]@16 [8,11]@18, giving the
+    // per-model wait/e2e pins below. Every policy must reproduce them
+    // under `--service-cost unit`: the trace is balanced (exactly one
+    // queue is full at each release point, no wait approaches the
+    // deadline), so wfair and deadline release on fill exactly like
+    // fifo did before the scheduler existed.
+    for sched in ["fifo", "wfair", "deadline"] {
+        let mut exports = Vec::new();
+        for workers in [1usize, 4] {
+            let cfg = RunConfig {
+                batch_size: 2,
+                workers,
+                sched: sched.into(),
+                service_cost: "unit".into(),
+                ..Default::default()
+            };
+            let (m, _) = serve(three_tiny(), cfg, 12);
+            assert_eq!(m.completed, 12, "{sched} workers={workers}");
+            assert_eq!(
+                m.response_order,
+                vec![0, 3, 1, 4, 2, 5, 6, 9, 7, 10, 8, 11],
+                "{sched} workers={workers}: the pre-change drain order, byte for byte"
+            );
+            assert_eq!(m.batches, 6);
+            assert_eq!(m.max_batch, 2);
+            assert_eq!(m.forced_releases, 0);
+            assert_eq!(m.starved, 0);
+            assert_eq!(m.max_queue_depth, 2);
+            assert_eq!(m.queue_wait_ticks.max(), 5, "{sched}");
+            assert_eq!(m.queue_wait_ticks.p50(), 0, "{sched}");
+            assert_eq!(m.e2e_ticks.p99(), 6, "{sched}");
+            // Per-model pins: model k's two full batches wait 3+k ticks at
+            // the head and complete 4+k ticks end to end.
+            for k in 0..3usize {
+                let mm = &m.per_model()[&ModelId(k)];
+                assert_eq!(mm.queue_wait_ticks.max(), 3 + k as u64, "{sched} m{k}");
+                assert_eq!(mm.e2e_ticks.p99(), 4 + k as u64, "{sched} m{k}");
+            }
+            exports.push((m.to_json().to_text(), m.prometheus()));
+        }
+        assert_eq!(exports[0], exports[1], "{sched}: exports must not depend on --workers");
+        // Unit pricing is the default: the schema advertises it and the
+        // calibration table stays empty.
+        let doc = Json::parse(&exports[0].0).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("neural-metrics-v2"));
+        let sc = doc.get("service_cost").unwrap();
+        assert_eq!(sc.get("mode").unwrap().as_str(), Some("unit"));
+        assert_eq!(sc.get("calibrated").unwrap(), &Json::Obj(Default::default()));
+    }
+}
+
+#[test]
+fn unit_cost_flag_is_bit_identical_to_the_default_config() {
+    // `--service-cost unit` spelled out vs left to the default: the whole
+    // metrics export (JSON and Prometheus) must match byte for byte.
+    let run = |explicit: bool| {
+        let cfg = RunConfig {
+            batch_size: 2,
+            workers: 2,
+            service_cost: if explicit { "unit".into() } else { RunConfig::default().service_cost },
+            ..Default::default()
+        };
+        serve(three_tiny(), cfg, 9).0
+    };
+    let explicit = run(true);
+    let default = run(false);
+    assert_eq!(explicit.to_json().to_text(), default.to_json().to_text());
+    assert_eq!(explicit.prometheus(), default.prometheus());
+    assert_eq!(explicit.response_order, default.response_order);
+}
+
+#[test]
+fn modeled_cost_exports_stay_byte_deterministic_across_workers() {
+    // Calibration runs before the admission loop from the trace's first
+    // image, so the priced schedule — and with it the trace and metrics
+    // bytes — is a pure function of (trace, config), not of --workers.
+    let path = std::env::temp_dir()
+        .join(format!("neural_service_cost_trace_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    for sched in ["fifo", "deadline"] {
+        let run = |workers: usize| {
+            let cfg = RunConfig {
+                batch_size: 2,
+                workers,
+                sched: sched.into(),
+                service_cost: "modeled".into(),
+                trace_out: Some(path.clone()),
+                ..Default::default()
+            };
+            serve(three_tiny(), cfg, 10)
+        };
+        let (m1, t1) = run(1);
+        let (m4, t4) = run(4);
+        assert_eq!(m1.completed, 10, "{sched}");
+        assert_eq!(m1.to_json().to_text(), m4.to_json().to_text(), "{sched}: metrics bytes");
+        assert_eq!(m1.prometheus(), m4.prometheus(), "{sched}: prometheus bytes");
+        assert_eq!(t1.unwrap(), t4.unwrap(), "{sched}: trace bytes");
+        assert_eq!(m1.service_cost_mode, "modeled");
+        // Every sim-backed tenant calibrated (sim reports nonzero cycles).
+        assert_eq!(m1.service_cost.len(), 3, "{sched}: all three tenants calibrated");
+        for (id, cycles, ticks) in &m1.service_cost {
+            assert!(*cycles > 0, "{sched} {id}: calibrated from a real report");
+            assert!(*ticks >= 1, "{sched} {id}");
+        }
+    }
+}
+
+#[test]
+fn modeled_cost_separates_tiny_from_qkfresnet11_e2e_p99() {
+    // The distortion this PR fixes, observed end to end: on a 1:1
+    // tiny/qkfresnet11 trace the unit clock ages both tenants' batches
+    // identically, while the modeled clock charges each drained
+    // qkfresnet11 batch its calibrated cost. Hand-replaying the 6-image
+    // batch-2 fifo trace with per-request costs a (tiny) and b (qkf):
+    // tiny e2e = {2+2a, 2a, 1+a} and qkf e2e = {2+2a+2b, 2b, a+b}, so
+    // the p99s sit exactly 2b apart and the qkf tail grows with the
+    // model's real cycle cost.
+    let mut reg = ModelRegistry::new();
+    reg.register(zoo::tiny(10, 5), 1);
+    reg.register(zoo::qkfresnet11(10, 7), 1);
+    let cfg = RunConfig {
+        batch_size: 2,
+        workers: 1,
+        service_cost: "modeled".into(),
+        ..Default::default()
+    };
+    let (m, _) = serve(reg, cfg, 6);
+    assert_eq!(m.completed, 6);
+    let costs = &m.service_cost;
+    assert_eq!(costs.len(), 2, "both tenants calibrated");
+    let (tiny_ticks, qkf_ticks) = (costs[0].2, costs[1].2);
+    assert!(
+        qkf_ticks > tiny_ticks,
+        "qkfresnet11 ({qkf_ticks}t) must cost strictly more per request than tiny ({tiny_ticks}t)"
+    );
+    let tiny_p99 = m.per_model()[&ModelId(0)].e2e_ticks.p99();
+    let qkf_p99 = m.per_model()[&ModelId(1)].e2e_ticks.p99();
+    assert_eq!(tiny_p99, 2 + 2 * tiny_ticks, "tiny tail: its own two-request batch cost");
+    assert_eq!(
+        qkf_p99,
+        tiny_p99 + 2 * qkf_ticks,
+        "qkf tail sits exactly one priced qkf batch past the tiny tail"
+    );
+    // The strict separation the acceptance criteria ask for.
+    assert!(qkf_p99 > tiny_p99, "modeled cost must separate the tenants' percentiles");
+}

@@ -203,7 +203,9 @@ fn metrics_export_round_trips_and_matches_the_run() {
     assert_eq!(m1.to_json().to_text(), m4.to_json().to_text(), "export is worker-independent");
     let doc = Json::parse(&m1.to_json().to_text()).unwrap();
     assert_eq!(doc.get("completed").unwrap().as_f64().unwrap(), 10.0);
-    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "neural-metrics-v1");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "neural-metrics-v2");
+    let sc = doc.get("service_cost").unwrap();
+    assert_eq!(sc.get("mode").unwrap().as_str().unwrap(), "unit");
     let sched = doc.get("sched").unwrap();
     assert_eq!(sched.get("policy").unwrap().as_str().unwrap(), "fifo");
     assert!(doc.get("per_model").unwrap().get("m0").is_some());
